@@ -1,0 +1,67 @@
+//! Table 1 companion: quantization-granularity comparison on *real* KV
+//! tensors pulled from the model's prefill, reporting reconstruction error
+//! and measured compression ratio per scheme.
+//!
+//! ```sh
+//! cargo run --release --example granularity -- --model micro
+//! ```
+
+use zipcache::config::{EngineConfig, PolicyKind};
+use zipcache::coordinator::Engine;
+use zipcache::kvcache::{CompressedKV, PrecisionClass, QuantSpec};
+use zipcache::quant::Granularity;
+use zipcache::util::bench::Table;
+use zipcache::util::cli::Args;
+use zipcache::workload::{Task, TaskGen};
+use zipcache::Result;
+
+fn main() -> Result<()> {
+    let args = Args::new("granularity", "Table 1: quantization granularities on real KV")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("model", "micro", "model config")
+        .flag("bits", "4", "quantization bit-width")
+        .flag("seed", "3", "sample seed")
+        .parse()?;
+    let bits: u8 = args.get("bits").parse()?;
+
+    let mut cfg = EngineConfig::load_default(args.get("artifacts"), &args.get("model"))?;
+    cfg.policy = PolicyKind::Fp16; // we quantize manually below
+    let mut engine = Engine::new(cfg)?;
+    let info = engine.runtime().model_info().clone();
+    let layout = info.cache_layout();
+
+    // Pull real K/V from a prefill.
+    let gen = TaskGen::new(Task::Gsm, info.max_seq - 2);
+    let sample = gen.sample(args.get_u64("seed")?);
+    let sess = engine.start_session(sample.prompt().to_vec(), 2)?;
+    let n = sample.prompt_len;
+    let (k, v) = (&sess.kbuf, &sess.vbuf);
+
+    let variants: Vec<(&str, QuantSpec)> = vec![
+        ("groupwise/groupwise", QuantSpec {
+            key_gran: Granularity::Group(8), value_gran: Granularity::Group(8) }),
+        ("tokenwise/tokenwise", QuantSpec {
+            key_gran: Granularity::Token, value_gran: Granularity::Token }),
+        ("channelwise/tokenwise", QuantSpec {
+            key_gran: Granularity::Channel, value_gran: Granularity::Token }),
+        ("channelwise/CST (paper)", QuantSpec {
+            key_gran: Granularity::Channel,
+            value_gran: Granularity::ChannelSeparableToken }),
+    ];
+
+    let mut table = Table::new(&["K/V granularity", "ratio", "recon MSE"]);
+    let classes = vec![PrecisionClass::Bits(bits); n];
+    for (name, spec) in variants {
+        let store = CompressedKV::compress(k, v, layout, &classes, spec);
+        table.row(&[
+            name.to_string(),
+            format!("{:.2}x", store.compression_ratio()),
+            format!("{:.3e}", store.reconstruction_mse(k, v)),
+        ]);
+    }
+    println!("== quantization granularities at {bits}-bit on {n} live tokens ==");
+    table.print();
+    println!("\n(paper Table 1: channelwise-K + CST-V matches groupwise accuracy \
+              at tokenwise-level parameter overhead)");
+    Ok(())
+}

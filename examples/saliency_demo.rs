@@ -1,0 +1,75 @@
+//! Figure 3 reproduction: accumulated vs normalized attention scores on a
+//! GSM-style chain-of-thought prompt.
+//!
+//! Runs the full-score prefill artifact on a sample whose *question* is at
+//! the very end (the paper's Fig. 3(b) layout), then prints where each
+//! metric ranks the question tokens and the queried fact.  Accumulated
+//! scores (Eq. 7) should rank the earliest tokens highest; normalized
+//! scores (Eq. 8) should surface the question span.
+//!
+//! ```sh
+//! cargo run --release --example saliency_demo -- --model micro
+//! ```
+
+use zipcache::config::{EngineConfig, PolicyKind};
+use zipcache::coordinator::Engine;
+use zipcache::saliency::metric::select_salient;
+use zipcache::util::cli::Args;
+use zipcache::workload::{Task, TaskGen};
+use zipcache::Result;
+
+fn main() -> Result<()> {
+    let args = Args::new("saliency_demo", "Fig. 3: accumulated vs normalized saliency")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("model", "micro", "model config")
+        .flag("seed", "11", "sample seed")
+        .flag("ratio", "0.4", "saliency ratio for the selection comparison")
+        .parse()?;
+
+    let mut cfg = EngineConfig::load_default(args.get("artifacts"), &args.get("model"))?;
+    cfg.policy = PolicyKind::Mikv; // forces the full-score prefill path
+    let mut engine = Engine::new(cfg)?;
+    let info = engine.runtime().model_info().clone();
+
+    let gen = TaskGen::new(Task::Gsm, info.max_seq - 2);
+    let sample = gen.sample(args.get_u64("seed")?);
+    let n = sample.prompt_len;
+    println!("prompt: {n} tokens; queried fact at {:?}; question tokens at [{}, {})",
+             sample.salient_span, n - 3, n);
+
+    // Run a session start: the engine stores layer-averaged saliency.
+    let sess = engine.start_session(sample.prompt().to_vec(), 2)?;
+    let acc = &sess.acc_saliency[..n];
+    let nrm = &sess.norm_saliency[..n];
+
+    let ratio = args.get_f64("ratio")?;
+    let acc_mask = select_salient(acc, n, ratio);
+    let nrm_mask = select_salient(nrm, n, ratio);
+
+    let span = sample.salient_span.0..sample.salient_span.1;
+    let question = n - 3..n;
+
+    let covered = |mask: &[bool], r: &std::ops::Range<usize>| {
+        r.clone().filter(|&i| mask[i]).count()
+    };
+    println!("\n{:<28} {:>12} {:>12}", "", "accumulated", "normalized");
+    println!("{:<28} {:>9}/{:<2} {:>9}/{:<2}",
+             "queried-fact tokens salient",
+             covered(&acc_mask, &span), span.len(),
+             covered(&nrm_mask, &span), span.len());
+    println!("{:<28} {:>9}/{:<2} {:>9}/{:<2}",
+             "question tokens salient",
+             covered(&acc_mask, &question), question.len(),
+             covered(&nrm_mask, &question), question.len());
+
+    // Positional bias: mean saliency rank of the first 10% vs last 10%.
+    let decile = (n / 10).max(1);
+    let mean = |xs: &[f32]| xs.iter().sum::<f32>() / xs.len() as f32;
+    println!("\nmean saliency, first {decile} tokens : acc={:.4}  norm={:.4}",
+             mean(&acc[..decile]), mean(&nrm[..decile]));
+    println!("mean saliency, last  {decile} tokens : acc={:.4}  norm={:.4}",
+             mean(&acc[n - decile..]), mean(&nrm[n - decile..]));
+    println!("\n(the paper's Fig. 3: accumulated scores inflate early tokens; \
+              normalized scores recover the question span)");
+    Ok(())
+}

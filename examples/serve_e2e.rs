@@ -1,0 +1,107 @@
+//! End-to-end driver (the repo's headline validation run): serve batched
+//! requests from all three paper workloads through the full stack —
+//! threaded server -> continuous batcher -> engine -> PJRT artifacts
+//! (FlashAttention + probe kernels) -> mixed-precision compressed cache —
+//! and report accuracy, latency, throughput and compression per policy.
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```sh
+//! make artifacts
+//! cargo run --release --example serve_e2e -- --model tiny --requests 24
+//! ```
+
+use std::time::Instant;
+
+use zipcache::config::{EngineConfig, PolicyKind};
+use zipcache::eval::{score_generation, AccuracyReport};
+use zipcache::metrics::LatencyStats;
+use zipcache::server::Server;
+use zipcache::util::bench::Table;
+use zipcache::util::cli::Args;
+use zipcache::workload::{RequestTrace, Task};
+use zipcache::Result;
+
+fn main() -> Result<()> {
+    let args = Args::new("serve_e2e", "end-to-end batched serving over all workloads")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("model", "tiny", "model config")
+        .flag("requests", "24", "requests per workload")
+        .flag("rate", "20.0", "arrival rate (req/s)")
+        .flag("max-new", "3", "decode budget")
+        .flag("policies", "fp16,zipcache", "comma-separated policy list")
+        .flag("seed", "0", "trace seed")
+        .parse()?;
+
+    let requests = args.get_usize("requests")?;
+    let rate = args.get_f64("rate")?;
+    let max_new = args.get_usize("max-new")?;
+    let seed = args.get_u64("seed")?;
+
+    let mut table = Table::new(&[
+        "policy", "task", "acc%", "p50 ms", "p99 ms", "tok/s", "req/s",
+    ]);
+
+    for pol in args.get("policies").split(',') {
+        let policy: PolicyKind = pol.trim().parse()?;
+        for (task, label) in [
+            (Task::Gsm, "gsm"),
+            (Task::Lines(8), "lines8"),
+            (Task::Code, "code"),
+        ] {
+            let mut cfg =
+                EngineConfig::load_default(args.get("artifacts"), &args.get("model"))?;
+            cfg.policy = policy;
+            cfg.seed = seed;
+            let window = {
+                // derive the window from the artifacts via a probe config
+                let probe = zipcache::runtime::Manifest::load(
+                    cfg.artifacts_dir.join("manifest.json"))?;
+                probe.configs[&cfg.model].max_seq
+            };
+            let server = Server::start(cfg)?;
+            let trace = RequestTrace::poisson(task, window - max_new, requests,
+                                              rate, max_new, seed);
+
+            let t0 = Instant::now();
+            let mut workers = Vec::new();
+            for e in trace.entries {
+                let h = server.handle.clone();
+                workers.push(std::thread::spawn(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(
+                        e.arrival_ms as u64));
+                    let t_sub = Instant::now();
+                    let out = h.generate(e.sample.prompt().to_vec(), e.max_new_tokens);
+                    (t_sub.elapsed(), e.sample, out)
+                }));
+            }
+            let mut report = AccuracyReport::default();
+            let mut lat = LatencyStats::default();
+            let mut tokens = 0usize;
+            for w in workers {
+                let (dur, sample, out) =
+                    w.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+                let out = out?;
+                report.add(score_generation(&sample, &out.tokens));
+                lat.record(dur);
+                tokens += out.tokens.len();
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            table.row(&[
+                policy.to_string(),
+                label.to_string(),
+                format!("{:.1}", report.accuracy_pct),
+                format!("{:.0}", lat.p50_ms()),
+                format!("{:.0}", lat.p99_ms()),
+                format!("{:.1}", tokens as f64 / wall),
+                format!("{:.1}", requests as f64 / wall),
+            ]);
+            server.shutdown()?;
+            eprintln!("[{}] {} done", policy, label);
+        }
+    }
+
+    println!("\n== end-to-end serving ({requests} req/workload, rate {rate}/s) ==");
+    table.print();
+    Ok(())
+}

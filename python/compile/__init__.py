@@ -1,0 +1,6 @@
+"""ZipCache compile path: L1 Pallas kernels + L2 JAX model + AOT lowering.
+
+Build-time only — nothing in this package is imported at serving time.
+``python -m compile.aot`` produces ``artifacts/*.hlo.txt`` + manifest that
+the Rust runtime (``rust/src/runtime``) loads via PJRT.
+"""

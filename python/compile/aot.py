@@ -1,0 +1,182 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) graphs -> HLO text artifacts.
+
+``python -m compile.aot --configs micro,tiny --out ../artifacts`` emits, per
+model config:
+
+  * ``prefill_flash_<cfg>.hlo.txt`` — ZipCache prefill (Alg. 2): Flash
+    attention + probe saliency.  inputs: tokens[S] i32, valid[S] f32,
+    probe_idx[P] i32.  outputs: logits[S,V], kcache[L,H,S,dh],
+    vcache[L,H,S,dh], norm_saliency[L,S].
+  * ``prefill_full_<cfg>.hlo.txt`` — baseline prefill materializing full
+    scores.  inputs: tokens, valid.  outputs: logits, kcache, vcache,
+    acc_saliency[L,S], norm_saliency[L,S].
+  * ``decode_<cfg>.hlo.txt`` — one decode step (Alg. 3 consumer).  inputs:
+    token[] i32, pos[] i32, kcache, vcache, valid[S] f32.  outputs:
+    logits[V], k_new[L,H,dh], v_new[L,H,dh], a_row[L,S].
+  * ``quant_kv_<cfg>.hlo.txt`` — mixed-precision fake-quant of a cache
+    (keys channelwise, values CSTQuant; Alg. 2 compress step). inputs:
+    kcache, vcache, salient_mask[S] f32, plus static (hi, lo) bits baked
+    per variant. outputs: kq, vq.
+
+Model parameters are baked into the HLO as constants (trained weights from
+``artifacts/params_<cfg>.npz`` when present, else deterministic init), so
+the Rust binary needs no weight marshalling — artifacts are self-contained.
+
+Interchange is HLO **text** (never ``.serialize()``): jax >= 0.5 emits
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids.  See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.cstquant import channel_quant, cst_quant
+from .model import CONFIGS, ModelConfig, decode_step, init_params, prefill_flash, prefill_full
+
+
+def probe_count(cfg: ModelConfig) -> int:
+    """Static probe-set size: 10% of the window (5% recent + 5% random)."""
+    return max(2, cfg.max_seq // 10)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the baked model weights
+    # must survive the text round-trip into the Rust runtime.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_points(cfg: ModelConfig, params):
+    """(name, fn, example_args, output_names) for each artifact of ``cfg``."""
+    S, L, H, dh, V = (cfg.max_seq, cfg.n_layers, cfg.n_heads, cfg.d_head,
+                      cfg.vocab)
+    P = probe_count(cfg)
+    cache_spec = _spec((L, H, S, dh), jnp.float32)
+
+    def pf_flash(tokens, valid, probe_idx):
+        r = prefill_flash(params, cfg, tokens, valid, probe_idx)
+        return (r["logits"], r["kcache"], r["vcache"], r["norm_saliency"])
+
+    def pf_full(tokens, valid):
+        r = prefill_full(params, cfg, tokens, valid)
+        return (r["logits"], r["kcache"], r["vcache"], r["acc_saliency"],
+                r["norm_saliency"])
+
+    def dec(token, pos, kcache, vcache, valid):
+        r = decode_step(params, cfg, token, pos, kcache, vcache, valid)
+        return (r["logits"], r["k_new"], r["v_new"], r["a_row"])
+
+    def quant_kv(kcache, vcache, salient, hi, lo):
+        # keys channelwise / values CSTQuant per head (paper §5.1); the
+        # salient mask selects hi vs lo bits per token (fake-quant; the
+        # bit-packed physical form lives in rust/src/kvcache).
+        def one(kh, vh):
+            k_hi = channel_quant(kh, hi)
+            k_lo = channel_quant(kh, lo)
+            v_hi = cst_quant(vh, hi)
+            v_lo = cst_quant(vh, lo)
+            m = salient[:, None]
+            return jnp.where(m > 0.5, k_hi, k_lo), jnp.where(m > 0.5, v_hi, v_lo)
+        kq, vq = jax.vmap(jax.vmap(one))(kcache, vcache)
+        return (kq, vq)
+
+    entries = [
+        (
+            f"prefill_flash_{cfg.name}",
+            pf_flash,
+            (_spec((S,), jnp.int32), _spec((S,), jnp.float32),
+             _spec((P,), jnp.int32)),
+            ["logits", "kcache", "vcache", "norm_saliency"],
+        ),
+        (
+            f"prefill_full_{cfg.name}",
+            pf_full,
+            (_spec((S,), jnp.int32), _spec((S,), jnp.float32)),
+            ["logits", "kcache", "vcache", "acc_saliency", "norm_saliency"],
+        ),
+        (
+            f"decode_{cfg.name}",
+            dec,
+            (_spec((), jnp.int32), _spec((), jnp.int32), cache_spec,
+             cache_spec, _spec((S,), jnp.float32)),
+            ["logits", "k_new", "v_new", "a_row"],
+        ),
+        (
+            f"quant_kv_{cfg.name}",
+            functools.partial(quant_kv, hi=4, lo=2),
+            (cache_spec, cache_spec, _spec((S,), jnp.float32)),
+            ["kq", "vq"],
+        ),
+    ]
+    return entries
+
+
+def load_or_init_params(cfg: ModelConfig, out_dir: str):
+    ppath = os.path.join(out_dir, f"params_{cfg.name}.npz")
+    if os.path.exists(ppath):
+        from .train import load_params
+        print(f"[aot] using trained params {ppath}")
+        return load_params(cfg, ppath), os.path.basename(ppath)
+    print(f"[aot] WARNING: no trained params for '{cfg.name}', baking init")
+    return init_params(cfg), None
+
+
+def build_config(cfg: ModelConfig, out_dir: str, manifest: dict) -> None:
+    params, ppath = load_or_init_params(cfg, out_dir)
+    for name, fn, args, out_names in entry_points(cfg, params):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "config": cfg.name,
+            "file": os.path.basename(path),
+            "inputs": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+            ],
+            "outputs": out_names,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"[aot] {name}: {len(text)/1e6:.2f} MB HLO text")
+    manifest["configs"][cfg.name] = {
+        "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads, "d_head": cfg.d_head, "d_ff": cfg.d_ff,
+        "max_seq": cfg.max_seq, "probe_count": probe_count(cfg),
+        "n_params": cfg.n_params, "trained": ppath,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--configs", default="micro,tiny")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"entries": {}, "configs": {}}
+    for name in args.configs.split(","):
+        build_config(CONFIGS[name], args.out, manifest)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest written ({len(manifest['entries'])} entries)")
+
+
+if __name__ == "__main__":
+    main()

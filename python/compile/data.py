@@ -1,0 +1,222 @@
+"""Synthetic task corpus shared between the Python training path and the
+Rust workload generators (``rust/src/workload``).
+
+The three paper workloads are reproduced as members of one associative-
+recall family (DESIGN.md §2):
+
+  * ``gsm``            — long "chain-of-thought" body of distractor facts
+                         with the *question* at the end (Fig. 3(b) layout):
+                         the queried pair sits mid-sequence, the query tokens
+                         sit at the very end.
+  * ``line_retrieval`` — N lines ``LINE <d1 d2> : <val>``; the query names a
+                         line index and the model must return that line's
+                         value (LongEval LRT structure, Fig. 5 / Table A).
+  * ``code``           — short prompts (l≈120, Table B's regime) of the same
+                         structure.
+
+DETERMINISM CONTRACT: every sequence is a pure function of ``(task, seed)``
+via SplitMix64.  The Rust side re-implements ``SplitMix64`` bit-for-bit
+(``rust/src/workload/rng.rs``) and the token layouts below; cross-layer
+tests compare generated streams exactly.
+
+Token map (vocab = 256):
+  0 PAD | 1 BOS | 2 SEP | 3 QUERY | 4 EOS | 5 NL | 6 LINE
+  16..79    KEY tokens   (64)
+  80..143   VAL tokens   (64)
+  144..207  FILLER tokens(64)
+  208..217  DIGIT tokens (10)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+PAD, BOS, SEP, QUERY, EOS, NL, LINE = 0, 1, 2, 3, 4, 5, 6
+KEY0, NKEY = 16, 64
+VAL0, NVAL = 80, 64
+FIL0, NFIL = 144, 64
+DIG0 = 208
+
+
+class SplitMix64:
+    """SplitMix64 PRNG — tiny, seedable, trivially portable to Rust."""
+
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed: int):
+        self.state = seed & self.MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & self.MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & self.MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & self.MASK
+        return z ^ (z >> 31)
+
+    def below(self, n: int) -> int:
+        """Uniform in [0, n) via modulo (bias negligible for n << 2^64)."""
+        return self.next_u64() % n
+
+    def shuffle(self, xs: list) -> None:
+        """Fisher-Yates, in place."""
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+
+@dataclasses.dataclass
+class Sample:
+    tokens: List[int]      # full sequence incl. answer (for training)
+    prompt_len: int        # tokens[:prompt_len] is the serving-time prompt
+    answer: List[int]      # [val_token, EOS]
+    salient_span: Tuple[int, int]  # [start, end) of the queried pair
+
+
+def _pair_tokens(key_tok: int, val_tok: int) -> List[int]:
+    return [key_tok, SEP, val_tok, NL]
+
+
+def gen_recall(seed: int, n_pairs: int, n_filler: int) -> Sample:
+    """Core associative recall: pairs + filler, query at the end."""
+    rng = SplitMix64(seed)
+    keys = list(range(NKEY))
+    rng.shuffle(keys)
+    keys = keys[:n_pairs]
+    vals = [rng.below(NVAL) for _ in range(n_pairs)]
+    qi = rng.below(n_pairs)
+
+    body: List[List[int]] = [
+        _pair_tokens(KEY0 + k, VAL0 + v) for k, v in zip(keys, vals)
+    ]
+    for _ in range(n_filler):
+        body.append([FIL0 + rng.below(NFIL), NL])
+    rng.shuffle(body)
+
+    toks: List[int] = [BOS]
+    sal = (0, 0)
+    for chunk in body:
+        if chunk[0] == KEY0 + keys[qi]:
+            sal = (len(toks), len(toks) + len(chunk))
+        toks.extend(chunk)
+    toks.extend([QUERY, KEY0 + keys[qi], SEP])
+    prompt_len = len(toks)
+    answer = [VAL0 + vals[qi], EOS]
+    toks.extend(answer)
+    return Sample(toks, prompt_len, answer, sal)
+
+
+def fits(sample: Sample, max_seq: int) -> bool:
+    return len(sample.tokens) <= max_seq
+
+
+def gen_line_retrieval(seed: int, n_lines: int) -> Sample:
+    """LongEval-style line retrieval with 2-digit line indices (<=100 lines
+    per hundred-block; indices are sampled unique in [0, 100))."""
+    assert n_lines <= 100
+    rng = SplitMix64(seed)
+    idxs = list(range(100))
+    rng.shuffle(idxs)
+    idxs = idxs[:n_lines]
+    vals = [rng.below(NVAL) for _ in range(n_lines)]
+    qi = rng.below(n_lines)
+
+    toks: List[int] = [BOS]
+    sal = (0, 0)
+    for i, (ix, v) in enumerate(zip(idxs, vals)):
+        start = len(toks)
+        toks.extend([LINE, DIG0 + ix // 10, DIG0 + ix % 10, SEP, VAL0 + v, NL])
+        if i == qi:
+            sal = (start, len(toks))
+    toks.extend([QUERY, DIG0 + idxs[qi] // 10, DIG0 + idxs[qi] % 10, SEP])
+    prompt_len = len(toks)
+    answer = [VAL0 + vals[qi], EOS]
+    toks.extend(answer)
+    return Sample(toks, prompt_len, answer, sal)
+
+
+def gen_task(task: str, seed: int, max_seq: int) -> Sample:
+    """Paper-workload presets, sized to fit ``max_seq`` (incl. answer)."""
+    if task == "gsm":
+        # long body, queried fact anywhere, question at the very end;
+        # sized so BOS + 4*pairs + 2*filler + 3 (query) + 2 (answer) <= max_seq
+        cap_pairs = max(3, min(16, (max_seq - 8) // 8))
+        n_pairs = 3 + SplitMix64(seed ^ 0xA5).below(cap_pairs - 2)
+        budget = (max_seq - 6 - 4 * n_pairs) // 2
+        want = 1 + SplitMix64(seed ^ 0x5A).below(max(1, budget))
+        n_filler = max(0, min(budget, want))
+        return gen_recall(seed, n_pairs, n_filler)
+    if task == "code":
+        # short-prompt regime (Table B): few pairs, no filler
+        n_pairs = 4 + SplitMix64(seed ^ 0xC0).below(5)  # 4..8
+        return gen_recall(seed, n_pairs, n_filler=2)
+    if task.startswith("lines"):
+        n_lines = int(task[len("lines"):])
+        return gen_line_retrieval(seed, n_lines)
+    raise ValueError(f"unknown task {task!r}")
+
+
+def pad_batch(samples: List[Sample], max_seq: int, full_loss: bool = False):
+    """-> (tokens [B,S], targets [B,S], loss_mask [B,S]) python lists.
+
+    ``full_loss=False`` restricts the next-token loss to the answer span
+    (the eval objective).  ``full_loss=True`` trains on every non-PAD
+    position — much denser gradient signal, which is what actually makes
+    the induction/recall circuit form (random body tokens contribute an
+    irreducible-entropy floor but useful structure gradients).
+    """
+    B = len(samples)
+    toks = [[PAD] * max_seq for _ in range(B)]
+    tgts = [[PAD] * max_seq for _ in range(B)]
+    mask = [[0.0] * max_seq for _ in range(B)]
+    for b, s in enumerate(samples):
+        seq = s.tokens[:max_seq]
+        for i, t in enumerate(seq):
+            toks[b][i] = t
+        for i in range(len(seq) - 1):
+            tgts[b][i] = seq[i + 1]
+            if full_loss or i + 1 >= s.prompt_len:
+                mask[b][i] = 1.0
+    return toks, tgts, mask
+
+
+def with_extra_queries(sample: Sample, n_extra: int, seed: int,
+                       max_seq: int) -> Sample:
+    """Training augmentation: append extra `QUERY key SEP val NL` blocks
+    re-querying random body pairs.  Each block is another recall
+    opportunity, multiplying the per-sequence learning signal.  Serving/eval
+    always uses the plain single-query layout.
+    """
+    # collect (key, val) pairs present in the body
+    pairs = []
+    t = sample.tokens
+    for i in range(len(t) - 2):
+        if KEY0 <= t[i] < KEY0 + NKEY and t[i + 1] == SEP and \
+                VAL0 <= t[i + 2] < VAL0 + NVAL:
+            pairs.append((t[i], t[i + 2]))
+    if not pairs:
+        return sample
+    rng = SplitMix64(seed ^ 0xEE)
+    toks = list(sample.tokens)
+    for _ in range(n_extra):
+        if len(toks) + 4 > max_seq:
+            break
+        k, v = pairs[rng.below(len(pairs))]
+        toks.extend([QUERY, k, SEP, v])
+    return Sample(toks, sample.prompt_len, sample.answer, sample.salient_span)
+
+
+def train_sample(rng: SplitMix64, max_seq: int) -> Sample:
+    """Training mixture covering all three serve-time layouts."""
+    r = rng.below(100)
+    seed = rng.next_u64()
+    if r < 40:
+        s = gen_task("gsm", seed, max_seq)
+    elif r < 70:
+        cap = max(2, min(36, (max_seq - 6) // 6 - 1))
+        n_lines = 2 + SplitMix64(seed ^ 0x11).below(cap - 1)
+        s = gen_line_retrieval(seed, n_lines)
+    else:
+        s = gen_task("code", seed, max_seq)
+    assert fits(s, max_seq), (r, len(s.tokens), max_seq)
+    return s

@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels for ZipCache (interpret-mode; CPU-PJRT safe).
+
+Public surface:
+  * quantization — :mod:`.cstquant` (token/channel/group/CST fake-quant,
+    mixed-precision ``zipcache_quant_kv``)
+  * attention    — :mod:`.flash` (tiled online-softmax FlashAttention)
+  * saliency     — :mod:`.probe` (probe attention + normalized saliency)
+  * oracles      — :mod:`.ref` (pure-jnp references, the pytest ground truth)
+"""
+
+from . import ref  # noqa: F401
+from .cstquant import (  # noqa: F401
+    channel_quant,
+    cst_quant,
+    group_quant,
+    token_quant,
+    zipcache_quant_kv,
+)
+from .flash import flash_attention, flash_attention_mha  # noqa: F401
+from .probe import probe_attention_saliency, select_probe_indices  # noqa: F401

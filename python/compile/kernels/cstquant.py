@@ -1,0 +1,224 @@
+"""Pallas quantization kernels for the KV cache (paper §4.1, Alg. 1).
+
+Four granularities are implemented, matching Table 1 of the paper:
+
+* :func:`token_quant`   — one (s, z) per token row (baseline)
+* :func:`channel_quant` — one (s, z) per channel column (used for keys)
+* :func:`group_quant`   — one (s, z) per ``group`` channels per token
+* :func:`cst_quant`     — channel-separable tokenwise quantization (Alg. 1,
+  used for values): channel normalization by ``sqrt(max|X_i|)`` (Eq. 6),
+  tokenwise quantization (Eq. 5), channel rescale.
+
+All kernels are fake-quant (quantize -> dequantize) so they can be fused
+straight into the L2 attention graph; the *bit-packed* storage form lives in
+the Rust KV-cache manager (``rust/src/kvcache``), which must agree bit-for-
+bit with the grid semantics here (checked by cross-layer tests).
+
+TPU mapping: each grid step owns a ``(block_l, hd)`` token slab in VMEM; the
+channel statistics for CST are computed in a separate single-pass reduction
+kernel so the token slabs never need cross-block communication.  All kernels
+run with ``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU-PJRT mandate; see module docstring.
+
+
+def _pick_block(l: int, want: int = 128) -> int:
+    """Largest divisor of ``l`` not exceeding ``want`` (grid must tile l)."""
+    b = min(want, l)
+    while l % b != 0:
+        b -= 1
+    return b
+
+def _qparams(xmin, xmax, qmax):
+    """Shared (s, z) derivation (Eq. 5) with the exact-constant degenerate
+    convention (must match ref.uniform_quant and rust QuantParams)."""
+    s = (xmax - xmin) / qmax
+    deg = s <= 0.0
+    s_deg = jnp.where(jnp.abs(xmin) > 0.0, jnp.abs(xmin), 1.0)
+    s = jnp.where(deg, s_deg, s)
+    z = jnp.where(deg, jnp.where(xmin < 0.0, 1.0, 0.0), -jnp.round(xmin / s))
+    return s, z
+
+
+
+# ---------------------------------------------------------------------------
+# Tokenwise fake-quant kernel
+# ---------------------------------------------------------------------------
+
+
+def _token_quant_kernel(x_ref, o_ref, *, qmax: float):
+    x = x_ref[...]
+    xmin = jnp.min(x, axis=-1, keepdims=True)
+    xmax = jnp.max(x, axis=-1, keepdims=True)
+    s, z = _qparams(xmin, xmax, qmax)
+    q = jnp.clip(jnp.round(x / s) + z, 0.0, qmax)
+    o_ref[...] = (q - z) * s
+
+
+def token_quant(x: jnp.ndarray, bits: int, block_l: int = 128) -> jnp.ndarray:
+    """Tokenwise fake-quant of ``x: [l, hd]`` to ``bits``.
+
+    Grid is over token blocks: each program quantizes ``block_l`` full rows,
+    so the per-token (s, z) never crosses a block boundary.
+    """
+    l, hd = x.shape
+    bl = _pick_block(l, block_l)
+    return pl.pallas_call(
+        functools.partial(_token_quant_kernel, qmax=2.0**bits - 1.0),
+        grid=(l // bl,),
+        in_specs=[pl.BlockSpec((bl, hd), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bl, hd), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, hd), x.dtype),
+        interpret=INTERPRET,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# Channelwise fake-quant kernel (keys)
+# ---------------------------------------------------------------------------
+
+
+def _channel_quant_kernel(x_ref, stats_ref, o_ref, *, qmax: float):
+    x = x_ref[...]
+    xmin = stats_ref[0:1, :]
+    xmax = stats_ref[1:2, :]
+    s, z = _qparams(xmin, xmax, qmax)
+    q = jnp.clip(jnp.round(x / s) + z, 0.0, qmax)
+    o_ref[...] = (q - z) * s
+
+
+def channel_quant(x: jnp.ndarray, bits: int, block_l: int = 128) -> jnp.ndarray:
+    """Channelwise fake-quant of ``x: [l, hd]`` to ``bits``.
+
+    Channel (min, max) are a global reduction, so they are computed once
+    outside the grid (they lower into the same HLO module) and broadcast to
+    every token block — this is the TPU-friendly split: one tiny reduction
+    pass, then embarrassingly parallel slabs.
+    """
+    l, hd = x.shape
+    stats = jnp.stack([jnp.min(x, axis=0), jnp.max(x, axis=0)])  # [2, hd]
+    bl = _pick_block(l, block_l)
+    return pl.pallas_call(
+        functools.partial(_channel_quant_kernel, qmax=2.0**bits - 1.0),
+        grid=(l // bl,),
+        in_specs=[
+            pl.BlockSpec((bl, hd), lambda i: (i, 0)),
+            pl.BlockSpec((2, hd), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bl, hd), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, hd), x.dtype),
+        interpret=INTERPRET,
+    )(x, stats)
+
+
+# ---------------------------------------------------------------------------
+# Groupwise fake-quant kernel (Table 1 baseline)
+# ---------------------------------------------------------------------------
+
+
+def _group_quant_kernel(x_ref, o_ref, *, qmax: float, group: int):
+    x = x_ref[...]
+    bl, hd = x.shape
+    xg = x.reshape(bl, hd // group, group)
+    xmin = jnp.min(xg, axis=-1, keepdims=True)
+    xmax = jnp.max(xg, axis=-1, keepdims=True)
+    s, z = _qparams(xmin, xmax, qmax)
+    q = jnp.clip(jnp.round(xg / s) + z, 0.0, qmax)
+    o_ref[...] = ((q - z) * s).reshape(bl, hd)
+
+
+def group_quant(
+    x: jnp.ndarray, bits: int, group: int = 32, block_l: int = 128
+) -> jnp.ndarray:
+    """Groupwise fake-quant: one (s, z) per ``group`` channels per token."""
+    l, hd = x.shape
+    assert hd % group == 0, f"hd={hd} % group={group} != 0"
+    bl = _pick_block(l, block_l)
+    return pl.pallas_call(
+        functools.partial(_group_quant_kernel, qmax=2.0**bits - 1.0, group=group),
+        grid=(l // bl,),
+        in_specs=[pl.BlockSpec((bl, hd), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bl, hd), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, hd), x.dtype),
+        interpret=INTERPRET,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# Channel-separable tokenwise quantization (Alg. 1) — the paper's scheme
+# ---------------------------------------------------------------------------
+
+
+def _cst_quant_kernel(x_ref, c_ref, o_ref, *, qmax: float):
+    x = x_ref[...]
+    c = c_ref[...]  # [1, hd] channel scales, sqrt(max|X_i|)
+    xn = x / c
+    xmin = jnp.min(xn, axis=-1, keepdims=True)
+    xmax = jnp.max(xn, axis=-1, keepdims=True)
+    s, z = _qparams(xmin, xmax, qmax)
+    q = jnp.clip(jnp.round(xn / s) + z, 0.0, qmax)
+    o_ref[...] = ((q - z) * s) * c
+
+
+def cst_quant(x: jnp.ndarray, bits: int, block_l: int = 128) -> jnp.ndarray:
+    """Alg. 1 (CSTQuant) as a Pallas kernel over ``x: [l, hd]``.
+
+    The channel scale vector ``c = sqrt(max|X_i|)`` (Eq. 6) is a one-pass
+    global reduction; normalize -> tokenwise-quant -> rescale all happen
+    inside one VMEM-resident slab per grid step, so the data is read from
+    HBM exactly once for the quantization proper.
+    """
+    l, hd = x.shape
+    c = jnp.sqrt(jnp.max(jnp.abs(x), axis=0, keepdims=True))  # [1, hd]
+    c = jnp.where(c <= 0.0, 1.0, c)
+    bl = _pick_block(l, block_l)
+    return pl.pallas_call(
+        functools.partial(_cst_quant_kernel, qmax=2.0**bits - 1.0),
+        grid=(l // bl,),
+        in_specs=[
+            pl.BlockSpec((bl, hd), lambda i: (i, 0)),
+            pl.BlockSpec((1, hd), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bl, hd), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, hd), x.dtype),
+        interpret=INTERPRET,
+    )(x, c)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision KV compression (ZipCache quantization config)
+# ---------------------------------------------------------------------------
+
+
+def zipcache_quant_kv(
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    salient_mask: jnp.ndarray,
+    bits_high: int = 4,
+    bits_low: int = 2,
+):
+    """Quantize (K, V) with the paper's mixed-precision config (§5.1).
+
+    Keys: channelwise quantization. Values: CSTQuant.  ``salient_mask``
+    ([l] bool) selects which tokens get ``bits_high``; the rest get
+    ``bits_low``.  Fake-quant both ways and select per token — this is the
+    lowering-friendly formulation (no data-dependent shapes), and is exactly
+    what the Rust cache manager does physically with two packed pools.
+    """
+    m = salient_mask[:, None]
+    k_hi = channel_quant(k, bits_high)
+    k_lo = channel_quant(k, bits_low)
+    v_hi = cst_quant(v, bits_high)
+    v_lo = cst_quant(v, bits_low)
+    k_q = jnp.where(m, k_hi, k_lo)
+    v_q = jnp.where(m, v_hi, v_lo)
+    return k_q, v_q

@@ -1,0 +1,130 @@
+"""Tiled online-softmax attention (FlashAttention) as a Pallas kernel.
+
+This is the fast path of the paper's §4.3: the attention output for ALL
+tokens is computed in (Bq, Bk) tiles with online softmax, never
+materializing the l×l score matrix — O(l) memory instead of O(l²)
+(paper Fig. 4(c)).  Saliency for the probe subset is handled by the
+separate ``probe.py`` kernel so this kernel stays score-free.
+
+TPU mapping (DESIGN.md §3):
+  * grid = (l / Bq,): each program owns one Q tile resident in VMEM
+    (threadblock analogue).
+  * the K/V tiles are streamed through VMEM by a fori_loop — this loop IS
+    the HBM↔VMEM schedule FlashAttention expresses with threadblocks.
+  * ``q_tile @ k_tile.T`` is the MXU contraction; Bq/Bk default to 128 to
+    match the 128×128 systolic array.
+
+VMEM footprint per program (f32): Bq·d (Q) + 2·Bk·d (K,V tile) + Bq·Bk
+(scores) + Bq·d (accum) + O(Bq) stats.  For Bq=Bk=128, d=128 that is
+~0.33 MB — far under the ~16 MB VMEM budget, leaving room for
+double-buffering the K/V stream.
+
+Runs with ``interpret=True`` (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+NEG_INF = -1e30  # finite -inf stand-in: keeps 0*inf NaNs out of the masked path
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, lk: int,
+                  causal: bool, offs: int, scale: float):
+    """One Q tile vs the full K/V stream, online softmax."""
+    qi = pl.program_id(0)
+    q = q_ref[...]  # [bq, d]
+    d = q.shape[-1]
+
+    m0 = jnp.full((bq, 1), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq, 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, d), dtype=jnp.float32)
+
+    nkb = lk // bk
+    if causal:
+        # Key blocks strictly above this Q tile's causal frontier contribute
+        # nothing; skip them (dynamic fori_loop bound lowers to while_loop).
+        # Frontier key index for this tile = offs + (qi+1)*bq - 1.
+        nkb_eff = jnp.minimum((offs + (qi + 1) * bq + bk - 1) // bk, nkb)
+        nkb_eff = jnp.maximum(nkb_eff, 1)
+    else:
+        nkb_eff = nkb
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (pl.dslice(j * bk, bk), slice(None)))  # [bk, d]
+        v = pl.load(v_ref, (pl.dslice(j * bk, bk), slice(None)))
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos + offs, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        return m_cur, l_cur, acc
+
+    m, l, acc = jax.lax.fori_loop(0, nkb_eff, body, (m0, l0, acc0))
+    l = jnp.where(l <= 0.0, 1.0, l)  # fully-masked rows (shouldn't occur causally)
+    o_ref[...] = (acc / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jnp.ndarray:
+    """FlashAttention over ``q: [lq, d]``, ``k, v: [lk, d]`` -> ``[lq, d]``.
+
+    Supports decode-style ``lq < lk``: query row i attends to keys
+    ``[0, lk - lq + i]`` (rows aligned to the end of the key sequence),
+    matching :func:`ref.standard_attention`.
+    """
+    lq, d = q.shape
+    lk = k.shape[0]
+    bq = _pick_block(lq, block_q)
+    bk = _pick_block(lk, block_k)
+    offs = lk - lq
+    scale = 1.0 / (d**0.5)
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, lk=lk, causal=causal, offs=offs, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(lq // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((lk, d), lambda i: (0, 0)),  # streamed inside kernel
+            pl.BlockSpec((lk, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((lq, d), q.dtype),
+        interpret=INTERPRET,
+    )(q, k, v)
+
+
+def _pick_block(l: int, want: int) -> int:
+    b = min(want, l)
+    while l % b != 0:
+        b -= 1
+    return b
+
+
+def flash_attention_mha(q, k, v, causal: bool = True, **kw) -> jnp.ndarray:
+    """Vmapped multi-head wrapper: q,k,v: [h, l, d] -> [h, l, d]."""
+    return jax.vmap(lambda qh, kh, vh: flash_attention(qh, kh, vh, causal, **kw))(
+        q, k, v
+    )

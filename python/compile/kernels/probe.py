@@ -1,0 +1,143 @@
+"""Probe-token attention + fused normalized-saliency kernel (paper §4.3).
+
+The efficient approximation of Eq. (8): only ``p`` probe rows of the
+attention matrix are computed through standard attention (Eq. 9); the
+columnwise normalized reduction that yields per-token saliency is fused
+into the same kernel, so the [p, lk] probe score matrix never leaves VMEM
+when p is small (p = 10% of l in the paper's config).
+
+Grid: one program per key block of width Bk — each program computes the
+[p, Bk] probe-score stripe and reduces it to a [Bk] saliency stripe.  The
+softmax over the key dimension needs row statistics across stripes, so the
+row max / row sum are computed by a cheap [p, lk] pre-pass (still O(p·l),
+not O(l²)) lowered into the same HLO module.
+
+Runs with ``interpret=True`` (CPU PJRT mandate).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+NEG_INF = -1e30
+
+
+def _pick_block(l: int, want: int) -> int:
+    b = min(want, l)
+    while l % b != 0:
+        b -= 1
+    return b
+
+
+def _probe_kernel(qp_ref, k_ref, rowstat_ref, pidx_ref, a_ref, sal_ref, *,
+                  bk: int, offs: int, scale: float, causal: bool):
+    """One key stripe: probe scores [p, bk] + normalized saliency [bk]."""
+    j = pl.program_id(0)
+    qp = qp_ref[...]            # [p, d]
+    k = k_ref[...]              # [bk, d] — this stripe's keys
+    rmax = rowstat_ref[0:1, :].T  # [p, 1]
+    rsum = rowstat_ref[1:2, :].T  # [p, 1]
+    pidx = pidx_ref[...]        # [1, p] int32 probe positions (query-frame)
+
+    s = jnp.dot(qp, k.T, preferred_element_type=jnp.float32) * scale  # [p, bk]
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    if causal:
+        cover = kpos <= (pidx.T + offs)  # [p, bk]
+        s = jnp.where(cover, s, NEG_INF)
+    else:
+        cover = jnp.ones_like(s, dtype=bool)
+    a = jnp.exp(s - rmax) / rsum  # softmax completed with global row stats
+    a = jnp.where(cover, a, 0.0)
+    a_ref[...] = a.astype(a_ref.dtype)
+
+    # Eq. (8) restricted to probe rows: per-column sum / per-column coverage.
+    nnz = jnp.maximum(jnp.sum(cover.astype(jnp.float32), axis=0), 1.0)  # [bk]
+    sal_ref[...] = (jnp.sum(a, axis=0) / nnz).astype(sal_ref.dtype)[None, :]
+
+
+def probe_attention_saliency(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    probe_idx: jnp.ndarray,
+    causal: bool = True,
+    block_k: int = 128,
+):
+    """Probe scores (Eq. 9) + approximate normalized saliency (Eq. 8).
+
+    Args:
+      q: [lq, d] query states (full — probe rows are gathered inside).
+      k: [lk, d] key states.
+      probe_idx: [p] int32 indices into the query sequence.
+      causal: apply the causal mask (probe row i covers keys [0, offs+i]).
+
+    Returns:
+      (a_probe [p, lk], saliency [lk]).
+    """
+    lq, d = q.shape
+    lk = k.shape[0]
+    p = probe_idx.shape[0]
+    offs = lk - lq
+    scale = 1.0 / (d**0.5)
+
+    qp = q[probe_idx]  # [p, d]
+
+    # Row-stat pre-pass: O(p·lk) — the whole point is p << lq.
+    s_full = (qp @ k.T) * scale
+    if causal:
+        kpos = jnp.arange(lk)[None, :]
+        cover = kpos <= (probe_idx[:, None] + offs)
+        s_full = jnp.where(cover, s_full, NEG_INF)
+    rmax = jnp.max(s_full, axis=-1)               # [p]
+    rsum = jnp.sum(jnp.exp(s_full - rmax[:, None]), axis=-1)  # [p]
+    rowstat = jnp.stack([rmax, rsum])             # [2, p]
+
+    bk = _pick_block(lk, block_k)
+    kernel = functools.partial(
+        _probe_kernel, bk=bk, offs=offs, scale=scale, causal=causal
+    )
+    a_probe, sal = pl.pallas_call(
+        kernel,
+        grid=(lk // bk,),
+        in_specs=[
+            pl.BlockSpec((p, d), lambda j: (0, 0)),
+            pl.BlockSpec((bk, d), lambda j: (j, 0)),
+            pl.BlockSpec((2, p), lambda j: (0, 0)),
+            pl.BlockSpec((1, p), lambda j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((p, bk), lambda j: (0, j)),
+            pl.BlockSpec((1, bk), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, lk), jnp.float32),
+            jax.ShapeDtypeStruct((1, lk), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(qp, k, rowstat, probe_idx.astype(jnp.int32)[None, :])
+    return a_probe, sal[0]
+
+
+def select_probe_indices(
+    l: int,
+    ratio_recent: float = 0.05,
+    ratio_random: float = 0.05,
+    seed: int = 0,
+) -> jnp.ndarray:
+    """The paper's hybrid random+recent probe strategy (§4.3, Table 2).
+
+    Returns sorted unique indices: the trailing ``ratio_recent`` of the
+    sequence plus ``ratio_random`` sampled uniformly from the remainder.
+    """
+    n_recent = max(1, int(round(l * ratio_recent)))
+    n_random = max(1, int(round(l * ratio_random)))
+    recent = jnp.arange(l - n_recent, l)
+    pool = jnp.arange(0, l - n_recent)
+    key = jax.random.PRNGKey(seed)
+    rand = jax.random.choice(key, pool, shape=(min(n_random, pool.shape[0]),),
+                             replace=False)
+    return jnp.sort(jnp.concatenate([rand, recent])).astype(jnp.int32)

@@ -1,0 +1,163 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: each Pallas kernel in
+``cstquant.py`` / ``flash.py`` / ``probe.py`` is checked against the
+functions here via pytest (``python/tests/``).  Everything is written in
+plain ``jax.numpy`` with no tiling tricks so the math is auditable against
+the paper's equations:
+
+* Eq. (5)  — uniform quantization  -> :func:`uniform_quant`
+* Eq. (6)  — channel normalization -> :func:`cst_quant`
+* Eq. (7)  — accumulated scores    -> :func:`accumulated_saliency`
+* Eq. (8)  — normalized scores     -> :func:`normalized_saliency`
+* Eq. (9)  — probe attention       -> :func:`probe_attention`
+* Alg. (1) — CSTQuant              -> :func:`cst_quant`
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Quantization references (paper §3.2, §4.1, Alg. 1)
+# ---------------------------------------------------------------------------
+
+
+def uniform_quant(x: jnp.ndarray, bits: int, axis=None):
+    """Eq. (5): uniform asymmetric fake-quantization of ``x`` to ``bits``.
+
+    ``axis`` selects the reduction axes over which one (scale, zero) pair is
+    shared; ``None`` means a single pair for the whole tensor.  Returns the
+    dequantized tensor (fake-quant), matching how the kernels are verified.
+    """
+    qmax = 2.0**bits - 1.0
+    xmin = jnp.min(x, axis=axis, keepdims=True)
+    xmax = jnp.max(x, axis=axis, keepdims=True)
+    s = (xmax - xmin) / qmax
+    # Degenerate (constant) slices: choose (s, z) so the constant value
+    # round-trips exactly: s = |c| (or 1 for c = 0), z = 1 if c < 0 else 0.
+    deg = s <= 0.0
+    s_deg = jnp.where(jnp.abs(xmin) > 0.0, jnp.abs(xmin), 1.0)
+    s = jnp.where(deg, s_deg, s)
+    z = jnp.where(deg, jnp.where(xmin < 0.0, 1.0, 0.0), -jnp.round(xmin / s))
+    q = jnp.clip(jnp.round(x / s) + z, 0.0, qmax)
+    return (q - z) * s
+
+
+def token_quant(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Tokenwise quantization: one (s, z) per token row. x: [l, hd]."""
+    return uniform_quant(x, bits, axis=-1)
+
+
+def channel_quant(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Channelwise quantization: one (s, z) per channel column. x: [l, hd]."""
+    return uniform_quant(x, bits, axis=-2)
+
+
+def group_quant(x: jnp.ndarray, bits: int, group: int = 32) -> jnp.ndarray:
+    """Groupwise quantization: one (s, z) per ``group`` contiguous channels
+    within each token (KIVI-style fine granularity). x: [l, hd]."""
+    l, hd = x.shape
+    assert hd % group == 0, f"hd={hd} not divisible by group={group}"
+    xg = x.reshape(l, hd // group, group)
+    return uniform_quant(xg, bits, axis=-1).reshape(l, hd)
+
+
+def cst_quant(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Alg. 1 (CSTQuant): channel-separable tokenwise quantization.
+
+    1. normalize each channel i by c_i = sqrt(max|X_i|)      (Eq. 6)
+    2. tokenwise uniform quantization of the normalized data (Eq. 5)
+    3. rescale channels back by c_i
+    """
+    c = jnp.sqrt(jnp.max(jnp.abs(x), axis=-2, keepdims=True))
+    c = jnp.where(c <= 0.0, 1.0, c)
+    xn = x / c
+    xq = token_quant(xn, bits)
+    return xq * c
+
+
+# ---------------------------------------------------------------------------
+# Attention references (paper §3.1, §4.2, §4.3)
+# ---------------------------------------------------------------------------
+
+
+def causal_mask(l: int) -> jnp.ndarray:
+    return jnp.tril(jnp.ones((l, l), dtype=bool))
+
+
+def standard_attention(q, k, v, causal: bool = True):
+    """Eq. (2): full-matrix softmax attention. q,k,v: [l, d] -> (out, A)."""
+    lq, d = q.shape
+    lk = k.shape[0]
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    if causal:
+        # Rows are aligned to the *end* of the key sequence so decode-style
+        # lq < lk works: query row i attends to keys [0, lk - lq + i].
+        offs = lk - lq
+        mask = jnp.arange(lk)[None, :] <= (jnp.arange(lq)[:, None] + offs)
+        scores = jnp.where(mask, scores, -jnp.inf)
+    a = jax.nn.softmax(scores, axis=-1)
+    return a @ v, a
+
+
+def flash_attention(q, k, v, causal: bool = True):
+    """Reference output of the tiled kernel == standard attention output."""
+    out, _ = standard_attention(q, k, v, causal)
+    return out
+
+
+def accumulated_saliency(a: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (7): p_i = sum_k A[k, i] (H2O / MiKV metric)."""
+    return jnp.sum(a, axis=0)
+
+
+def normalized_saliency(a: jnp.ndarray, causal: bool = True) -> jnp.ndarray:
+    """Eq. (8): p̃_i = sum_k A[k, i] / nnz(A[:, i]).
+
+    For a causal [l, l] matrix nnz(A[:, i]) = l - i.  We compute nnz from the
+    mask structure rather than counting exact zeros so that numerically tiny
+    attention values still count as "present", matching the paper's intent.
+    """
+    lq, lk = a.shape
+    if causal:
+        offs = lk - lq
+        mask = jnp.arange(lk)[None, :] <= (jnp.arange(lq)[:, None] + offs)
+        nnz = jnp.sum(mask, axis=0)
+    else:
+        nnz = jnp.full((lk,), lq)
+    nnz = jnp.maximum(nnz, 1)
+    return jnp.sum(a, axis=0) / nnz
+
+
+def probe_attention(q, k, probe_idx, causal: bool = True):
+    """Eq. (9): attention scores of probe tokens only. Returns [p, lk]."""
+    d = q.shape[-1]
+    qp = q[probe_idx]
+    scores = (qp @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    if causal:
+        lk = k.shape[0]
+        offs = lk - q.shape[0]
+        mask = jnp.arange(lk)[None, :] <= (probe_idx[:, None] + offs)
+        scores = jnp.where(mask, scores, -jnp.inf)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+def probe_saliency(q, k, probe_idx, causal: bool = True):
+    """Approximate Eq. (8) from probe rows only (paper §4.3).
+
+    nnz per column is the number of probe rows whose causal span covers that
+    column, i.e. the count of probe_idx >= column position (shifted by the
+    query/key offset).
+    """
+    a = probe_attention(q, k, probe_idx, causal)
+    lk = k.shape[0]
+    if causal:
+        offs = lk - q.shape[0]
+        cover = (probe_idx[:, None] + offs) >= jnp.arange(lk)[None, :]
+        nnz = jnp.sum(cover, axis=0)
+    else:
+        nnz = jnp.full((lk,), probe_idx.shape[0])
+    nnz = jnp.maximum(nnz, 1)
+    return jnp.sum(a, axis=0) / nnz

@@ -1,0 +1,367 @@
+"""Layer-2 JAX model: a from-scratch GPT-style decoder for ZipCache.
+
+This is the substrate transformer the paper's method operates on (we cannot
+ship LLaMA weights — see DESIGN.md §2).  Pure functional JAX, no flax:
+
+  * RMSNorm, rotary position embeddings, SwiGLU MLP, tied LM head
+  * multi-head causal attention with an explicit KV-cache interface
+  * two prefill variants:
+      - ``prefill_flash``: attention through the L1 Pallas FlashAttention
+        kernel + probe-token normalized saliency (the ZipCache fast path,
+        Alg. 2) — never materializes l×l scores.
+      - ``prefill_full``: standard attention that returns full per-layer
+        accumulated AND normalized saliency (Eqs. 7/8) — the baseline path
+        used by MiKV/H2O and by Fig. 3/4 reproductions.
+  * ``decode_step``: one-token decode against a fixed-capacity cache with a
+    validity mask (supports eviction-style baselines), Alg. 3's consumer.
+
+Everything here is lowered AOT by ``aot.py`` to HLO text; the Rust runtime
+executes the artifacts and owns all serving-time control flow.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash
+from .kernels import probe as probe_mod
+from .kernels import ref as kref
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static hyper-parameters of the decoder (all shapes are AOT-static)."""
+
+    name: str = "tiny"
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 384
+    max_seq: int = 256
+    rope_base: float = 10000.0
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (embedding tied with the LM head)."""
+        per_layer = (
+            4 * self.d_model * self.d_model  # wq wk wv wo
+            + 3 * self.d_model * self.d_ff  # swiglu w1 w3 w2
+            + 2 * self.d_model  # two rmsnorm gains
+        )
+        return self.vocab * self.d_model + self.n_layers * per_layer + self.d_model
+
+
+# Registry of configs the build produces artifacts for.
+CONFIGS: Dict[str, ModelConfig] = {
+    # Serving config used by the experiments: 256-token window.
+    "tiny": ModelConfig(name="tiny", vocab=256, d_model=128, n_layers=2,
+                        n_heads=4, d_ff=384, max_seq=256),
+    # Fast-test config: small enough that interpret-mode pallas in pytest is
+    # quick, big enough to exercise multi-block grids. vocab must cover the
+    # shared token map (ids up to 217 — see data.py).
+    "micro": ModelConfig(name="micro", vocab=256, d_model=64, n_layers=2,
+                         n_heads=4, d_ff=192, max_seq=64),
+    # Larger scale config (artifact build is opt-in: slower to lower and
+    # the HLO text carries every weight as a printed constant).
+    "base": ModelConfig(name="base", vocab=256, d_model=256, n_layers=4,
+                        n_heads=8, d_ff=768, max_seq=512),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Scaled-normal init; deterministic in (cfg, seed)."""
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, 1 + cfg.n_layers)
+
+    def dense(k, fan_in, shape):
+        return (jax.random.normal(k, shape) / jnp.sqrt(fan_in)).astype(jnp.float32)
+
+    params: Params = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02
+                  ).astype(jnp.float32),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": [],
+    }
+    for li in range(cfg.n_layers):
+        ks = jax.random.split(keys[1 + li], 8)
+        d, f = cfg.d_model, cfg.d_ff
+        params["layers"].append({
+            "attn_norm": jnp.ones((d,), jnp.float32),
+            "wq": dense(ks[0], d, (d, d)),
+            "wk": dense(ks[1], d, (d, d)),
+            "wv": dense(ks[2], d, (d, d)),
+            "wo": dense(ks[3], d, (d, d)),
+            "mlp_norm": jnp.ones((d,), jnp.float32),
+            "w1": dense(ks[4], d, (d, f)),
+            "w3": dense(ks[5], d, (d, f)),
+            "w2": dense(ks[6], f, (f, d)),
+        })
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def rope_angles(cfg: ModelConfig, positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for ``positions`` ([l] int32) -> each [l, d_head/2]."""
+    dh = cfg.d_head
+    inv = 1.0 / (cfg.rope_base ** (jnp.arange(0, dh, 2) / dh))
+    ang = positions[:, None].astype(jnp.float32) * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: [h, l, dh]; rotate channel pairs by per-position angles."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    xr1 = x1 * cos[None] - x2 * sin[None]
+    xr2 = x1 * sin[None] + x2 * cos[None]
+    # Re-interleave.
+    out = jnp.stack([xr1, xr2], axis=-1)
+    return out.reshape(x.shape)
+
+
+def _split_heads(x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """[l, d_model] -> [h, l, d_head]"""
+    l = x.shape[0]
+    return x.reshape(l, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+
+
+def _merge_heads(x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """[h, l, d_head] -> [l, d_model]"""
+    h, l, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(l, h * dh)
+
+
+def swiglu(x: jnp.ndarray, layer: Params) -> jnp.ndarray:
+    return (jax.nn.silu(x @ layer["w1"]) * (x @ layer["w3"])) @ layer["w2"]
+
+
+def _qkv(x: jnp.ndarray, layer: Params, cfg: ModelConfig, positions: jnp.ndarray):
+    """Project + split heads + RoPE. Returns q,k,v: [h, l, dh]."""
+    xn = rmsnorm(x, layer["attn_norm"])
+    q = _split_heads(xn @ layer["wq"], cfg)
+    k = _split_heads(xn @ layer["wk"], cfg)
+    v = _split_heads(xn @ layer["wv"], cfg)
+    cos, sin = rope_angles(cfg, positions)
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin), v
+
+
+def _masked_standard_attention(q, k, v, valid):
+    """Per-head standard attention with causal+validity mask.
+
+    q,k,v: [h, l, dh]; valid: [l] (1.0 = real token). Returns (out, A) with
+    A: [h, l, l].
+    """
+    h, l, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    s = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    mask = causal[None] & (valid[None, None, :] > 0.5)
+    s = jnp.where(mask, s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    a = jnp.where(mask, a, 0.0)  # rows of padded queries stay normalized junk-free
+    return jnp.einsum("hqk,hkd->hqd", a, v), a
+
+
+# ---------------------------------------------------------------------------
+# Prefill — full-score path (baselines, Fig. 3/4) and flash+probe path
+# ---------------------------------------------------------------------------
+
+
+def prefill_full(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                 valid: jnp.ndarray):
+    """Standard-attention prefill that materializes all scores.
+
+    Args:
+      tokens: [S] int32 (padded to cfg.max_seq=S)
+      valid:  [S] f32 mask, 1.0 for real tokens.
+
+    Returns dict with logits [S, V], kcache/vcache [L, H, S, dh],
+    acc_saliency / norm_saliency [L, S] (Eqs. 7/8 averaged over heads).
+    """
+    S = cfg.max_seq
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = params["embed"][tokens]
+    kc, vc, acc_sal, norm_sal = [], [], [], []
+    # Column nnz for Eq. 8 under causal+valid masking: column i is visible to
+    # valid query rows k >= i -> nnz = (# valid rows) - i for valid columns.
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    colmask = causal & (valid[None, :] > 0.5) & (valid[:, None] > 0.5)
+    nnz = jnp.maximum(jnp.sum(colmask, axis=0).astype(jnp.float32), 1.0)
+    for layer in params["layers"]:
+        q, k, v = _qkv(x, layer, cfg, positions)
+        o, a = _masked_standard_attention(q, k, v, valid)
+        # head-mean saliency, masked to valid query rows
+        a_q = a * valid[None, :, None]
+        acc = jnp.mean(jnp.sum(a_q, axis=1), axis=0)          # Eq. 7, [S]
+        nrm = jnp.mean(jnp.sum(a_q, axis=1) / nnz[None], axis=0)  # Eq. 8, [S]
+        acc_sal.append(acc)
+        norm_sal.append(nrm)
+        kc.append(k)
+        vc.append(v)
+        x = x + _merge_heads(o, cfg) @ layer["wo"]
+        x = x + swiglu(rmsnorm(x, layer["mlp_norm"]), layer)
+    logits = rmsnorm(x, params["final_norm"]) @ params["embed"].T
+    return {
+        "logits": logits,
+        "kcache": jnp.stack(kc),
+        "vcache": jnp.stack(vc),
+        "acc_saliency": jnp.stack(acc_sal),
+        "norm_saliency": jnp.stack(norm_sal),
+    }
+
+
+def prefill_flash(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                  valid: jnp.ndarray, probe_idx: jnp.ndarray):
+    """ZipCache prefill (Alg. 2): FlashAttention for output, probe rows for
+    saliency.  Never materializes the full score matrix.
+
+    probe_idx: [P] int32 probe positions (chosen by the Rust coordinator:
+    5% recent + 5% random of the valid region).
+
+    Returns logits, caches and probe-approximated normalized saliency [L, S].
+    """
+    S = cfg.max_seq
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = params["embed"][tokens]
+    kc, vc, sal = [], [], []
+    for layer in params["layers"]:
+        q, k, v = _qkv(x, layer, cfg, positions)
+        # Padded tail is causally after every valid token, so it cannot
+        # corrupt valid rows; flash path needs no validity mask here.
+        o = jax.vmap(lambda qh, kh, vh: flash.flash_attention(qh, kh, vh))(q, k, v)
+        # Probe saliency per head -> mean over heads. Mask padded columns.
+        def head_sal(qh, kh):
+            _, s = probe_mod.probe_attention_saliency(qh, kh, probe_idx)
+            return s
+        s = jnp.mean(jax.vmap(head_sal)(q, k), axis=0) * valid
+        sal.append(s)
+        kc.append(k)
+        vc.append(v)
+        x = x + _merge_heads(o, cfg) @ layer["wo"]
+        x = x + swiglu(rmsnorm(x, layer["mlp_norm"]), layer)
+    logits = rmsnorm(x, params["final_norm"]) @ params["embed"].T
+    return {
+        "logits": logits,
+        "kcache": jnp.stack(kc),
+        "vcache": jnp.stack(vc),
+        "norm_saliency": jnp.stack(sal),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Decode — one token against a fixed-capacity (possibly fake-quantized) cache
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                pos: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarray,
+                valid: jnp.ndarray):
+    """One decode step (Alg. 3 consumer).
+
+    Args:
+      token: [] int32 current token id.
+      pos:   [] int32 its position (== number of tokens already cached).
+      kcache/vcache: [L, H, S, dh] — S = cfg.max_seq capacity; entries at
+        indices >= pos are ignored via ``valid``; entries may be
+        fake-quantized / zeroed by the Rust cache manager.
+      valid: [S] f32, 1.0 where a cached token exists AND is not evicted.
+
+    Returns logits [V], k_new/v_new [L, H, dh], and probe attention row
+    a_row [L, S] (head-mean) so the coordinator can maintain the streaming
+    probe accumulator of Alg. 3.
+    """
+    S = cfg.max_seq
+    x = params["embed"][token][None, :]  # [1, d]
+    pos_arr = pos[None]
+    k_new, v_new, a_rows = [], [], []
+    kpos = jnp.arange(S, dtype=jnp.int32)
+    for li, layer in enumerate(params["layers"]):
+        q, k1, v1 = _qkv(x, layer, cfg, pos_arr)  # [h, 1, dh]
+        # The new row is handled out-of-cache: attention runs over cached
+        # entries (masked by valid & kpos<pos) plus the self term, and the
+        # Rust coordinator writes k_new/v_new into slot `pos` afterwards.
+        kc = kcache[li]
+        vc = vcache[li]
+        scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_head, jnp.float32))
+        s_cache = jnp.einsum("hqd,hkd->hqk", q, kc)[:, 0, :] * scale  # [h, S]
+        mask = (valid > 0.5) & (kpos < pos)
+        s_cache = jnp.where(mask[None, :], s_cache, NEG_INF)
+        s_self = jnp.einsum("hd,hd->h", q[:, 0], k1[:, 0]) * scale  # [h]
+        m = jnp.maximum(jnp.max(s_cache, axis=-1), s_self)
+        p_cache = jnp.exp(s_cache - m[:, None])
+        p_self = jnp.exp(s_self - m)
+        denom = jnp.sum(p_cache, axis=-1) + p_self
+        a = p_cache / denom[:, None]  # [h, S] attention over cached tokens
+        o = jnp.einsum("hk,hkd->hd", a, vc) + (p_self / denom)[:, None] * v1[:, 0]
+        a_rows.append(jnp.mean(a, axis=0))  # [S]
+        k_new.append(k1[:, 0])
+        v_new.append(v1[:, 0])
+        x = x + (o.reshape(1, -1) @ layer["wo"])
+        x = x + swiglu(rmsnorm(x, layer["mlp_norm"]), layer)
+    logits = (rmsnorm(x, params["final_norm"]) @ params["embed"].T)[0]
+    return {
+        "logits": logits,
+        "k_new": jnp.stack(k_new),
+        "v_new": jnp.stack(v_new),
+        "a_row": jnp.stack(a_rows),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Training objective (used by train.py, not lowered to artifacts)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            targets: jnp.ndarray, loss_mask: jnp.ndarray) -> jnp.ndarray:
+    """Masked next-token cross-entropy over a batch.
+
+    tokens/targets/loss_mask: [B, S]. Uses the cheap standard-attention path
+    (training never runs interpret-mode pallas; flash==standard is verified
+    separately by the kernel tests).
+    """
+
+    def single(tok, tgt, msk):
+        S = tok.shape[0]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        x = params["embed"][tok]
+        ones = jnp.ones((S,), jnp.float32)
+        for layer in params["layers"]:
+            q, k, v = _qkv(x, layer, cfg, positions)
+            o, _ = _masked_standard_attention(q, k, v, ones)
+            x = x + _merge_heads(o, cfg) @ layer["wo"]
+            x = x + swiglu(rmsnorm(x, layer["mlp_norm"]), layer)
+        logits = rmsnorm(x, params["final_norm"]) @ params["embed"].T
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, tgt[:, None], axis=-1)[:, 0]
+        return jnp.sum(nll * msk) / jnp.maximum(jnp.sum(msk), 1.0)
+
+    return jnp.mean(jax.vmap(single)(tokens, targets, loss_mask))

@@ -1,0 +1,184 @@
+"""Build-time training of the substrate model on the synthetic recall corpus.
+
+``python -m compile.train --config tiny --steps 1500`` produces
+``artifacts/params_<config>.npz``.  This replaces the paper's pretrained
+LLaMA/Mistral checkpoints (DESIGN.md §2): the resulting model genuinely
+solves the retrieval-style workloads through attention, which is the
+property the paper's saliency analysis depends on.
+
+Training uses plain Adam and the cheap standard-attention loss path
+(``model.loss_fn``); the Pallas kernels only enter the *serving* graphs,
+whose equivalence to the standard path is covered by the kernel tests.
+The loss curve is appended to ``artifacts/train_log_<config>.json`` and
+summarized in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from .model import CONFIGS, init_params, loss_fn
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    params = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (m * mhat_scale) / (jnp.sqrt(v * vhat_scale) + eps),
+        params, m, v,
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def make_batch(rng: D.SplitMix64, batch: int, max_seq: int):
+    """Training batches: multi-query augmented samples + full-position loss
+    (dense recall signal; see data.with_extra_queries)."""
+    samples = []
+    for _ in range(batch):
+        s = D.train_sample(rng, max_seq)
+        s = D.with_extra_queries(s, n_extra=6, seed=rng.next_u64(), max_seq=max_seq)
+        samples.append(s)
+    toks, tgts, mask = D.pad_batch(samples, max_seq, full_loss=True)
+    return (
+        jnp.asarray(toks, jnp.int32),
+        jnp.asarray(tgts, jnp.int32),
+        jnp.asarray(mask, jnp.float32),
+    )
+
+
+def answer_accuracy(params, cfg, rng: D.SplitMix64, n: int = 64) -> float:
+    """Greedy answer-token accuracy on held-out samples (teacher-forced
+    prompt, single-step answer prediction)."""
+    samples = [D.train_sample(rng, cfg.max_seq) for _ in range(n)]
+    toks, _, _ = D.pad_batch(samples, cfg.max_seq)
+    toks = jnp.asarray(toks, jnp.int32)
+
+    @jax.jit
+    def logits_of(batch_tokens):
+        def single(tok):
+            S = cfg.max_seq
+            positions = jnp.arange(S, dtype=jnp.int32)
+            from .model import (_masked_standard_attention, _merge_heads,
+                                _qkv, rmsnorm, swiglu)
+            x = params["embed"][tok]
+            ones = jnp.ones((S,), jnp.float32)
+            for layer in params["layers"]:
+                q, k, v = _qkv(x, layer, cfg, positions)
+                o, _ = _masked_standard_attention(q, k, v, ones)
+                x = x + _merge_heads(o, cfg) @ layer["wo"]
+                x = x + swiglu(rmsnorm(x, layer["mlp_norm"]), layer)
+            return rmsnorm(x, params["final_norm"]) @ params["embed"].T
+        return jax.vmap(single)(batch_tokens)
+
+    lg = np.asarray(logits_of(toks))
+    hit = 0
+    for i, s in enumerate(samples):
+        pred = int(lg[i, s.prompt_len - 1].argmax())
+        hit += int(pred == s.answer[0])
+    return hit / n
+
+
+def flatten_params(params):
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    return flat, treedef
+
+
+def save_params(params, path: str):
+    flat, _ = jax.tree_util.tree_flatten(params)
+    np.savez(path, *[np.asarray(x) for x in flat])
+
+
+def load_params(cfg, path: str):
+    """Rebuild the params pytree from npz using the init tree structure."""
+    template = init_params(cfg)
+    flat, treedef = jax.tree_util.tree_flatten(template)
+    with np.load(path) as z:
+        arrs = [z[f"arr_{i}"] for i in range(len(flat))]
+    assert len(arrs) == len(flat)
+    for a, t in zip(arrs, flat):
+        assert a.shape == t.shape, f"{a.shape} != {t.shape}"
+    return jax.tree_util.tree_unflatten(treedef, [jnp.asarray(a) for a in arrs])
+
+
+def train(config: str, steps: int, batch: int, lr: float, seed: int,
+          out_dir: str, target_acc: float = 0.97) -> str:
+    cfg = CONFIGS[config]
+    params = init_params(cfg, seed=seed)
+    opt = adam_init(params)
+    rng = D.SplitMix64(seed * 7919 + 13)
+
+    @jax.jit
+    def step(params, opt, toks, tgts, mask, lr_t):
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, toks, tgts, mask)
+        params, opt = adam_update(params, grads, opt, lr_t)
+        return params, opt, loss
+
+    def lr_at(i: int) -> float:
+        """Linear warmup (50 steps) -> cosine decay to 10%."""
+        import math
+        if i < 50:
+            return lr * (i + 1) / 50
+        t = (i - 50) / max(1, steps - 50)
+        return lr * (0.1 + 0.9 * 0.5 * (1 + math.cos(math.pi * t)))
+
+    log = []
+    t0 = time.time()
+    for i in range(steps):
+        toks, tgts, mask = make_batch(rng, batch, cfg.max_seq)
+        params, opt, loss = step(params, opt, toks, tgts, mask,
+                                 jnp.float32(lr_at(i)))
+        if i % 50 == 0 or i == steps - 1:
+            l = float(loss)
+            log.append({"step": i, "loss": l, "wall_s": time.time() - t0})
+            print(f"[train:{config}] step {i:5d} loss {l:.4f} "
+                  f"({(time.time()-t0):.0f}s)", flush=True)
+            if i > 0 and i % 300 == 0:
+                acc = answer_accuracy(params, cfg, D.SplitMix64(999))
+                log.append({"step": i, "eval_acc": acc})
+                print(f"[train:{config}]   eval acc {acc:.3f}", flush=True)
+                if acc >= target_acc:
+                    break
+
+    acc = answer_accuracy(params, cfg, D.SplitMix64(4242), n=128)
+    log.append({"final_acc": acc, "params": cfg.n_params})
+    print(f"[train:{config}] final answer accuracy {acc:.3f} "
+          f"({cfg.n_params/1e6:.2f}M params)", flush=True)
+
+    os.makedirs(out_dir, exist_ok=True)
+    ppath = os.path.join(out_dir, f"params_{config}.npz")
+    save_params(params, ppath)
+    with open(os.path.join(out_dir, f"train_log_{config}.json"), "w") as f:
+        json.dump(log, f, indent=1)
+    return ppath
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="tiny", choices=sorted(CONFIGS))
+    ap.add_argument("--steps", type=int, default=1500)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    train(args.config, args.steps, args.batch, args.lr, args.seed, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Shared fixtures for the kernel/model test suite."""
+
+import os
+import sys
+
+# Allow running pytest from either repo root or python/.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

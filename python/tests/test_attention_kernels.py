@@ -1,0 +1,184 @@
+"""FlashAttention + probe-saliency Pallas kernels vs ref oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (flash_attention, flash_attention_mha,
+                             probe_attention_saliency, select_probe_indices)
+from compile.kernels import ref
+
+ATOL = 3e-5
+RTOL = 3e-5
+
+
+def _qkv(lq, lk, d, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (lq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (lk, d), jnp.float32)
+    v = jax.random.normal(ks[2], (lk, d), jnp.float32)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# FlashAttention == standard attention (paper Fig. 4 equivalence)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("l,d", [(16, 8), (64, 16), (128, 32), (96, 24)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_standard(l, d, causal):
+    q, k, v = _qkv(l, l, d, seed=l + d)
+    got = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("lq,lk", [(8, 64), (16, 128), (1, 32), (32, 32)])
+def test_flash_decode_alignment(lq, lk):
+    """lq < lk (decode-style): rows align to the end of the key sequence."""
+    q, k, v = _qkv(lq, lk, 16, seed=lq * 7 + lk)
+    got = flash_attention(q, k, v, block_q=8, block_k=16)
+    want = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    l=st.sampled_from([16, 32, 48, 96]),
+    d=st.sampled_from([8, 16, 32]),
+    bq=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_hypothesis_blocks(l, d, bq, bk, seed):
+    """Output must be block-shape invariant (pure schedule change)."""
+    q, k, v = _qkv(l, l, d, seed=seed)
+    got = flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_flash_mha():
+    h, l, d = 4, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (h, l, d))
+    k = jax.random.normal(ks[1], (h, l, d))
+    v = jax.random.normal(ks[2], (h, l, d))
+    got = flash_attention_mha(q, k, v, block_q=16, block_k=16)
+    for hh in range(h):
+        np.testing.assert_allclose(got[hh], ref.flash_attention(q[hh], k[hh], v[hh]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_flash_extreme_scores_no_overflow():
+    """Online softmax must survive large score magnitudes."""
+    q, k, v = _qkv(32, 32, 8, seed=5)
+    got = flash_attention(q * 30.0, k * 30.0, v, block_q=8, block_k=8)
+    want = ref.flash_attention(q * 30.0, k * 30.0, v)
+    assert bool(jnp.isfinite(got).all())
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Probe attention + normalized saliency (Eqs. 8/9)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("l,d,p", [(32, 8, 4), (64, 16, 8), (128, 32, 12)])
+def test_probe_attention_matches_ref(l, d, p):
+    q, k, _ = _qkv(l, l, d, seed=l * 3)
+    idx = jnp.sort(jax.random.choice(jax.random.PRNGKey(p), l, (p,),
+                                     replace=False)).astype(jnp.int32)
+    a_got, sal_got = probe_attention_saliency(q, k, idx, block_k=16)
+    a_want = ref.probe_attention(q, k, idx)
+    sal_want = ref.probe_saliency(q, k, idx)
+    np.testing.assert_allclose(a_got, a_want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(sal_got, sal_want, rtol=1e-4, atol=1e-4)
+
+
+def test_probe_rows_sum_to_one():
+    q, k, _ = _qkv(64, 64, 16, seed=11)
+    idx = jnp.asarray([3, 17, 40, 63], jnp.int32)
+    a, _ = probe_attention_saliency(q, k, idx, block_k=16)
+    np.testing.assert_allclose(jnp.sum(a, axis=-1), jnp.ones(4), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_probe_causality():
+    """Probe row i must place zero mass on keys beyond position i."""
+    q, k, _ = _qkv(64, 64, 16, seed=12)
+    idx = jnp.asarray([5, 30], jnp.int32)
+    a, _ = probe_attention_saliency(q, k, idx, block_k=16)
+    assert float(jnp.abs(a[0, 6:]).max()) == 0.0
+    assert float(jnp.abs(a[1, 31:]).max()) == 0.0
+
+
+def test_probe_saliency_approximates_full_metric():
+    """§4.3: saliency from all-rows probe == exact Eq. 8."""
+    l, d = 64, 16
+    q, k, _ = _qkv(l, l, d, seed=13)
+    idx = jnp.arange(l, dtype=jnp.int32)
+    _, sal = probe_attention_saliency(q, k, idx, block_k=16)
+    _, a_full = ref.standard_attention(q, k, k)  # v unused for scores
+    want = ref.normalized_saliency(a_full)
+    np.testing.assert_allclose(sal, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    l=st.sampled_from([32, 64, 96]),
+    p=st.integers(2, 12),
+    seed=st.integers(0, 2**16),
+)
+def test_probe_hypothesis(l, p, seed):
+    q, k, _ = _qkv(l, l, 16, seed=seed)
+    idx = jnp.sort(jax.random.choice(jax.random.PRNGKey(seed ^ 1), l, (p,),
+                                     replace=False)).astype(jnp.int32)
+    a_got, sal_got = probe_attention_saliency(q, k, idx, block_k=16)
+    np.testing.assert_allclose(a_got, ref.probe_attention(q, k, idx),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(sal_got, ref.probe_saliency(q, k, idx),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Saliency metric semantics (paper §4.2, Fig. 3)
+# ---------------------------------------------------------------------------
+
+
+def test_accumulated_scores_biased_to_early_tokens():
+    """Fig. 3(a): under uniform attention the accumulated saliency of token
+    0 is the harmonic series (~ln l) while the last token gets 1/l — a huge
+    spread.  Normalization shrinks that spread by an order of magnitude."""
+    l = 32
+    a = jnp.tril(jnp.ones((l, l))) / jnp.arange(1, l + 1)[:, None]
+    acc = ref.accumulated_saliency(a)
+    nrm = ref.normalized_saliency(a)
+    assert float(acc[0]) > 3.0 * float(acc[-1])
+    spread = lambda v: float(jnp.max(v) / jnp.min(v))
+    assert spread(nrm) < spread(acc) / 10.0, (spread(nrm), spread(acc))
+
+
+def test_normalized_saliency_finds_planted_hot_token():
+    """Plant a column that every later row attends to strongly: normalized
+    saliency must rank it (and not token 0) on top among non-self columns."""
+    l, d = 64, 16
+    key = jax.random.PRNGKey(7)
+    k = jax.random.normal(key, (l, d))
+    hot = 37
+    q = 0.05 * jax.random.normal(jax.random.PRNGKey(8), (l, d))
+    q = q.at[hot + 1:].add(3.0 * k[hot])  # later queries point at `hot`
+    _, a = ref.standard_attention(q, k, k)
+    nrm = ref.normalized_saliency(a)
+    assert int(jnp.argmax(nrm[: l - 1])) == hot
+
+
+def test_select_probe_indices_hybrid():
+    idx = np.asarray(select_probe_indices(100, 0.05, 0.05, seed=1))
+    assert len(set(idx.tolist())) == len(idx)
+    assert (idx[-5:] == np.arange(95, 100)).all()  # recent block present
+    assert (idx[:-5] < 95).all()
+    assert (np.diff(idx) > 0).all()

@@ -1,0 +1,141 @@
+"""L2 model invariants: shapes, path equivalence, decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile.aot import probe_count
+from compile.model import (CONFIGS, decode_step, init_params, loss_fn,
+                           prefill_flash, prefill_full, rmsnorm)
+
+CFG = CONFIGS["micro"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, seed=0)
+
+
+def _sample_inputs(seed=5):
+    s = D.train_sample(D.SplitMix64(seed), CFG.max_seq)
+    n = len(s.tokens)
+    toks = np.zeros(CFG.max_seq, np.int32)
+    toks[:n] = s.tokens
+    valid = np.zeros(CFG.max_seq, np.float32)
+    valid[:n] = 1.0
+    P = probe_count(CFG)
+    pr = np.sort(np.r_[np.arange(n - P // 2, n),
+                       np.arange(0, P - P // 2)]).astype(np.int32)
+    return s, jnp.asarray(toks), jnp.asarray(valid), jnp.asarray(pr), n
+
+
+def test_prefill_full_shapes(params):
+    _, toks, valid, _, _ = _sample_inputs()
+    r = prefill_full(params, CFG, toks, valid)
+    S, L, H, dh, V = (CFG.max_seq, CFG.n_layers, CFG.n_heads, CFG.d_head,
+                      CFG.vocab)
+    assert r["logits"].shape == (S, V)
+    assert r["kcache"].shape == (L, H, S, dh)
+    assert r["vcache"].shape == (L, H, S, dh)
+    assert r["acc_saliency"].shape == (L, S)
+    assert r["norm_saliency"].shape == (L, S)
+
+
+def test_prefill_paths_agree_on_valid_region(params):
+    _, toks, valid, pr, n = _sample_inputs()
+    rf = prefill_full(params, CFG, toks, valid)
+    rl = prefill_flash(params, CFG, toks, valid, pr)
+    np.testing.assert_allclose(rf["logits"][:n], rl["logits"][:n],
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(rf["kcache"][:, :, :n], rl["kcache"][:, :, :n],
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(rf["vcache"][:, :, :n], rl["vcache"][:, :, :n],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_matches_extended_prefill(params):
+    """decode_step at pos n == prefill over n+1 tokens, row n."""
+    s, toks, valid, _, n = _sample_inputs()
+    rf = prefill_full(params, CFG, toks, valid)
+    nxt = jnp.asarray(s.tokens[3], jnp.int32)
+    r = decode_step(params, CFG, nxt, jnp.asarray(n, jnp.int32),
+                    rf["kcache"], rf["vcache"], valid)
+    toks2 = np.asarray(toks).copy()
+    toks2[n] = int(nxt)
+    valid2 = np.asarray(valid).copy()
+    valid2[n] = 1.0
+    rf2 = prefill_full(params, CFG, jnp.asarray(toks2), jnp.asarray(valid2))
+    np.testing.assert_allclose(r["logits"], rf2["logits"][n],
+                               rtol=3e-3, atol=3e-3)
+    # new KV rows must equal the extended prefill's row n
+    np.testing.assert_allclose(r["k_new"], rf2["kcache"][:, :, n],
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(r["v_new"], rf2["vcache"][:, :, n],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_attention_row_normalized(params):
+    """a_row over cached tokens + the (unreported) self weight == 1; so the
+    reported row must sum to < 1 and >= 0 elementwise."""
+    s, toks, valid, _, n = _sample_inputs()
+    rf = prefill_full(params, CFG, toks, valid)
+    r = decode_step(params, CFG, jnp.asarray(7, jnp.int32),
+                    jnp.asarray(n, jnp.int32), rf["kcache"], rf["vcache"],
+                    valid)
+    a = r["a_row"]
+    assert float(a.min()) >= 0.0
+    sums = jnp.sum(a, axis=-1)
+    assert float(sums.max()) < 1.0 + 1e-5
+    assert float(sums.min()) > 0.0
+
+
+def test_decode_respects_validity_mask(params):
+    """Evicted (valid=0) positions must receive zero attention."""
+    s, toks, valid, _, n = _sample_inputs()
+    rf = prefill_full(params, CFG, toks, valid)
+    ev = np.asarray(valid).copy()
+    ev[2:6] = 0.0  # evict a block
+    r = decode_step(params, CFG, jnp.asarray(7, jnp.int32),
+                    jnp.asarray(n, jnp.int32), rf["kcache"], rf["vcache"],
+                    jnp.asarray(ev))
+    assert float(jnp.abs(r["a_row"][:, 2:6]).max()) == 0.0
+
+
+def test_saliency_nonnegative_and_masked(params):
+    _, toks, valid, pr, n = _sample_inputs()
+    rl = prefill_flash(params, CFG, toks, valid, pr)
+    sal = rl["norm_saliency"]
+    assert float(sal.min()) >= 0.0
+    assert float(jnp.abs(sal[:, n:]).max()) == 0.0  # padded region zeroed
+
+
+def test_loss_decreases_over_few_steps(params):
+    """Sanity: two gradient steps reduce the training loss on a fixed batch."""
+    import compile.train as T
+    rng = D.SplitMix64(77)
+    toks, tgts, mask = T.make_batch(rng, 8, CFG.max_seq)
+    p = params
+    opt = T.adam_init(p)
+    l0 = float(loss_fn(p, CFG, toks, tgts, mask))
+    for _ in range(5):
+        loss, grads = jax.value_and_grad(loss_fn)(p, CFG, toks, tgts, mask)
+        p, opt = T.adam_update(p, grads, opt, 1e-3)
+    l1 = float(loss_fn(p, CFG, toks, tgts, mask))
+    assert l1 < l0
+
+
+def test_rmsnorm_unit_scale():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 16)) * 100.0
+    y = rmsnorm(x, jnp.ones((16,)))
+    ms = jnp.mean(jnp.square(y), axis=-1)
+    np.testing.assert_allclose(ms, jnp.ones(8), rtol=1e-3)
+
+
+def test_param_count_matches_formula():
+    for cfg in CONFIGS.values():
+        p = init_params(cfg, seed=0)
+        total = sum(int(np.prod(x.shape))
+                    for x in jax.tree_util.tree_leaves(p))
+        assert total == cfg.n_params, (cfg.name, total, cfg.n_params)

@@ -1,0 +1,36 @@
+//! Ablation: saliency-ratio sweep for ZipCache (and MiKV as the metric
+//! control).  The paper fixes the ratio per task by hand (its stated
+//! limitation); this bench maps the accuracy/compression trade-off curve,
+//! which is what an auto-tuner would consume.
+
+mod common;
+
+use zipcache::config::PolicyKind;
+use zipcache::util::bench::Table;
+use zipcache::workload::Task;
+
+fn main() -> zipcache::Result<()> {
+    let samples = common::bench_samples(20);
+    let mut table = Table::new(&["policy", "saliency ratio", "measured ratio", "acc %"]);
+    for policy in [PolicyKind::Zipcache, PolicyKind::Mikv] {
+        for ratio in [0.2, 0.4, 0.6, 0.8] {
+            let mut engine = common::engine(policy, ratio)?;
+            let (report, mratio) =
+                common::eval_policy(&mut engine, Task::Gsm, samples, 3, 700)?;
+            table.row(&[
+                policy.to_string(),
+                format!("{ratio:.1}"),
+                format!("{mratio:.2}x"),
+                format!("{:.1}", report.accuracy_pct),
+            ]);
+            eprintln!("[ablation] {policy} @ {ratio} done");
+        }
+    }
+    println!("\n== Ablation: saliency ratio sweep (4/2-bit, GSM task) ==");
+    println!("model={} samples={samples}", common::bench_model());
+    table.print();
+    println!("(lower ratio -> more 2-bit tokens -> higher compression, lower \
+              accuracy; ZipCache should degrade more gracefully than MiKV \
+              because its salient set is better chosen)");
+    Ok(())
+}

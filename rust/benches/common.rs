@@ -1,0 +1,60 @@
+//! Shared helpers for the paper-reproduction benches.
+//!
+//! Every bench honours:
+//!   * `ZIPCACHE_BENCH_MODEL`   — model config (default "micro"; use "tiny"
+//!     for the full-scale runs recorded in EXPERIMENTS.md)
+//!   * `ZIPCACHE_BENCH_SAMPLES` — per-cell sample count (default small so
+//!     `cargo bench` completes quickly on CPU)
+//!   * `ZIPCACHE_ARTIFACTS`     — artifacts dir (default "artifacts")
+
+#![allow(dead_code)]
+
+use zipcache::config::{EngineConfig, PolicyKind};
+use zipcache::coordinator::Engine;
+use zipcache::eval::{score_generation, AccuracyReport};
+use zipcache::workload::{Task, TaskGen};
+use zipcache::Result;
+
+pub fn bench_model() -> String {
+    std::env::var("ZIPCACHE_BENCH_MODEL").unwrap_or_else(|_| "micro".into())
+}
+
+pub fn bench_samples(default: usize) -> usize {
+    std::env::var("ZIPCACHE_BENCH_SAMPLES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn artifacts_dir() -> String {
+    std::env::var("ZIPCACHE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+/// Engine with the given policy over the bench model.
+pub fn engine(policy: PolicyKind, saliency_ratio: f64) -> Result<Engine> {
+    let mut cfg = EngineConfig::load_default(artifacts_dir(), &bench_model())?;
+    cfg.policy = policy;
+    cfg.quant.saliency_ratio = saliency_ratio;
+    Engine::new(cfg)
+}
+
+/// Evaluate task accuracy + mean measured compression ratio.
+pub fn eval_policy(engine: &mut Engine, task: Task, samples: usize, max_new: usize,
+                   seed: u64) -> Result<(AccuracyReport, f64)> {
+    let info = engine.runtime().model_info().clone();
+    let gen = TaskGen::new(task, info.max_seq - max_new);
+    let mut report = AccuracyReport::default();
+    let mut ratio = 0.0;
+    for i in 0..samples {
+        let s = gen.sample(seed.wrapping_add(i as u64 * 7919));
+        let out = engine.generate(s.prompt(), max_new)?;
+        report.add(score_generation(&s, &out.tokens));
+        ratio += out.compression_ratio;
+    }
+    Ok((report, ratio / samples.max(1) as f64))
+}
+
+/// Largest line-retrieval size fitting a window (6 tokens/line + overhead).
+pub fn lines_fitting(window: usize) -> usize {
+    ((window - 7) / 6).min(100)
+}

@@ -1,0 +1,61 @@
+//! Figure 1 reproduction: the latency/accuracy/compression scatter — every
+//! method as one point (accuracy vs prefill latency, sized by ratio).
+//!
+//! Prints the scatter as a table plus a coarse ASCII plot; the paper's
+//! shape is ZipCache in the top-left (fast + accurate) at the largest
+//! marker (highest ratio).
+
+mod common;
+
+use zipcache::config::PolicyKind;
+use zipcache::util::bench::Table;
+use zipcache::workload::Task;
+
+fn main() -> zipcache::Result<()> {
+    let samples = common::bench_samples(12);
+    let saliency_ratio = 0.8;
+
+    let probe = common::engine(PolicyKind::Fp16, saliency_ratio)?;
+    let window = probe.runtime().model_info().max_seq;
+    drop(probe);
+    let n_lines = common::lines_fitting(window - 3);
+
+    let mut points = Vec::new();
+    for policy in PolicyKind::ALL {
+        let mut engine = common::engine(policy, saliency_ratio)?;
+        let (report, ratio) = common::eval_policy(
+            &mut engine, Task::Lines(n_lines), samples, 3, 500)?;
+        points.push((policy.to_string(), engine.metrics.prefill.p50_ms(),
+                     report.accuracy_pct, ratio));
+        eprintln!("[fig1] {policy} done");
+    }
+
+    println!("\n== Figure 1: accuracy vs prefill latency vs ratio ==");
+    let mut t = Table::new(&["method", "prefill ms", "acc %", "ratio"]);
+    for (name, lat, acc, ratio) in &points {
+        t.row(&[name.clone(), format!("{lat:.1}"), format!("{acc:.1}"),
+                format!("{ratio:.2}x")]);
+    }
+    t.print();
+
+    // coarse ASCII scatter: x = latency (normalized), y = accuracy
+    let lmax = points.iter().map(|p| p.1).fold(1e-9, f64::max);
+    println!("\n  acc%  (x: prefill latency 0..{lmax:.0} ms)");
+    for row in (0..=10).rev() {
+        let lo = row as f64 * 10.0;
+        let mut line = format!("{:>4} |", lo);
+        let mut cells = vec![' '; 44];
+        for (name, lat, acc, _) in &points {
+            if *acc >= lo && *acc < lo + 10.0 {
+                let x = ((lat / lmax) * 40.0) as usize;
+                let c = name.chars().next().unwrap().to_ascii_uppercase();
+                cells[x.min(43)] = c;
+            }
+        }
+        line.extend(cells);
+        println!("{line}");
+    }
+    println!("      +{}", "-".repeat(44));
+    println!("       F=FP16 H=H2O G=GEAR K=KIVI M=MiKV Z=ZipCache");
+    Ok(())
+}

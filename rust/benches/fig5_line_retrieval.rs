@@ -1,0 +1,49 @@
+//! Figure 5 reproduction: line-retrieval accuracy vs number of lines, per
+//! compression method.
+//!
+//! Paper shape: quantization methods (GEAR/KIVI/MiKV/ZipCache) beat the
+//! eviction method (H2O) everywhere; ZipCache tracks FP16 closest because
+//! the queried line can sit anywhere in the context.
+
+mod common;
+
+use zipcache::config::PolicyKind;
+use zipcache::util::bench::Table;
+use zipcache::workload::Task;
+
+fn main() -> zipcache::Result<()> {
+    let samples = common::bench_samples(15);
+    let saliency_ratio = 0.6;
+
+    // Line counts scaled to the model window (paper sweeps 20..200 lines).
+    let probe = common::engine(PolicyKind::Fp16, saliency_ratio)?;
+    let window = probe.runtime().model_info().max_seq;
+    drop(probe);
+    let max_lines = common::lines_fitting(window - 3);
+    let mut line_counts = vec![max_lines / 4, max_lines / 2, (3 * max_lines) / 4,
+                               max_lines];
+    line_counts.dedup();
+    line_counts.retain(|&n| n >= 2);
+
+    let mut headers: Vec<String> = vec!["Method".into()];
+    headers.extend(line_counts.iter().map(|n| format!("{n} lines")));
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hrefs);
+
+    for policy in PolicyKind::ALL {
+        let mut engine = common::engine(policy, saliency_ratio)?;
+        let mut row = vec![policy.to_string()];
+        for &n in &line_counts {
+            let (report, _) = common::eval_policy(
+                &mut engine, Task::Lines(n), samples, 3, 300 + n as u64)?;
+            row.push(format!("{:.1}", report.accuracy_pct));
+        }
+        table.row(&row);
+        eprintln!("[fig5] {policy} done");
+    }
+
+    println!("\n== Figure 5: line-retrieval accuracy (%) vs number of lines ==");
+    println!("model={} samples/cell={samples}", common::bench_model());
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Hot-path micro-benchmarks for the L3 perf pass (EXPERIMENTS.md §Perf):
+//! bit-packing, quantization, cache compression/materialization, saliency
+//! selection.  These are the pieces the engine runs on every request and
+//! every 100-token recompression cycle.
+
+mod common;
+
+use zipcache::kvcache::{CacheLayout, CompressedKV, PrecisionClass, QuantSpec};
+use zipcache::quant::packing::PackedCodes;
+use zipcache::quant::{Granularity, QuantizedPlane};
+use zipcache::saliency::metric::select_salient;
+use zipcache::util::bench::{black_box, Bencher, Table};
+
+fn main() {
+    let b = Bencher { warmup: 3, samples: 20, ..Default::default() };
+    let mut t = Table::new(&["op", "input", "median ms", "mean ms"]);
+
+    // ---- bit packing --------------------------------------------------------
+    let codes: Vec<u8> = (0..1 << 20).map(|i| (i % 4) as u8).collect();
+    let m = b.measure("pack 2-bit", || {
+        black_box(PackedCodes::pack(&codes, 2));
+    });
+    t.row(&["pack".into(), "1M codes @2b".into(),
+            format!("{:.3}", m.median_ms()), format!("{:.3}", m.mean_ms())]);
+    let packed = PackedCodes::pack(&codes, 2);
+    let mut out = vec![0u8; codes.len()];
+    let m = b.measure("unpack 2-bit", || {
+        packed.unpack_into(black_box(&mut out));
+    });
+    t.row(&["unpack".into(), "1M codes @2b".into(),
+            format!("{:.3}", m.median_ms()), format!("{:.3}", m.mean_ms())]);
+
+    // ---- plane quantization -------------------------------------------------
+    let rows = 4096;
+    let cols = 128;
+    let x: Vec<f32> = (0..rows * cols)
+        .map(|i| ((i as f32) * 0.137).sin() * if i % 17 == 0 { 8.0 } else { 1.0 })
+        .collect();
+    for (name, g) in [("token", Granularity::Token),
+                      ("channel", Granularity::Channel),
+                      ("group(32)", Granularity::Group(32)),
+                      ("CST", Granularity::ChannelSeparableToken)] {
+        let m = b.measure(name, || {
+            black_box(QuantizedPlane::quantize(&x, rows, cols, 4, g));
+        });
+        t.row(&[format!("quantize {name}"), format!("{rows}x{cols} @4b"),
+                format!("{:.3}", m.median_ms()), format!("{:.3}", m.mean_ms())]);
+    }
+    let q = QuantizedPlane::quantize(&x, rows, cols, 4,
+                                     Granularity::ChannelSeparableToken);
+    let mut deq = vec![0f32; rows * cols];
+    let m = b.measure("dequantize CST", || {
+        q.dequantize_into(black_box(&mut deq));
+    });
+    t.row(&["dequantize CST".into(), format!("{rows}x{cols} @4b"),
+            format!("{:.3}", m.median_ms()), format!("{:.3}", m.mean_ms())]);
+
+    // ---- full cache compress + materialize (recompression cycle cost) -------
+    let lay = CacheLayout { layers: 4, heads: 8, seq: 1024, d_head: 64 };
+    let n = lay.cache_len();
+    let kc: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.377).sin()).collect();
+    let vc: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.733).cos()).collect();
+    let classes: Vec<PrecisionClass> = (0..1024)
+        .map(|i| PrecisionClass::Bits(if i % 5 == 0 { 4 } else { 2 }))
+        .collect();
+    let m = b.measure("compress", || {
+        black_box(CompressedKV::compress(&kc, &vc, lay, &classes,
+                                         QuantSpec::default()));
+    });
+    t.row(&["cache compress".into(), "L4 H8 S1024 d64".into(),
+            format!("{:.2}", m.median_ms()), format!("{:.2}", m.mean_ms())]);
+    let store = CompressedKV::compress(&kc, &vc, lay, &classes, QuantSpec::default());
+    let mut ko = vec![0f32; n];
+    let mut vo = vec![0f32; n];
+    let mut va = vec![0f32; 1024];
+    let m = b.measure("materialize", || {
+        store.materialize_into(black_box(&mut ko), black_box(&mut vo),
+                               black_box(&mut va));
+    });
+    t.row(&["cache materialize".into(), "L4 H8 S1024 d64".into(),
+            format!("{:.2}", m.median_ms()), format!("{:.2}", m.mean_ms())]);
+
+    // ---- saliency selection --------------------------------------------------
+    let sal: Vec<f32> = (0..16384).map(|i| ((i as f32) * 0.91).sin()).collect();
+    let m = b.measure("select_salient", || {
+        black_box(select_salient(&sal, sal.len(), 0.4));
+    });
+    t.row(&["select_salient".into(), "16k tokens".into(),
+            format!("{:.3}", m.median_ms()), format!("{:.3}", m.mean_ms())]);
+
+    println!("\n== L3 hot-path micro-benchmarks ==");
+    t.print();
+}

@@ -1,0 +1,137 @@
+//! Table 1 reproduction: quantization-granularity comparison for the KV
+//! cache — accuracy, measured ratio, reconstruction error, and the paper's
+//! analytic ratios (Appendix A) side by side.
+//!
+//! Drives the runtime directly (prefill -> compress under each granularity
+//! -> materialize -> decode the answer token) so the only variable is the
+//! quantization scheme.
+
+mod common;
+
+use zipcache::kvcache::ratio::{self, RatioShape};
+use zipcache::kvcache::{CompressedKV, PrecisionClass, QuantSpec};
+use zipcache::quant::Granularity;
+use zipcache::runtime::{Runtime, Tensor};
+use zipcache::util::bench::Table;
+use zipcache::workload::{Task, TaskGen};
+
+fn main() -> zipcache::Result<()> {
+    let samples = common::bench_samples(20);
+    let bits = 4u8;
+    let rt = Runtime::load(common::artifacts_dir(), &common::bench_model())?;
+    let info = rt.model_info().clone();
+    let layout = info.cache_layout();
+    let smax = info.max_seq;
+
+    let variants: Vec<(&str, Option<QuantSpec>)> = vec![
+        ("FP16 (no quant)", None),
+        ("Groupwise/Groupwise", Some(QuantSpec {
+            key_gran: Granularity::Group(8), value_gran: Granularity::Group(8) })),
+        ("Tokenwise/Tokenwise", Some(QuantSpec {
+            key_gran: Granularity::Token, value_gran: Granularity::Token })),
+        ("Channelwise/Tokenwise", Some(QuantSpec {
+            key_gran: Granularity::Channel, value_gran: Granularity::Token })),
+        ("Channelwise/CST (paper)", Some(QuantSpec {
+            key_gran: Granularity::Channel,
+            value_gran: Granularity::ChannelSeparableToken })),
+    ];
+
+    // Paper-accounting analytic ratios at the appendix's shape.
+    let paper = RatioShape::paper_example();
+    let analytic = [
+        1.0,
+        ratio::groupwise(paper, bits as u32, 32),
+        ratio::tokenwise(paper, bits as u32),
+        ratio::channel_token(paper, bits as u32),
+        ratio::zipcache_baseline(paper, bits as u32),
+    ];
+
+    let gen = TaskGen::new(Task::Gsm, smax - 2);
+    let mut table = Table::new(&[
+        "K/V granularity", "PaperRatio", "MeasuredRatio", "ReconMSE", "Acc(%)",
+    ]);
+
+    for (vi, (name, spec)) in variants.iter().enumerate() {
+        let mut correct = 0usize;
+        let mut ratio_sum = 0f64;
+        let mut mse_sum = 0f64;
+        for i in 0..samples {
+            let sample = gen.sample(1000 + i as u64 * 7919);
+            let n = sample.prompt_len;
+            // prefill (full-score path: saliency-free comparison)
+            let mut tokens = vec![0i32; smax];
+            for (j, &t) in sample.prompt().iter().enumerate() {
+                tokens[j] = t as i32;
+            }
+            let mut valid = vec![0f32; smax];
+            valid[..n].fill(1.0);
+            let out = rt.execute(&rt.entry("prefill_full"),
+                                 &[Tensor::i32(tokens, &[smax]),
+                                   Tensor::f32(valid.clone(), &[smax])])?;
+            let mut it = out.into_iter();
+            let _logits = it.next().unwrap();
+            let kc = it.next().unwrap().into_f32();
+            let vc = it.next().unwrap().into_f32();
+
+            // compress + materialize under this granularity
+            let (kq, vq, valid2) = match spec {
+                None => (kc.clone(), vc.clone(), valid.clone()),
+                Some(spec) => {
+                    let classes = vec![PrecisionClass::Bits(bits); n];
+                    let store = CompressedKV::compress(&kc, &vc, layout, &classes, *spec);
+                    ratio_sum += store.compression_ratio();
+                    mse_sum += store.reconstruction_mse(&kc, &vc);
+                    let mut ko = vec![0f32; layout.cache_len()];
+                    let mut vo = vec![0f32; layout.cache_len()];
+                    let mut va = vec![0f32; smax];
+                    store.materialize_into(&mut ko, &mut vo, &mut va);
+                    (ko, vo, va)
+                }
+            };
+
+            // decode the answer token against the quantized cache
+            let last_tok = sample.prompt()[n - 1];
+            let dec = rt.execute(&rt.entry("decode"), &[
+                Tensor::scalar_i32(last_tok as i32),
+                Tensor::scalar_i32(n as i32 - 1),
+                Tensor::f32(kq, &[layout.layers, layout.heads, smax, layout.d_head]),
+                Tensor::f32(vq, &[layout.layers, layout.heads, smax, layout.d_head]),
+                Tensor::f32(clip_pos(valid2, n - 1), &[smax]),
+            ])?;
+            let logits = dec[0].as_f32();
+            let pred = argmax(logits) as u16;
+            correct += (pred == sample.answer[0]) as usize;
+        }
+        let acc = 100.0 * correct as f64 / samples as f64;
+        let (mratio, mmse) = if spec.is_some() {
+            (format!("{:.2}x", ratio_sum / samples as f64),
+             format!("{:.2e}", mse_sum / samples as f64))
+        } else {
+            ("1.00x".into(), "0".into())
+        };
+        table.row(&[name.to_string(), format!("{:.3}x", analytic[vi]),
+                    mratio, mmse, format!("{acc:.1}")]);
+        eprintln!("[table1] {name} done");
+    }
+
+    println!("\n== Table 1: quantization granularity comparison ({bits}-bit) ==");
+    println!("model={} samples={samples}; PaperRatio = Appendix-A formula at \
+              b=8, hd=l=4096, n=32", common::bench_model());
+    table.print();
+    Ok(())
+}
+
+/// The decode artifact attends to rows with kpos < pos; the prompt's last
+/// token is re-fed as the decode input, so mask it out of the cache view.
+fn clip_pos(mut valid: Vec<f32>, pos: usize) -> Vec<f32> {
+    for v in valid.iter_mut().skip(pos) {
+        *v = 0.0;
+    }
+    valid
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter().enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i).unwrap_or(0)
+}

@@ -1,0 +1,134 @@
+//! Table 2 reproduction: probe-token selection strategies.
+//!
+//! For each strategy (all / random / special / recent / random+recent) the
+//! probe indices are fed to the `prefill_flash` artifact, its approximate
+//! normalized saliency drives a 4/2-bit mixed-precision compression, and
+//! the answer-token accuracy is measured.  Paper shape: all > random+recent
+//! > recent > random ≈ special.
+
+mod common;
+
+use zipcache::kvcache::{CompressedKV, PrecisionClass, QuantSpec};
+use zipcache::runtime::{Runtime, Tensor};
+use zipcache::saliency::{select_probes, select_salient, ProbeStrategy};
+use zipcache::util::bench::Table;
+use zipcache::workload::tasks::is_special;
+use zipcache::workload::{Task, TaskGen};
+
+fn main() -> zipcache::Result<()> {
+    let samples = common::bench_samples(20);
+    let saliency_ratio = 0.4; // paper Table 2: 40% salient at 4-bit
+    let (hi, lo) = (4u8, 2u8);
+    let rt = Runtime::load(common::artifacts_dir(), &common::bench_model())?;
+    let info = rt.model_info().clone();
+    let layout = info.cache_layout();
+    let (smax, pc) = (info.max_seq, info.probe_count);
+
+    let strategies = [
+        ("All tokens", ProbeStrategy::All),
+        ("Random tokens", ProbeStrategy::Random),
+        ("Special tokens", ProbeStrategy::Special),
+        ("Recent tokens", ProbeStrategy::Recent),
+        ("Random+recent", ProbeStrategy::RandomRecent),
+    ];
+
+    let gen = TaskGen::new(Task::Gsm, smax - 2);
+    let mut table = Table::new(&["Probe strategy", "Acc(%)"]);
+
+    for (name, strat) in strategies {
+        let mut correct = 0usize;
+        for i in 0..samples {
+            let sample = gen.sample(2000 + i as u64 * 104729);
+            let n = sample.prompt_len;
+            let mut tokens = vec![0i32; smax];
+            for (j, &t) in sample.prompt().iter().enumerate() {
+                tokens[j] = t as i32;
+            }
+            let mut valid = vec![0f32; smax];
+            valid[..n].fill(1.0);
+
+            // Saliency source: exact (full prefill) for "All", probe
+            // approximation through prefill_flash otherwise.
+            let saliency: Vec<f32> = if matches!(strat, ProbeStrategy::All) {
+                let out = rt.execute(&rt.entry("prefill_full"),
+                                     &[Tensor::i32(tokens.clone(), &[smax]),
+                                       Tensor::f32(valid.clone(), &[smax])])?;
+                layer_mean(out[4].as_f32(), info.n_layers, smax)
+            } else {
+                let special: Vec<bool> =
+                    sample.prompt().iter().map(|&t| is_special(t)).collect();
+                let probes = select_probes(strat, n, 0.10, Some(&special),
+                                           42 + i as u64);
+                let mut pidx: Vec<i32> = probes.iter().map(|&x| x as i32).collect();
+                while pidx.len() < pc {
+                    pidx.push((n - 1) as i32);
+                }
+                pidx.truncate(pc);
+                pidx.sort_unstable();
+                let out = rt.execute(&rt.entry("prefill_flash"),
+                                     &[Tensor::i32(tokens.clone(), &[smax]),
+                                       Tensor::f32(valid.clone(), &[smax]),
+                                       Tensor::i32(pidx, &[pc])])?;
+                layer_mean(out[3].as_f32(), info.n_layers, smax)
+            };
+
+            // Compress with the derived saliency; we need the caches too.
+            let out = rt.execute(&rt.entry("prefill_full"),
+                                 &[Tensor::i32(tokens, &[smax]),
+                                   Tensor::f32(valid.clone(), &[smax])])?;
+            let kc = out[1].as_f32();
+            let vc = out[2].as_f32();
+            let mask = select_salient(&saliency, n, saliency_ratio);
+            let classes: Vec<PrecisionClass> = mask
+                .into_iter()
+                .map(|m| PrecisionClass::Bits(if m { hi } else { lo }))
+                .collect();
+            let store = CompressedKV::compress(kc, vc, layout, &classes,
+                                               QuantSpec::default());
+            let mut ko = vec![0f32; layout.cache_len()];
+            let mut vo = vec![0f32; layout.cache_len()];
+            let mut va = vec![0f32; smax];
+            store.materialize_into(&mut ko, &mut vo, &mut va);
+            for v in va.iter_mut().skip(n - 1) {
+                *v = 0.0; // last prompt token is re-fed as the decode input
+            }
+            let dec = rt.execute(&rt.entry("decode"), &[
+                Tensor::scalar_i32(sample.prompt()[n - 1] as i32),
+                Tensor::scalar_i32(n as i32 - 1),
+                Tensor::f32(ko, &[layout.layers, layout.heads, smax, layout.d_head]),
+                Tensor::f32(vo, &[layout.layers, layout.heads, smax, layout.d_head]),
+                Tensor::f32(va, &[smax]),
+            ])?;
+            let pred = argmax(dec[0].as_f32()) as u16;
+            correct += (pred == sample.answer[0]) as usize;
+        }
+        table.row(&[name.to_string(),
+                    format!("{:.1}", 100.0 * correct as f64 / samples as f64)]);
+        eprintln!("[table2] {name} done");
+    }
+
+    println!("\n== Table 2: probe strategy comparison (40% salient, 4/2-bit, \
+              10% probes) ==");
+    println!("model={} samples={samples}", common::bench_model());
+    table.print();
+    Ok(())
+}
+
+fn layer_mean(x: &[f32], layers: usize, s: usize) -> Vec<f32> {
+    let mut out = vec![0f32; s];
+    for l in 0..layers {
+        for i in 0..s {
+            out[i] += x[l * s + i];
+        }
+    }
+    for o in out.iter_mut() {
+        *o /= layers as f32;
+    }
+    out
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter().enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i).unwrap_or(0)
+}

@@ -1,0 +1,60 @@
+//! Table 3 reproduction: GSM-style CoT accuracy per compression method.
+//!
+//! Paper shape to match: FP16 >= ZipCache > GEAR/KIVI/H2O-ish > MiKV at the
+//! same mixed-precision ratio (MiKV's accumulated scores misidentify the
+//! question tokens; H2O's eviction destroys them).
+
+mod common;
+
+use zipcache::config::PolicyKind;
+use zipcache::kvcache::ratio::RatioShape;
+use zipcache::util::bench::Table;
+use zipcache::workload::Task;
+
+fn main() -> zipcache::Result<()> {
+    let samples = common::bench_samples(20);
+    let saliency_ratio = 0.6;
+    let max_new = 3;
+
+    let mut table = Table::new(&[
+        "Method", "Bits(H/L)", "SalRatio", "AnalyticRatio", "MeasuredRatio", "Acc(%)",
+    ]);
+
+    for policy in PolicyKind::ALL {
+        let mut engine = common::engine(policy, saliency_ratio)?;
+        let info = engine.runtime().model_info().clone();
+        let shape = RatioShape { b: 1, hd: info.n_heads * info.d_head,
+                                 l: info.max_seq * 3 / 4 };
+        let (report, ratio) =
+            common::eval_policy(&mut engine, Task::Gsm, samples, max_new, 100)?;
+        let analytic = {
+            use zipcache::baselines::standard_policies;
+            standard_policies(saliency_ratio)
+                .into_iter()
+                .find(|p| p.name().eq_ignore_ascii_case(policy.as_str()))
+                .map(|p| p.analytic_ratio(shape))
+                .unwrap_or(1.0)
+        };
+        let bits = match policy {
+            PolicyKind::Fp16 => "16/16",
+            PolicyKind::H2o => "16/0",
+            PolicyKind::Gear => "4/4",
+            PolicyKind::Kivi => "16/2",
+            PolicyKind::Mikv | PolicyKind::Zipcache => "4/2",
+        };
+        table.row(&[
+            policy.to_string(),
+            bits.to_string(),
+            format!("{:.0}%", saliency_ratio * 100.0),
+            format!("{analytic:.2}x"),
+            format!("{ratio:.2}x"),
+            format!("{:.1}", report.accuracy_pct),
+        ]);
+        eprintln!("[table3] {} done ({samples} samples)", policy);
+    }
+
+    println!("\n== Table 3: GSM-style CoT accuracy vs compression method ==");
+    println!("model={} samples={samples}", common::bench_model());
+    table.print();
+    Ok(())
+}

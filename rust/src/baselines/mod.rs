@@ -1,0 +1,22 @@
+//! Compression policies: ZipCache and every baseline the paper compares
+//! against (Tables 3/A/B, Fig. 5), implemented behind one trait so the
+//! coordinator and the benches treat them uniformly.
+//!
+//! | policy  | paper ref | precision plan                          | saliency metric |
+//! |---------|-----------|------------------------------------------|-----------------|
+//! | FP16    | baseline  | all tokens fp16                          | —               |
+//! | H2O     | [46]      | keep heavy+recent fp16, evict rest       | accumulated     |
+//! | GEAR    | [21]      | whole cache 4-bit                        | —               |
+//! | KIVI    | [32]      | recent window fp16, rest 2-bit groupwise | — (recency)     |
+//! | MiKV    | [43]      | salient 4-bit / rest 2-bit               | accumulated     |
+//! | ZipCache| this paper| salient 4-bit / rest 2-bit               | normalized (probe) |
+//!
+//! GEAR's low-rank error-compensation term is not modelled (we reproduce
+//! its uniform-quantization core); see DESIGN.md §2 substitutions.
+
+pub mod policies;
+
+pub use policies::{
+    standard_policies, CompressionPolicy, Fp16Policy, GearPolicy, H2oPolicy,
+    KiviPolicy, MikvPolicy, PolicyInput, ZipCachePolicy,
+};

@@ -1,0 +1,229 @@
+//! Typed configuration system: engine/model/quantization/scheduler knobs,
+//! loadable from flat `key = value` config files (see [`crate::util::kvconf`])
+//! and overridable from the CLI.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::ensure;
+
+use crate::util::kvconf::KvConf;
+use crate::Result;
+
+/// Which compression policy the engine runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Fp16,
+    H2o,
+    Gear,
+    Kivi,
+    Mikv,
+    Zipcache,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 6] = [
+        PolicyKind::Fp16, PolicyKind::H2o, PolicyKind::Gear,
+        PolicyKind::Kivi, PolicyKind::Mikv, PolicyKind::Zipcache,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PolicyKind::Fp16 => "fp16",
+            PolicyKind::H2o => "h2o",
+            PolicyKind::Gear => "gear",
+            PolicyKind::Kivi => "kivi",
+            PolicyKind::Mikv => "mikv",
+            PolicyKind::Zipcache => "zipcache",
+        }
+    }
+}
+
+impl std::fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for PolicyKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fp16" => PolicyKind::Fp16,
+            "h2o" => PolicyKind::H2o,
+            "gear" => PolicyKind::Gear,
+            "kivi" => PolicyKind::Kivi,
+            "mikv" => PolicyKind::Mikv,
+            "zipcache" | "zip" => PolicyKind::Zipcache,
+            other => anyhow::bail!("unknown policy '{other}'"),
+        })
+    }
+}
+
+/// Quantization policy knobs (paper §5.1 defaults).
+#[derive(Debug, Clone)]
+pub struct QuantConfig {
+    /// Fraction of tokens treated as salient ("Saliency Ratio").
+    pub saliency_ratio: f64,
+    /// Bits for salient tokens (H).
+    pub bits_high: u8,
+    /// Bits for regular tokens (L).
+    pub bits_low: u8,
+    /// Total probe fraction for the fast saliency path.
+    pub probe_ratio: f64,
+    /// Recompress the cache every N generated tokens (Alg. 3).
+    pub recompress_every: usize,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig {
+            saliency_ratio: 0.6,
+            bits_high: 4,
+            bits_low: 2,
+            probe_ratio: 0.10,
+            recompress_every: 100,
+        }
+    }
+}
+
+/// Scheduler/batcher knobs.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Max sequences decoded concurrently (continuous batching width).
+    pub max_batch: usize,
+    /// Max queued requests before backpressure rejects.
+    pub queue_depth: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { max_batch: 8, queue_depth: 256 }
+    }
+}
+
+/// Full engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Directory containing `manifest.json` + `*.hlo.txt`.
+    pub artifacts_dir: PathBuf,
+    /// Model config name ("micro", "tiny", ...) — must exist in the manifest.
+    pub model: String,
+    pub policy: PolicyKind,
+    pub quant: QuantConfig,
+    pub scheduler: SchedulerConfig,
+    /// Request seed base (determinism).
+    pub seed: u64,
+}
+
+impl EngineConfig {
+    /// A ready-to-run ZipCache config over the given artifacts/model.
+    pub fn load_default(artifacts_dir: impl Into<PathBuf>, model: &str) -> Result<Self> {
+        let cfg = EngineConfig {
+            artifacts_dir: artifacts_dir.into(),
+            model: model.to_string(),
+            policy: PolicyKind::Zipcache,
+            quant: QuantConfig::default(),
+            scheduler: SchedulerConfig::default(),
+            seed: 0,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse from a `key = value` config file (example in `configs/`).
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let c = KvConf::load(path)?;
+        let cfg = EngineConfig {
+            artifacts_dir: PathBuf::from(c.get_or("artifacts_dir", "artifacts")),
+            model: c.get_or("model", "tiny"),
+            policy: c.get_or("policy", "zipcache").parse()?,
+            quant: QuantConfig {
+                saliency_ratio: c.get_f64("quant.saliency_ratio", 0.6)?,
+                bits_high: c.get_u8("quant.bits_high", 4)?,
+                bits_low: c.get_u8("quant.bits_low", 2)?,
+                probe_ratio: c.get_f64("quant.probe_ratio", 0.10)?,
+                recompress_every: c.get_usize("quant.recompress_every", 100)?,
+            },
+            scheduler: SchedulerConfig {
+                max_batch: c.get_usize("scheduler.max_batch", 8)?,
+                queue_depth: c.get_usize("scheduler.queue_depth", 256)?,
+            },
+            seed: c.get_u64("seed", 0)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check ranges.
+    pub fn validate(&self) -> Result<()> {
+        let q = &self.quant;
+        ensure!((0.0..=1.0).contains(&q.saliency_ratio),
+                "saliency_ratio must be in [0,1]");
+        ensure!((0.0..=1.0).contains(&q.probe_ratio),
+                "probe_ratio must be in [0,1]");
+        ensure!(matches!(q.bits_high, 1 | 2 | 4 | 8), "bits_high in {{1,2,4,8}}");
+        ensure!(matches!(q.bits_low, 1 | 2 | 4 | 8), "bits_low in {{1,2,4,8}}");
+        ensure!(q.bits_high >= q.bits_low, "bits_high >= bits_low");
+        ensure!(q.recompress_every > 0, "recompress_every > 0");
+        ensure!(self.scheduler.max_batch > 0, "max_batch > 0");
+        ensure!(!self.model.is_empty(), "model name required");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_valid() {
+        let c = EngineConfig::load_default("artifacts", "micro").unwrap();
+        assert_eq!(c.policy, PolicyKind::Zipcache);
+        assert_eq!(c.quant.bits_high, 4);
+    }
+
+    #[test]
+    fn invalid_ratio_rejected() {
+        let mut c = EngineConfig::load_default("artifacts", "micro").unwrap();
+        c.quant.saliency_ratio = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn bits_ordering_enforced() {
+        let mut c = EngineConfig::load_default("artifacts", "micro").unwrap();
+        c.quant.bits_high = 2;
+        c.quant.bits_low = 4;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn file_parsing() {
+        let text = r#"
+model = "tiny"
+policy = "mikv"
+seed = 9
+[quant]
+saliency_ratio = 0.7
+[scheduler]
+max_batch = 4
+"#;
+        let path = std::env::temp_dir().join("zipcache_cfg_test.conf");
+        std::fs::write(&path, text).unwrap();
+        let c = EngineConfig::from_file(&path).unwrap();
+        assert_eq!(c.model, "tiny");
+        assert_eq!(c.policy, PolicyKind::Mikv);
+        assert_eq!(c.quant.saliency_ratio, 0.7);
+        assert_eq!(c.quant.bits_low, 2); // default preserved
+        assert_eq!(c.scheduler.max_batch, 4);
+        assert_eq!(c.seed, 9);
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!("zipcache".parse::<PolicyKind>().unwrap(), PolicyKind::Zipcache);
+        assert_eq!("H2O".parse::<PolicyKind>().unwrap(), PolicyKind::H2o);
+        assert!("bogus".parse::<PolicyKind>().is_err());
+        assert_eq!(PolicyKind::Gear.to_string(), "gear");
+    }
+}

@@ -1,0 +1,137 @@
+//! Continuous batcher: round-robin token-level interleaving of active
+//! sessions (Orca-style iteration-level scheduling) with admission control.
+//!
+//! The decode artifact is single-sequence, so "batching" here is
+//! interleaved scheduling rather than a batched matmul — the scheduling
+//! behaviour (admission, fairness, completion-triggered refill from the
+//! queue) is the part of the serving stack the paper's efficiency claims
+//! interact with.  DESIGN.md records this substitution.
+
+use std::collections::VecDeque;
+
+use crate::Result;
+
+use super::engine::{Engine, GenerationOutput};
+use super::session::Session;
+
+/// A queued request.
+#[derive(Debug, Clone)]
+pub struct QueuedRequest {
+    pub prompt: Vec<u16>,
+    pub max_new: usize,
+    /// Opaque tag returned with the outcome (e.g. trace index).
+    pub tag: u64,
+}
+
+/// Completed request + its output.
+#[derive(Debug)]
+pub struct BatchOutcome {
+    pub tag: u64,
+    pub output: GenerationOutput,
+}
+
+/// Iteration-level continuous batcher over one engine.
+pub struct ContinuousBatcher {
+    max_batch: usize,
+    queue_depth: usize,
+    queue: VecDeque<QueuedRequest>,
+    active: Vec<(u64, Session)>,
+    outcomes: Vec<BatchOutcome>,
+}
+
+impl ContinuousBatcher {
+    pub fn new(max_batch: usize, queue_depth: usize) -> Self {
+        ContinuousBatcher {
+            max_batch,
+            queue_depth,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            outcomes: Vec::new(),
+        }
+    }
+
+    /// Admit a request; `Err` = backpressure (queue full).
+    pub fn submit(&mut self, req: QueuedRequest) -> std::result::Result<(), QueuedRequest> {
+        if self.queue.len() >= self.queue_depth {
+            return Err(req);
+        }
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+
+    /// Run one scheduler iteration: refill the batch from the queue
+    /// (prefill), then advance every active session by one token.
+    pub fn step(&mut self, engine: &mut Engine) -> Result<()> {
+        // Admission: fill free slots (prefill happens here).
+        while self.active.len() < self.max_batch {
+            let Some(req) = self.queue.pop_front() else { break };
+            let sess = engine.start_session(req.prompt, req.max_new)?;
+            self.active.push((req.tag, sess));
+        }
+        // Iteration-level decode across the batch.
+        for (_, sess) in self.active.iter_mut() {
+            engine.decode_step(sess)?;
+        }
+        // Retire finished sessions.
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].1.is_done() {
+                let (tag, sess) = self.active.swap_remove(i);
+                self.outcomes.push(BatchOutcome { tag, output: engine.finish(sess) });
+            } else {
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Drive until every queued/active request completes; returns outcomes
+    /// sorted by tag.
+    pub fn run_to_completion(&mut self, engine: &mut Engine) -> Result<Vec<BatchOutcome>> {
+        while !self.idle() {
+            self.step(engine)?;
+        }
+        let mut out = std::mem::take(&mut self.outcomes);
+        out.sort_by_key(|o| o.tag);
+        Ok(out)
+    }
+
+    /// Take completed outcomes accumulated so far.
+    pub fn take_outcomes(&mut self) -> Vec<BatchOutcome> {
+        std::mem::take(&mut self.outcomes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let mut b = ContinuousBatcher::new(2, 2);
+        let req = QueuedRequest { prompt: vec![1], max_new: 1, tag: 0 };
+        assert!(b.submit(req.clone()).is_ok());
+        assert!(b.submit(req.clone()).is_ok());
+        assert!(b.submit(req).is_err());
+        assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn idle_initially() {
+        let b = ContinuousBatcher::new(4, 8);
+        assert!(b.idle());
+        assert_eq!(b.active(), 0);
+    }
+}

@@ -1,0 +1,18 @@
+//! The serving coordinator (Layer 3): ZipCache's Alg. 2 (prefill) and
+//! Alg. 3 (decode + streaming recompression) orchestrated over the PJRT
+//! runtime, with continuous batching across sessions.
+//!
+//! * [`engine`] — [`Engine`]: owns the runtime + policy, runs prefill,
+//!   compression, and single-token decode steps.
+//! * [`session`] — per-request decode state (cache buffers, streaming
+//!   probe accumulator, generated tokens).
+//! * [`batcher`] — round-robin continuous batcher over active sessions
+//!   with admission control.
+
+pub mod batcher;
+pub mod engine;
+pub mod session;
+
+pub use batcher::{BatchOutcome, ContinuousBatcher};
+pub use engine::{Engine, GenerationOutput};
+pub use session::Session;

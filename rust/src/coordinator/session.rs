@@ -1,0 +1,104 @@
+//! Per-request decode state.
+//!
+//! A session owns the *materialized* fp32 cache buffers the decode
+//! artifact consumes (scattered from the compressed store), the validity
+//! mask, and the streaming-probe accumulator of Alg. 3.  The compressed
+//! (`CompressedKV`) form is re-created at every recompression point; the
+//! fp32 buffers in between hold recent uncompressed rows exactly like the
+//! paper's streaming scheme.
+
+use crate::kvcache::{CacheLayout, PrecisionClass};
+use crate::saliency::StreamingProbe;
+
+/// State of one in-flight generation request.
+#[derive(Debug)]
+pub struct Session {
+    pub id: u64,
+    /// The prompt (token ids), length <= layout.seq.
+    pub prompt: Vec<u16>,
+    /// Number of live cache rows (prompt + generated so far).
+    pub pos: usize,
+    /// Generated tokens (excluding the prompt).
+    pub generated: Vec<u16>,
+    /// Decode budget.
+    pub max_new: usize,
+    /// Materialized fp32 caches, `[L, H, S, dh]`.
+    pub kbuf: Vec<f32>,
+    pub vbuf: Vec<f32>,
+    /// Validity mask (1.0 = live row; 0 = evicted or empty).
+    pub valid: Vec<f32>,
+    /// Current per-token precision classes (from the last compression).
+    pub classes: Vec<PrecisionClass>,
+    /// Prefill-time saliency (normalized / accumulated), layer-averaged.
+    pub norm_saliency: Vec<f32>,
+    pub acc_saliency: Vec<f32>,
+    /// Streaming probe accumulator (Alg. 3).
+    pub stream: StreamingProbe,
+    /// Next token to feed the decode artifact.
+    pub next_token: u16,
+    /// True until the prompt's final token has been decoded against the
+    /// *compressed* cache (it is withheld from the prefill cache so the
+    /// first generated token genuinely reads quantized state — see
+    /// Engine::start_session).
+    pub prompt_tail_pending: bool,
+    pub done: bool,
+    /// Bytes of the last compressed snapshot + its ratio.
+    pub cache_bytes: usize,
+    pub compression_ratio: f64,
+    /// Wall-clock accounting (filled by the engine).
+    pub prefill_us: u64,
+    pub decode_us: u64,
+}
+
+impl Session {
+    pub fn new(id: u64, prompt: Vec<u16>, max_new: usize, layout: CacheLayout,
+               recompress_every: usize, seed: u64) -> Self {
+        let n = layout.cache_len();
+        Session {
+            id,
+            pos: prompt.len(),
+            prompt,
+            generated: Vec::new(),
+            max_new,
+            kbuf: vec![0f32; n],
+            vbuf: vec![0f32; n],
+            valid: vec![0f32; layout.seq],
+            classes: Vec::new(),
+            norm_saliency: Vec::new(),
+            acc_saliency: Vec::new(),
+            stream: StreamingProbe::new(recompress_every, 0.05, 0.05, seed),
+            next_token: 0,
+            prompt_tail_pending: false,
+            done: false,
+            cache_bytes: 0,
+            compression_ratio: 1.0,
+            prefill_us: 0,
+            decode_us: 0,
+        }
+    }
+
+    /// Room left in the fixed window.
+    pub fn remaining_window(&self, seq: usize) -> usize {
+        seq.saturating_sub(self.pos)
+    }
+
+    /// Generation finished (budget, EOS, or window exhausted)?
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_init() {
+        let lay = CacheLayout { layers: 2, heads: 2, seq: 16, d_head: 4 };
+        let s = Session::new(1, vec![1, 2, 3], 5, lay, 100, 0);
+        assert_eq!(s.pos, 3);
+        assert_eq!(s.kbuf.len(), lay.cache_len());
+        assert_eq!(s.remaining_window(16), 13);
+        assert!(!s.is_done());
+    }
+}

@@ -1,0 +1,79 @@
+//! Fidelity metrics: how much does cache compression perturb the model's
+//! outputs, independent of any task?  Used by the Table-1 reproduction and
+//! the ablation benches to get a continuous signal alongside accuracy.
+
+/// Mean squared error between two logit vectors.
+pub fn logit_mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Cosine similarity between two vectors (attention outputs, logits).
+pub fn cosine_similarity(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += (x as f64).powi(2);
+        nb += (y as f64).powi(2);
+    }
+    if na == 0.0 || nb == 0.0 {
+        return if na == nb { 1.0 } else { 0.0 };
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// Do two logit vectors agree on the argmax token?
+pub fn top1_agreement(a: &[f32], b: &[f32]) -> bool {
+    argmax(a) == argmax(b)
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|x, y| x.1.partial_cmp(y.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let v = vec![1.0f32, -2.0, 3.0];
+        assert_eq!(logit_mse(&v, &v), 0.0);
+    }
+
+    #[test]
+    fn cosine_bounds() {
+        let a = vec![1.0f32, 0.0];
+        let b = vec![0.0f32, 1.0];
+        assert!((cosine_similarity(&a, &a) - 1.0).abs() < 1e-12);
+        assert!(cosine_similarity(&a, &b).abs() < 1e-12);
+        let c = vec![-1.0f32, 0.0];
+        assert!((cosine_similarity(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_vectors() {
+        let z = vec![0.0f32; 4];
+        let a = vec![1.0f32; 4];
+        assert_eq!(cosine_similarity(&z, &z), 1.0);
+        assert_eq!(cosine_similarity(&z, &a), 0.0);
+    }
+
+    #[test]
+    fn top1() {
+        assert!(top1_agreement(&[0.1, 0.9], &[0.2, 0.3]));
+        assert!(!top1_agreement(&[0.9, 0.1], &[0.2, 0.3]));
+    }
+}

@@ -1,0 +1,13 @@
+//! Evaluation harness: task scorers + cache-fidelity metrics.
+//!
+//! The paper reports end-task accuracy (GSM8k / Line Retrieval / HumanEval)
+//! per compression method; [`scorer`] reproduces that protocol on the
+//! synthetic workloads.  [`fidelity`] adds direct cache/logit fidelity
+//! metrics (reconstruction MSE, logit divergence, attention-output cosine)
+//! that isolate quantization error from task noise.
+
+pub mod fidelity;
+pub mod scorer;
+
+pub use fidelity::{cosine_similarity, logit_mse, top1_agreement};
+pub use scorer::{score_generation, AccuracyReport};

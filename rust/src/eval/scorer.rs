@@ -1,0 +1,76 @@
+//! Task scoring: exact-match answer accuracy, the paper's Table 3/B and
+//! Fig. 5 metric.
+
+use crate::workload::Sample;
+
+/// Accuracy over a set of scored generations.
+#[derive(Debug, Clone, Default)]
+pub struct AccuracyReport {
+    pub n: usize,
+    pub correct: usize,
+    /// Exact-match accuracy in percent (the tables' "Acc.(%)").
+    pub accuracy_pct: f64,
+}
+
+impl AccuracyReport {
+    pub fn add(&mut self, correct: bool) {
+        self.n += 1;
+        if correct {
+            self.correct += 1;
+        }
+        self.accuracy_pct = 100.0 * self.correct as f64 / self.n as f64;
+    }
+
+    pub fn merge(&mut self, other: &AccuracyReport) {
+        self.n += other.n;
+        self.correct += other.correct;
+        self.accuracy_pct = if self.n == 0 {
+            0.0
+        } else {
+            100.0 * self.correct as f64 / self.n as f64
+        };
+    }
+}
+
+/// Score one generation against the sample's expected answer.
+///
+/// The answer is `[value, EOS]`; generation is correct iff the first
+/// generated token equals the value token (EOS afterwards is not required —
+/// matching the answer-extraction convention of the eval harnesses the
+/// paper uses, which parse the final answer span only).
+pub fn score_generation(sample: &Sample, generated: &[u16]) -> bool {
+    match generated.first() {
+        Some(&tok) => tok == sample.answer[0],
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Task, TaskGen};
+
+    #[test]
+    fn exact_match() {
+        let s = TaskGen::new(Task::Code, 128).sample(1);
+        assert!(score_generation(&s, &s.answer));
+        assert!(score_generation(&s, &[s.answer[0], 99]));
+        assert!(!score_generation(&s, &[s.answer[0] + 1]));
+        assert!(!score_generation(&s, &[]));
+    }
+
+    #[test]
+    fn report_accumulates() {
+        let mut r = AccuracyReport::default();
+        r.add(true);
+        r.add(false);
+        r.add(true);
+        assert_eq!(r.n, 3);
+        assert!((r.accuracy_pct - 66.666).abs() < 0.01);
+        let mut r2 = AccuracyReport::default();
+        r2.add(true);
+        r.merge(&r2);
+        assert_eq!(r.n, 4);
+        assert_eq!(r.correct, 3);
+    }
+}

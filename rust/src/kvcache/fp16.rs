@@ -1,0 +1,120 @@
+//! Minimal IEEE-754 binary16 conversion (no external crate).
+//!
+//! Used for the `Fp16` precision class (KIVI's full-precision recent window
+//! and the FP16 baseline): values round-trip through real half precision so
+//! fidelity measurements are honest, and storage is accounted at 2 bytes.
+
+/// f32 -> f16 bit pattern (round-to-nearest-even, IEEE semantics).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7C00 | m;
+    }
+    // Re-bias exponent: f32 bias 127 -> f16 bias 15.
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e <= 0 {
+        // subnormal or zero
+        if e < -10 {
+            return sign;
+        }
+        let m = mant | 0x0080_0000; // implicit bit
+        let shift = (14 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let mut v = m >> shift;
+        // round to nearest even
+        if (m & (half | (half - 1))) > half || ((m & half) != 0 && (v & 1) != 0) {
+            v += 1;
+        }
+        return sign | v as u16;
+    }
+    let mut v = ((e as u32) << 10) | (mant >> 13);
+    // round mantissa
+    let rem = mant & 0x1FFF;
+    if rem > 0x1000 || (rem == 0x1000 && (v & 1) != 0) {
+        v += 1; // may carry into exponent; that is correct behaviour
+    }
+    sign | v as u16
+}
+
+/// f16 bit pattern -> f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: value = mant * 2^-24; normalize to 1.f * 2^(-14-shifts)
+            let mut shifts = 0i32;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                shifts += 1;
+            }
+            let m = (m & 0x03FF) << 13;
+            let e = (127 - 14 - shifts) as u32;
+            sign | (e << 23) | m
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 through half precision (the `Fp16` class fidelity model).
+#[inline]
+pub fn round_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.099976] {
+            let r = round_f16(v);
+            assert!((r - v).abs() <= v.abs() * 0.001 + 1e-7, "{v} -> {r}");
+        }
+    }
+
+    #[test]
+    fn relative_error_within_half_ulp() {
+        for i in 0..1000 {
+            let v = (i as f32 * 0.713).sin() * 100.0;
+            let r = round_f16(v);
+            assert!((r - v).abs() <= v.abs() * (1.0 / 1024.0) + 1e-6, "{v} {r}");
+        }
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert!(round_f16(1e6).is_infinite());
+        assert!(round_f16(-1e6).is_infinite());
+    }
+
+    #[test]
+    fn subnormals() {
+        let v = 3.0e-6f32;
+        let r = round_f16(v);
+        assert!(r > 0.0 && (r - v).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(round_f16(f32::NAN).is_nan());
+    }
+}

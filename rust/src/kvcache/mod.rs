@@ -1,0 +1,19 @@
+//! Mixed-precision KV cache management (the paper's storage contribution).
+//!
+//! The cache for one sequence is held *physically compressed*: per
+//! (layer, head) plane, token rows are partitioned by [`PrecisionClass`]
+//! (salient → high bits, regular → low bits, plus `Fp16` for KIVI-style
+//! windows and `Evicted` for H2O-style dropping), each partition quantized
+//! separately exactly as Alg. 2's `Split -> ChannelQuant/CSTQuant ->
+//! Concat`.  Keys default to channelwise quantization and values to
+//! channel-separable tokenwise quantization (§5.1).
+//!
+//! [`store::CompressedKV`] owns the packed bytes and the accounting;
+//! [`ratio`] reproduces the paper's Appendix-A compression-ratio formulas
+//! exactly (unit-tested against the printed 3.200 / 3.992 / 3.995).
+
+pub mod fp16;
+pub mod ratio;
+pub mod store;
+
+pub use store::{CacheLayout, CompressedKV, PrecisionClass, QuantSpec};

@@ -1,0 +1,135 @@
+//! Closed-form compression-ratio formulas from the paper's Appendix A, plus
+//! the mixed-precision generalization used by Tables 3/A/B.
+//!
+//! These are *analytic* ratios over the paper's accounting conventions
+//! (FP16 baseline, quantization parameters stored at 16 bits each); the
+//! physical store ([`super::store::CompressedKV`]) reports its own measured
+//! ratios, and the two agree on matched configurations (see tests).
+
+/// Shape parameters of the appendix calculations.
+#[derive(Debug, Clone, Copy)]
+pub struct RatioShape {
+    /// batch size `b`
+    pub b: usize,
+    /// `h * d` (heads x head-dim, the hidden width of K or V)
+    pub hd: usize,
+    /// sequence length `l`
+    pub l: usize,
+}
+
+impl RatioShape {
+    /// The appendix's worked example: b=8, hd=l=4096.
+    pub fn paper_example() -> Self {
+        RatioShape { b: 8, hd: 4096, l: 4096 }
+    }
+
+    /// Total FP16 bits of the dense K+V cache: `2 * b*hd*l * 16`.
+    fn baseline_bits(&self) -> f64 {
+        2.0 * (self.b * self.hd * self.l) as f64 * 16.0
+    }
+}
+
+/// Eq. (A): groupwise quantization at `bits` with group size `n`.
+/// `R = 2*bhld*16 / (2*bhld*k + (4*bhld/n)*16)`.
+pub fn groupwise(shape: RatioShape, bits: u32, n: usize) -> f64 {
+    let bhld = (shape.b * shape.hd * shape.l) as f64;
+    let data = 2.0 * bhld * bits as f64;
+    let params = (4.0 * bhld / n as f64) * 16.0;
+    shape.baseline_bits() / (data + params)
+}
+
+/// Eq. (B): tokenwise quantization at `bits`.
+/// `R = 2*bhld*16 / (2*bhld*k + 4*bl*16)`.
+pub fn tokenwise(shape: RatioShape, bits: u32) -> f64 {
+    let bhld = (shape.b * shape.hd * shape.l) as f64;
+    let data = 2.0 * bhld * bits as f64;
+    let params = 4.0 * (shape.b * shape.l) as f64 * 16.0;
+    shape.baseline_bits() / (data + params)
+}
+
+/// Eq. (C): the paper's baseline — channelwise keys + channel-separable
+/// tokenwise values. `R = 2*bhld*16 / (2*bhld*k + 3*hd*16 + 2*bl*16)`.
+pub fn zipcache_baseline(shape: RatioShape, bits: u32) -> f64 {
+    let bhld = (shape.b * shape.hd * shape.l) as f64;
+    let data = 2.0 * bhld * bits as f64;
+    let params = 3.0 * shape.hd as f64 * 16.0 + 2.0 * (shape.b * shape.l) as f64 * 16.0;
+    shape.baseline_bits() / (data + params)
+}
+
+/// Channelwise K + plain tokenwise V (Table 1's third row):
+/// params = 2*hd + 2*bl pairs.
+pub fn channel_token(shape: RatioShape, bits: u32) -> f64 {
+    let bhld = (shape.b * shape.hd * shape.l) as f64;
+    let data = 2.0 * bhld * bits as f64;
+    let params = 2.0 * shape.hd as f64 * 16.0 + 2.0 * (shape.b * shape.l) as f64 * 16.0;
+    shape.baseline_bits() / (data + params)
+}
+
+/// Mixed-precision ratio for the adaptive methods (Tables 3/A/B):
+/// a `saliency_ratio` fraction of tokens at `hi` bits, the rest at `lo`
+/// bits (lo = 0 encodes eviction), with the ZipCache parameter overhead.
+pub fn mixed_precision(shape: RatioShape, hi: u32, lo: u32, saliency_ratio: f64) -> f64 {
+    let bhld = (shape.b * shape.hd * shape.l) as f64;
+    let eff_bits = saliency_ratio * hi as f64 + (1.0 - saliency_ratio) * lo as f64;
+    let data = 2.0 * bhld * eff_bits;
+    // params for the two partitions (each quantized separately):
+    // channelwise K (hd pairs) + CST V (bl pairs + hd scales) per partition.
+    let live = if lo == 0 { saliency_ratio } else { 1.0 };
+    let params = 2.0 * (3.0 * shape.hd as f64 * 16.0)
+        + 2.0 * (shape.b as f64 * shape.l as f64 * live) * 16.0;
+    shape.baseline_bits() / (data + params)
+}
+
+/// H2O-style eviction keeping `keep_ratio` tokens at fp16: `R = 1/keep`.
+pub fn eviction(keep_ratio: f64) -> f64 {
+    1.0 / keep_ratio
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn appendix_a_exact_values() {
+        let s = RatioShape::paper_example();
+        // The paper prints 3.200, 3.992, 3.995 for 4-bit / n=32.
+        assert!((groupwise(s, 4, 32) - 3.200).abs() < 5e-4, "{}", groupwise(s, 4, 32));
+        assert!((tokenwise(s, 4) - 3.992).abs() < 5e-4, "{}", tokenwise(s, 4));
+        assert!((zipcache_baseline(s, 4) - 3.995).abs() < 5e-4,
+                "{}", zipcache_baseline(s, 4));
+    }
+
+    #[test]
+    fn table1_ratio_column() {
+        // Table 1 prints 3.2x / 3.99x / 4.00x / 4.00x (rounded).
+        let s = RatioShape::paper_example();
+        assert_eq!(format!("{:.1}", groupwise(s, 4, 32)), "3.2");
+        assert_eq!(format!("{:.2}", tokenwise(s, 4)), "3.99");
+        assert_eq!(format!("{:.2}", channel_token(s, 4)), "4.00");
+        assert_eq!(format!("{:.2}", zipcache_baseline(s, 4)), "4.00");
+    }
+
+    #[test]
+    fn mixed_precision_matches_headline_numbers() {
+        // Table 3: l=840, 4/2 bits, 60% salient -> ~4.98x (paper prints 4.98).
+        let s = RatioShape { b: 1, hd: 4096, l: 840 };
+        let r = mixed_precision(s, 4, 2, 0.60);
+        assert!((r - 4.98).abs() < 0.08, "{r}");
+        // 70% salient -> 4.69x
+        let r = mixed_precision(s, 4, 2, 0.70);
+        assert!((r - 4.69).abs() < 0.08, "{r}");
+    }
+
+    #[test]
+    fn eviction_ratio() {
+        assert!((eviction(0.4) - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotonicity() {
+        let s = RatioShape::paper_example();
+        assert!(zipcache_baseline(s, 2) > zipcache_baseline(s, 4));
+        assert!(mixed_precision(s, 4, 2, 0.2) > mixed_precision(s, 4, 2, 0.8));
+        assert!(groupwise(s, 4, 64) > groupwise(s, 4, 32));
+    }
+}

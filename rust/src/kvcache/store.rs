@@ -1,0 +1,391 @@
+//! The compressed KV store: Alg. 2's `Split -> Quant -> Concat` made
+//! physical, with per-token precision classes and byte-level accounting.
+
+use crate::kvcache::fp16::round_f16;
+use crate::quant::{Granularity, QuantizedPlane};
+
+/// Static shape of one sequence's cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheLayout {
+    pub layers: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub d_head: usize,
+}
+
+impl CacheLayout {
+    pub fn plane_len(&self) -> usize {
+        self.seq * self.d_head
+    }
+    pub fn cache_len(&self) -> usize {
+        self.layers * self.heads * self.plane_len()
+    }
+    /// FP16 baseline bytes for `n_tokens` cached tokens (K and V).
+    pub fn fp16_baseline_bytes(&self, n_tokens: usize) -> usize {
+        2 * self.layers * self.heads * n_tokens * self.d_head * 2
+    }
+}
+
+/// Precision assigned to one token's K/V rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PrecisionClass {
+    /// Uncompressed half precision (FP16 baseline, KIVI recent window).
+    Fp16,
+    /// Quantized to `bits` (e.g. Hi=4 for salient, Lo=2 for regular).
+    Bits(u8),
+    /// Dropped entirely (H2O); contributes no storage and is masked out.
+    Evicted,
+}
+
+impl PrecisionClass {
+    pub fn is_evicted(&self) -> bool {
+        matches!(self, PrecisionClass::Evicted)
+    }
+}
+
+/// Key/value granularity configuration (paper §5.1 defaults; Table 1
+/// variants are produced by changing these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantSpec {
+    pub key_gran: Granularity,
+    pub value_gran: Granularity,
+}
+
+impl Default for QuantSpec {
+    fn default() -> Self {
+        QuantSpec {
+            key_gran: Granularity::Channel,
+            value_gran: Granularity::ChannelSeparableToken,
+        }
+    }
+}
+
+/// One quantized subset of rows within a plane (one precision class).
+#[derive(Debug, Clone)]
+struct SubsetPlane {
+    rows: Vec<u32>,
+    plane: QuantizedPlane,
+}
+
+/// One (layer, head) pair of compressed K/V planes.
+#[derive(Debug, Clone, Default)]
+struct HeadStore {
+    k_sets: Vec<SubsetPlane>,
+    v_sets: Vec<SubsetPlane>,
+    /// Fp16-class rows, stored rounded-through-f16 (accounted at 2 B/value).
+    fp_rows: Vec<(u32, Vec<f32>, Vec<f32>)>, // (token, k_row, v_row)
+}
+
+/// A fully compressed KV cache for one sequence.
+///
+/// Construction consumes fp32 caches in `[L, H, S, dh]` layout (exactly the
+/// prefill artifact's output) plus a per-token class assignment; the store
+/// keeps only packed codes + params, and can materialize the fp32 cache the
+/// decode artifact consumes (`materialize_into`) or report true byte usage
+/// (`storage_bytes`).
+#[derive(Debug, Clone)]
+pub struct CompressedKV {
+    pub layout: CacheLayout,
+    pub classes: Vec<PrecisionClass>,
+    pub n_tokens: usize,
+    pub spec: QuantSpec,
+    heads: Vec<HeadStore>,
+}
+
+impl CompressedKV {
+    /// Compress `kcache`/`vcache` (`[L, H, S, dh]` fp32, row-major) under
+    /// the per-token `classes` (length = n_tokens <= S).
+    pub fn compress(
+        kcache: &[f32],
+        vcache: &[f32],
+        layout: CacheLayout,
+        classes: &[PrecisionClass],
+        spec: QuantSpec,
+    ) -> Self {
+        assert_eq!(kcache.len(), layout.cache_len());
+        assert_eq!(vcache.len(), layout.cache_len());
+        let n_tokens = classes.len();
+        assert!(n_tokens <= layout.seq);
+
+        // Group token indices by class (stable order within class).
+        let mut groups: Vec<(PrecisionClass, Vec<u32>)> = Vec::new();
+        for (t, &c) in classes.iter().enumerate() {
+            if c.is_evicted() {
+                continue;
+            }
+            match groups.iter_mut().find(|(gc, _)| *gc == c) {
+                Some((_, v)) => v.push(t as u32),
+                None => groups.push((c, vec![t as u32])),
+            }
+        }
+
+        let (s, dh) = (layout.seq, layout.d_head);
+        let mut heads = Vec::with_capacity(layout.layers * layout.heads);
+        for l in 0..layout.layers {
+            for h in 0..layout.heads {
+                let base = (l * layout.heads + h) * s * dh;
+                let kplane = &kcache[base..base + s * dh];
+                let vplane = &vcache[base..base + s * dh];
+                let mut hs = HeadStore::default();
+                for (class, rows) in &groups {
+                    match class {
+                        PrecisionClass::Fp16 => {
+                            for &r in rows {
+                                let r0 = r as usize * dh;
+                                let kr: Vec<f32> =
+                                    kplane[r0..r0 + dh].iter().map(|&x| round_f16(x)).collect();
+                                let vr: Vec<f32> =
+                                    vplane[r0..r0 + dh].iter().map(|&x| round_f16(x)).collect();
+                                hs.fp_rows.push((r, kr, vr));
+                            }
+                        }
+                        PrecisionClass::Bits(bits) => {
+                            // Gather rows, quantize the subset on its own
+                            // statistics (Alg. 2's Split semantics).
+                            let mut kg = Vec::with_capacity(rows.len() * dh);
+                            let mut vg = Vec::with_capacity(rows.len() * dh);
+                            for &r in rows {
+                                let r0 = r as usize * dh;
+                                kg.extend_from_slice(&kplane[r0..r0 + dh]);
+                                vg.extend_from_slice(&vplane[r0..r0 + dh]);
+                            }
+                            hs.k_sets.push(SubsetPlane {
+                                rows: rows.clone(),
+                                plane: QuantizedPlane::quantize(
+                                    &kg, rows.len(), dh, *bits, spec.key_gran),
+                            });
+                            hs.v_sets.push(SubsetPlane {
+                                rows: rows.clone(),
+                                plane: QuantizedPlane::quantize(
+                                    &vg, rows.len(), dh, *bits, spec.value_gran),
+                            });
+                        }
+                        PrecisionClass::Evicted => unreachable!(),
+                    }
+                }
+                heads.push(hs);
+            }
+        }
+
+        CompressedKV { layout, classes: classes.to_vec(), n_tokens, spec, heads }
+    }
+
+    /// Scatter the dequantized cache into fp32 buffers shaped `[L,H,S,dh]`
+    /// and fill `valid` (length S): 1.0 for live tokens, 0.0 for evicted /
+    /// beyond `n_tokens`.
+    pub fn materialize_into(&self, kout: &mut [f32], vout: &mut [f32], valid: &mut [f32]) {
+        let lay = self.layout;
+        assert_eq!(kout.len(), lay.cache_len());
+        assert_eq!(vout.len(), lay.cache_len());
+        assert_eq!(valid.len(), lay.seq);
+        kout.fill(0.0);
+        vout.fill(0.0);
+        valid.fill(0.0);
+        for (t, c) in self.classes.iter().enumerate() {
+            if !c.is_evicted() {
+                valid[t] = 1.0;
+            }
+        }
+        let (s, dh) = (lay.seq, lay.d_head);
+        // Perf (EXPERIMENTS.md §Perf): bulk-dequantize each subset plane
+        // once (word-level unpack) and scatter rows, instead of per-row
+        // random-access decode — ~2x on the recompression cycle.
+        let mut setbuf: Vec<f32> = Vec::new();
+        for (hi, hs) in self.heads.iter().enumerate() {
+            let base = hi * s * dh;
+            for (sets, out) in [(&hs.k_sets, &mut *kout), (&hs.v_sets, &mut *vout)] {
+                for set in sets {
+                    setbuf.resize(set.rows.len() * dh, 0.0);
+                    set.plane.dequantize_into(&mut setbuf);
+                    for (i, &r) in set.rows.iter().enumerate() {
+                        let o = base + r as usize * dh;
+                        out[o..o + dh].copy_from_slice(&setbuf[i * dh..(i + 1) * dh]);
+                    }
+                }
+            }
+            for (r, kr, vr) in &hs.fp_rows {
+                let o = base + *r as usize * dh;
+                kout[o..o + dh].copy_from_slice(kr);
+                vout[o..o + dh].copy_from_slice(vr);
+            }
+        }
+    }
+
+    /// Physical storage in bytes.  `param_bytes` selects the accounting for
+    /// quantization parameters (paper Appendix A uses 16-bit => 2).
+    pub fn storage_bytes(&self, param_bytes: usize) -> usize {
+        let dh = self.layout.d_head;
+        let mut total = 0;
+        for hs in &self.heads {
+            for set in hs.k_sets.iter().chain(hs.v_sets.iter()) {
+                total += set.plane.storage_bytes(param_bytes);
+            }
+            total += hs.fp_rows.len() * 2 * dh * 2; // k+v rows at 2 B/value
+        }
+        total
+    }
+
+    /// Achieved compression ratio vs. the FP16 dense cache for the live
+    /// prefix (the number the paper's tables report).
+    pub fn compression_ratio(&self) -> f64 {
+        let base = self.layout.fp16_baseline_bytes(self.n_tokens) as f64;
+        let used = self.storage_bytes(2) as f64;
+        if used == 0.0 {
+            f64::INFINITY
+        } else {
+            base / used
+        }
+    }
+
+    /// Mean squared reconstruction error against the original caches
+    /// (fidelity metric used by Table-1-style evaluations).
+    pub fn reconstruction_mse(&self, kcache: &[f32], vcache: &[f32]) -> f64 {
+        let lay = self.layout;
+        let mut k = vec![0f32; lay.cache_len()];
+        let mut v = vec![0f32; lay.cache_len()];
+        let mut valid = vec![0f32; lay.seq];
+        self.materialize_into(&mut k, &mut v, &mut valid);
+        let (s, dh) = (lay.seq, lay.d_head);
+        let mut se = 0f64;
+        let mut n = 0usize;
+        for hi in 0..lay.layers * lay.heads {
+            let base = hi * s * dh;
+            for (t, c) in self.classes.iter().enumerate() {
+                if c.is_evicted() {
+                    continue;
+                }
+                let o = base + t * dh;
+                for j in 0..dh {
+                    let dk = (k[o + j] - kcache[o + j]) as f64;
+                    let dv = (v[o + j] - vcache[o + j]) as f64;
+                    se += dk * dk + dv * dv;
+                    n += 2;
+                }
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            se / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> CacheLayout {
+        CacheLayout { layers: 2, heads: 2, seq: 16, d_head: 8 }
+    }
+
+    fn caches(lay: CacheLayout) -> (Vec<f32>, Vec<f32>) {
+        let n = lay.cache_len();
+        let k: Vec<f32> = (0..n).map(|i| ((i as f32 * 0.317).sin()) * 2.0).collect();
+        let v: Vec<f32> = (0..n).map(|i| ((i as f32 * 0.711).cos()) * 3.0).collect();
+        (k, v)
+    }
+
+    #[test]
+    fn mixed_precision_roundtrip_and_masking() {
+        let lay = layout();
+        let (k, v) = caches(lay);
+        let mut classes = vec![PrecisionClass::Bits(2); 12];
+        classes[3] = PrecisionClass::Bits(4);
+        classes[4] = PrecisionClass::Fp16;
+        classes[5] = PrecisionClass::Evicted;
+        let c = CompressedKV::compress(&k, &v, lay, &classes, QuantSpec::default());
+        let mut ko = vec![0f32; lay.cache_len()];
+        let mut vo = vec![0f32; lay.cache_len()];
+        let mut valid = vec![0f32; lay.seq];
+        c.materialize_into(&mut ko, &mut vo, &mut valid);
+        assert_eq!(valid[5], 0.0);
+        assert_eq!(valid[3], 1.0);
+        assert_eq!(&valid[12..], &[0.0; 4]); // beyond n_tokens
+        // fp16 row nearly exact
+        let dh = lay.d_head;
+        for j in 0..dh {
+            assert!((ko[4 * dh + j] - k[4 * dh + j]).abs() < 2e-3);
+        }
+        // evicted row zeroed
+        assert!(ko[5 * dh..6 * dh].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn hi_bits_rows_more_accurate_than_lo() {
+        let lay = layout();
+        let (k, v) = caches(lay);
+        let mut classes = vec![PrecisionClass::Bits(2); 16];
+        for t in 0..8 {
+            classes[t] = PrecisionClass::Bits(4);
+        }
+        let c = CompressedKV::compress(&k, &v, lay, &classes, QuantSpec::default());
+        let mut ko = vec![0f32; lay.cache_len()];
+        let mut vo = vec![0f32; lay.cache_len()];
+        let mut valid = vec![0f32; lay.seq];
+        c.materialize_into(&mut ko, &mut vo, &mut valid);
+        let dh = lay.d_head;
+        let err = |rows: std::ops::Range<usize>| -> f32 {
+            let mut e = 0.0;
+            for hi in 0..lay.layers * lay.heads {
+                let base = hi * lay.seq * dh;
+                for t in rows.clone() {
+                    for j in 0..dh {
+                        e += (vo[base + t * dh + j] - v[base + t * dh + j]).powi(2);
+                    }
+                }
+            }
+            e
+        };
+        assert!(err(0..8) < err(8..16));
+    }
+
+    #[test]
+    fn compression_ratio_sane() {
+        let lay = layout();
+        let (k, v) = caches(lay);
+        let classes = vec![PrecisionClass::Bits(4); 16];
+        let c = CompressedKV::compress(&k, &v, lay, &classes, QuantSpec::default());
+        let r = c.compression_ratio();
+        // 4-bit of 16-bit baseline minus param overhead: between 2x and 4x
+        assert!(r > 2.0 && r <= 4.0, "{r}");
+        let classes2 = vec![PrecisionClass::Bits(2); 16];
+        let c2 = CompressedKV::compress(&k, &v, lay, &classes2, QuantSpec::default());
+        assert!(c2.compression_ratio() > r);
+    }
+
+    #[test]
+    fn eviction_reduces_storage_to_zero() {
+        let lay = layout();
+        let (k, v) = caches(lay);
+        let classes = vec![PrecisionClass::Evicted; 16];
+        let c = CompressedKV::compress(&k, &v, lay, &classes, QuantSpec::default());
+        assert_eq!(c.storage_bytes(2), 0);
+    }
+
+    #[test]
+    fn subset_quantization_uses_subset_stats() {
+        // A salient token with a huge outlier must not degrade regular
+        // tokens' quantization (the Split in Alg. 2).
+        let lay = CacheLayout { layers: 1, heads: 1, seq: 8, d_head: 4 };
+        let mut k = vec![0.1f32; lay.cache_len()];
+        let v = k.clone();
+        // token 0 is an outlier and salient
+        for j in 0..4 {
+            k[j] = 100.0;
+        }
+        let mut classes = vec![PrecisionClass::Bits(2); 8];
+        classes[0] = PrecisionClass::Bits(4);
+        let c = CompressedKV::compress(&k, &v, lay, &classes, QuantSpec::default());
+        let mut ko = vec![0f32; lay.cache_len()];
+        let mut vo = vec![0f32; lay.cache_len()];
+        let mut valid = vec![0f32; 8];
+        c.materialize_into(&mut ko, &mut vo, &mut valid);
+        // regular tokens (constant 0.1) quantized on their own stats -> exact
+        for t in 1..8 {
+            for j in 0..4 {
+                assert!((ko[t * 4 + j] - 0.1).abs() < 1e-6, "t={t} j={j}");
+            }
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! # ZipCache — accurate and efficient KV cache quantization
+//!
+//! Rust/JAX/Pallas reproduction of *"ZipCache: Accurate and Efficient KV
+//! Cache Quantization with Salient Token Identification"* (NeurIPS 2024).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): CSTQuant,
+//!   FlashAttention, probe-token saliency.  Build-time only.
+//! * **L2** — JAX model (`python/compile/model.py`): a GPT-style decoder
+//!   AOT-lowered to HLO text artifacts.
+//! * **L3** — this crate: the serving coordinator.  Loads the artifacts via
+//!   PJRT ([`runtime`]), owns the KV cache in its *physical* mixed-precision
+//!   bit-packed form ([`kvcache`]), identifies salient tokens
+//!   ([`saliency`]), schedules prefill/decode with streaming recompression
+//!   ([`coordinator`]), and implements the paper's comparison baselines
+//!   ([`baselines`]).  Python never runs on the request path.
+//!
+//! Quick tour:
+//!
+//! ```no_run
+//! use zipcache::config::EngineConfig;
+//! use zipcache::coordinator::Engine;
+//! use zipcache::workload::{Task, TaskGen};
+//!
+//! let cfg = EngineConfig::load_default("artifacts", "micro").unwrap();
+//! let mut engine = Engine::new(cfg).unwrap();
+//! let sample = TaskGen::new(Task::Gsm, 60).sample(42);
+//! let out = engine.generate(sample.prompt(), 4).unwrap();
+//! println!("generated: {:?}", out.tokens);
+//! ```
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod kvcache;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod saliency;
+pub mod server;
+pub mod simcost;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type (anyhow-based, like the rest of the binary).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,179 @@
+//! `zipcache` CLI: serve / eval / inspect over the AOT artifacts.
+//!
+//! Usage:
+//!   zipcache <serve|eval|inspect> [--artifacts DIR] [--model NAME]
+//!            [--policy fp16|h2o|gear|kivi|mikv|zipcache] [flags...]
+
+use zipcache::config::{EngineConfig, PolicyKind};
+use zipcache::coordinator::Engine;
+use zipcache::eval::{score_generation, AccuracyReport};
+use zipcache::kvcache::ratio::RatioShape;
+use zipcache::metrics::LatencyStats;
+use zipcache::server::Server;
+use zipcache::util::cli::Args;
+use zipcache::workload::{RequestTrace, Task, TaskGen};
+use zipcache::Result;
+
+fn parse_task(s: &str) -> Result<Task> {
+    Ok(match s {
+        "gsm" => Task::Gsm,
+        "code" => Task::Code,
+        _ if s.starts_with("lines") => Task::Lines(s[5..].parse()?),
+        other => anyhow::bail!("unknown task '{other}' (gsm|code|linesN)"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::new(
+        "zipcache",
+        "ZipCache KV-cache quantization serving engine (NeurIPS 2024 reproduction)\n\
+         subcommands: serve | eval | inspect",
+    )
+    .flag("artifacts", "artifacts", "artifacts directory")
+    .flag("model", "tiny", "model config from the manifest")
+    .flag("policy", "zipcache", "fp16|h2o|gear|kivi|mikv|zipcache")
+    .flag("saliency-ratio", "0.6", "fraction of tokens at high precision")
+    .flag("config", "", "optional key=value config file (overrides flags)")
+    .flag("task", "gsm", "gsm | code | linesN (e.g. lines20)")
+    .flag("samples", "50", "eval: number of samples")
+    .flag("max-new", "4", "decode budget per request")
+    .flag("requests", "16", "serve: number of requests")
+    .flag("rate", "8.0", "serve: arrival rate (req/s)")
+    .flag("seed", "0", "base seed")
+    .parse()?;
+
+    let cfg = build_config(&args)?;
+    let cmd = args
+        .positionals()
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("inspect");
+    match cmd {
+        "inspect" => inspect(cfg),
+        "eval" => eval(
+            cfg,
+            parse_task(&args.get("task"))?,
+            args.get_usize("samples")?,
+            args.get_usize("max-new")?,
+            args.get_u64("seed")?,
+        ),
+        "serve" => serve(
+            cfg,
+            parse_task(&args.get("task"))?,
+            args.get_usize("requests")?,
+            args.get_f64("rate")?,
+            args.get_usize("max-new")?,
+        ),
+        other => anyhow::bail!("unknown subcommand '{other}'\n{}", args.usage()),
+    }
+}
+
+fn build_config(args: &Args) -> Result<EngineConfig> {
+    let path = args.get("config");
+    if !path.is_empty() {
+        return EngineConfig::from_file(&path);
+    }
+    let mut cfg = EngineConfig::load_default(args.get("artifacts"), &args.get("model"))?;
+    cfg.policy = args.get("policy").parse::<PolicyKind>()?;
+    cfg.quant.saliency_ratio = args.get_f64("saliency-ratio")?;
+    cfg.seed = args.get_u64("seed")?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn inspect(cfg: EngineConfig) -> Result<()> {
+    let engine = Engine::new(cfg.clone())?;
+    let info = engine.runtime().model_info();
+    println!(
+        "model     : {} ({:.2}M params, trained={})",
+        cfg.model,
+        info.n_params as f64 / 1e6,
+        info.trained.is_some()
+    );
+    println!(
+        "layout    : L={} H={} S={} dh={} vocab={}",
+        info.n_layers, info.n_heads, info.max_seq, info.d_head, info.vocab
+    );
+    let mut entries = engine.runtime().entries();
+    entries.sort_unstable();
+    println!("entries   : {entries:?}");
+    println!("policy    : {}", engine.policy_name());
+    let shape = RatioShape {
+        b: 1,
+        hd: info.n_heads * info.d_head,
+        l: info.max_seq,
+    };
+    println!("analytic compression ratios at l={} (paper accounting):", info.max_seq);
+    use zipcache::baselines::standard_policies;
+    for p in standard_policies(cfg.quant.saliency_ratio) {
+        println!("  {:9}: {:.2}x", p.name(), p.analytic_ratio(shape));
+    }
+    Ok(())
+}
+
+fn eval(cfg: EngineConfig, task: Task, samples: usize, max_new: usize, seed: u64)
+        -> Result<()> {
+    let mut engine = Engine::new(cfg.clone())?;
+    let info = engine.runtime().model_info().clone();
+    let gen = TaskGen::new(task, info.max_seq - max_new);
+    let mut report = AccuracyReport::default();
+    let mut ratio_sum = 0.0;
+    let t0 = std::time::Instant::now();
+    for i in 0..samples {
+        let s = gen.sample(seed.wrapping_add(i as u64 * 7919));
+        let out = engine.generate(s.prompt(), max_new)?;
+        report.add(score_generation(&s, &out.tokens));
+        ratio_sum += out.compression_ratio;
+    }
+    println!(
+        "policy={} task={task:?} samples={samples} acc={:.2}% ratio={:.2}x wall={:.1}s",
+        engine.policy_name(),
+        report.accuracy_pct,
+        ratio_sum / samples as f64,
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "prefill p50={:.1}ms decode/tok p50={:.2}ms",
+        engine.metrics.prefill.p50_ms(),
+        engine.metrics.decode.p50_ms()
+    );
+    Ok(())
+}
+
+fn serve(cfg: EngineConfig, task: Task, requests: usize, rate: f64, max_new: usize)
+         -> Result<()> {
+    let server = Server::start(cfg.clone())?;
+    // Window sizing: leave decode headroom inside the fixed window.
+    let trace = RequestTrace::poisson(task, 256 - max_new, requests, rate,
+                                      max_new, cfg.seed);
+    let t0 = std::time::Instant::now();
+    let mut workers = Vec::new();
+    for e in trace.entries {
+        let h = server.handle.clone();
+        workers.push(std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(e.arrival_ms as u64));
+            let t_sub = std::time::Instant::now();
+            let out = h.generate(e.sample.prompt().to_vec(), e.max_new_tokens);
+            (t_sub.elapsed(), e.sample, out)
+        }));
+    }
+    let mut report = AccuracyReport::default();
+    let mut lat = LatencyStats::default();
+    let mut tokens = 0usize;
+    for w in workers {
+        let (dur, sample, out) = w.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+        let out = out?;
+        report.add(score_generation(&sample, &out.tokens));
+        lat.record(dur);
+        tokens += out.tokens.len();
+    }
+    let wall = t0.elapsed();
+    println!(
+        "served {requests} requests in {:.2}s — {:.1} tok/s, acc {:.1}%",
+        wall.as_secs_f64(),
+        tokens as f64 / wall.as_secs_f64(),
+        report.accuracy_pct
+    );
+    println!("request latency p50={:.0}ms p99={:.0}ms", lat.p50_ms(), lat.p99_ms());
+    server.shutdown()
+}

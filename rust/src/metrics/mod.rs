@@ -1,0 +1,127 @@
+//! Serving metrics: latency histograms, throughput counters, memory
+//! accounting — what the Fig. 6 / Table A benches read out.
+
+use std::time::Duration;
+
+/// A simple sorted-sample latency recorder (exact percentiles; sample
+//  counts here are small enough that O(n log n) is irrelevant).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64 / 1000.0
+    }
+
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)] as f64 / 1000.0
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.percentile_ms(50.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.percentile_ms(99.0)
+    }
+}
+
+/// Aggregated engine metrics for one run.
+#[derive(Debug, Clone, Default)]
+pub struct EngineMetrics {
+    pub prefill: LatencyStats,
+    pub decode: LatencyStats,
+    pub compress: LatencyStats,
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    /// Peak compressed-cache bytes across live sequences.
+    pub peak_cache_bytes: usize,
+    /// FP16-equivalent bytes of the same prefixes (for the ratio).
+    pub peak_cache_baseline_bytes: usize,
+}
+
+impl EngineMetrics {
+    pub fn record_cache(&mut self, used: usize, baseline: usize) {
+        if used > self.peak_cache_bytes {
+            self.peak_cache_bytes = used;
+            self.peak_cache_baseline_bytes = baseline;
+        }
+    }
+
+    pub fn memory_ratio(&self) -> f64 {
+        if self.peak_cache_bytes == 0 {
+            return 1.0;
+        }
+        self.peak_cache_baseline_bytes as f64 / self.peak_cache_bytes as f64
+    }
+
+    pub fn tokens_per_second(&self, wall: Duration) -> f64 {
+        if wall.as_secs_f64() == 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / wall.as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut s = LatencyStats::default();
+        for i in 1..=100u64 {
+            s.record_us(i * 1000);
+        }
+        assert!((s.p50_ms() - 50.0).abs() <= 1.0);
+        assert!((s.p99_ms() - 99.0).abs() <= 1.0);
+        assert!((s.mean_ms() - 50.5).abs() < 0.01);
+        assert_eq!(s.count(), 100);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = LatencyStats::default();
+        assert_eq!(s.mean_ms(), 0.0);
+        assert_eq!(s.p99_ms(), 0.0);
+    }
+
+    #[test]
+    fn cache_peak_tracking() {
+        let mut m = EngineMetrics::default();
+        m.record_cache(100, 500);
+        m.record_cache(50, 400);
+        assert_eq!(m.peak_cache_bytes, 100);
+        assert_eq!(m.memory_ratio(), 5.0);
+    }
+
+    #[test]
+    fn throughput() {
+        let mut m = EngineMetrics::default();
+        m.tokens_generated = 200;
+        assert!((m.tokens_per_second(Duration::from_secs(4)) - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,119 @@
+//! Uniform quantization primitives (paper §3.2, §4.1, Alg. 1).
+//!
+//! This module is the *physical* twin of the Pallas fake-quant kernels in
+//! `python/compile/kernels/cstquant.py`: the same math (Eq. 5/6), but
+//! producing bit-packed codes + quantization parameters, which is what the
+//! KV cache manager actually stores.  `quantize -> dequantize` here must
+//! agree with the Python oracle bit-for-bit (both use round-half-even);
+//! cross-layer tests in `rust/tests/` verify this against the AOT
+//! `quant_kv_*` HLO module.
+
+pub mod packing;
+pub mod plane;
+
+pub use packing::PackedCodes;
+pub use plane::{Granularity, QuantizedPlane};
+
+/// Quantization parameters of one group (Eq. 5): `x̂ = (clip(round(x/s)+z) - z) * s`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero: f32,
+}
+
+impl QuantParams {
+    /// Derive (s, z) from a min/max range at `bits` (Eq. 5).
+    ///
+    /// Degenerate ranges (constant data `c`) get `s = |c|` (or 1 for 0) and
+    /// `z = 1` for negative `c`, so the constant round-trips exactly —
+    /// matching `ref.uniform_quant` and the Pallas `_qparams` helper.
+    #[inline]
+    pub fn from_min_max(min: f32, max: f32, bits: u8) -> Self {
+        let qmax = ((1u32 << bits) - 1) as f32;
+        let s = (max - min) / qmax;
+        if s <= 0.0 {
+            let scale = if min.abs() > 0.0 { min.abs() } else { 1.0 };
+            let zero = if min < 0.0 { 1.0 } else { 0.0 };
+            return QuantParams { scale, zero };
+        }
+        let zero = -(min / s).round_ties_even();
+        QuantParams { scale: s, zero }
+    }
+
+    /// Encode one value to its integer code.
+    #[inline]
+    pub fn encode(&self, x: f32, bits: u8) -> u8 {
+        let qmax = ((1u32 << bits) - 1) as f32;
+        let q = (x / self.scale).round_ties_even() + self.zero;
+        q.clamp(0.0, qmax) as u8
+    }
+
+    /// Decode one integer code back to f32.
+    #[inline]
+    pub fn decode(&self, code: u8) -> f32 {
+        (code as f32 - self.zero) * self.scale
+    }
+}
+
+/// Min/max of a slice in one pass (NaN-free input assumed).
+#[inline]
+pub fn min_max(xs: &[f32]) -> (f32, f32) {
+    let mut mn = f32::INFINITY;
+    let mut mx = f32::NEG_INFINITY;
+    for &x in xs {
+        mn = mn.min(x);
+        mx = mx.max(x);
+    }
+    (mn, mx)
+}
+
+/// Fake-quantize a slice in place with shared params (testing helper).
+pub fn fake_quant_slice(xs: &mut [f32], bits: u8) {
+    let (mn, mx) = min_max(xs);
+    let p = QuantParams::from_min_max(mn, mx, bits);
+    for x in xs.iter_mut() {
+        *x = p.decode(p.encode(*x, bits));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_roundtrip_extremes() {
+        let p = QuantParams::from_min_max(-2.0, 6.0, 4);
+        // endpoints of the range must round-trip within one step
+        for &v in &[-2.0f32, 6.0] {
+            let d = p.decode(p.encode(v, 4));
+            assert!((d - v).abs() <= p.scale * 0.5 + 1e-6, "{v} -> {d}");
+        }
+    }
+
+    #[test]
+    fn constant_slice_is_exact() {
+        let mut xs = vec![3.5f32; 16];
+        fake_quant_slice(&mut xs, 2);
+        assert!(xs.iter().all(|&x| (x - 3.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let base: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        let mut errs = vec![];
+        for bits in [2u8, 4, 8] {
+            let mut xs = base.clone();
+            fake_quant_slice(&mut xs, bits);
+            let e: f32 = xs.iter().zip(&base).map(|(a, b)| (a - b).powi(2)).sum();
+            errs.push(e);
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn encode_clips_out_of_range() {
+        let p = QuantParams::from_min_max(0.0, 1.0, 2);
+        assert_eq!(p.encode(-10.0, 2), 0);
+        assert_eq!(p.encode(10.0, 2), 3);
+    }
+}

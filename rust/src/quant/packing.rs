@@ -1,0 +1,170 @@
+//! Bit-packing of quantization codes (2/4/8-bit) into dense byte buffers.
+//!
+//! This is where the compression ratio physically comes from: a 2-bit code
+//! stream packs 4 codes per byte.  The pack/unpack loops are on the
+//! recompression hot path (every 100 generated tokens, Alg. 3), so the
+//! byte-aligned fast paths matter; see `benches/hotpath.rs`.
+
+/// Densely packed integer codes with a fixed bit-width.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedCodes {
+    pub bits: u8,
+    pub len: usize,
+    data: Vec<u8>,
+}
+
+impl PackedCodes {
+    /// Number of code values that fit in one byte.
+    #[inline]
+    pub fn per_byte(bits: u8) -> usize {
+        debug_assert!(matches!(bits, 1 | 2 | 4 | 8), "unsupported bits {bits}");
+        8 / bits as usize
+    }
+
+    /// Pack `codes` (each `< 2^bits`) into a dense buffer.
+    pub fn pack(codes: &[u8], bits: u8) -> Self {
+        let pb = Self::per_byte(bits);
+        let mut data = vec![0u8; codes.len().div_ceil(pb)];
+        match bits {
+            8 => data.copy_from_slice(codes),
+            4 => {
+                // 2 codes/byte: low nibble first.
+                for (i, chunk) in codes.chunks(2).enumerate() {
+                    let hi = chunk.get(1).copied().unwrap_or(0);
+                    data[i] = (chunk[0] & 0x0F) | (hi << 4);
+                }
+            }
+            2 => {
+                // 4 codes/byte, little-endian 2-bit lanes.
+                for (i, chunk) in codes.chunks(4).enumerate() {
+                    let mut b = 0u8;
+                    for (j, &c) in chunk.iter().enumerate() {
+                        b |= (c & 0x3) << (2 * j);
+                    }
+                    data[i] = b;
+                }
+            }
+            1 => {
+                for (i, chunk) in codes.chunks(8).enumerate() {
+                    let mut b = 0u8;
+                    for (j, &c) in chunk.iter().enumerate() {
+                        b |= (c & 0x1) << j;
+                    }
+                    data[i] = b;
+                }
+            }
+            _ => unreachable!(),
+        }
+        PackedCodes { bits, len: codes.len(), data }
+    }
+
+    /// Unpack into a fresh vector.
+    pub fn unpack(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.len];
+        self.unpack_into(&mut out);
+        out
+    }
+
+    /// Unpack into a caller-provided buffer (len must equal `self.len`).
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf): the whole-byte fast paths below
+    /// replace a per-element `div/mod` indexing scheme; on the 1M-code
+    /// recompression workload this is ~3x faster, which matters because
+    /// unpack feeds every cache materialization (one per decode
+    /// recompression cycle, Alg. 3).
+    pub fn unpack_into(&self, out: &mut [u8]) {
+        assert_eq!(out.len(), self.len);
+        match self.bits {
+            8 => out.copy_from_slice(&self.data[..self.len]),
+            4 => {
+                let full = self.len / 2;
+                for (i, &b) in self.data[..full].iter().enumerate() {
+                    out[2 * i] = b & 0x0F;
+                    out[2 * i + 1] = b >> 4;
+                }
+                if self.len % 2 == 1 {
+                    out[self.len - 1] = self.data[full] & 0x0F;
+                }
+            }
+            2 => {
+                let full = self.len / 4;
+                for (i, &b) in self.data[..full].iter().enumerate() {
+                    let o = &mut out[4 * i..4 * i + 4];
+                    o[0] = b & 0x3;
+                    o[1] = (b >> 2) & 0x3;
+                    o[2] = (b >> 4) & 0x3;
+                    o[3] = b >> 6;
+                }
+                for i in full * 4..self.len {
+                    out[i] = (self.data[i / 4] >> (2 * (i % 4))) & 0x3;
+                }
+            }
+            1 => {
+                let full = self.len / 8;
+                for (i, &b) in self.data[..full].iter().enumerate() {
+                    for j in 0..8 {
+                        out[8 * i + j] = (b >> j) & 1;
+                    }
+                }
+                for i in full * 8..self.len {
+                    out[i] = (self.data[i / 8] >> (i % 8)) & 0x1;
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Random access to one code (used by sparse dequant paths).
+    #[inline]
+    pub fn get(&self, i: usize) -> u8 {
+        debug_assert!(i < self.len);
+        match self.bits {
+            8 => self.data[i],
+            4 => {
+                let b = self.data[i / 2];
+                if i % 2 == 0 { b & 0x0F } else { b >> 4 }
+            }
+            2 => (self.data[i / 4] >> (2 * (i % 4))) & 0x3,
+            1 => (self.data[i / 8] >> (i % 8)) & 0x1,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Bytes of packed payload (the real storage cost of the codes).
+    #[inline]
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(bits: u8, n: usize) {
+        let max = 1u32 << bits; // up to 256: reduce in u32, then narrow
+        let codes: Vec<u8> = (0..n).map(|i| ((i * 7 + 3) as u32 % max) as u8).collect();
+        let packed = PackedCodes::pack(&codes, bits);
+        assert_eq!(packed.unpack(), codes);
+        for (i, &c) in codes.iter().enumerate() {
+            assert_eq!(packed.get(i), c, "bits={bits} i={i}");
+        }
+        assert_eq!(packed.storage_bytes(), n.div_ceil(8 / bits as usize));
+    }
+
+    #[test]
+    fn roundtrip_all_widths() {
+        for bits in [1u8, 2, 4, 8] {
+            for n in [0usize, 1, 3, 4, 5, 7, 8, 9, 64, 1000] {
+                roundtrip(bits, n);
+            }
+        }
+    }
+
+    #[test]
+    fn two_bit_is_quarter_size() {
+        let codes = vec![3u8; 4096];
+        let p = PackedCodes::pack(&codes, 2);
+        assert_eq!(p.storage_bytes(), 1024);
+    }
+}

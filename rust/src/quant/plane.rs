@@ -1,0 +1,346 @@
+//! Quantized 2-D planes: one `[rows, cols]` slab of a KV tensor (the
+//! `[S, d_head]` plane of one layer/head), quantized at one of the paper's
+//! granularities (Table 1) and stored bit-packed.
+//!
+//! Semantics mirror `python/compile/kernels/ref.py` exactly:
+//!   * `Token`   — one (s, z) per row (Eq. 5 over each token)
+//!   * `Channel` — one (s, z) per column
+//!   * `Group(n)`— one (s, z) per `n` contiguous columns within each row
+//!   * `ChannelSeparableToken` — Alg. 1: per-channel `c = sqrt(max|col|)`
+//!     normalization, then `Token`, then rescale.
+
+use super::packing::PackedCodes;
+use super::{min_max, QuantParams};
+
+/// The quantization granularities compared in the paper's Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    Token,
+    Channel,
+    Group(usize),
+    ChannelSeparableToken,
+}
+
+impl Granularity {
+    /// Number of (scale, zero) pairs for a `[rows, cols]` plane — the
+    /// quantization-parameter overhead the paper's §4.1 analyzes.
+    pub fn param_pairs(&self, rows: usize, cols: usize) -> usize {
+        match self {
+            Granularity::Token => rows,
+            Granularity::Channel => cols,
+            Granularity::Group(n) => rows * cols.div_ceil(*n),
+            Granularity::ChannelSeparableToken => rows, // + cols channel scales
+        }
+    }
+
+    /// Extra per-channel scale values (CST's `c` vector).
+    pub fn channel_scales(&self, cols: usize) -> usize {
+        match self {
+            Granularity::ChannelSeparableToken => cols,
+            _ => 0,
+        }
+    }
+}
+
+/// A quantized `[rows, cols]` plane: packed codes + parameters.
+#[derive(Debug, Clone)]
+pub struct QuantizedPlane {
+    pub bits: u8,
+    pub granularity: Granularity,
+    pub rows: usize,
+    pub cols: usize,
+    pub codes: PackedCodes,
+    /// (s, z) pairs, laid out per granularity (row-major for Group).
+    pub params: Vec<QuantParams>,
+    /// CST channel scales `c_i = sqrt(max|X_i|)`; empty otherwise.
+    pub chan_scale: Vec<f32>,
+}
+
+impl QuantizedPlane {
+    /// Quantize `x` (`rows*cols`, row-major).
+    pub fn quantize(x: &[f32], rows: usize, cols: usize, bits: u8,
+                    granularity: Granularity) -> Self {
+        assert_eq!(x.len(), rows * cols);
+        match granularity {
+            Granularity::Token => Self::quant_token(x, rows, cols, bits, &[]),
+            Granularity::Channel => Self::quant_channel(x, rows, cols, bits),
+            Granularity::Group(n) => Self::quant_group(x, rows, cols, bits, n),
+            Granularity::ChannelSeparableToken => {
+                // Eq. 6: c_i = sqrt(max|X_i|) per column, degenerate -> 1.
+                let mut c = vec![0f32; cols];
+                for r in 0..rows {
+                    for (j, cj) in c.iter_mut().enumerate() {
+                        *cj = cj.max(x[r * cols + j].abs());
+                    }
+                }
+                for cj in c.iter_mut() {
+                    *cj = if *cj <= 0.0 { 1.0 } else { cj.sqrt() };
+                }
+                Self::quant_token(x, rows, cols, bits, &c)
+            }
+        }
+    }
+
+    fn quant_token(x: &[f32], rows: usize, cols: usize, bits: u8,
+                   chan_scale: &[f32]) -> Self {
+        let cst = !chan_scale.is_empty();
+        let mut codes = vec![0u8; rows * cols];
+        let mut params = Vec::with_capacity(rows);
+        let mut normed = vec![0f32; cols];
+        // Perf (EXPERIMENTS.md §Perf): the encode loop hoists 1/s out of
+        // the per-element path (mul instead of div) — ~25% off the
+        // compress cycle.  The reciprocal can differ from `x / s` by one
+        // ulp on exact rounding ties; the cross-layer contract is an
+        // error-bound (not bit) match, verified in rust/tests.
+        let qmax = ((1u32 << bits) - 1) as f32;
+        for r in 0..rows {
+            let row = &x[r * cols..(r + 1) * cols];
+            let src: &[f32] = if cst {
+                for j in 0..cols {
+                    normed[j] = row[j] / chan_scale[j];
+                }
+                &normed
+            } else {
+                row
+            };
+            let (mn, mx) = min_max(src);
+            let p = QuantParams::from_min_max(mn, mx, bits);
+            let inv_s = 1.0 / p.scale;
+            let dst = &mut codes[r * cols..(r + 1) * cols];
+            for (c, &v) in dst.iter_mut().zip(src) {
+                *c = ((v * inv_s).round_ties_even() + p.zero).clamp(0.0, qmax) as u8;
+            }
+            params.push(p);
+        }
+        QuantizedPlane {
+            bits,
+            granularity: if cst { Granularity::ChannelSeparableToken } else { Granularity::Token },
+            rows,
+            cols,
+            codes: PackedCodes::pack(&codes, bits),
+            params,
+            chan_scale: chan_scale.to_vec(),
+        }
+    }
+
+    fn quant_channel(x: &[f32], rows: usize, cols: usize, bits: u8) -> Self {
+        let mut mn = vec![f32::INFINITY; cols];
+        let mut mx = vec![f32::NEG_INFINITY; cols];
+        for r in 0..rows {
+            for j in 0..cols {
+                let v = x[r * cols + j];
+                mn[j] = mn[j].min(v);
+                mx[j] = mx[j].max(v);
+            }
+        }
+        let params: Vec<QuantParams> = (0..cols)
+            .map(|j| QuantParams::from_min_max(mn[j], mx[j], bits))
+            .collect();
+        let mut codes = vec![0u8; rows * cols];
+        for r in 0..rows {
+            for j in 0..cols {
+                codes[r * cols + j] = params[j].encode(x[r * cols + j], bits);
+            }
+        }
+        QuantizedPlane {
+            bits,
+            granularity: Granularity::Channel,
+            rows,
+            cols,
+            codes: PackedCodes::pack(&codes, bits),
+            params,
+            chan_scale: vec![],
+        }
+    }
+
+    fn quant_group(x: &[f32], rows: usize, cols: usize, bits: u8, n: usize) -> Self {
+        assert!(n > 0);
+        let groups = cols.div_ceil(n);
+        let mut params = Vec::with_capacity(rows * groups);
+        let mut codes = vec![0u8; rows * cols];
+        for r in 0..rows {
+            for g in 0..groups {
+                let j0 = g * n;
+                let j1 = (j0 + n).min(cols);
+                let seg = &x[r * cols + j0..r * cols + j1];
+                let (mn, mx) = min_max(seg);
+                let p = QuantParams::from_min_max(mn, mx, bits);
+                for (off, &v) in seg.iter().enumerate() {
+                    codes[r * cols + j0 + off] = p.encode(v, bits);
+                }
+                params.push(p);
+            }
+        }
+        QuantizedPlane {
+            bits,
+            granularity: Granularity::Group(n),
+            rows,
+            cols,
+            codes: PackedCodes::pack(&codes, bits),
+            params,
+            chan_scale: vec![],
+        }
+    }
+
+    /// Dequantize the whole plane into `out` (`rows*cols`, row-major).
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.rows * self.cols);
+        let mut raw = vec![0u8; self.rows * self.cols];
+        self.codes.unpack_into(&mut raw);
+        match self.granularity {
+            Granularity::Token => {
+                for r in 0..self.rows {
+                    let p = self.params[r];
+                    for j in 0..self.cols {
+                        out[r * self.cols + j] = p.decode(raw[r * self.cols + j]);
+                    }
+                }
+            }
+            Granularity::ChannelSeparableToken => {
+                for r in 0..self.rows {
+                    let p = self.params[r];
+                    for j in 0..self.cols {
+                        out[r * self.cols + j] =
+                            p.decode(raw[r * self.cols + j]) * self.chan_scale[j];
+                    }
+                }
+            }
+            Granularity::Channel => {
+                for r in 0..self.rows {
+                    for j in 0..self.cols {
+                        out[r * self.cols + j] = self.params[j].decode(raw[r * self.cols + j]);
+                    }
+                }
+            }
+            Granularity::Group(n) => {
+                let groups = self.cols.div_ceil(n);
+                for r in 0..self.rows {
+                    for j in 0..self.cols {
+                        let p = self.params[r * groups + j / n];
+                        out[r * self.cols + j] = p.decode(raw[r * self.cols + j]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Dequantize a single row into `out` (`cols` long).
+    pub fn dequantize_row(&self, r: usize, out: &mut [f32]) {
+        assert!(r < self.rows && out.len() == self.cols);
+        match self.granularity {
+            Granularity::Token | Granularity::ChannelSeparableToken => {
+                let p = self.params[r];
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = p.decode(self.codes.get(r * self.cols + j));
+                }
+                if self.granularity == Granularity::ChannelSeparableToken {
+                    for (j, o) in out.iter_mut().enumerate() {
+                        *o *= self.chan_scale[j];
+                    }
+                }
+            }
+            Granularity::Channel => {
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = self.params[j].decode(self.codes.get(r * self.cols + j));
+                }
+            }
+            Granularity::Group(n) => {
+                let groups = self.cols.div_ceil(n);
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = self.params[r * groups + j / n]
+                        .decode(self.codes.get(r * self.cols + j));
+                }
+            }
+        }
+    }
+
+    /// Physical storage: packed codes + parameters.
+    ///
+    /// `param_bytes_per_value` lets callers use the paper's 16-bit parameter
+    /// accounting (Appendix A) or honest f32 (4 bytes).
+    pub fn storage_bytes(&self, param_bytes_per_value: usize) -> usize {
+        self.codes.storage_bytes()
+            + (2 * self.params.len() + self.chan_scale.len()) * param_bytes_per_value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plane(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        // channel-outlier structure like the paper's Fig. 2
+        (0..rows * cols)
+            .map(|i| {
+                let r = i / cols;
+                let c = i % cols;
+                let base = ((seed as f32 + r as f32 * 0.7 + c as f32 * 1.3).sin()) * 2.0;
+                let outlier = if c % 7 == 0 { 8.0 } else { 1.0 };
+                base * outlier
+            })
+            .collect()
+    }
+
+    fn mse(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f32>() / a.len() as f32
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_all_granularities() {
+        let x = plane(32, 16, 3);
+        for g in [Granularity::Token, Granularity::Channel, Granularity::Group(8),
+                  Granularity::ChannelSeparableToken] {
+            let q = QuantizedPlane::quantize(&x, 32, 16, 8, g);
+            let mut out = vec![0f32; x.len()];
+            q.dequantize_into(&mut out);
+            assert!(mse(&x, &out) < 1e-3, "{g:?}: {}", mse(&x, &out));
+        }
+    }
+
+    #[test]
+    fn cst_beats_token_under_outliers() {
+        let x = plane(64, 32, 5);
+        let qt = QuantizedPlane::quantize(&x, 64, 32, 4, Granularity::Token);
+        let qc = QuantizedPlane::quantize(&x, 64, 32, 4,
+                                          Granularity::ChannelSeparableToken);
+        let mut ot = vec![0f32; x.len()];
+        let mut oc = vec![0f32; x.len()];
+        qt.dequantize_into(&mut ot);
+        qc.dequantize_into(&mut oc);
+        assert!(mse(&x, &oc) < mse(&x, &ot));
+    }
+
+    #[test]
+    fn row_dequant_matches_full() {
+        let x = plane(16, 8, 9);
+        for g in [Granularity::Token, Granularity::Channel, Granularity::Group(4),
+                  Granularity::ChannelSeparableToken] {
+            let q = QuantizedPlane::quantize(&x, 16, 8, 4, g);
+            let mut full = vec![0f32; x.len()];
+            q.dequantize_into(&mut full);
+            let mut row = vec![0f32; 8];
+            for r in 0..16 {
+                q.dequantize_row(r, &mut row);
+                assert_eq!(&row[..], &full[r * 8..(r + 1) * 8], "{g:?} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn param_counts_match_paper_formulas() {
+        // paper §4.1: tokenwise 2bl pairs -> rows; groupwise 2bhld/n -> rows*cols/n
+        assert_eq!(Granularity::Token.param_pairs(100, 64), 100);
+        assert_eq!(Granularity::Channel.param_pairs(100, 64), 64);
+        assert_eq!(Granularity::Group(32).param_pairs(100, 64), 200);
+        assert_eq!(Granularity::ChannelSeparableToken.param_pairs(100, 64), 100);
+        assert_eq!(Granularity::ChannelSeparableToken.channel_scales(64), 64);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let x = plane(64, 32, 1);
+        let q = QuantizedPlane::quantize(&x, 64, 32, 2, Granularity::Token);
+        // codes: 64*32 at 2 bits = 512 bytes; params: 2*64 at 2 bytes
+        assert_eq!(q.storage_bytes(2), 512 + 256);
+    }
+}

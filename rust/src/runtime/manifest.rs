@@ -1,0 +1,183 @@
+//! `artifacts/manifest.json` schema (written by `python/compile/aot.py`),
+//! parsed with the in-tree JSON parser ([`crate::util::json`]).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+use crate::Result;
+
+/// Input tensor spec of one entry point.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT entry point (one .hlo.txt file).
+#[derive(Debug, Clone)]
+pub struct EntryInfo {
+    pub config: String,
+    pub file: String,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+    pub sha256: String,
+}
+
+/// Model hyper-parameters recorded at lowering time.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub probe_count: usize,
+    pub n_params: usize,
+    /// npz filename if the weights were trained; None = random init baked.
+    pub trained: Option<String>,
+}
+
+impl ModelInfo {
+    /// Cache layout for this model (one sequence).
+    pub fn cache_layout(&self) -> crate::kvcache::CacheLayout {
+        crate::kvcache::CacheLayout {
+            layers: self.n_layers,
+            heads: self.n_heads,
+            seq: self.max_seq,
+            d_head: self.d_head,
+        }
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, EntryInfo>,
+    pub configs: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {path:?}: {e} — run `make artifacts`"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = json::parse(text)?;
+        let mut entries = BTreeMap::new();
+        for (name, e) in root.req("entries")?.as_obj().into_iter().flatten() {
+            entries.insert(name.clone(), parse_entry(e)?);
+        }
+        let mut configs = BTreeMap::new();
+        for (name, c) in root.req("configs")?.as_obj().into_iter().flatten() {
+            configs.insert(name.clone(), parse_model(c)?);
+        }
+        Ok(Manifest { entries, configs })
+    }
+}
+
+fn parse_entry(e: &Json) -> Result<EntryInfo> {
+    let u = |k: &str| -> Result<String> {
+        Ok(e.req(k)?.as_str().ok_or_else(|| anyhow::anyhow!("{k} not a string"))?
+            .to_string())
+    };
+    let mut inputs = Vec::new();
+    for i in e.req("inputs")?.as_arr().into_iter().flatten() {
+        let shape = i
+            .req("shape")?
+            .as_arr()
+            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_default();
+        let dtype = i.req("dtype")?.as_str().unwrap_or("").to_string();
+        inputs.push(InputSpec { shape, dtype });
+    }
+    let outputs = e
+        .req("outputs")?
+        .as_arr()
+        .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+        .unwrap_or_default();
+    Ok(EntryInfo {
+        config: u("config")?,
+        file: u("file")?,
+        inputs,
+        outputs,
+        sha256: u("sha256")?,
+    })
+}
+
+fn parse_model(c: &Json) -> Result<ModelInfo> {
+    let n = |k: &str| -> Result<usize> {
+        c.req(k)?.as_usize().ok_or_else(|| anyhow::anyhow!("{k} not a number"))
+    };
+    let trained = match c.get("trained") {
+        Some(Json::Str(s)) => Some(s.clone()),
+        _ => None,
+    };
+    Ok(ModelInfo {
+        vocab: n("vocab")?,
+        d_model: n("d_model")?,
+        n_layers: n("n_layers")?,
+        n_heads: n("n_heads")?,
+        d_head: n("d_head")?,
+        d_ff: n("d_ff")?,
+        max_seq: n("max_seq")?,
+        probe_count: n("probe_count")?,
+        n_params: n("n_params")?,
+        trained,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_example_manifest() {
+        let json = r#"{
+          "entries": {
+            "decode_micro": {
+              "config": "micro",
+              "file": "decode_micro.hlo.txt",
+              "inputs": [{"shape": [], "dtype": "int32"},
+                          {"shape": [2, 4, 64, 16], "dtype": "float32"}],
+              "outputs": ["logits", "k_new"],
+              "sha256": "abc"
+            }
+          },
+          "configs": {
+            "micro": {"vocab": 256, "d_model": 64, "n_layers": 2,
+                       "n_heads": 4, "d_head": 16, "d_ff": 192,
+                       "max_seq": 64, "probe_count": 6,
+                       "n_params": 100000, "trained": null}
+          }
+        }"#;
+        let m = Manifest::parse(json).unwrap();
+        let e = &m.entries["decode_micro"];
+        assert_eq!(e.outputs, vec!["logits", "k_new"]);
+        assert_eq!(e.inputs[1].shape, vec![2, 4, 64, 16]);
+        let info = &m.configs["micro"];
+        assert!(info.trained.is_none());
+        let lay = info.cache_layout();
+        assert_eq!(lay.heads, 4);
+        assert_eq!(lay.seq, 64);
+    }
+
+    #[test]
+    fn trained_field_string() {
+        let json = r#"{"entries": {}, "configs": {"t": {"vocab":1,"d_model":1,
+          "n_layers":1,"n_heads":1,"d_head":1,"d_ff":1,"max_seq":1,
+          "probe_count":1,"n_params":1,"trained":"params_t.npz"}}}"#;
+        let m = Manifest::parse(json).unwrap();
+        assert_eq!(m.configs["t"].trained.as_deref(), Some("params_t.npz"));
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        assert!(Manifest::parse(r#"{"entries": {}}"#).is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client.  This is the only place the `xla` crate is touched;
+//! everything above works with plain `Tensor`s.
+//!
+//! Interchange is HLO **text** (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): jax >= 0.5 emits 64-bit instruction ids in
+//! serialized protos that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids and round-trips cleanly.
+
+pub mod manifest;
+pub mod tensor;
+
+pub use manifest::{EntryInfo, Manifest, ModelInfo};
+pub use tensor::Tensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::Result;
+
+/// A loaded model runtime: compiled executables for every entry point of
+/// one model config.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    model: String,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load `manifest.json` from `dir` and compile all entries of `model`.
+    pub fn load(dir: impl AsRef<Path>, model: &str) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        anyhow::ensure!(
+            manifest.configs.contains_key(model),
+            "model '{model}' not in manifest (have: {:?}); run `make artifacts`",
+            manifest.configs.keys().collect::<Vec<_>>()
+        );
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let mut rt = Runtime {
+            client,
+            manifest,
+            model: model.to_string(),
+            exes: HashMap::new(),
+            dir,
+        };
+        // Compile every entry belonging to this model eagerly: serving must
+        // never JIT on the request path.
+        let names: Vec<String> = rt
+            .manifest
+            .entries
+            .iter()
+            .filter(|(_, e)| e.config == model)
+            .map(|(n, _)| n.clone())
+            .collect();
+        for name in names {
+            rt.compile_entry(&name)?;
+        }
+        Ok(rt)
+    }
+
+    fn compile_entry(&mut self, name: &str) -> Result<()> {
+        let entry = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown entry '{name}'"))?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Model hyper-parameters from the manifest.
+    pub fn model_info(&self) -> &ModelInfo {
+        &self.manifest.configs[&self.model]
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.model
+    }
+
+    /// Names of the compiled entries.
+    pub fn entries(&self) -> Vec<&str> {
+        self.exes.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Entry-point name helper: e.g. `entry("decode") == "decode_tiny"`.
+    pub fn entry(&self, kind: &str) -> String {
+        format!("{kind}_{}", self.model)
+    }
+
+    /// Execute an entry point; inputs/outputs are f32/i32 [`Tensor`]s.
+    ///
+    /// The AOT side lowers with `return_tuple=True`, so the single output
+    /// literal is a tuple; it is decomposed into one `Tensor` per manifest
+    /// output name, in order.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("entry '{name}' not compiled"))?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(tensor::to_literal)
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
+        parts.into_iter().map(tensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime integration tests live in rust/tests/runtime_roundtrip.rs
+    // (they need built artifacts).
+}

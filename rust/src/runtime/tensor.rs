@@ -1,0 +1,150 @@
+//! Plain host tensors + literal marshalling.
+//!
+//! The coordinator never touches `xla::Literal` directly; it trades in
+//! [`Tensor`] (f32 or i32 data + dims), and this module converts at the
+//! runtime boundary.
+
+use crate::Result;
+
+/// A host tensor: row-major data + dims.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, dims: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        Tensor::F32 { data, dims: dims.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, dims: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        Tensor::I32 { data, dims: dims.to_vec() }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Tensor::I32 { data: vec![v], dims: vec![] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { dims, .. } | Tensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow as f32 slice (panics if i32 — programming error).
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Tensor::F32 { data, .. } => data,
+            Tensor::I32 { .. } => panic!("expected f32 tensor"),
+        }
+    }
+
+    /// Consume into an f32 vector.
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            Tensor::F32 { data, .. } => data,
+            Tensor::I32 { data, .. } => data.into_iter().map(|v| v as f32).collect(),
+        }
+    }
+}
+
+/// Tensor -> xla literal (reshaped to the tensor's dims).
+pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = match t {
+        Tensor::F32 { data, dims } => {
+            let l = xla::Literal::vec1(data.as_slice());
+            if dims.is_empty() {
+                // () scalar: vec1 gives [1]; reshape to scalar shape
+                l.reshape(&[]).map_err(|e| anyhow::anyhow!("{e:?}"))?
+            } else {
+                let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                l.reshape(&d).map_err(|e| anyhow::anyhow!("{e:?}"))?
+            }
+        }
+        Tensor::I32 { data, dims } => {
+            let l = xla::Literal::vec1(data.as_slice());
+            if dims.is_empty() {
+                l.reshape(&[]).map_err(|e| anyhow::anyhow!("{e:?}"))?
+            } else {
+                let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                l.reshape(&d).map_err(|e| anyhow::anyhow!("{e:?}"))?
+            }
+        }
+    };
+    Ok(lit)
+}
+
+/// xla literal -> Tensor (f32 or i32 by element type).
+pub fn from_literal(lit: xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            Ok(Tensor::F32 { data, dims })
+        }
+        xla::ElementType::S32 => {
+            let data = lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            Ok(Tensor::I32 { data, dims })
+        }
+        other => anyhow::bail!("unsupported output element type {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_basics() {
+        let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.dims(), &[2, 2]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.as_f32()[3], 4.0);
+    }
+
+    #[test]
+    fn scalar() {
+        let t = Tensor::scalar_i32(7);
+        assert!(t.dims().is_empty());
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::f32(vec![1.0, -2.5, 3.25, 0.0, 9.0, 1.5], &[2, 3]);
+        let lit = to_literal(&t).unwrap();
+        let back = from_literal(lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::i32(vec![5, 6, 7], &[3]);
+        let lit = to_literal(&t).unwrap();
+        let back = from_literal(lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let t = Tensor::scalar_i32(42);
+        let lit = to_literal(&t).unwrap();
+        let back = from_literal(lit).unwrap();
+        assert_eq!(back, t);
+    }
+}

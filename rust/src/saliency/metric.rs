@@ -1,0 +1,206 @@
+//! Token-saliency metrics: Eq. (7) vs Eq. (8).
+//!
+//! The coordinator normally receives per-layer saliency vectors straight
+//! from the prefill artifacts (the L1 probe kernel computes Eq. 8 on
+//! device); the score-matrix functions here serve the baselines (MiKV/H2O
+//! run on accumulated scores from the full-attention artifact), the
+//! streaming decode path, and the Fig. 3 demo.
+
+/// Which metric a compression policy ranks tokens by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SaliencyMetric {
+    /// Eq. (7): column sums of the attention matrix (H2O, MiKV).
+    Accumulated,
+    /// Eq. (8): column sums / column nnz (ZipCache).
+    Normalized,
+}
+
+/// Eq. (7) over a lower-triangular score matrix `a` (`rows x cols`,
+/// row-major): `p_i = sum_k A[k, i]`.
+pub fn accumulated_saliency(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(a.len(), rows * cols);
+    let mut p = vec![0f32; cols];
+    for r in 0..rows {
+        let row = &a[r * cols..(r + 1) * cols];
+        for (pi, &v) in p.iter_mut().zip(row) {
+            *pi += v;
+        }
+    }
+    p
+}
+
+/// Eq. (8) over a causal score matrix: `p̃_i = sum_k A[k,i] / nnz(A[:,i])`,
+/// with nnz derived from the causal structure (`nnz_i = rows - i` when
+/// rows == cols), never from exact zero counting.
+pub fn normalized_saliency(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut p = accumulated_saliency(a, rows, cols);
+    let offs = cols as isize - rows as isize;
+    for (i, pi) in p.iter_mut().enumerate() {
+        // column i is visible to query rows k with k + offs >= i
+        let first_row = (i as isize - offs).max(0) as usize;
+        let nnz = rows.saturating_sub(first_row).max(1);
+        *pi /= nnz as f32;
+    }
+    p
+}
+
+/// Probe-row approximation of Eq. (8) (paper §4.3): `a_probe` holds only
+/// the rows at `probe_idx` (ascending query positions); coverage of column
+/// i is the number of probes at position >= i.
+pub fn probe_normalized_saliency(
+    a_probe: &[f32],
+    probe_idx: &[usize],
+    cols: usize,
+) -> Vec<f32> {
+    let p = probe_idx.len();
+    assert_eq!(a_probe.len(), p * cols);
+    let mut sums = vec![0f32; cols];
+    for r in 0..p {
+        let row = &a_probe[r * cols..(r + 1) * cols];
+        for (s, &v) in sums.iter_mut().zip(row) {
+            *s += v;
+        }
+    }
+    for (i, s) in sums.iter_mut().enumerate() {
+        // probes are sorted ascending: coverage = count of idx >= i
+        let cover = probe_idx.len() - probe_idx.partition_point(|&x| x < i);
+        *s /= cover.max(1) as f32;
+    }
+    sums
+}
+
+/// Rank tokens by `saliency` and mark the top `ratio` fraction (of the
+/// first `n_tokens`) as salient.  Ties break toward earlier tokens for
+/// determinism.  Returns a bool mask of length `n_tokens`.
+pub fn select_salient(saliency: &[f32], n_tokens: usize, ratio: f64) -> Vec<bool> {
+    let n = n_tokens.min(saliency.len());
+    let k = ((n as f64) * ratio).round() as usize;
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        saliency[b].partial_cmp(&saliency[a]).unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut mask = vec![false; n];
+    for &i in idx.iter().take(k) {
+        mask[i] = true;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Uniform causal attention: row k spreads 1/(k+1) over columns 0..=k.
+    fn uniform_causal(l: usize) -> Vec<f32> {
+        let mut a = vec![0f32; l * l];
+        for k in 0..l {
+            for i in 0..=k {
+                a[k * l + i] = 1.0 / (k + 1) as f32;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn accumulated_biased_to_token_zero() {
+        // The paper's Fig. 3(a) argument: under uniform attention the first
+        // token accumulates the harmonic series while the last gets 1/l.
+        let l = 16;
+        let a = uniform_causal(l);
+        let acc = accumulated_saliency(&a, l, l);
+        assert!(acc[0] > 3.0 * acc[l - 1]);
+        // and acc[0] = H_l > 1 while every row sums to exactly 1
+        assert!(acc[0] > 1.0);
+    }
+
+    #[test]
+    fn normalized_removes_positional_bias() {
+        let l = 16;
+        let a = uniform_causal(l);
+        let nrm = normalized_saliency(&a, l, l);
+        // ratio between max and min should be far smaller than accumulated's
+        let acc = accumulated_saliency(&a, l, l);
+        let spread = |v: &[f32]| {
+            let mx = v.iter().cloned().fold(f32::MIN, f32::max);
+            let mn = v.iter().cloned().fold(f32::MAX, f32::min);
+            mx / mn
+        };
+        assert!(spread(&nrm) < spread(&acc) / 2.0);
+    }
+
+    #[test]
+    fn normalized_finds_late_hot_token() {
+        // Plant a hot column late in the sequence: rows after `hot` put
+        // half their mass on it, everything else is uniform.  Accumulated
+        // scores still rank token 0 on top (it collects the harmonic series
+        // over 32 rows); normalized scores rank the hot token on top — the
+        // exact bias the paper's Fig. 3 criticizes.
+        let l = 32;
+        let hot = 28;
+        let mut a = vec![0f32; l * l];
+        for k in 0..l {
+            let cols = (k + 1) as f32;
+            let w = if k > hot { 0.5 } else { 0.0 };
+            for i in 0..=k {
+                a[k * l + i] = (1.0 - w) / cols;
+            }
+            if k > hot {
+                a[k * l + hot] += w;
+            }
+        }
+        let acc = accumulated_saliency(&a, l, l);
+        let nrm = normalized_saliency(&a, l, l);
+        let argmax = |v: &[f32]| {
+            v.iter().enumerate().max_by(|x, y| x.1.partial_cmp(y.1).unwrap()).unwrap().0
+        };
+        assert_eq!(argmax(&nrm), hot);
+        assert_eq!(argmax(&acc), 0); // the bias the paper criticizes
+    }
+
+    #[test]
+    fn probe_approx_equals_exact_when_all_rows_probed() {
+        let l = 24;
+        let a = uniform_causal(l);
+        let idx: Vec<usize> = (0..l).collect();
+        let approx = probe_normalized_saliency(&a, &idx, l);
+        let exact = normalized_saliency(&a, l, l);
+        for (x, y) in approx.iter().zip(&exact) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn probe_subset_correlates() {
+        let l = 64;
+        let a = uniform_causal(l);
+        let idx: Vec<usize> = (0..l).step_by(4).collect();
+        let mut ap = Vec::new();
+        for &r in &idx {
+            ap.extend_from_slice(&a[r * l..(r + 1) * l]);
+        }
+        let approx = probe_normalized_saliency(&ap, &idx, l);
+        let exact = normalized_saliency(&a, l, l);
+        // uniform case: both should be nearly flat over covered columns
+        for i in 0..l - 4 {
+            assert!((approx[i] - exact[i]).abs() < 0.05, "{i}");
+        }
+    }
+
+    #[test]
+    fn select_salient_topk() {
+        let sal = vec![0.1, 0.9, 0.3, 0.9, 0.05];
+        let mask = select_salient(&sal, 5, 0.4);
+        assert_eq!(mask, vec![false, true, false, true, false]);
+        // ratio 0 -> none; ratio 1 -> all
+        assert!(select_salient(&sal, 5, 0.0).iter().all(|&m| !m));
+        assert!(select_salient(&sal, 5, 1.0).iter().all(|&m| m));
+    }
+
+    #[test]
+    fn select_salient_deterministic_ties() {
+        let sal = vec![0.5; 8];
+        let mask = select_salient(&sal, 8, 0.5);
+        assert_eq!(mask, vec![true, true, true, true, false, false, false, false]);
+    }
+}

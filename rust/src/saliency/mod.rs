@@ -1,0 +1,18 @@
+//! Salient token identification (paper §4.2–4.3).
+//!
+//! * [`metric`] — accumulated (Eq. 7, the H2O/MiKV metric) and normalized
+//!   (Eq. 8, the paper's contribution) attention-score saliency, computed
+//!   either from full score matrices or from probe rows.
+//! * [`probe`] — the four probe-token selection strategies of Table 2
+//!   (random / special / recent / random+recent).
+//! * [`streaming`] — the decode-phase probe accumulator of Alg. 3
+//!   (5% recent + 5% random rows, recompression every 100 tokens).
+
+pub mod metric;
+pub mod probe;
+pub mod streaming;
+
+pub use metric::{accumulated_saliency, normalized_saliency, probe_normalized_saliency,
+                 select_salient, SaliencyMetric};
+pub use probe::{ProbeStrategy, select_probes};
+pub use streaming::StreamingProbe;

@@ -1,0 +1,143 @@
+//! Probe-token selection strategies (paper §4.3, Table 2).
+//!
+//! The paper compares four strategies and adopts the hybrid
+//! `Random+Recent` (5% recent + 5% random).  Selection is deterministic in
+//! the request seed via the same SplitMix64 the workload generators use, so
+//! runs reproduce exactly.
+
+use crate::workload::rng::SplitMix64;
+
+/// Probe sampling strategies (Table 2 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeStrategy {
+    /// Every token is a probe (exact Eq. 8; the "All tokens" row).
+    All,
+    /// Uniform random positions.
+    Random,
+    /// Positions of special/punctuation tokens (caller supplies the mask).
+    Special,
+    /// The trailing window.
+    Recent,
+    /// The paper's default: half recent, half random from the remainder.
+    RandomRecent,
+}
+
+/// Select probe indices among `n_tokens` prompt positions.
+///
+/// `ratio` is the total probe fraction (0.10 in the paper); for
+/// `RandomRecent` it is split evenly.  `special_mask` marks tokens eligible
+/// for the `Special` strategy (ignored otherwise).  Returns sorted, unique,
+/// non-empty indices (at least one probe: the last token).
+pub fn select_probes(
+    strategy: ProbeStrategy,
+    n_tokens: usize,
+    ratio: f64,
+    special_mask: Option<&[bool]>,
+    seed: u64,
+) -> Vec<usize> {
+    assert!(n_tokens > 0);
+    let want = ((n_tokens as f64 * ratio).round() as usize).clamp(1, n_tokens);
+    let mut rng = SplitMix64::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+    let mut picks: Vec<usize> = match strategy {
+        ProbeStrategy::All => (0..n_tokens).collect(),
+        ProbeStrategy::Random => sample_without_replacement(&mut rng, 0..n_tokens, want),
+        ProbeStrategy::Special => {
+            let mask = special_mask.expect("Special strategy needs a token mask");
+            let mut v: Vec<usize> =
+                (0..n_tokens).filter(|&i| *mask.get(i).unwrap_or(&false)).collect();
+            v.truncate(want);
+            if v.is_empty() {
+                v.push(n_tokens - 1);
+            }
+            v
+        }
+        ProbeStrategy::Recent => (n_tokens.saturating_sub(want)..n_tokens).collect(),
+        ProbeStrategy::RandomRecent => {
+            let n_recent = (want / 2).max(1).min(n_tokens);
+            let recent_start = n_tokens - n_recent;
+            let n_random = (want - n_recent).min(recent_start);
+            let mut v = sample_without_replacement(&mut rng, 0..recent_start, n_random);
+            v.extend(recent_start..n_tokens);
+            v
+        }
+    };
+    picks.sort_unstable();
+    picks.dedup();
+    picks
+}
+
+/// Floyd's algorithm-ish sampling via partial Fisher-Yates over the range.
+fn sample_without_replacement(
+    rng: &mut SplitMix64,
+    range: std::ops::Range<usize>,
+    k: usize,
+) -> Vec<usize> {
+    let mut pool: Vec<usize> = range.collect();
+    let k = k.min(pool.len());
+    let n = pool.len();
+    for i in 0..k {
+        let j = i + rng.below((n - i) as u64) as usize;
+        pool.swap(i, j);
+    }
+    pool.truncate(k);
+    pool
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_strategies_sorted_unique_bounded() {
+        let special: Vec<bool> = (0..100).map(|i| i % 7 == 0).collect();
+        for s in [ProbeStrategy::All, ProbeStrategy::Random, ProbeStrategy::Special,
+                  ProbeStrategy::Recent, ProbeStrategy::RandomRecent] {
+            let p = select_probes(s, 100, 0.1, Some(&special), 42);
+            assert!(!p.is_empty(), "{s:?}");
+            assert!(p.windows(2).all(|w| w[0] < w[1]), "{s:?}");
+            assert!(p.iter().all(|&i| i < 100), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn recent_is_trailing_window() {
+        let p = select_probes(ProbeStrategy::Recent, 100, 0.1, None, 1);
+        assert_eq!(p, (90..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn random_recent_split() {
+        let p = select_probes(ProbeStrategy::RandomRecent, 100, 0.1, None, 7);
+        let n_recent = p.iter().filter(|&&i| i >= 95).count();
+        let n_random = p.iter().filter(|&&i| i < 95).count();
+        assert_eq!(n_recent, 5);
+        assert_eq!(n_random, 5);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = select_probes(ProbeStrategy::Random, 200, 0.1, None, 9);
+        let b = select_probes(ProbeStrategy::Random, 200, 0.1, None, 9);
+        let c = select_probes(ProbeStrategy::Random, 200, 0.1, None, 10);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn tiny_sequences() {
+        for n in 1..5 {
+            for s in [ProbeStrategy::Random, ProbeStrategy::Recent,
+                      ProbeStrategy::RandomRecent] {
+                let p = select_probes(s, n, 0.1, None, 3);
+                assert!(!p.is_empty());
+                assert!(p.iter().all(|&i| i < n));
+            }
+        }
+    }
+
+    #[test]
+    fn all_returns_everything() {
+        assert_eq!(select_probes(ProbeStrategy::All, 5, 0.1, None, 0),
+                   vec![0, 1, 2, 3, 4]);
+    }
+}

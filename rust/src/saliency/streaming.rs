@@ -1,0 +1,161 @@
+//! Streaming probe accumulator for the decode phase (paper Alg. 3).
+//!
+//! During decoding, ZipCache keeps collecting probe attention rows: a row
+//! is recorded if the step index is in the trailing 5% of the window
+//! (`i > 95` in the paper's 100-token cycle) or with 5% probability
+//! (deterministic SplitMix64 draw).  Every `recompress_every` (=100)
+//! generated tokens, the accumulated rows approximate Eq. 8 for the whole
+//! prefix and the cache is recompressed; the accumulator then resets.
+
+use crate::saliency::metric::probe_normalized_saliency;
+use crate::workload::rng::SplitMix64;
+
+/// Decision + storage for streaming decode-time probes.
+#[derive(Debug, Clone)]
+pub struct StreamingProbe {
+    /// Recompression period (100 in the paper).
+    pub recompress_every: usize,
+    /// Fraction of recent steps always probed (0.05).
+    pub recent_ratio: f64,
+    /// Probability of probing a non-recent step (0.05).
+    pub random_ratio: f64,
+    rng: SplitMix64,
+    step_in_cycle: usize,
+    rows: Vec<Vec<f32>>,      // probe attention rows (length = window cols)
+    row_positions: Vec<usize>, // absolute query position of each row
+}
+
+impl StreamingProbe {
+    pub fn new(recompress_every: usize, recent_ratio: f64, random_ratio: f64,
+               seed: u64) -> Self {
+        StreamingProbe {
+            recompress_every,
+            recent_ratio,
+            random_ratio,
+            rng: SplitMix64::new(seed ^ 0xA076_1D64_78BD_642F),
+            step_in_cycle: 0,
+            rows: Vec::new(),
+            row_positions: Vec::new(),
+        }
+    }
+
+    /// Should the caller record this step's attention row?  (Alg. 3's
+    /// `i > 95 or randint(0,100) < 5` condition, generalized.)
+    pub fn should_probe(&mut self) -> bool {
+        let recent_from =
+            self.recompress_every - (self.recompress_every as f64 * self.recent_ratio) as usize;
+        if self.step_in_cycle >= recent_from {
+            return true;
+        }
+        (self.rng.below(1000) as f64) < self.random_ratio * 1000.0
+    }
+
+    /// Record one probe attention row (`a_row` over the cache columns) for
+    /// the query at absolute position `pos`.
+    pub fn record(&mut self, a_row: &[f32], pos: usize) {
+        self.rows.push(a_row.to_vec());
+        self.row_positions.push(pos);
+    }
+
+    /// Advance one decode step; returns `true` when a recompression is due.
+    pub fn step(&mut self) -> bool {
+        self.step_in_cycle += 1;
+        self.step_in_cycle >= self.recompress_every
+    }
+
+    /// Number of rows currently accumulated.
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Approximate normalized saliency over `cols` cache positions from the
+    /// accumulated rows, then reset the cycle (Alg. 3's `A_probe = None`).
+    pub fn take_saliency(&mut self, cols: usize) -> Option<Vec<f32>> {
+        if self.rows.is_empty() {
+            self.reset();
+            return None;
+        }
+        let mut flat = Vec::with_capacity(self.rows.len() * cols);
+        for r in &self.rows {
+            assert_eq!(r.len(), cols, "probe row width mismatch");
+            flat.extend_from_slice(r);
+        }
+        let sal = probe_normalized_saliency(&flat, &self.row_positions, cols);
+        self.reset();
+        Some(sal)
+    }
+
+    fn reset(&mut self) {
+        self.step_in_cycle = 0;
+        self.rows.clear();
+        self.row_positions.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recent_steps_always_probe() {
+        let mut sp = StreamingProbe::new(100, 0.05, 0.0, 1);
+        let mut probed = vec![];
+        for i in 0..100 {
+            if sp.should_probe() {
+                probed.push(i);
+            }
+            sp.step();
+        }
+        // last 5 steps of the cycle must all be probed
+        for i in 95..100 {
+            assert!(probed.contains(&i));
+        }
+        // and no random probes since random_ratio = 0
+        assert_eq!(probed.len(), 5);
+    }
+
+    #[test]
+    fn random_probe_rate_close_to_ratio() {
+        let mut sp = StreamingProbe::new(1_000_000, 0.0, 0.05, 2);
+        let mut hits = 0;
+        for _ in 0..20_000 {
+            if sp.should_probe() {
+                hits += 1;
+            }
+            sp.step();
+        }
+        let rate = hits as f64 / 20_000.0;
+        assert!((rate - 0.05).abs() < 0.01, "{rate}");
+    }
+
+    #[test]
+    fn cycle_triggers_recompression() {
+        let mut sp = StreamingProbe::new(10, 0.1, 0.0, 3);
+        let mut due = 0;
+        for _ in 0..10 {
+            if sp.step() {
+                due += 1;
+                sp.take_saliency(4);
+            }
+        }
+        assert_eq!(due, 1);
+    }
+
+    #[test]
+    fn saliency_from_recorded_rows() {
+        let mut sp = StreamingProbe::new(10, 0.5, 0.0, 4);
+        sp.record(&[0.5, 0.25, 0.25, 0.0], 2);
+        sp.record(&[0.1, 0.1, 0.4, 0.4], 3);
+        let sal = sp.take_saliency(4).unwrap();
+        // col 0: (0.5+0.1)/2; col 3 covered only by the pos-3 probe: 0.4/1
+        assert!((sal[0] - 0.3).abs() < 1e-6);
+        assert!((sal[3] - 0.4).abs() < 1e-6);
+        assert_eq!(sp.n_rows(), 0); // reset happened
+    }
+
+    #[test]
+    fn empty_cycle_yields_none() {
+        let mut sp = StreamingProbe::new(10, 0.0, 0.0, 5);
+        assert!(sp.take_saliency(4).is_none());
+    }
+}

@@ -1,0 +1,170 @@
+//! Serving front-end: a threaded service that owns the engine on a
+//! dedicated worker thread (PJRT executables are not `Send`) and exposes a
+//! request/response channel API with backpressure.
+//!
+//! Offline-build note: the environment ships no async runtime, so this is a
+//! blocking-channel design (std::sync::mpsc) rather than tokio; the public
+//! shape — submit returns a waitable handle, requests interleave through
+//! the continuous batcher — is the same (DESIGN.md §6).
+
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TrySendError};
+use std::thread::JoinHandle;
+
+use crate::config::EngineConfig;
+use crate::coordinator::batcher::{ContinuousBatcher, QueuedRequest};
+use crate::coordinator::{Engine, GenerationOutput};
+use crate::Result;
+
+/// One request to the serving loop.
+struct ServerRequest {
+    prompt: Vec<u16>,
+    max_new: usize,
+    reply: Sender<Result<GenerationOutput>>,
+}
+
+/// A waitable response slot for one submitted request.
+pub struct ResponseHandle {
+    rx: Receiver<Result<GenerationOutput>>,
+}
+
+impl ResponseHandle {
+    /// Block until the generation completes.
+    pub fn wait(self) -> Result<GenerationOutput> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped request"))?
+    }
+}
+
+/// Handle to a running server; cloneable, cheap to share across threads.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: SyncSender<ServerRequest>,
+}
+
+impl ServerHandle {
+    /// Submit one generation request; returns a waitable handle.
+    /// Errors immediately when the queue is full (backpressure).
+    pub fn submit(&self, prompt: Vec<u16>, max_new: usize) -> Result<ResponseHandle> {
+        let (reply, rx) = mpsc::channel();
+        match self.tx.try_send(ServerRequest { prompt, max_new, reply }) {
+            Ok(()) => Ok(ResponseHandle { rx }),
+            Err(TrySendError::Full(_)) => anyhow::bail!("queue full (backpressure)"),
+            Err(TrySendError::Disconnected(_)) => anyhow::bail!("server stopped"),
+        }
+    }
+
+    /// Submit and wait (convenience).
+    pub fn generate(&self, prompt: Vec<u16>, max_new: usize) -> Result<GenerationOutput> {
+        self.submit(prompt, max_new)?.wait()
+    }
+}
+
+/// A running server: engine thread + request channel.
+pub struct Server {
+    pub handle: ServerHandle,
+    join: JoinHandle<Result<()>>,
+}
+
+impl Server {
+    /// Start the engine thread with iteration-level continuous batching.
+    pub fn start(cfg: EngineConfig) -> Result<Self> {
+        let (tx, rx) = mpsc::sync_channel::<ServerRequest>(cfg.scheduler.queue_depth);
+        let max_batch = cfg.scheduler.max_batch;
+        let queue_depth = cfg.scheduler.queue_depth;
+
+        let join = std::thread::Builder::new()
+            .name("zipcache-engine".into())
+            .spawn(move || -> Result<()> {
+                let mut engine = Engine::new(cfg)?;
+                let mut batcher = ContinuousBatcher::new(max_batch, queue_depth);
+                let mut replies: Vec<(u64, Sender<Result<GenerationOutput>>)> = Vec::new();
+                let mut next_tag = 0u64;
+                loop {
+                    // Drain waiting requests without blocking while busy.
+                    loop {
+                        match rx.try_recv() {
+                            Ok(req) => {
+                                let tag = next_tag;
+                                next_tag += 1;
+                                if batcher
+                                    .submit(QueuedRequest {
+                                        prompt: req.prompt,
+                                        max_new: req.max_new,
+                                        tag,
+                                    })
+                                    .is_err()
+                                {
+                                    let _ = req
+                                        .reply
+                                        .send(Err(anyhow::anyhow!("queue full")));
+                                } else {
+                                    replies.push((tag, req.reply));
+                                }
+                            }
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                // Finish in-flight work, then exit.
+                                while !batcher.idle() {
+                                    batcher.step(&mut engine)?;
+                                    deliver(&mut batcher, &mut replies);
+                                }
+                                return Ok(());
+                            }
+                        }
+                    }
+                    if batcher.idle() {
+                        // Idle: block for the next request (or shutdown).
+                        match rx.recv() {
+                            Ok(req) => {
+                                let tag = next_tag;
+                                next_tag += 1;
+                                if batcher
+                                    .submit(QueuedRequest {
+                                        prompt: req.prompt,
+                                        max_new: req.max_new,
+                                        tag,
+                                    })
+                                    .is_err()
+                                {
+                                    let _ = req
+                                        .reply
+                                        .send(Err(anyhow::anyhow!("queue full")));
+                                } else {
+                                    replies.push((tag, req.reply));
+                                }
+                            }
+                            Err(_) => return Ok(()),
+                        }
+                        continue;
+                    }
+                    batcher.step(&mut engine)?;
+                    deliver(&mut batcher, &mut replies);
+                }
+            })?;
+
+        Ok(Server { handle: ServerHandle { tx }, join })
+    }
+
+    /// Graceful shutdown: close the channel and join the engine thread
+    /// (in-flight requests complete first).
+    pub fn shutdown(self) -> Result<()> {
+        drop(self.handle);
+        match self.join.join() {
+            Ok(r) => r,
+            Err(_) => anyhow::bail!("engine thread panicked"),
+        }
+    }
+}
+
+fn deliver(
+    batcher: &mut ContinuousBatcher,
+    replies: &mut Vec<(u64, Sender<Result<GenerationOutput>>)>,
+) {
+    for outcome in batcher.take_outcomes() {
+        if let Some(idx) = replies.iter().position(|(t, _)| *t == outcome.tag) {
+            let (_, reply) = replies.swap_remove(idx);
+            let _ = reply.send(Ok(outcome.output));
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Analytic cost model for attention variants at the paper's hardware
+//! scale (A100) and on TPU, used to report Fig. 4/6-shaped numbers next to
+//! our CPU wall-clock (DESIGN.md §2: the testbed substitution).
+//!
+//! The model is a simple roofline: time = max(flops / peak_flops,
+//! bytes / mem_bw), summed over the phase's kernels.  It captures exactly
+//! the asymmetry the paper measures — standard attention materializes the
+//! l×l score matrix (O(l²) HBM traffic), FlashAttention streams tiles
+//! (O(l·d) traffic), and ZipCache adds only a p×l probe stripe (p = 10%·l).
+
+/// Hardware profile for the roofline.
+#[derive(Debug, Clone, Copy)]
+pub struct Hardware {
+    pub name: &'static str,
+    /// Peak dense f16 throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub mem_bw: f64,
+}
+
+impl Hardware {
+    /// NVIDIA A100-80GB (the paper's testbed): 312 TFLOPS bf16, 2.0 TB/s.
+    pub fn a100() -> Self {
+        Hardware { name: "A100", peak_flops: 312e12, mem_bw: 2.0e12 }
+    }
+
+    /// One TPU v4 core (the port target): ~137.5 TFLOPS bf16 (275/chip),
+    /// 1.2 TB/s HBM.
+    pub fn tpu_v4() -> Self {
+        Hardware { name: "TPUv4", peak_flops: 137.5e12, mem_bw: 1.2e12 }
+    }
+
+    /// Roofline time for (flops, bytes).
+    pub fn time_s(&self, flops: f64, bytes: f64) -> f64 {
+        (flops / self.peak_flops).max(bytes / self.mem_bw)
+    }
+}
+
+/// Model/workload shape for the cost queries.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnShape {
+    pub batch: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub d_head: usize,
+    /// bytes per element of activations (2 for fp16).
+    pub elem: f64,
+}
+
+impl AttnShape {
+    fn bh(&self) -> f64 {
+        (self.batch * self.heads) as f64
+    }
+}
+
+/// Attention implementation variants the paper compares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnKind {
+    /// Materializes the full l×l score matrix (MiKV/H2O/GEAR prefill).
+    Standard,
+    /// Tiled online-softmax, no score materialization.
+    Flash,
+    /// Flash for all tokens + standard rows for `probe_ratio` of queries
+    /// (the ZipCache prefill, Alg. 2).
+    FlashWithProbes { probe_pct: u32 },
+}
+
+/// Prefill-phase cost of one attention layer.
+pub fn prefill_cost(hw: Hardware, s: AttnShape, kind: AttnKind) -> f64 {
+    let (l, d) = (s.seq as f64, s.d_head as f64);
+    let bh = s.bh();
+    // QK^T + AV flops are common to every variant.
+    let flops = bh * (2.0 * l * l * d) * 2.0;
+    let io_qkv = bh * 3.0 * l * d * s.elem; // read Q,K,V
+    let io_out = bh * l * d * s.elem; // write O
+    match kind {
+        AttnKind::Standard => {
+            // write + read the l×l score matrix (softmax pass), fp16
+            let io_scores = bh * 2.0 * l * l * s.elem;
+            hw.time_s(flops, io_qkv + io_out + io_scores)
+        }
+        AttnKind::Flash => hw.time_s(flops, io_qkv + io_out),
+        AttnKind::FlashWithProbes { probe_pct } => {
+            let p = l * probe_pct as f64 / 100.0;
+            let probe_flops = bh * 2.0 * p * l * d;
+            let io_probe = bh * 2.0 * p * l * s.elem; // write+read p×l stripe
+            hw.time_s(flops + probe_flops, io_qkv + io_out + io_probe)
+        }
+    }
+}
+
+/// Decode-phase cost per generated token for one layer: dominated by
+/// streaming the KV cache; `bits_per_value` reflects the compression
+/// (16 = fp16, mixed ~ 2.8 for ZipCache 4/2@40%).
+pub fn decode_cost_per_token(hw: Hardware, s: AttnShape, bits_per_value: f64,
+                             kind: AttnKind) -> f64 {
+    let (l, d) = (s.seq as f64, s.d_head as f64);
+    let bh = s.bh();
+    let flops = bh * 4.0 * l * d;
+    let io_cache = bh * 2.0 * l * d * (bits_per_value / 8.0);
+    let extra = match kind {
+        AttnKind::Standard => bh * 2.0 * l * s.elem, // score row kept + reread
+        _ => 0.0,
+    };
+    hw.time_s(flops, io_cache + extra)
+}
+
+/// Peak attention working-set bytes for the prefill (the Fig. 4 memory
+/// argument: O(l²) vs O(l)).
+pub fn prefill_workspace_bytes(s: AttnShape, kind: AttnKind) -> f64 {
+    let (l, d) = (s.seq as f64, s.d_head as f64);
+    let bh = s.bh();
+    match kind {
+        AttnKind::Standard => bh * l * l * s.elem,
+        AttnKind::Flash => bh * 2.0 * 128.0 * d * s.elem, // a tile pair
+        AttnKind::FlashWithProbes { probe_pct } => {
+            bh * (l * probe_pct as f64 / 100.0) * l * s.elem
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape(l: usize) -> AttnShape {
+        AttnShape { batch: 8, heads: 32, seq: l, d_head: 128, elem: 2.0 }
+    }
+
+    #[test]
+    fn flash_faster_than_standard_at_long_seq() {
+        let hw = Hardware::a100();
+        let s = shape(4096);
+        assert!(prefill_cost(hw, s, AttnKind::Flash)
+            < prefill_cost(hw, s, AttnKind::Standard));
+    }
+
+    #[test]
+    fn probe_overhead_small() {
+        // ZipCache's claim: 10% probes cost far less than full scores.
+        let hw = Hardware::a100();
+        let s = shape(4096);
+        let flash = prefill_cost(hw, s, AttnKind::Flash);
+        let zip = prefill_cost(hw, s, AttnKind::FlashWithProbes { probe_pct: 10 });
+        let std = prefill_cost(hw, s, AttnKind::Standard);
+        assert!(zip < std);
+        assert!(zip < flash * 1.5);
+    }
+
+    #[test]
+    fn paper_fig6_shape_prefill_reduction() {
+        // Paper: 37.3% prefill latency reduction at l=4096 vs the
+        // standard-attention (MiKV) path.  The pure-attention roofline puts
+        // l=4096 near the compute/IO boundary, so the modelled reduction is
+        // milder than the measured end-to-end figure (which also includes
+        // the quantization machinery) — require the right *sign and regime*.
+        let hw = Hardware::a100();
+        let s = shape(4096);
+        let std = prefill_cost(hw, s, AttnKind::Standard);
+        let zip = prefill_cost(hw, s, AttnKind::FlashWithProbes { probe_pct: 10 });
+        let reduction = 1.0 - zip / std;
+        assert!(reduction > 0.1 && reduction < 0.7, "{reduction}");
+    }
+
+    #[test]
+    fn decode_cost_scales_with_bits() {
+        let hw = Hardware::a100();
+        let s = shape(4096);
+        let fp16 = decode_cost_per_token(hw, s, 16.0, AttnKind::Flash);
+        let zip = decode_cost_per_token(hw, s, 2.8, AttnKind::Flash);
+        assert!(zip < fp16);
+        // paper: 56.9% decode reduction vs the standard-score path
+        let mikv = decode_cost_per_token(hw, s, 2.8, AttnKind::Standard);
+        assert!(zip < mikv);
+    }
+
+    #[test]
+    fn workspace_quadratic_vs_linear() {
+        let s1 = shape(1024);
+        let s2 = shape(4096);
+        let std_ratio = prefill_workspace_bytes(s2, AttnKind::Standard)
+            / prefill_workspace_bytes(s1, AttnKind::Standard);
+        assert!((std_ratio - 16.0).abs() < 1e-9); // quadratic
+        let flash_ratio = prefill_workspace_bytes(s2, AttnKind::Flash)
+            / prefill_workspace_bytes(s1, AttnKind::Flash);
+        assert!((flash_ratio - 1.0).abs() < 1e-9); // constant tile
+    }
+}

@@ -1,0 +1,175 @@
+//! Measurement harness (offline replacement for criterion): warmup,
+//! fixed-iteration or fixed-duration sampling, robust statistics, and a
+//! table printer shared by every paper-reproduction bench.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over one measured function.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples_ns: Vec<u64>,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
+        self.samples_ns.iter().sum::<u64>() as f64 / self.samples_ns.len() as f64 / 1e6
+    }
+
+    pub fn median_ms(&self) -> f64 {
+        self.percentile_ms(50.0)
+    }
+
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples_ns.clone();
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)] as f64 / 1e6
+    }
+
+    pub fn stddev_ms(&self) -> f64 {
+        if self.samples_ns.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean_ms();
+        let var = self
+            .samples_ns
+            .iter()
+            .map(|&x| (x as f64 / 1e6 - m).powi(2))
+            .sum::<f64>()
+            / (self.samples_ns.len() - 1) as f64;
+        var.sqrt()
+    }
+}
+
+/// Benchmark runner with warmup + sample-count control.
+pub struct Bencher {
+    pub warmup: usize,
+    pub samples: usize,
+    /// Hard cap on total time per measurement.
+    pub max_total: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 2, samples: 10, max_total: Duration::from_secs(60) }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup: 1, samples: 5, max_total: Duration::from_secs(30) }
+    }
+
+    /// Measure `f` (each call is one sample).
+    pub fn measure<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        let t_total = Instant::now();
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as u64);
+            if t_total.elapsed() > self.max_total {
+                break;
+            }
+        }
+        Measurement { name: name.to_string(), samples_ns: samples }
+    }
+}
+
+/// Prevent the optimizer from discarding a value (criterion's black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Fixed-width table printer for bench reports (paper-table style).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!("{c:<w$} | ", w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push_str("|");
+        for w in &widths {
+            out.push_str(&format!("{}-|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_samples() {
+        let b = Bencher { warmup: 1, samples: 4, max_total: Duration::from_secs(5) };
+        let m = b.measure("noop", || {
+            black_box(1 + 1);
+        });
+        assert_eq!(m.samples_ns.len(), 4);
+        assert!(m.mean_ms() >= 0.0);
+    }
+
+    #[test]
+    fn stats_reasonable() {
+        let m = Measurement { name: "x".into(),
+                              samples_ns: vec![1_000_000, 2_000_000, 3_000_000] };
+        assert!((m.mean_ms() - 2.0).abs() < 1e-9);
+        assert!((m.median_ms() - 2.0).abs() < 1e-9);
+        assert!(m.stddev_ms() > 0.9 && m.stddev_ms() < 1.1);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["method", "acc"]);
+        t.row(&["ZipCache".to_string(), "99.0".to_string()]);
+        let s = t.to_string();
+        assert!(s.contains("ZipCache"));
+        assert!(s.lines().count() == 3);
+    }
+}

@@ -1,0 +1,197 @@
+//! Tiny declarative CLI flag parser (offline replacement for clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! subcommands, defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// One declared flag.
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Clone)]
+pub struct Args {
+    program: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            flags: Vec::new(),
+            values: BTreeMap::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` switch (default false).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    /// Parse an explicit argv (no program name).  `Err` includes usage.
+    pub fn parse_from(mut self, argv: &[String]) -> Result<Self> {
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("unknown flag --{name}\n{}", self.usage())
+                    })?
+                    .clone();
+                let value = if spec.is_bool {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                        .clone()
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    /// Parse `std::env::args()` (skipping the program name).
+    pub fn parse(self) -> Result<Self> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_from(&argv)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nflags:\n", self.program, self.about);
+        for f in &self.flags {
+            let d = match (&f.default, f.is_bool) {
+                (_, true) => " (switch)".to_string(),
+                (Some(d), _) => format!(" (default: {d})"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+
+    // -- typed getters -------------------------------------------------------
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.flags
+            .iter()
+            .find(|f| f.name == name)
+            .and_then(|f| f.default.clone())
+            .unwrap_or_default()
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.values.get(name).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_and_defaults() {
+        let a = Args::new("t", "test")
+            .flag("model", "tiny", "model name")
+            .flag("n", "5", "count")
+            .parse_from(&argv(&["--model", "micro"]))
+            .unwrap();
+        assert_eq!(a.get("model"), "micro");
+        assert_eq!(a.get_usize("n").unwrap(), 5);
+    }
+
+    #[test]
+    fn equals_syntax_and_switch() {
+        let a = Args::new("t", "test")
+            .flag("x", "0", "")
+            .switch("verbose", "")
+            .parse_from(&argv(&["--x=9", "--verbose", "sub"]))
+            .unwrap();
+        assert_eq!(a.get("x"), "9");
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positionals(), &["sub".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        let r = Args::new("t", "test").parse_from(&argv(&["--bogus"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::new("t", "t").flag("x", "0", "").parse_from(&argv(&["--x"]));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! Flat `key = value` config-file parser (offline replacement for toml).
+//!
+//! Supports comments (`#`), blank lines, quoted strings, and `[section]`
+//! headers that prefix keys as `section.key`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+/// Parsed config: flattened `section.key -> value` map.
+#[derive(Debug, Clone, Default)]
+pub struct KvConf {
+    map: BTreeMap<String, String>,
+}
+
+impl KvConf {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected 'key = value', got {raw:?}", lineno + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim().to_string();
+            if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+                val = val[1..val.len() - 1].to_string();
+            }
+            map.insert(key, val);
+        }
+        Ok(KvConf { map })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u8(&self, key: &str, default: u8) -> Result<u8> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# engine config
+model = "tiny"
+seed = 7
+
+[quant]
+saliency_ratio = 0.6
+bits_high = 4
+
+[scheduler]
+max_batch = 8
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = KvConf::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("model"), Some("tiny"));
+        assert_eq!(c.get_u64("seed", 0).unwrap(), 7);
+        assert_eq!(c.get_f64("quant.saliency_ratio", 0.0).unwrap(), 0.6);
+        assert_eq!(c.get_u8("quant.bits_high", 0).unwrap(), 4);
+        assert_eq!(c.get_usize("scheduler.max_batch", 0).unwrap(), 8);
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let c = KvConf::parse("").unwrap();
+        assert_eq!(c.get_or("nope", "d"), "d");
+        assert_eq!(c.get_f64("nope", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn bad_line_errors() {
+        assert!(KvConf::parse("just a line").is_err());
+    }
+}

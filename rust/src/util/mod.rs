@@ -1,0 +1,20 @@
+//! From-scratch utility substrates.
+//!
+//! This build runs fully offline with only `xla` + `anyhow` as external
+//! crates, so the usual ecosystem pieces are implemented here (DESIGN.md §6
+//! records each substitution):
+//!
+//! * [`json`]  — minimal JSON parser/serializer (replaces serde_json) for
+//!   the artifact manifest and bench reports.
+//! * [`kvconf`] — flat `key = value` config-file parser (replaces toml).
+//! * [`cli`]   — tiny declarative flag parser (replaces clap).
+//! * [`bench`] — measurement harness with warmup/iteration control and
+//!   robust statistics (replaces criterion).
+//! * [`prop`]  — property-testing loop over SplitMix64-generated inputs
+//!   (replaces proptest; shrinks by halving failing sizes).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod kvconf;
+pub mod prop;

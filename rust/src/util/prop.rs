@@ -1,0 +1,106 @@
+//! Lightweight property testing (offline replacement for proptest).
+//!
+//! [`check`] runs a property over deterministic SplitMix64-generated cases;
+//! on failure it reports the failing seed (re-runnable) and attempts a
+//! simple size-shrink by re-generating with halved size hints.
+
+use crate::workload::rng::SplitMix64;
+
+/// Deterministic case generator handed to properties.
+pub struct Gen {
+    pub rng: SplitMix64,
+    /// Size hint (shrinks on failure).
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.rng.unit_f64() as f32) * (hi - lo)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Run `prop` over `cases` generated cases.  Panics with the failing seed
+/// and the smallest reproduced size on violation.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen { rng: SplitMix64::new(seed), size: 64 };
+        if let Err(msg) = prop(&mut g) {
+            // try shrinking the size hint
+            let mut min_fail = (64usize, msg.clone());
+            let mut size = 32usize;
+            while size >= 2 {
+                let mut g2 = Gen { rng: SplitMix64::new(seed), size };
+                match prop(&mut g2) {
+                    Err(m) => {
+                        min_fail = (size, m);
+                        size /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, \
+                 size {}): {}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 50, |g| {
+            let a = g.usize_in(0, 1000);
+            let b = g.usize_in(0, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen { rng: SplitMix64::new(1), size: 8 };
+        for _ in 0..100 {
+            let x = g.usize_in(5, 10);
+            assert!((5..=10).contains(&x));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+        }
+        let v = g.vec_f32(16, 0.0, 1.0);
+        assert_eq!(v.len(), 16);
+    }
+}

@@ -1,0 +1,16 @@
+//! Workload generation: the paper's three evaluation tasks rebuilt as
+//! synthetic generators (DESIGN.md §2), bit-identical to the Python
+//! training corpus (`python/compile/data.py`).
+//!
+//! * [`rng::SplitMix64`] — the shared deterministic PRNG.
+//! * [`tasks`] — GSM-style CoT recall, LongEval-style line retrieval, and
+//!   short-prompt code tasks over the shared token map.
+//! * [`trace`] — request-arrival traces for the serving benchmarks
+//!   (open-loop Poisson-ish arrivals, batched replays).
+
+pub mod rng;
+pub mod tasks;
+pub mod trace;
+
+pub use tasks::{Sample, Task, TaskGen, vocab};
+pub use trace::{RequestTrace, TraceEntry};

@@ -1,0 +1,240 @@
+//! Task generators — the Rust mirror of `python/compile/data.py`.
+//!
+//! Token map (must stay in lockstep with the Python side; vocab = 256):
+//! `0 PAD | 1 BOS | 2 SEP | 3 QUERY | 4 EOS | 5 NL | 6 LINE`,
+//! keys 16..79, values 80..143, filler 144..207, digits 208..217.
+
+use super::rng::SplitMix64;
+
+pub const PAD: u16 = 0;
+pub const BOS: u16 = 1;
+pub const SEP: u16 = 2;
+pub const QUERY: u16 = 3;
+pub const EOS: u16 = 4;
+pub const NL: u16 = 5;
+pub const LINE: u16 = 6;
+pub const KEY0: u16 = 16;
+pub const NKEY: u16 = 64;
+pub const VAL0: u16 = 80;
+pub const NVAL: u16 = 64;
+pub const FIL0: u16 = 144;
+pub const NFIL: u16 = 64;
+pub const DIG0: u16 = 208;
+
+/// Vocabulary size shared with the model configs.
+pub fn vocab() -> usize {
+    256
+}
+
+/// Is this token "special" (used by the `Special` probe strategy)?
+pub fn is_special(tok: u16) -> bool {
+    tok < 16 || (DIG0..DIG0 + 10).contains(&tok)
+}
+
+/// One generated sample: prompt + expected answer + the queried span.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Sample {
+    /// Full sequence including the answer (training layout).
+    pub tokens: Vec<u16>,
+    /// `tokens[..prompt_len]` is the serving-time prompt.
+    pub prompt_len: usize,
+    /// Expected continuation: `[value_token, EOS]`.
+    pub answer: Vec<u16>,
+    /// `[start, end)` of the queried key/value pair inside the prompt —
+    /// the ground-truth salient span.
+    pub salient_span: (usize, usize),
+}
+
+impl Sample {
+    pub fn prompt(&self) -> &[u16] {
+        &self.tokens[..self.prompt_len]
+    }
+}
+
+/// The paper's three workloads (DESIGN.md §2 mapping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// GSM8k-like: long CoT body, question at the very end (Fig. 3(b)).
+    Gsm,
+    /// LongEval line retrieval with `n` lines (Fig. 5 / Table A).
+    Lines(usize),
+    /// HumanEval-like short-prompt regime (Table B).
+    Code,
+}
+
+/// Deterministic generator for a (task, max_seq) pair.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskGen {
+    pub task: Task,
+    pub max_seq: usize,
+}
+
+impl TaskGen {
+    pub fn new(task: Task, max_seq: usize) -> Self {
+        TaskGen { task, max_seq }
+    }
+
+    /// Generate the sample for `seed` — identical to the Python
+    /// `gen_task` / `gen_line_retrieval` for the same inputs.
+    pub fn sample(&self, seed: u64) -> Sample {
+        match self.task {
+            Task::Gsm => {
+                let cap_pairs = ((self.max_seq.saturating_sub(8)) / 8).clamp(3, 16);
+                let mut r1 = SplitMix64::new(seed ^ 0xA5);
+                let n_pairs = 3 + r1.below((cap_pairs - 2) as u64) as usize;
+                let budget = (self.max_seq as i64 - 6 - 4 * n_pairs as i64) / 2;
+                let budget = budget.max(0) as usize;
+                let mut r2 = SplitMix64::new(seed ^ 0x5A);
+                let want = 1 + r2.below(budget.max(1) as u64) as usize;
+                let n_filler = want.min(budget);
+                gen_recall(seed, n_pairs, n_filler)
+            }
+            Task::Code => {
+                let mut r = SplitMix64::new(seed ^ 0xC0);
+                let n_pairs = 4 + r.below(5) as usize;
+                gen_recall(seed, n_pairs, 2)
+            }
+            Task::Lines(n) => gen_line_retrieval(seed, n),
+        }
+    }
+
+    /// Generate `n` samples with consecutive derived seeds.
+    pub fn batch(&self, seed0: u64, n: usize) -> Vec<Sample> {
+        (0..n).map(|i| self.sample(seed0.wrapping_add(i as u64 * 0x9E37))).collect()
+    }
+}
+
+/// Core associative recall (Python `gen_recall`).
+pub fn gen_recall(seed: u64, n_pairs: usize, n_filler: usize) -> Sample {
+    let mut rng = SplitMix64::new(seed);
+    let mut keys: Vec<u16> = (0..NKEY).collect();
+    rng.shuffle(&mut keys);
+    keys.truncate(n_pairs);
+    let vals: Vec<u16> = (0..n_pairs).map(|_| rng.below(NVAL as u64) as u16).collect();
+    let qi = rng.below(n_pairs as u64) as usize;
+
+    let mut body: Vec<Vec<u16>> = keys
+        .iter()
+        .zip(&vals)
+        .map(|(&k, &v)| vec![KEY0 + k, SEP, VAL0 + v, NL])
+        .collect();
+    for _ in 0..n_filler {
+        body.push(vec![FIL0 + rng.below(NFIL as u64) as u16, NL]);
+    }
+    rng.shuffle(&mut body);
+
+    let mut toks: Vec<u16> = vec![BOS];
+    let mut sal = (0usize, 0usize);
+    let qkey = KEY0 + keys[qi];
+    for chunk in &body {
+        if chunk[0] == qkey {
+            sal = (toks.len(), toks.len() + chunk.len());
+        }
+        toks.extend_from_slice(chunk);
+    }
+    toks.extend_from_slice(&[QUERY, qkey, SEP]);
+    let prompt_len = toks.len();
+    let answer = vec![VAL0 + vals[qi], EOS];
+    toks.extend_from_slice(&answer);
+    Sample { tokens: toks, prompt_len, answer, salient_span: sal }
+}
+
+/// LongEval-style line retrieval (Python `gen_line_retrieval`).
+pub fn gen_line_retrieval(seed: u64, n_lines: usize) -> Sample {
+    assert!(n_lines <= 100, "2-digit line indices");
+    let mut rng = SplitMix64::new(seed);
+    let mut idxs: Vec<u16> = (0..100).collect();
+    rng.shuffle(&mut idxs);
+    idxs.truncate(n_lines);
+    let vals: Vec<u16> = (0..n_lines).map(|_| rng.below(NVAL as u64) as u16).collect();
+    let qi = rng.below(n_lines as u64) as usize;
+
+    let mut toks: Vec<u16> = vec![BOS];
+    let mut sal = (0usize, 0usize);
+    for (i, (&ix, &v)) in idxs.iter().zip(&vals).enumerate() {
+        let start = toks.len();
+        toks.extend_from_slice(&[LINE, DIG0 + ix / 10, DIG0 + ix % 10, SEP,
+                                 VAL0 + v, NL]);
+        if i == qi {
+            sal = (start, toks.len());
+        }
+    }
+    toks.extend_from_slice(&[QUERY, DIG0 + idxs[qi] / 10, DIG0 + idxs[qi] % 10, SEP]);
+    let prompt_len = toks.len();
+    let answer = vec![VAL0 + vals[qi], EOS];
+    toks.extend_from_slice(&answer);
+    Sample { tokens: toks, prompt_len, answer, salient_span: sal }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gsm_fits_and_query_at_end() {
+        for seed in 0..50 {
+            let s = TaskGen::new(Task::Gsm, 256).sample(seed);
+            assert!(s.tokens.len() <= 256, "seed {seed}: {}", s.tokens.len());
+            assert_eq!(s.tokens[s.prompt_len - 1], SEP);
+            assert_eq!(s.tokens[s.prompt_len - 3], QUERY);
+            assert_eq!(*s.tokens.last().unwrap(), EOS);
+        }
+    }
+
+    #[test]
+    fn answer_matches_salient_span() {
+        for seed in 0..50 {
+            let s = TaskGen::new(Task::Gsm, 256).sample(seed);
+            let (a, b) = s.salient_span;
+            assert!(b > a, "seed {seed}");
+            // span layout: KEY SEP VAL NL -> answer value at span start + 2
+            assert_eq!(s.tokens[a + 2], s.answer[0], "seed {seed}");
+            // and the queried key matches the span's key
+            assert_eq!(s.tokens[a], s.tokens[s.prompt_len - 2]);
+        }
+    }
+
+    #[test]
+    fn line_retrieval_layout() {
+        for seed in 0..30 {
+            let s = TaskGen::new(Task::Lines(20), 256).sample(seed);
+            assert!(s.tokens.len() <= 256);
+            assert_eq!(s.tokens[0], BOS);
+            let (a, b) = s.salient_span;
+            assert_eq!(b - a, 6);
+            assert_eq!(s.tokens[a], LINE);
+            assert_eq!(s.tokens[a + 4], s.answer[0]);
+        }
+    }
+
+    #[test]
+    fn code_is_short_prompt() {
+        for seed in 0..30 {
+            let s = TaskGen::new(Task::Code, 256).sample(seed);
+            assert!(s.prompt_len < 64, "{}", s.prompt_len);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = TaskGen::new(Task::Lines(10), 256);
+        assert_eq!(g.sample(7), g.sample(7));
+        assert_ne!(g.sample(7), g.sample(8));
+    }
+
+    #[test]
+    fn unique_keys_per_sample() {
+        let s = gen_recall(3, 10, 5);
+        let mut keys: Vec<u16> = s
+            .tokens
+            .windows(2)
+            .filter(|w| (KEY0..KEY0 + NKEY).contains(&w[0]) && w[1] == SEP)
+            .map(|w| w[0])
+            .collect();
+        keys.pop(); // drop the query repeat
+        let n = keys.len();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), n);
+    }
+}

@@ -1,0 +1,100 @@
+//! Request-arrival traces for the serving benchmarks.
+//!
+//! The paper's efficiency section (Fig. 6, Table A) serves batches of
+//! fixed-length prompts; the e2e example additionally replays an open-loop
+//! trace with exponential inter-arrival times to exercise the continuous
+//! batcher under load.
+
+use super::rng::SplitMix64;
+use super::tasks::{Sample, Task, TaskGen};
+
+/// One request in a trace.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    /// Arrival offset from trace start, in milliseconds.
+    pub arrival_ms: f64,
+    /// The prompt/task sample.
+    pub sample: Sample,
+    /// Decode budget (max new tokens).
+    pub max_new_tokens: usize,
+}
+
+/// A replayable request trace.
+#[derive(Debug, Clone)]
+pub struct RequestTrace {
+    pub entries: Vec<TraceEntry>,
+}
+
+impl RequestTrace {
+    /// Closed-loop batch: `n` requests all arriving at t=0 (the paper's
+    /// batched-serving setup).
+    pub fn batch(task: Task, max_seq: usize, n: usize, max_new_tokens: usize,
+                 seed: u64) -> Self {
+        let gen = TaskGen::new(task, max_seq);
+        let entries = gen
+            .batch(seed, n)
+            .into_iter()
+            .map(|sample| TraceEntry { arrival_ms: 0.0, sample, max_new_tokens })
+            .collect();
+        RequestTrace { entries }
+    }
+
+    /// Open-loop Poisson arrivals at `rate_per_s` over `n` requests.
+    pub fn poisson(task: Task, max_seq: usize, n: usize, rate_per_s: f64,
+                   max_new_tokens: usize, seed: u64) -> Self {
+        let gen = TaskGen::new(task, max_seq);
+        let mut rng = SplitMix64::new(seed ^ 0x7E15);
+        let mut t = 0.0f64;
+        let mut entries = Vec::with_capacity(n);
+        for (i, sample) in gen.batch(seed, n).into_iter().enumerate() {
+            if i > 0 {
+                // exponential inter-arrival: -ln(U)/rate
+                let u = rng.unit_f64().max(1e-12);
+                t += -u.ln() / rate_per_s * 1000.0;
+            }
+            entries.push(TraceEntry { arrival_ms: t, sample, max_new_tokens });
+        }
+        RequestTrace { entries }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_all_arrive_at_zero() {
+        let t = RequestTrace::batch(Task::Code, 128, 8, 4, 1);
+        assert_eq!(t.len(), 8);
+        assert!(t.entries.iter().all(|e| e.arrival_ms == 0.0));
+    }
+
+    #[test]
+    fn poisson_monotone_arrivals() {
+        let t = RequestTrace::poisson(Task::Gsm, 256, 32, 10.0, 4, 2);
+        for w in t.entries.windows(2) {
+            assert!(w[1].arrival_ms >= w[0].arrival_ms);
+        }
+        // mean inter-arrival should be within 3x of 100ms for 32 samples
+        let total = t.entries.last().unwrap().arrival_ms;
+        assert!(total > 0.0 && total < 32.0 * 400.0);
+    }
+
+    #[test]
+    fn trace_deterministic() {
+        let a = RequestTrace::poisson(Task::Code, 128, 5, 5.0, 2, 9);
+        let b = RequestTrace::poisson(Task::Code, 128, 5, 5.0, 2, 9);
+        for (x, y) in a.entries.iter().zip(&b.entries) {
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+            assert_eq!(x.sample, y.sample);
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Engine/coordinator/server integration tests over the micro artifacts:
+//! every policy generates end-to-end; the batcher interleaves correctly;
+//! the server round-trips requests; streaming recompression triggers.
+
+use zipcache::config::{EngineConfig, PolicyKind};
+use zipcache::coordinator::batcher::{ContinuousBatcher, QueuedRequest};
+use zipcache::coordinator::Engine;
+use zipcache::server::Server;
+use zipcache::workload::{Task, TaskGen};
+
+fn config(policy: PolicyKind) -> Option<EngineConfig> {
+    let dir = std::env::var("ZIPCACHE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    let mut cfg = EngineConfig::load_default(dir, "micro").ok()?;
+    cfg.policy = policy;
+    Some(cfg)
+}
+
+#[test]
+fn every_policy_generates() {
+    let Some(cfg) = config(PolicyKind::Zipcache) else { return };
+    let mut engine = Engine::new(cfg).unwrap();
+    let info = engine.runtime().model_info().clone();
+    let gen = TaskGen::new(Task::Code, info.max_seq - 4);
+    let sample = gen.sample(9);
+    for policy in PolicyKind::ALL {
+        engine.set_policy(policy);
+        let out = engine.generate(sample.prompt(), 4).unwrap();
+        assert!(!out.tokens.is_empty(), "{policy}");
+        assert!(out.tokens.len() <= 4);
+        assert!(out.prefill_ms > 0.0);
+        match policy {
+            PolicyKind::Fp16 => {
+                // fp16 rounding only: ratio ~2x vs fp16 baseline? No: the
+                // store keeps f32->f16 rows accounted at 2B = exactly 1x.
+                assert!((out.compression_ratio - 1.0).abs() < 0.05, "{policy}");
+            }
+            PolicyKind::H2o => {
+                assert!(out.compression_ratio > 2.0, "{policy}: {}",
+                        out.compression_ratio);
+            }
+            PolicyKind::Kivi => {
+                // short prompt: the fp16 recent window covers most of the
+                // cache, collapsing KIVI's ratio — exactly the paper's
+                // Table B observation.
+                assert!(out.compression_ratio >= 1.0, "{policy}: {}",
+                        out.compression_ratio);
+            }
+            _ => {
+                assert!(out.compression_ratio > 1.5,
+                        "{policy}: {}", out.compression_ratio);
+            }
+        }
+    }
+}
+
+#[test]
+fn deterministic_generation() {
+    let Some(cfg) = config(PolicyKind::Zipcache) else { return };
+    let mut e1 = Engine::new(cfg.clone()).unwrap();
+    let mut e2 = Engine::new(cfg).unwrap();
+    let info = e1.runtime().model_info().clone();
+    let s = TaskGen::new(Task::Gsm, info.max_seq - 4).sample(21);
+    let o1 = e1.generate(s.prompt(), 4).unwrap();
+    let o2 = e2.generate(s.prompt(), 4).unwrap();
+    assert_eq!(o1.tokens, o2.tokens);
+    assert_eq!(o1.cache_bytes, o2.cache_bytes);
+}
+
+#[test]
+fn zipcache_beats_mikv_on_planted_saliency() {
+    // The engine-level version of the paper's core claim is statistical;
+    // here we only require both to run and produce sane mixed-precision
+    // stats on the same prompt (accuracy comparisons live in the benches).
+    let Some(cfg) = config(PolicyKind::Zipcache) else { return };
+    let mut engine = Engine::new(cfg).unwrap();
+    let info = engine.runtime().model_info().clone();
+    let s = TaskGen::new(Task::Lines(6), info.max_seq - 4).sample(33);
+    let zip = engine.generate(s.prompt(), 2).unwrap();
+    engine.set_policy(PolicyKind::Mikv);
+    let mikv = engine.generate(s.prompt(), 2).unwrap();
+    // same bit budget -> comparable measured ratios (within 20%)
+    assert!((zip.compression_ratio / mikv.compression_ratio - 1.0).abs() < 0.2);
+}
+
+#[test]
+fn batcher_interleaves_and_completes() {
+    let Some(mut cfg) = config(PolicyKind::Zipcache) else { return };
+    cfg.scheduler.max_batch = 2;
+    let mut engine = Engine::new(cfg).unwrap();
+    let info = engine.runtime().model_info().clone();
+    let gen = TaskGen::new(Task::Code, info.max_seq - 4);
+    let mut b = ContinuousBatcher::new(2, 8);
+    for tag in 0..5u64 {
+        b.submit(QueuedRequest {
+            prompt: gen.sample(tag).prompt().to_vec(),
+            max_new: 3,
+            tag,
+        }).unwrap();
+    }
+    let outcomes = b.run_to_completion(&mut engine).unwrap();
+    assert_eq!(outcomes.len(), 5);
+    let tags: Vec<u64> = outcomes.iter().map(|o| o.tag).collect();
+    assert_eq!(tags, vec![0, 1, 2, 3, 4]);
+    assert!(outcomes.iter().all(|o| !o.output.tokens.is_empty()));
+    assert_eq!(engine.metrics.requests_completed, 5);
+}
+
+#[test]
+fn server_round_trips_concurrent_requests() {
+    let Some(mut cfg) = config(PolicyKind::Zipcache) else { return };
+    cfg.scheduler.max_batch = 2;
+    let server = Server::start(cfg).unwrap();
+    let gen = TaskGen::new(Task::Code, 60);
+    let mut handles = Vec::new();
+    for i in 0..4u64 {
+        let h = server.handle.clone();
+        let prompt = gen.sample(i).prompt().to_vec();
+        handles.push(std::thread::spawn(move || h.generate(prompt, 2)));
+    }
+    for h in handles {
+        let out = h.join().unwrap().unwrap();
+        assert!(!out.tokens.is_empty());
+    }
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn streaming_recompression_triggers() {
+    let Some(mut cfg) = config(PolicyKind::Zipcache) else { return };
+    cfg.quant.recompress_every = 4; // force several cycles in a short decode
+    let mut engine = Engine::new(cfg).unwrap();
+    let info = engine.runtime().model_info().clone();
+    let s = TaskGen::new(Task::Code, info.max_seq / 2).sample(3);
+    let mut sess = engine.start_session(s.prompt().to_vec(), 16).unwrap();
+    while !sess.is_done() {
+        engine.decode_step(&mut sess).unwrap();
+    }
+    assert!(engine.metrics.compress.count() >= 1,
+            "recompression never triggered");
+}
+
+#[test]
+fn window_overflow_rejected() {
+    let Some(cfg) = config(PolicyKind::Zipcache) else { return };
+    let mut engine = Engine::new(cfg).unwrap();
+    let info = engine.runtime().model_info().clone();
+    let prompt = vec![1u16; info.max_seq];
+    assert!(engine.start_session(prompt, 4).is_err());
+    assert!(engine.start_session(vec![], 4).is_err());
+}

@@ -1,0 +1,193 @@
+//! Property-based invariants over the L3 substrates (via the in-tree
+//! property harness `zipcache::util::prop` — the offline stand-in for
+//! proptest).  These cover the coordinator-adjacent state machines: packing,
+//! quantization planes, the compressed store, saliency selection, probe
+//! strategies, and the batcher's routing/accounting.
+
+use zipcache::kvcache::{CacheLayout, CompressedKV, PrecisionClass, QuantSpec};
+use zipcache::quant::packing::PackedCodes;
+use zipcache::quant::{Granularity, QuantizedPlane};
+use zipcache::saliency::metric::{normalized_saliency, probe_normalized_saliency,
+                                 select_salient};
+use zipcache::saliency::{select_probes, ProbeStrategy};
+use zipcache::util::prop::{check, Gen};
+
+#[test]
+fn prop_packing_roundtrip() {
+    check("packing-roundtrip", 60, |g: &mut Gen| {
+        let bits = *g.choice(&[1u8, 2, 4, 8]);
+        let n = g.usize_in(0, 4096);
+        let max = 1u16 << bits;
+        let codes: Vec<u8> = (0..n)
+            .map(|_| (g.rng.below(max as u64)) as u8)
+            .collect();
+        let packed = PackedCodes::pack(&codes, bits);
+        if packed.unpack() != codes {
+            return Err(format!("roundtrip failed bits={bits} n={n}"));
+        }
+        // random access agrees with bulk unpack
+        for _ in 0..10.min(n) {
+            let i = g.usize_in(0, n.saturating_sub(1));
+            if n > 0 && packed.get(i) != codes[i] {
+                return Err(format!("get({i}) mismatch"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quant_error_bounded_by_scale() {
+    check("quant-error-bound", 40, |g: &mut Gen| {
+        let rows = g.usize_in(1, 48);
+        let cols = g.usize_in(1, 32);
+        let bits = *g.choice(&[2u8, 4, 8]);
+        let gran = *g.choice(&[Granularity::Token, Granularity::Channel,
+                               Granularity::Group(8),
+                               Granularity::ChannelSeparableToken]);
+        let x = g.vec_f32(rows * cols, -8.0, 8.0);
+        let q = QuantizedPlane::quantize(&x, rows, cols, bits, gran);
+        let mut out = vec![0f32; x.len()];
+        q.dequantize_into(&mut out);
+        // error per element bounded by the worst-case step of its group;
+        // bound loosely by global range / levels.
+        let (mn, mx) = x.iter().fold((f32::MAX, f32::MIN),
+                                     |(a, b), &v| (a.min(v), b.max(v)));
+        let step = (mx - mn) / ((1u32 << bits) - 1) as f32;
+        // CST rescaling can amplify by the channel scale (<= sqrt(8)).
+        let bound = step * 3.0 + 1e-4;
+        for (i, (&a, &b)) in x.iter().zip(&out).enumerate() {
+            if (a - b).abs() > bound {
+                return Err(format!(
+                    "{gran:?} bits={bits} elem {i}: |{a} - {b}| > {bound}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_store_roundtrip_valid_mask() {
+    check("store-valid-mask", 30, |g: &mut Gen| {
+        let lay = CacheLayout {
+            layers: g.usize_in(1, 3),
+            heads: g.usize_in(1, 3),
+            seq: g.usize_in(8, 24),
+            d_head: g.usize_in(2, 16),
+        };
+        let n_tokens = g.usize_in(1, lay.seq);
+        let k = g.vec_f32(lay.cache_len(), -4.0, 4.0);
+        let v = g.vec_f32(lay.cache_len(), -4.0, 4.0);
+        let classes: Vec<PrecisionClass> = (0..n_tokens)
+            .map(|_| *g.choice(&[PrecisionClass::Fp16, PrecisionClass::Bits(4),
+                                 PrecisionClass::Bits(2), PrecisionClass::Evicted]))
+            .collect();
+        let store = CompressedKV::compress(&k, &v, lay, &classes,
+                                           QuantSpec::default());
+        let mut ko = vec![0f32; lay.cache_len()];
+        let mut vo = vec![0f32; lay.cache_len()];
+        let mut va = vec![0f32; lay.seq];
+        store.materialize_into(&mut ko, &mut vo, &mut va);
+        for (t, c) in classes.iter().enumerate() {
+            let want = if c.is_evicted() { 0.0 } else { 1.0 };
+            if va[t] != want {
+                return Err(format!("valid[{t}] = {} want {want}", va[t]));
+            }
+        }
+        for t in n_tokens..lay.seq {
+            if va[t] != 0.0 {
+                return Err(format!("valid[{t}] beyond n_tokens"));
+            }
+        }
+        // Ratio must exceed 1x whenever anything was quantized/evicted AND
+        // the plane is big enough that per-subset parameter overhead cannot
+        // dominate (at d_head=2 the two f16 (s,z) pairs outweigh the codes —
+        // the same effect the paper's Appendix A quantifies for groupwise).
+        if lay.d_head >= 8
+            && n_tokens >= 8
+            && classes.iter().any(|c| *c != PrecisionClass::Fp16)
+            && store.compression_ratio() <= 1.0
+        {
+            return Err(format!("ratio {} <= 1", store.compression_ratio()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_select_salient_count_and_monotone() {
+    check("select-salient", 50, |g: &mut Gen| {
+        let n = g.usize_in(1, 200);
+        let sal = g.vec_f32(n, 0.0, 1.0);
+        let ratio = g.f32_in(0.0, 1.0) as f64;
+        let mask = select_salient(&sal, n, ratio);
+        let k = mask.iter().filter(|&&m| m).count();
+        let want = ((n as f64) * ratio).round() as usize;
+        if k != want.min(n) {
+            return Err(format!("selected {k} want {want}"));
+        }
+        // every selected token's saliency >= every unselected token's
+        let min_sel = mask.iter().zip(&sal).filter(|(m, _)| **m)
+            .map(|(_, &s)| s).fold(f32::MAX, f32::min);
+        let max_unsel = mask.iter().zip(&sal).filter(|(m, _)| !**m)
+            .map(|(_, &s)| s).fold(f32::MIN, f32::max);
+        if k > 0 && k < n && min_sel < max_unsel - 1e-6 {
+            return Err(format!("not top-k: {min_sel} < {max_unsel}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_probe_selection_well_formed() {
+    check("probe-selection", 50, |g: &mut Gen| {
+        let n = g.usize_in(1, 300);
+        let strat = *g.choice(&[ProbeStrategy::Random, ProbeStrategy::Recent,
+                                ProbeStrategy::RandomRecent]);
+        let seed = g.rng.next_u64();
+        let p = select_probes(strat, n, 0.1, None, seed);
+        if p.is_empty() {
+            return Err("empty probes".into());
+        }
+        if !p.windows(2).all(|w| w[0] < w[1]) {
+            return Err("not sorted/unique".into());
+        }
+        if p.iter().any(|&i| i >= n) {
+            return Err("out of range".into());
+        }
+        // determinism
+        if p != select_probes(strat, n, 0.1, None, seed) {
+            return Err("nondeterministic".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_probe_saliency_exact_when_full() {
+    check("probe-saliency-exact", 30, |g: &mut Gen| {
+        let l = g.usize_in(2, 40);
+        // random causal attention matrix with normalized rows
+        let mut a = vec![0f32; l * l];
+        for r in 0..l {
+            let mut sum = 0f32;
+            for c in 0..=r {
+                let v = g.f32_in(0.01, 1.0);
+                a[r * l + c] = v;
+                sum += v;
+            }
+            for c in 0..=r {
+                a[r * l + c] /= sum;
+            }
+        }
+        let idx: Vec<usize> = (0..l).collect();
+        let exact = normalized_saliency(&a, l, l);
+        let approx = probe_normalized_saliency(&a, &idx, l);
+        for (i, (x, y)) in exact.iter().zip(&approx).enumerate() {
+            if (x - y).abs() > 1e-5 {
+                return Err(format!("col {i}: {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,197 @@
+//! Runtime integration tests: load the micro artifacts and verify the
+//! AOT round-trip numerics — HLO text -> PJRT compile -> execute — plus the
+//! Rust quantizer's agreement with the AOT quant kernel.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use zipcache::kvcache::{CompressedKV, PrecisionClass, QuantSpec};
+use zipcache::runtime::{Runtime, Tensor};
+use zipcache::workload::{Task, TaskGen};
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::env::var("ZIPCACHE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    match Runtime::load(&dir, "micro") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (artifacts not built?): {e}");
+            None
+        }
+    }
+}
+
+fn prefill_inputs(rt: &Runtime, seed: u64) -> (Vec<i32>, Vec<f32>, usize,
+                                               zipcache::workload::Sample) {
+    let info = rt.model_info();
+    let smax = info.max_seq;
+    let gen = TaskGen::new(Task::Gsm, smax - 2);
+    let sample = gen.sample(seed);
+    let n = sample.prompt_len;
+    let mut tokens = vec![0i32; smax];
+    for (i, &t) in sample.prompt().iter().enumerate() {
+        tokens[i] = t as i32;
+    }
+    let mut valid = vec![0f32; smax];
+    valid[..n].fill(1.0);
+    (tokens, valid, n, sample)
+}
+
+#[test]
+fn prefill_outputs_have_expected_shapes() {
+    let Some(rt) = runtime() else { return };
+    let info = rt.model_info().clone();
+    let smax = info.max_seq;
+    let (tokens, valid, _, _) = prefill_inputs(&rt, 3);
+    let out = rt.execute(&rt.entry("prefill_full"),
+                         &[Tensor::i32(tokens, &[smax]),
+                           Tensor::f32(valid, &[smax])]).unwrap();
+    assert_eq!(out.len(), 5);
+    assert_eq!(out[0].dims(), &[smax, info.vocab]); // logits
+    assert_eq!(out[1].dims(), &[info.n_layers, info.n_heads, smax, info.d_head]);
+    assert_eq!(out[3].dims(), &[info.n_layers, smax]); // acc saliency
+    // all outputs finite
+    for t in &out {
+        assert!(t.as_f32().iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn flash_and_full_prefill_agree_on_valid_region() {
+    let Some(rt) = runtime() else { return };
+    let info = rt.model_info().clone();
+    let (smax, pc) = (info.max_seq, info.probe_count);
+    let (tokens, valid, n, _) = prefill_inputs(&rt, 7);
+    let full = rt.execute(&rt.entry("prefill_full"),
+                          &[Tensor::i32(tokens.clone(), &[smax]),
+                            Tensor::f32(valid.clone(), &[smax])]).unwrap();
+    let pidx: Vec<i32> = (0..pc as i32).map(|i| (n as i32 - 1 - i).max(0)).rev()
+        .collect();
+    let flash = rt.execute(&rt.entry("prefill_flash"),
+                           &[Tensor::i32(tokens, &[smax]),
+                             Tensor::f32(valid, &[smax]),
+                             Tensor::i32(pidx, &[pc])]).unwrap();
+    let (lf, lz) = (full[0].as_f32(), flash[0].as_f32());
+    for i in 0..n * info.vocab {
+        assert!((lf[i] - lz[i]).abs() < 3e-3,
+                "logit {} differs: {} vs {}", i, lf[i], lz[i]);
+    }
+    // caches agree on live rows
+    let (kf, kz) = (full[1].as_f32(), flash[1].as_f32());
+    for hi in 0..info.n_layers * info.n_heads {
+        let base = hi * smax * info.d_head;
+        for j in 0..n * info.d_head {
+            assert!((kf[base + j] - kz[base + j]).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn decode_matches_extended_prefill() {
+    let Some(rt) = runtime() else { return };
+    let info = rt.model_info().clone();
+    let smax = info.max_seq;
+    let (tokens, valid, n, sample) = prefill_inputs(&rt, 11);
+    let full = rt.execute(&rt.entry("prefill_full"),
+                          &[Tensor::i32(tokens.clone(), &[smax]),
+                            Tensor::f32(valid.clone(), &[smax])]).unwrap();
+    let next = sample.prompt()[2];
+    let dims = [info.n_layers, info.n_heads, smax, info.d_head];
+    let dec = rt.execute(&rt.entry("decode"), &[
+        Tensor::scalar_i32(next as i32),
+        Tensor::scalar_i32(n as i32),
+        Tensor::f32(full[1].as_f32().to_vec(), &dims),
+        Tensor::f32(full[2].as_f32().to_vec(), &dims),
+        Tensor::f32(valid.clone(), &[smax]),
+    ]).unwrap();
+    // extended prefill reference
+    let mut tokens2 = tokens.clone();
+    tokens2[n] = next as i32;
+    let mut valid2 = valid.clone();
+    valid2[n] = 1.0;
+    let full2 = rt.execute(&rt.entry("prefill_full"),
+                           &[Tensor::i32(tokens2, &[smax]),
+                             Tensor::f32(valid2, &[smax])]).unwrap();
+    let want = &full2[0].as_f32()[n * info.vocab..(n + 1) * info.vocab];
+    let got = dec[0].as_f32();
+    for i in 0..info.vocab {
+        assert!((got[i] - want[i]).abs() < 5e-3,
+                "logit {i}: {} vs {}", got[i], want[i]);
+    }
+    // a_row is a probability row over cached tokens
+    let a = dec[3].as_f32();
+    assert!(a.iter().all(|&x| (0.0..=1.0).contains(&x) && x.is_finite()));
+}
+
+#[test]
+fn rust_quant_matches_aot_quant_kernel() {
+    let Some(rt) = runtime() else { return };
+    let info = rt.model_info().clone();
+    let layout = info.cache_layout();
+    let smax = info.max_seq;
+    let (tokens, valid, n, _) = prefill_inputs(&rt, 13);
+    let full = rt.execute(&rt.entry("prefill_full"),
+                          &[Tensor::i32(tokens, &[smax]),
+                            Tensor::f32(valid.clone(), &[smax])]).unwrap();
+    let kc = full[1].as_f32().to_vec();
+    let vc = full[2].as_f32().to_vec();
+
+    // salient mask: every 3rd token
+    let mut sal = vec![0f32; smax];
+    for i in (0..n).step_by(3) {
+        sal[i] = 1.0;
+    }
+    let dims = [info.n_layers, info.n_heads, smax, info.d_head];
+    let aot = rt.execute(&rt.entry("quant_kv"), &[
+        Tensor::f32(kc.clone(), &dims),
+        Tensor::f32(vc.clone(), &dims),
+        Tensor::f32(sal.clone(), &[smax]),
+    ]).unwrap();
+
+    // Rust store with the same classes (hi=4/lo=2, channel-K/CST-V).
+    // NOTE: the AOT kernel quantizes each full plane with one parameter set
+    // and selects per token, while the Rust store quantizes the salient and
+    // regular subsets on their own statistics (Alg. 2's Split).  They agree
+    // exactly on the hi/lo *shared-stats* case only when the subsets span
+    // the full plane; here we verify agreement in distribution: per-token
+    // errors of the Rust path must not exceed the AOT fake-quant's.
+    let classes: Vec<PrecisionClass> = (0..n)
+        .map(|i| PrecisionClass::Bits(if i % 3 == 0 { 4 } else { 2 }))
+        .collect();
+    let store = CompressedKV::compress(&kc, &vc, layout, &classes,
+                                       QuantSpec::default());
+    let mut ko = vec![0f32; layout.cache_len()];
+    let mut vo = vec![0f32; layout.cache_len()];
+    let mut va = vec![0f32; smax];
+    store.materialize_into(&mut ko, &mut vo, &mut va);
+
+    let err = |a: &[f32], b: &[f32]| -> f64 {
+        let mut e = 0f64;
+        let mut cnt = 0usize;
+        for hi in 0..layout.layers * layout.heads {
+            let base = hi * smax * layout.d_head;
+            for t in 0..n {
+                for j in 0..layout.d_head {
+                    let idx = base + t * layout.d_head + j;
+                    e += ((a[idx] - b[idx]) as f64).powi(2);
+                    cnt += 1;
+                }
+            }
+        }
+        e / cnt as f64
+    };
+    let aot_kerr = err(aot[0].as_f32(), &kc);
+    let rust_kerr = err(&ko, &kc);
+    let aot_verr = err(aot[1].as_f32(), &vc);
+    let rust_verr = err(&vo, &vc);
+    // Subset statistics can only tighten ranges -> Rust error <= ~AOT error.
+    assert!(rust_kerr <= aot_kerr * 1.2 + 1e-9, "{rust_kerr} vs {aot_kerr}");
+    assert!(rust_verr <= aot_verr * 1.2 + 1e-9, "{rust_verr} vs {aot_verr}");
+}
+
+#[test]
+fn unknown_model_rejected() {
+    let dir = std::env::var("ZIPCACHE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        return;
+    }
+    assert!(Runtime::load(&dir, "bogus-model").is_err());
+}

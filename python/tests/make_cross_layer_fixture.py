@@ -1,0 +1,55 @@
+"""Generate ``rust/tests/fixtures/cross_layer.json``.
+
+The fixture pins the cross-layer determinism contract (DESIGN.md §2):
+the Rust workload generators in ``rust/src/workload`` must reproduce the
+Python corpus generators in ``python/compile/data.py`` bit-for-bit.  Run
+from the repo root whenever the generators change — and remember that a
+generator change also invalidates trained artifacts:
+
+    python3 python/tests/make_cross_layer_fixture.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.data import SplitMix64, gen_line_retrieval, gen_task  # noqa: E402
+
+SEEDS = [0, 1, 2, 3, 4, 7, 11, 42, 123, 10_000]
+
+
+def case(seed: int, sample) -> dict:
+    return {
+        "seed": seed,
+        "tokens": sample.tokens,
+        "prompt_len": sample.prompt_len,
+        "answer": sample.answer,
+        "span": list(sample.salient_span),
+    }
+
+
+def main() -> None:
+    rng = SplitMix64(0)
+    fixture = {
+        # u64 draws exceed JSON's exact-integer range -> stored as strings.
+        "splitmix": [str(rng.next_u64()) for _ in range(16)],
+        "gsm": [case(s, gen_task("gsm", s, 256)) for s in SEEDS],
+        "lines": [case(s, gen_line_retrieval(s, 20)) for s in SEEDS],
+        "code": [case(s, gen_task("code", s, 256)) for s in SEEDS],
+    }
+    out = os.path.join(os.path.dirname(__file__), "..", "..",
+                       "rust", "tests", "fixtures", "cross_layer.json")
+    out = os.path.normpath(out)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(fixture, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ use zipcache::quant::packing::PackedCodes;
 use zipcache::quant::{Granularity, QuantizedPlane};
 use zipcache::saliency::metric::select_salient;
 use zipcache::util::bench::{black_box, Bencher, Table};
+use zipcache::util::pool::WorkerPool;
 
 fn main() {
     let b = Bencher { warmup: 3, samples: 20, ..Default::default() };
@@ -80,6 +81,36 @@ fn main() {
     t.row(&["cache materialize".into(), "L4 H8 S1024 d64".into(),
             format!("{:.2}", m.median_ms()), format!("{:.2}", m.mean_ms())]);
 
+    // ---- parallel plane-level compression (DESIGN.md §5) --------------------
+    // Same cache, same classes: the pooled path must be bit-identical and
+    // strictly a wall-clock knob.  Stage timings expose where the time goes.
+    let pools = [("compress seq x1", WorkerPool::sequential()),
+                 ("compress par auto", WorkerPool::new(0))];
+    let mut stage_table = Table::new(&["path", "threads", "split ms", "quant wall ms",
+                                       "quant cpu ms", "concat ms", "quant speedup"]);
+    let seq_digest = store.content_digest();
+    for (name, pool) in &pools {
+        let m = b.measure(name, || {
+            black_box(CompressedKV::compress_with_pool(
+                &kc, &vc, lay, &classes, QuantSpec::default(), pool));
+        });
+        t.row(&[(*name).into(), format!("L4 H8 S1024 d64 x{}", pool.threads()),
+                format!("{:.2}", m.median_ms()), format!("{:.2}", m.mean_ms())]);
+        let (par_store, st) = CompressedKV::compress_instrumented(
+            &kc, &vc, lay, &classes, QuantSpec::default(), pool);
+        assert_eq!(par_store.content_digest(), seq_digest,
+                   "parallel compression diverged from sequential");
+        stage_table.row(&[
+            (*name).into(),
+            format!("{}", st.threads),
+            format!("{:.3}", st.split_us as f64 / 1000.0),
+            format!("{:.3}", st.quant_wall_us as f64 / 1000.0),
+            format!("{:.3}", st.quant_cpu_us as f64 / 1000.0),
+            format!("{:.3}", st.concat_us as f64 / 1000.0),
+            format!("{:.2}x", st.quant_cpu_us as f64 / st.quant_wall_us.max(1) as f64),
+        ]);
+    }
+
     // ---- saliency selection --------------------------------------------------
     let sal: Vec<f32> = (0..16384).map(|i| ((i as f32) * 0.91).sin()).collect();
     let m = b.measure("select_salient", || {
@@ -90,4 +121,6 @@ fn main() {
 
     println!("\n== L3 hot-path micro-benchmarks ==");
     t.print();
+    println!("\n== compression stage breakdown (Split -> Quant -> Concat) ==");
+    stage_table.print();
 }

@@ -111,6 +111,10 @@ pub struct EngineConfig {
     pub policy: PolicyKind,
     pub quant: QuantConfig,
     pub scheduler: SchedulerConfig,
+    /// Worker threads for plane-level compression (DESIGN.md §5):
+    /// `0` = one per available core, `1` = sequential.  Output is
+    /// bit-identical at any width, so this is a pure latency knob.
+    pub parallelism: usize,
     /// Request seed base (determinism).
     pub seed: u64,
 }
@@ -124,6 +128,7 @@ impl EngineConfig {
             policy: PolicyKind::Zipcache,
             quant: QuantConfig::default(),
             scheduler: SchedulerConfig::default(),
+            parallelism: 0,
             seed: 0,
         };
         cfg.validate()?;
@@ -148,6 +153,7 @@ impl EngineConfig {
                 max_batch: c.get_usize("scheduler.max_batch", 8)?,
                 queue_depth: c.get_usize("scheduler.queue_depth", 256)?,
             },
+            parallelism: c.get_usize("parallelism", 0)?,
             seed: c.get_u64("seed", 0)?,
         };
         cfg.validate()?;
@@ -217,6 +223,16 @@ max_batch = 4
         assert_eq!(c.quant.bits_low, 2); // default preserved
         assert_eq!(c.scheduler.max_batch, 4);
         assert_eq!(c.seed, 9);
+        assert_eq!(c.parallelism, 0); // default preserved
+    }
+
+    #[test]
+    fn parallelism_from_file() {
+        let text = "model = \"tiny\"\nparallelism = 4\n";
+        let path = std::env::temp_dir().join("zipcache_cfg_par_test.conf");
+        std::fs::write(&path, text).unwrap();
+        let c = EngineConfig::from_file(&path).unwrap();
+        assert_eq!(c.parallelism, 4);
     }
 
     #[test]

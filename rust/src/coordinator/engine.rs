@@ -1,5 +1,10 @@
 //! The engine: prefill (Alg. 2), decode + streaming recompression (Alg. 3)
 //! over the PJRT artifacts, parameterized by a compression policy.
+//!
+//! Both compression points — the prefill snapshot and every streaming
+//! recompression cycle — fan the independent `(layer, head)` planes out
+//! across the engine's [`WorkerPool`] (`cfg.parallelism`, DESIGN.md §5)
+//! and record per-stage timing in `EngineMetrics::compress_stages`.
 
 use std::time::Instant;
 
@@ -12,6 +17,7 @@ use crate::kvcache::{CacheLayout, CompressedKV};
 use crate::metrics::EngineMetrics;
 use crate::runtime::{Runtime, Tensor};
 use crate::saliency::{select_probes, ProbeStrategy};
+use crate::util::pool::WorkerPool;
 use crate::workload::tasks::EOS;
 use crate::Result;
 
@@ -33,6 +39,9 @@ pub struct Engine {
     pub cfg: EngineConfig,
     rt: Runtime,
     policy: Box<dyn CompressionPolicy>,
+    /// Plane-level compression pool (DESIGN.md §5), sized by
+    /// `cfg.parallelism`.
+    pool: WorkerPool,
     pub metrics: EngineMetrics,
     next_session_id: u64,
 }
@@ -42,8 +51,14 @@ impl Engine {
         cfg.validate()?;
         let rt = Runtime::load(&cfg.artifacts_dir, &cfg.model)?;
         let policy = make_policy(&cfg);
-        Ok(Engine { cfg, rt, policy, metrics: EngineMetrics::default(),
+        let pool = WorkerPool::new(cfg.parallelism);
+        Ok(Engine { cfg, rt, policy, pool, metrics: EngineMetrics::default(),
                     next_session_id: 0 })
+    }
+
+    /// The compression worker pool (width follows `cfg.parallelism`).
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
     }
 
     /// Swap the compression policy (bench harnesses sweep these).
@@ -280,8 +295,12 @@ impl Engine {
             norm_saliency: if s.norm_saliency.is_empty() { None } else { Some(&s.norm_saliency) },
         };
         let classes = self.policy.assign(&input);
-        let store = CompressedKV::compress(&s.kbuf, &s.vbuf, layout, &classes,
-                                           self.policy.quant_spec());
+        // Fan the independent (layer, head) planes out across the pool;
+        // bit-identical to the sequential path at any width (DESIGN.md §5).
+        let (store, stages) = CompressedKV::compress_instrumented(
+            &s.kbuf, &s.vbuf, layout, &classes, self.policy.quant_spec(),
+            &self.pool);
+        self.metrics.record_compress_stages(&stages);
         store.materialize_into(&mut s.kbuf, &mut s.vbuf, &mut s.valid);
         s.cache_bytes = store.storage_bytes(2);
         s.compression_ratio = store.compression_ratio();

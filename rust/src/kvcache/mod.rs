@@ -16,4 +16,4 @@ pub mod fp16;
 pub mod ratio;
 pub mod store;
 
-pub use store::{CacheLayout, CompressedKV, PrecisionClass, QuantSpec};
+pub use store::{CacheLayout, CompressStats, CompressedKV, PrecisionClass, QuantSpec};

@@ -1,8 +1,19 @@
 //! The compressed KV store: Alg. 2's `Split -> Quant -> Concat` made
 //! physical, with per-token precision classes and byte-level accounting.
+//!
+//! Every `(layer, head)` K/V plane is compressed independently, so the
+//! whole `Split -> Quant -> Concat` pipeline fans out across a
+//! [`WorkerPool`] (DESIGN.md §5): [`CompressedKV::compress_with_pool`]
+//! produces output **bit-identical** to the sequential
+//! [`CompressedKV::compress`] at any pool width, verified by
+//! `rust/tests/parallel_parity.rs` via [`CompressedKV::content_digest`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
 use crate::kvcache::fp16::round_f16;
 use crate::quant::{Granularity, QuantizedPlane};
+use crate::util::pool::WorkerPool;
 
 /// Static shape of one sequence's cache.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -67,6 +78,32 @@ struct SubsetPlane {
     plane: QuantizedPlane,
 }
 
+/// Per-stage wall/CPU timing of one compression pass (Alg. 2's
+/// `Split -> Quant -> Concat`), reported by
+/// [`CompressedKV::compress_instrumented`] and aggregated into
+/// `EngineMetrics::compress_stages`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CompressStats {
+    /// Wall time grouping tokens by precision class (the Split stage).
+    pub split_us: u64,
+    /// Wall time of the plane fan-out + join (the Quant stage — gather,
+    /// quantize, bit-pack).  This is the number that shrinks with pool
+    /// width.
+    pub quant_wall_us: u64,
+    /// CPU time summed across workers inside the Quant stage; roughly
+    /// constant in pool width, so `quant_cpu_us / quant_wall_us` is the
+    /// achieved parallel speedup.
+    pub quant_cpu_us: u64,
+    /// Wall time assembling the final store (the Concat stage).
+    pub concat_us: u64,
+    /// End-to-end wall time of the compression pass.
+    pub wall_us: u64,
+    /// Number of `(layer, head)` planes compressed.
+    pub planes: usize,
+    /// Pool width used.
+    pub threads: usize,
+}
+
 /// One (layer, head) pair of compressed K/V planes.
 #[derive(Debug, Clone, Default)]
 struct HeadStore {
@@ -94,7 +131,7 @@ pub struct CompressedKV {
 
 impl CompressedKV {
     /// Compress `kcache`/`vcache` (`[L, H, S, dh]` fp32, row-major) under
-    /// the per-token `classes` (length = n_tokens <= S).
+    /// the per-token `classes` (length = n_tokens <= S), sequentially.
     pub fn compress(
         kcache: &[f32],
         vcache: &[f32],
@@ -102,12 +139,44 @@ impl CompressedKV {
         classes: &[PrecisionClass],
         spec: QuantSpec,
     ) -> Self {
+        Self::compress_with_pool(kcache, vcache, layout, classes, spec,
+                                 &WorkerPool::sequential())
+    }
+
+    /// Like [`CompressedKV::compress`], fanning the independent
+    /// `(layer, head)` planes out across `pool` (DESIGN.md §5).
+    ///
+    /// The result is bit-identical to the sequential path at any pool
+    /// width: each plane is compressed by the same code on the same
+    /// inputs, and the join restores index order.
+    pub fn compress_with_pool(
+        kcache: &[f32],
+        vcache: &[f32],
+        layout: CacheLayout,
+        classes: &[PrecisionClass],
+        spec: QuantSpec,
+        pool: &WorkerPool,
+    ) -> Self {
+        Self::compress_instrumented(kcache, vcache, layout, classes, spec, pool).0
+    }
+
+    /// [`CompressedKV::compress_with_pool`] plus per-stage timing
+    /// ([`CompressStats`]) for the engine metrics and the hot-path bench.
+    pub fn compress_instrumented(
+        kcache: &[f32],
+        vcache: &[f32],
+        layout: CacheLayout,
+        classes: &[PrecisionClass],
+        spec: QuantSpec,
+        pool: &WorkerPool,
+    ) -> (Self, CompressStats) {
         assert_eq!(kcache.len(), layout.cache_len());
         assert_eq!(vcache.len(), layout.cache_len());
         let n_tokens = classes.len();
         assert!(n_tokens <= layout.seq);
+        let t_all = Instant::now();
 
-        // Group token indices by class (stable order within class).
+        // Split: group token indices by class (stable order within class).
         let mut groups: Vec<(PrecisionClass, Vec<u32>)> = Vec::new();
         for (t, &c) in classes.iter().enumerate() {
             if c.is_evicted() {
@@ -118,56 +187,89 @@ impl CompressedKV {
                 None => groups.push((c, vec![t as u32])),
             }
         }
+        let split_us = t_all.elapsed().as_micros() as u64;
 
+        // Quant: every (layer, head) plane is independent — fan out.
         let (s, dh) = (layout.seq, layout.d_head);
-        let mut heads = Vec::with_capacity(layout.layers * layout.heads);
-        for l in 0..layout.layers {
-            for h in 0..layout.heads {
-                let base = (l * layout.heads + h) * s * dh;
-                let kplane = &kcache[base..base + s * dh];
-                let vplane = &vcache[base..base + s * dh];
-                let mut hs = HeadStore::default();
-                for (class, rows) in &groups {
-                    match class {
-                        PrecisionClass::Fp16 => {
-                            for &r in rows {
-                                let r0 = r as usize * dh;
-                                let kr: Vec<f32> =
-                                    kplane[r0..r0 + dh].iter().map(|&x| round_f16(x)).collect();
-                                let vr: Vec<f32> =
-                                    vplane[r0..r0 + dh].iter().map(|&x| round_f16(x)).collect();
-                                hs.fp_rows.push((r, kr, vr));
-                            }
-                        }
-                        PrecisionClass::Bits(bits) => {
-                            // Gather rows, quantize the subset on its own
-                            // statistics (Alg. 2's Split semantics).
-                            let mut kg = Vec::with_capacity(rows.len() * dh);
-                            let mut vg = Vec::with_capacity(rows.len() * dh);
-                            for &r in rows {
-                                let r0 = r as usize * dh;
-                                kg.extend_from_slice(&kplane[r0..r0 + dh]);
-                                vg.extend_from_slice(&vplane[r0..r0 + dh]);
-                            }
-                            hs.k_sets.push(SubsetPlane {
-                                rows: rows.clone(),
-                                plane: QuantizedPlane::quantize(
-                                    &kg, rows.len(), dh, *bits, spec.key_gran),
-                            });
-                            hs.v_sets.push(SubsetPlane {
-                                rows: rows.clone(),
-                                plane: QuantizedPlane::quantize(
-                                    &vg, rows.len(), dh, *bits, spec.value_gran),
-                            });
-                        }
-                        PrecisionClass::Evicted => unreachable!(),
-                    }
+        let planes = layout.layers * layout.heads;
+        let quant_cpu = AtomicU64::new(0);
+        let t_quant = Instant::now();
+        let heads = pool.run(planes, |hi| {
+            let t_plane = Instant::now();
+            let base = hi * s * dh;
+            let hs = compress_plane(&kcache[base..base + s * dh],
+                                    &vcache[base..base + s * dh],
+                                    dh, &groups, spec);
+            quant_cpu.fetch_add(t_plane.elapsed().as_micros() as u64,
+                                Ordering::Relaxed);
+            hs
+        });
+        let quant_wall_us = t_quant.elapsed().as_micros() as u64;
+
+        // Concat: assemble the store (the planes are already in order).
+        let t_concat = Instant::now();
+        let store = CompressedKV { layout, classes: classes.to_vec(), n_tokens,
+                                   spec, heads };
+        let stats = CompressStats {
+            split_us,
+            quant_wall_us,
+            quant_cpu_us: quant_cpu.load(Ordering::Relaxed),
+            concat_us: t_concat.elapsed().as_micros() as u64,
+            wall_us: t_all.elapsed().as_micros() as u64,
+            planes,
+            threads: pool.threads(),
+        };
+        (store, stats)
+    }
+
+    /// FNV-1a digest over the store's physical content:
+    /// packed code bytes, quantization parameters, row indices, channel
+    /// scales, and fp16 rows, walked in `(layer, head)` order.
+    ///
+    /// Two stores digest equal iff they hold byte-identical compressed
+    /// planes — the parallel/sequential parity contract of DESIGN.md §5.
+    pub fn content_digest(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn put(h: u64, bytes: &[u8]) -> u64 {
+            let mut h = h;
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+            h
+        }
+        fn put_plane(mut h: u64, set: &SubsetPlane) -> u64 {
+            for &r in &set.rows {
+                h = put(h, &r.to_le_bytes());
+            }
+            let p = &set.plane;
+            h = put(h, &[p.bits]);
+            h = put(h, &(p.rows as u64).to_le_bytes());
+            h = put(h, &(p.cols as u64).to_le_bytes());
+            h = put(h, p.codes.as_bytes());
+            for q in &p.params {
+                h = put(h, &q.scale.to_bits().to_le_bytes());
+                h = put(h, &q.zero.to_bits().to_le_bytes());
+            }
+            for &c in &p.chan_scale {
+                h = put(h, &c.to_bits().to_le_bytes());
+            }
+            h
+        }
+        let mut h = FNV_OFFSET;
+        for hs in &self.heads {
+            for set in hs.k_sets.iter().chain(hs.v_sets.iter()) {
+                h = put_plane(h, set);
+            }
+            for (r, kr, vr) in &hs.fp_rows {
+                h = put(h, &r.to_le_bytes());
+                for &x in kr.iter().chain(vr.iter()) {
+                    h = put(h, &x.to_bits().to_le_bytes());
                 }
-                heads.push(hs);
             }
         }
-
-        CompressedKV { layout, classes: classes.to_vec(), n_tokens, spec, heads }
+        h
     }
 
     /// Scatter the dequantized cache into fp32 buffers shaped `[L,H,S,dh]`
@@ -271,6 +373,56 @@ impl CompressedKV {
     }
 }
 
+/// Compress one `(layer, head)` pair of K/V planes under the pre-split
+/// class `groups` — the per-plane unit of work the pool fans out
+/// (Alg. 2's Quant stage).
+fn compress_plane(
+    kplane: &[f32],
+    vplane: &[f32],
+    dh: usize,
+    groups: &[(PrecisionClass, Vec<u32>)],
+    spec: QuantSpec,
+) -> HeadStore {
+    let mut hs = HeadStore::default();
+    for (class, rows) in groups {
+        match class {
+            PrecisionClass::Fp16 => {
+                for &r in rows {
+                    let r0 = r as usize * dh;
+                    let kr: Vec<f32> =
+                        kplane[r0..r0 + dh].iter().map(|&x| round_f16(x)).collect();
+                    let vr: Vec<f32> =
+                        vplane[r0..r0 + dh].iter().map(|&x| round_f16(x)).collect();
+                    hs.fp_rows.push((r, kr, vr));
+                }
+            }
+            PrecisionClass::Bits(bits) => {
+                // Gather rows, quantize the subset on its own
+                // statistics (Alg. 2's Split semantics).
+                let mut kg = Vec::with_capacity(rows.len() * dh);
+                let mut vg = Vec::with_capacity(rows.len() * dh);
+                for &r in rows {
+                    let r0 = r as usize * dh;
+                    kg.extend_from_slice(&kplane[r0..r0 + dh]);
+                    vg.extend_from_slice(&vplane[r0..r0 + dh]);
+                }
+                hs.k_sets.push(SubsetPlane {
+                    rows: rows.clone(),
+                    plane: QuantizedPlane::quantize(
+                        &kg, rows.len(), dh, *bits, spec.key_gran),
+                });
+                hs.v_sets.push(SubsetPlane {
+                    rows: rows.clone(),
+                    plane: QuantizedPlane::quantize(
+                        &vg, rows.len(), dh, *bits, spec.value_gran),
+                });
+            }
+            PrecisionClass::Evicted => unreachable!(),
+        }
+    }
+    hs
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -361,6 +513,55 @@ mod tests {
         let classes = vec![PrecisionClass::Evicted; 16];
         let c = CompressedKV::compress(&k, &v, lay, &classes, QuantSpec::default());
         assert_eq!(c.storage_bytes(2), 0);
+    }
+
+    #[test]
+    fn parallel_compress_is_bit_identical() {
+        let lay = CacheLayout { layers: 3, heads: 4, seq: 32, d_head: 8 };
+        let (k, v) = caches(lay);
+        let classes: Vec<PrecisionClass> = (0..28)
+            .map(|t| match t % 5 {
+                0 => PrecisionClass::Bits(4),
+                1 => PrecisionClass::Fp16,
+                2 => PrecisionClass::Evicted,
+                _ => PrecisionClass::Bits(2),
+            })
+            .collect();
+        let seq = CompressedKV::compress(&k, &v, lay, &classes, QuantSpec::default());
+        for threads in [2usize, 3, 8] {
+            let par = CompressedKV::compress_with_pool(
+                &k, &v, lay, &classes, QuantSpec::default(),
+                &WorkerPool::new(threads));
+            assert_eq!(par.content_digest(), seq.content_digest(), "t={threads}");
+            assert_eq!(par.storage_bytes(2), seq.storage_bytes(2));
+            assert_eq!(par.compression_ratio(), seq.compression_ratio());
+        }
+    }
+
+    #[test]
+    fn digest_detects_content_changes() {
+        let lay = layout();
+        let (k, v) = caches(lay);
+        let classes = vec![PrecisionClass::Bits(2); 16];
+        let a = CompressedKV::compress(&k, &v, lay, &classes, QuantSpec::default());
+        let b = CompressedKV::compress(&k, &v, lay, &classes, QuantSpec::default());
+        assert_eq!(a.content_digest(), b.content_digest());
+        let mut k2 = k.clone();
+        k2[0] += 1.0;
+        let c = CompressedKV::compress(&k2, &v, lay, &classes, QuantSpec::default());
+        assert_ne!(a.content_digest(), c.content_digest());
+    }
+
+    #[test]
+    fn compress_stats_accounted() {
+        let lay = layout();
+        let (k, v) = caches(lay);
+        let classes = vec![PrecisionClass::Bits(4); 16];
+        let (_, st) = CompressedKV::compress_instrumented(
+            &k, &v, lay, &classes, QuantSpec::default(), &WorkerPool::new(2));
+        assert_eq!(st.planes, lay.layers * lay.heads);
+        assert_eq!(st.threads, 2);
+        assert!(st.wall_us >= st.quant_wall_us);
     }
 
     #[test]

@@ -13,8 +13,10 @@
 //!   PJRT ([`runtime`]), owns the KV cache in its *physical* mixed-precision
 //!   bit-packed form ([`kvcache`]), identifies salient tokens
 //!   ([`saliency`]), schedules prefill/decode with streaming recompression
-//!   ([`coordinator`]), and implements the paper's comparison baselines
-//!   ([`baselines`]).  Python never runs on the request path.
+//!   ([`coordinator`]), fans plane-level compression out across a worker
+//!   pool ([`util::pool`], DESIGN.md §5), and implements the paper's
+//!   comparison baselines ([`baselines`]).  Python never runs on the
+//!   request path.
 //!
 //! Quick tour:
 //!
@@ -23,11 +25,13 @@
 //! use zipcache::coordinator::Engine;
 //! use zipcache::workload::{Task, TaskGen};
 //!
-//! let cfg = EngineConfig::load_default("artifacts", "micro").unwrap();
+//! let mut cfg = EngineConfig::load_default("artifacts", "micro").unwrap();
+//! cfg.parallelism = 0; // compression workers: 0 = one per core
 //! let mut engine = Engine::new(cfg).unwrap();
 //! let sample = TaskGen::new(Task::Gsm, 60).sample(42);
 //! let out = engine.generate(sample.prompt(), 4).unwrap();
-//! println!("generated: {:?}", out.tokens);
+//! println!("generated: {:?} at {:.2}x compression",
+//!          out.tokens, out.compression_ratio);
 //! ```
 
 pub mod baselines;

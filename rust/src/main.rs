@@ -33,6 +33,7 @@ fn main() -> Result<()> {
     .flag("model", "tiny", "model config from the manifest")
     .flag("policy", "zipcache", "fp16|h2o|gear|kivi|mikv|zipcache")
     .flag("saliency-ratio", "0.6", "fraction of tokens at high precision")
+    .flag("parallelism", "0", "compression worker threads (0 = per-core)")
     .flag("config", "", "optional key=value config file (overrides flags)")
     .flag("task", "gsm", "gsm | code | linesN (e.g. lines20)")
     .flag("samples", "50", "eval: number of samples")
@@ -76,6 +77,7 @@ fn build_config(args: &Args) -> Result<EngineConfig> {
     let mut cfg = EngineConfig::load_default(args.get("artifacts"), &args.get("model"))?;
     cfg.policy = args.get("policy").parse::<PolicyKind>()?;
     cfg.quant.saliency_ratio = args.get_f64("saliency-ratio")?;
+    cfg.parallelism = args.get_usize("parallelism")?;
     cfg.seed = args.get_u64("seed")?;
     cfg.validate()?;
     Ok(cfg)
@@ -137,6 +139,18 @@ fn eval(cfg: EngineConfig, task: Task, samples: usize, max_new: usize, seed: u64
         engine.metrics.prefill.p50_ms(),
         engine.metrics.decode.p50_ms()
     );
+    let st = &engine.metrics.compress_stages;
+    if st.quant_wall.count() > 0 {
+        println!(
+            "compress stages (threads={}): split p50={:.3}ms quant p50={:.3}ms \
+             (speedup {:.1}x) concat p50={:.3}ms",
+            st.threads,
+            st.split.p50_ms(),
+            st.quant_wall.p50_ms(),
+            st.mean_quant_speedup(),
+            st.concat.p50_ms()
+        );
+    }
     Ok(())
 }
 

@@ -1,7 +1,11 @@
 //! Serving metrics: latency histograms, throughput counters, memory
-//! accounting — what the Fig. 6 / Table A benches read out.
+//! accounting — what the Fig. 6 / Table A benches read out — plus the
+//! per-stage compression timers (`Split -> Quant -> Concat`, DESIGN.md §5)
+//! that quantify what plane-level parallelism buys on the hot path.
 
 use std::time::Duration;
+
+use crate::kvcache::store::CompressStats;
 
 /// A simple sorted-sample latency recorder (exact percentiles; sample
 //  counts here are small enough that O(n log n) is irrelevant).
@@ -49,12 +53,53 @@ impl LatencyStats {
     }
 }
 
+/// Per-stage compression timing across a run: one [`LatencyStats`] per
+/// `Split -> Quant -> Concat` stage (Alg. 2/3), recorded at every prefill
+/// compression and streaming recompression cycle.
+#[derive(Debug, Clone, Default)]
+pub struct CompressStageStats {
+    /// Split: grouping tokens by precision class.
+    pub split: LatencyStats,
+    /// Quant: wall-clock of the plane fan-out + join (shrinks with the
+    /// `parallelism` knob).
+    pub quant_wall: LatencyStats,
+    /// Quant: CPU time summed across pool workers (roughly constant in
+    /// pool width — `quant_cpu / quant_wall` is the achieved speedup).
+    pub quant_cpu: LatencyStats,
+    /// Concat: assembling the compressed store.
+    pub concat: LatencyStats,
+    /// Pool width of the last recorded pass.
+    pub threads: usize,
+}
+
+impl CompressStageStats {
+    pub fn record(&mut self, st: &CompressStats) {
+        self.split.record_us(st.split_us);
+        self.quant_wall.record_us(st.quant_wall_us);
+        self.quant_cpu.record_us(st.quant_cpu_us);
+        self.concat.record_us(st.concat_us);
+        self.threads = st.threads;
+    }
+
+    /// Mean achieved parallel speedup inside the Quant stage
+    /// (worker CPU time / fan-out wall time); 1.0 when nothing recorded.
+    pub fn mean_quant_speedup(&self) -> f64 {
+        let wall = self.quant_wall.mean_ms();
+        if wall == 0.0 {
+            return 1.0;
+        }
+        self.quant_cpu.mean_ms() / wall
+    }
+}
+
 /// Aggregated engine metrics for one run.
 #[derive(Debug, Clone, Default)]
 pub struct EngineMetrics {
     pub prefill: LatencyStats,
     pub decode: LatencyStats,
     pub compress: LatencyStats,
+    /// Stage-level breakdown of every compression pass (DESIGN.md §5).
+    pub compress_stages: CompressStageStats,
     pub requests_completed: u64,
     pub tokens_generated: u64,
     /// Peak compressed-cache bytes across live sequences.
@@ -69,6 +114,11 @@ impl EngineMetrics {
             self.peak_cache_bytes = used;
             self.peak_cache_baseline_bytes = baseline;
         }
+    }
+
+    /// Record one compression pass's stage timing.
+    pub fn record_compress_stages(&mut self, st: &CompressStats) {
+        self.compress_stages.record(st);
     }
 
     pub fn memory_ratio(&self) -> f64 {
@@ -116,6 +166,23 @@ mod tests {
         m.record_cache(50, 400);
         assert_eq!(m.peak_cache_bytes, 100);
         assert_eq!(m.memory_ratio(), 5.0);
+    }
+
+    #[test]
+    fn stage_stats_record_and_speedup() {
+        let mut m = EngineMetrics::default();
+        m.record_compress_stages(&CompressStats {
+            split_us: 10,
+            quant_wall_us: 100,
+            quant_cpu_us: 300,
+            concat_us: 5,
+            wall_us: 120,
+            planes: 8,
+            threads: 4,
+        });
+        assert_eq!(m.compress_stages.threads, 4);
+        assert_eq!(m.compress_stages.quant_wall.count(), 1);
+        assert!((m.compress_stages.mean_quant_speedup() - 3.0).abs() < 1e-9);
     }
 
     #[test]

@@ -135,6 +135,13 @@ impl PackedCodes {
     pub fn storage_bytes(&self) -> usize {
         self.data.len()
     }
+
+    /// The packed payload itself — read-only byte view, used by the
+    /// parallel/sequential parity digest (`CompressedKV::content_digest`).
+    #[inline]
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.data
+    }
 }
 
 #[cfg(test)]

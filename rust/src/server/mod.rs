@@ -6,6 +6,12 @@
 //! blocking-channel design (std::sync::mpsc) rather than tokio; the public
 //! shape — submit returns a waitable handle, requests interleave through
 //! the continuous batcher — is the same (DESIGN.md §6).
+//!
+//! The engine thread owns the compression worker pool: requests that hit a
+//! prefill or recompression point fan their plane work out across
+//! `cfg.parallelism` threads (DESIGN.md §5) while the serving loop itself
+//! stays single-threaded, so batcher scheduling order — and therefore
+//! per-tag output — is unchanged at any pool width.
 
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TrySendError};
 use std::thread::JoinHandle;

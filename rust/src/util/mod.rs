@@ -12,9 +12,12 @@
 //!   robust statistics (replaces criterion).
 //! * [`prop`]  — property-testing loop over SplitMix64-generated inputs
 //!   (replaces proptest; shrinks by halving failing sizes).
+//! * [`pool`]  — scoped worker pool for plane-level compression
+//!   parallelism (replaces rayon; DESIGN.md §5).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod kvconf;
+pub mod pool;
 pub mod prop;

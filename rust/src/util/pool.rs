@@ -1,0 +1,152 @@
+//! Scoped worker pool for plane-level parallelism (DESIGN.md §5).
+//!
+//! The offline environment ships no rayon/tokio, so this is a small
+//! `std::thread::scope`-based fan-out primitive: [`WorkerPool::run`] maps
+//! an index-addressed job list across up to `threads` workers and joins
+//! the results **in index order**, so callers see exactly the sequential
+//! output regardless of scheduling.  Work is claimed dynamically from an
+//! atomic counter (cheap work-stealing without queues), which keeps
+//! ragged per-item costs balanced.
+//!
+//! Threads are spawned per call rather than kept hot: the compression
+//! jobs this pool exists for (one `(layer, head)` K/V plane each,
+//! Alg. 2/3) run for hundreds of microseconds to milliseconds, so spawn
+//! overhead is noise — and a scoped pool needs no `'static` bounds,
+//! channels, or shutdown protocol.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A fixed-width scoped worker pool.
+///
+/// `threads == 1` is the sequential identity: `run` degenerates to a
+/// plain in-order map on the calling thread, which is what makes the
+/// parallel/sequential parity tests in `rust/tests/parallel_parity.rs`
+/// meaningful.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Build a pool with the given width.  `0` means "one worker per
+    /// available core" (the `parallelism = 0` config default).
+    pub fn new(parallelism: usize) -> Self {
+        let threads = if parallelism == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            parallelism
+        };
+        WorkerPool { threads: threads.max(1) }
+    }
+
+    /// The sequential pool (width 1) — the bit-identical reference path.
+    pub fn sequential() -> Self {
+        WorkerPool { threads: 1 }
+    }
+
+    /// Worker count this pool fans out to.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Evaluate `f(0), f(1), .., f(n-1)` across the pool and return the
+    /// results in index order.
+    ///
+    /// Each index is evaluated exactly once by exactly one worker, and
+    /// `f` never observes partial results of other indices — so for any
+    /// pure `f` the output is identical to `(0..n).map(f).collect()`,
+    /// independent of the pool width.  Panics in `f` propagate.
+    pub fn run<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.threads == 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let workers = self.threads.min(n);
+        let next = AtomicUsize::new(0);
+        let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut out = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            out.push((i, f(i)));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("pool worker panicked"))
+                .collect()
+        });
+        let mut items: Vec<(usize, T)> = Vec::with_capacity(n);
+        for part in parts {
+            items.extend(part);
+        }
+        items.sort_unstable_by_key(|&(i, _)| i);
+        items.into_iter().map(|(_, t)| t).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn matches_sequential_map() {
+        let f = |i: usize| (i * i) as u64;
+        let want: Vec<u64> = (0..257).map(f).collect();
+        for threads in [1, 2, 3, 8, 64] {
+            let pool = WorkerPool::new(threads);
+            assert_eq!(pool.run(257, f), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn each_index_runs_exactly_once() {
+        let calls = AtomicU64::new(0);
+        let pool = WorkerPool::new(4);
+        let out = pool.run(1000, |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 1000);
+        assert_eq!(out, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ragged_workloads_stay_ordered() {
+        // Wildly uneven per-item cost must not reorder results.
+        let pool = WorkerPool::new(8);
+        let out = pool.run(64, |i| {
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            i * 3
+        });
+        assert_eq!(out, (0..64).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.run(0, |i| i), Vec::<usize>::new());
+        assert_eq!(pool.run(1, |i| i + 9), vec![9]);
+    }
+
+    #[test]
+    fn auto_width_is_positive() {
+        assert!(WorkerPool::new(0).threads() >= 1);
+        assert_eq!(WorkerPool::sequential().threads(), 1);
+        assert_eq!(WorkerPool::new(5).threads(), 5);
+    }
+}

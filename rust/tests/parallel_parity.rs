@@ -1,0 +1,152 @@
+//! Parallel/sequential parity contract (DESIGN.md §5): compressing the
+//! same cache through the plane-level worker pool must produce planes that
+//! are **byte-identical** to the sequential path — same packed codes, same
+//! quantization parameters, same accounting — at every pool width.  Plus:
+//! the continuous batcher must preserve per-tag outputs when the engine
+//! compresses through a wide pool (artifact-gated, skipped when the AOT
+//! artifacts are not built).
+
+use zipcache::config::{EngineConfig, PolicyKind};
+use zipcache::coordinator::batcher::{ContinuousBatcher, QueuedRequest};
+use zipcache::coordinator::Engine;
+use zipcache::kvcache::{CacheLayout, CompressedKV, PrecisionClass, QuantSpec};
+use zipcache::quant::Granularity;
+use zipcache::util::pool::WorkerPool;
+use zipcache::workload::rng::SplitMix64;
+use zipcache::workload::{Task, TaskGen};
+
+fn synth_cache(lay: CacheLayout, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = SplitMix64::new(seed);
+    let n = lay.cache_len();
+    let gen = |rng: &mut SplitMix64| -> Vec<f32> {
+        (0..n)
+            .map(|_| (rng.unit_f64() as f32 - 0.5) * 8.0)
+            .collect()
+    };
+    let k = gen(&mut rng);
+    let v = gen(&mut rng);
+    (k, v)
+}
+
+fn mixed_classes(n: usize, seed: u64) -> Vec<PrecisionClass> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|_| match rng.below(6) {
+            0 => PrecisionClass::Fp16,
+            1 => PrecisionClass::Evicted,
+            2 => PrecisionClass::Bits(4),
+            3 => PrecisionClass::Bits(8),
+            _ => PrecisionClass::Bits(2),
+        })
+        .collect()
+}
+
+#[test]
+fn parallel_planes_byte_identical_across_widths() {
+    let lay = CacheLayout { layers: 4, heads: 6, seq: 64, d_head: 16 };
+    let (k, v) = synth_cache(lay, 99);
+    let classes = mixed_classes(48, 7);
+    let seq = CompressedKV::compress(&k, &v, lay, &classes, QuantSpec::default());
+    for threads in [2usize, 3, 4, 7, 16, 0] {
+        let pool = WorkerPool::new(threads);
+        let par = CompressedKV::compress_with_pool(
+            &k, &v, lay, &classes, QuantSpec::default(), &pool);
+        assert_eq!(par.content_digest(), seq.content_digest(),
+                   "threads={} digest diverged", pool.threads());
+        assert_eq!(par.storage_bytes(2), seq.storage_bytes(2));
+        assert_eq!(par.compression_ratio(), seq.compression_ratio());
+        // And the materialized fp32 caches agree exactly.
+        let n = lay.cache_len();
+        let (mut ks, mut vs, mut ms) = (vec![0f32; n], vec![0f32; n],
+                                        vec![0f32; lay.seq]);
+        let (mut kp, mut vp, mut mp) = (vec![0f32; n], vec![0f32; n],
+                                        vec![0f32; lay.seq]);
+        seq.materialize_into(&mut ks, &mut vs, &mut ms);
+        par.materialize_into(&mut kp, &mut vp, &mut mp);
+        assert_eq!(ks, kp);
+        assert_eq!(vs, vp);
+        assert_eq!(ms, mp);
+    }
+}
+
+#[test]
+fn parity_holds_for_every_quant_spec() {
+    let lay = CacheLayout { layers: 2, heads: 3, seq: 40, d_head: 8 };
+    let (k, v) = synth_cache(lay, 3);
+    let classes = mixed_classes(40, 21);
+    let specs = [
+        QuantSpec::default(),
+        QuantSpec { key_gran: Granularity::Token,
+                    value_gran: Granularity::Token },
+        QuantSpec { key_gran: Granularity::Group(4),
+                    value_gran: Granularity::Group(8) },
+        QuantSpec { key_gran: Granularity::ChannelSeparableToken,
+                    value_gran: Granularity::Channel },
+    ];
+    let pool = WorkerPool::new(4);
+    for spec in specs {
+        let seq = CompressedKV::compress(&k, &v, lay, &classes, spec);
+        let par = CompressedKV::compress_with_pool(&k, &v, lay, &classes, spec,
+                                                   &pool);
+        assert_eq!(par.content_digest(), seq.content_digest(), "{spec:?}");
+    }
+}
+
+#[test]
+fn instrumented_stats_are_consistent() {
+    let lay = CacheLayout { layers: 4, heads: 4, seq: 64, d_head: 16 };
+    let (k, v) = synth_cache(lay, 11);
+    let classes = vec![PrecisionClass::Bits(2); 64];
+    let (store, st) = CompressedKV::compress_instrumented(
+        &k, &v, lay, &classes, QuantSpec::default(), &WorkerPool::new(4));
+    assert_eq!(st.planes, 16);
+    assert_eq!(st.threads, 4);
+    assert!(st.wall_us >= st.quant_wall_us);
+    assert!(store.compression_ratio() > 1.0);
+}
+
+// ---- artifact-gated engine/batcher tests ----------------------------------
+
+fn config(parallelism: usize) -> Option<EngineConfig> {
+    let dir = std::env::var("ZIPCACHE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    let mut cfg = EngineConfig::load_default(dir, "micro").ok()?;
+    cfg.policy = PolicyKind::Zipcache;
+    cfg.parallelism = parallelism;
+    Some(cfg)
+}
+
+/// Interleaved scheduling over a wide pool must preserve per-tag outputs:
+/// the exact tokens each tagged request produces are independent of the
+/// compression pool width.
+#[test]
+fn batcher_outputs_stable_under_pool() {
+    let Some(cfg1) = config(1) else { return };
+    let Some(cfg4) = config(4) else { return };
+    let run = |cfg: EngineConfig| -> Vec<(u64, Vec<u16>, f64)> {
+        let mut engine = Engine::new(cfg).unwrap();
+        let info = engine.runtime().model_info().clone();
+        let gen = TaskGen::new(Task::Code, info.max_seq - 4);
+        let mut b = ContinuousBatcher::new(2, 8);
+        for tag in 0..5u64 {
+            b.submit(QueuedRequest {
+                prompt: gen.sample(tag).prompt().to_vec(),
+                max_new: 3,
+                tag,
+            })
+            .unwrap();
+        }
+        b.run_to_completion(&mut engine)
+            .unwrap()
+            .into_iter()
+            .map(|o| (o.tag, o.output.tokens, o.output.compression_ratio))
+            .collect()
+    };
+    let seq = run(cfg1);
+    let par = run(cfg4);
+    assert_eq!(seq.len(), 5);
+    assert_eq!(seq, par, "pool width changed batcher outputs");
+}

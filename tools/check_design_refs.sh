@@ -1,0 +1,30 @@
+#!/usr/bin/env sh
+# Verify that every `DESIGN.md §N` citation in the source tree resolves to
+# a real `## §N` section heading in DESIGN.md.  Run from the repo root.
+set -eu
+
+design="DESIGN.md"
+if [ ! -f "$design" ]; then
+    echo "FAIL: $design missing" >&2
+    exit 1
+fi
+
+fail=0
+# Collect cited section numbers, e.g. `DESIGN.md §5` -> 5.
+refs=$(grep -rhoE 'DESIGN\.md §[0-9]+' rust python examples tools Cargo.toml vendor 2>/dev/null \
+    | sed 's/.*§//' | sort -un)
+
+if [ -z "$refs" ]; then
+    echo "FAIL: no DESIGN.md § references found (checker misconfigured?)" >&2
+    exit 1
+fi
+
+for n in $refs; do
+    if grep -qE "^## §$n " "$design"; then
+        echo "ok: DESIGN.md §$n"
+    else
+        echo "FAIL: DESIGN.md §$n is cited but has no '## §$n' section" >&2
+        fail=1
+    fi
+done
+exit $fail

@@ -1,0 +1,123 @@
+//! Minimal offline stand-in for the `anyhow` crate (DESIGN.md §6).
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! provides exactly the surface the zipcache crate uses: the boxed-message
+//! [`Error`] type, the defaulted [`Result`] alias, and the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros.  Like the real crate, `Error` does
+//! *not* implement `std::error::Error` itself — that keeps the blanket
+//! `From<E: std::error::Error>` conversion coherent, which is what makes
+//! `?` work on `io::Error`, `ParseIntError`, and friends.
+//!
+//! Intentionally omitted (unused in this repo): backtraces, `Context`,
+//! downcasting, and error chaining.
+
+use std::fmt;
+
+/// A boxed error message, convertible from any `std::error::Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built as by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        Ok(s.parse::<u32>()?) // blanket From<ParseIntError>
+    }
+
+    fn guarded(x: i32) -> Result<i32> {
+        ensure!(x > 0, "x must be positive, got {x}");
+        Ok(x)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("17").unwrap(), 17);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad {} at {}", "thing", 3);
+        assert_eq!(e.to_string(), "bad thing at 3");
+        let x = 5;
+        let e = anyhow!("inline {x}");
+        assert_eq!(e.to_string(), "inline 5");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(guarded(2).unwrap(), 2);
+        let err = guarded(-1).unwrap_err();
+        assert!(err.to_string().contains("positive"));
+    }
+}

@@ -24,11 +24,12 @@ use zipcache::Result;
 
 fn main() -> Result<()> {
     let args = Args::new("serve_e2e", "end-to-end batched serving over all workloads")
-        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("artifacts", "artifacts", "artifacts directory (or \"sim\")")
         .flag("model", "tiny", "model config")
         .flag("requests", "24", "requests per workload")
         .flag("rate", "20.0", "arrival rate (req/s)")
         .flag("max-new", "3", "decode budget")
+        .flag("shards", "1", "engine shards (0 = per-core)")
         .flag("policies", "fp16,zipcache", "comma-separated policy list")
         .flag("seed", "0", "trace seed")
         .parse()?;
@@ -53,12 +54,12 @@ fn main() -> Result<()> {
                 EngineConfig::load_default(args.get("artifacts"), &args.get("model"))?;
             cfg.policy = policy;
             cfg.seed = seed;
-            let window = {
-                // derive the window from the artifacts via a probe config
-                let probe = zipcache::runtime::Manifest::load(
-                    cfg.artifacts_dir.join("manifest.json"))?;
-                probe.configs[&cfg.model].max_seq
-            };
+            cfg.scheduler.shards = args.get_usize("shards")?;
+            // derive the window from the artifacts (or sim registry)
+            let window = zipcache::runtime::load_model_info(
+                &cfg.artifacts_dir, &cfg.model)?.max_seq;
+            anyhow::ensure!(max_new >= 1 && max_new < window,
+                            "max-new must be in [1, {window})");
             let server = Server::start(cfg)?;
             let trace = RequestTrace::poisson(task, window - max_new, requests,
                                               rate, max_new, seed);

@@ -1,0 +1,96 @@
+//! Serving-throughput sweep over the sharded engine pool (DESIGN.md §8):
+//! requests/sec and p50/p99 request latency for shard counts x
+//! compression pool widths, driven by an open-loop Poisson trace through
+//! the real server stack (dispatcher -> shards -> continuous batchers).
+//!
+//! Runs on the sim backend, so it needs no artifacts — the numbers
+//! measure the *serving machinery* (dispatch, batching, per-shard
+//! engines, plane-compression pool), not transformer math.  The engine
+//! histogram columns also surface the PR 2 accounting fix: the compress
+//! histogram now times only the recompression block, so its p50 stays
+//! well below the full decode-step p50 instead of engulfing it.
+//!
+//! ```sh
+//! cargo bench --bench serving_throughput
+//! ```
+
+use zipcache::config::EngineConfig;
+use zipcache::server::{loadgen, Server};
+use zipcache::util::bench::Table;
+use zipcache::workload::{RequestTrace, Task};
+
+const REQUESTS: usize = 32;
+const RATE_PER_S: f64 = 400.0;
+const MAX_NEW: usize = 16;
+const SEED: u64 = 42;
+
+fn main() {
+    let mut table = Table::new(&[
+        "shards", "pool", "req/s", "tok/s", "p50 ms", "p99 ms", "rejected",
+        "decode p50 ms", "compress p50 ms", "compress n",
+    ]);
+    // Per-tag outputs must be identical across every (shards, pool)
+    // configuration — the determinism contract the sweep rides on.
+    let mut reference: Option<Vec<(usize, Vec<u16>)>> = None;
+
+    for shards in [1usize, 2, 4] {
+        for pool in [1usize, 2] {
+            let mut cfg = EngineConfig::load_default("sim", "micro")
+                .expect("sim config");
+            cfg.scheduler.shards = shards;
+            cfg.scheduler.max_batch = 4;
+            cfg.parallelism = pool;
+            cfg.quant.recompress_every = 8; // several cycles per request
+            cfg.seed = SEED;
+            let info = zipcache::runtime::load_model_info(
+                &cfg.artifacts_dir, &cfg.model,
+            )
+            .expect("sim model info");
+            let trace = RequestTrace::poisson(
+                Task::Code, info.max_seq - MAX_NEW, REQUESTS, RATE_PER_S,
+                MAX_NEW, SEED,
+            );
+
+            let server = Server::start(cfg).expect("server start");
+            let report = loadgen::replay(&server.handle, &trace).expect("replay");
+            let snap = server.handle.metrics();
+            server.shutdown().expect("shutdown");
+
+            assert_eq!(report.completed, REQUESTS,
+                       "shards={shards} pool={pool}: requests dropped");
+            let outputs: Vec<(usize, Vec<u16>)> = report
+                .outputs
+                .iter()
+                .map(|(i, o)| (*i, o.tokens.clone()))
+                .collect();
+            match &reference {
+                None => reference = Some(outputs),
+                Some(want) => assert_eq!(
+                    want, &outputs,
+                    "shards={shards} pool={pool} changed per-request outputs"
+                ),
+            }
+
+            table.row(&[
+                shards.to_string(),
+                pool.to_string(),
+                format!("{:.1}", report.requests_per_second()),
+                format!("{:.1}", report.tokens_per_second()),
+                format!("{:.1}", report.latency.p50_ms()),
+                format!("{:.1}", report.latency.p99_ms()),
+                report.rejected.to_string(),
+                format!("{:.3}", snap.total.decode.p50_ms()),
+                format!("{:.3}", snap.total.compress.p50_ms()),
+                snap.total.compress.count().to_string(),
+            ]);
+        }
+    }
+
+    println!("\n== serving throughput: {REQUESTS} requests, Poisson \
+              {RATE_PER_S}/s, max_new {MAX_NEW}, sim micro ==");
+    table.print();
+    println!(
+        "\nper-request outputs verified bit-identical across all \
+         shard/pool configurations"
+    );
+}

@@ -89,15 +89,22 @@ impl Default for QuantConfig {
 /// Scheduler/batcher knobs.
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
-    /// Max sequences decoded concurrently (continuous batching width).
+    /// Max sequences decoded concurrently *per shard* (continuous
+    /// batching width).
     pub max_batch: usize,
-    /// Max queued requests before backpressure rejects.
+    /// Max requests waiting for a decode slot across the whole server
+    /// (the single admission boundary — DESIGN.md §8); in-flight capacity
+    /// on top of this is `shards * max_batch`.
     pub queue_depth: usize,
+    /// Engine shards: serving threads that each own an engine, a
+    /// compression worker pool, and a continuous batcher (DESIGN.md §8).
+    /// `0` = one shard per available core.
+    pub shards: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { max_batch: 8, queue_depth: 256 }
+        SchedulerConfig { max_batch: 8, queue_depth: 256, shards: 1 }
     }
 }
 
@@ -152,6 +159,7 @@ impl EngineConfig {
             scheduler: SchedulerConfig {
                 max_batch: c.get_usize("scheduler.max_batch", 8)?,
                 queue_depth: c.get_usize("scheduler.queue_depth", 256)?,
+                shards: c.get_usize("scheduler.shards", 1)?,
             },
             parallelism: c.get_usize("parallelism", 0)?,
             seed: c.get_u64("seed", 0)?,
@@ -233,6 +241,17 @@ max_batch = 4
         std::fs::write(&path, text).unwrap();
         let c = EngineConfig::from_file(&path).unwrap();
         assert_eq!(c.parallelism, 4);
+    }
+
+    #[test]
+    fn shards_from_file_and_default() {
+        let text = "model = \"tiny\"\n[scheduler]\nshards = 4\n";
+        let path = std::env::temp_dir().join("zipcache_cfg_shards_test.conf");
+        std::fs::write(&path, text).unwrap();
+        let c = EngineConfig::from_file(&path).unwrap();
+        assert_eq!(c.scheduler.shards, 4);
+        let d = EngineConfig::load_default("sim", "micro").unwrap();
+        assert_eq!(d.scheduler.shards, 1);
     }
 
     #[test]

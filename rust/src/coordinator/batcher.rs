@@ -6,6 +6,12 @@
 //! behaviour (admission, fairness, completion-triggered refill from the
 //! queue) is the part of the serving stack the paper's efficiency claims
 //! interact with.  DESIGN.md records this substitution.
+//!
+//! `queue_depth` only applies when the batcher is driven directly (bench
+//! harnesses, run_to_completion).  Under the sharded server the
+//! dispatcher is the single admission point and feeds the batcher
+//! strictly within its free decode slots, so this depth never stacks on
+//! the server's boundary (DESIGN.md §8).
 
 use std::collections::VecDeque;
 

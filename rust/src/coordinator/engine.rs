@@ -104,13 +104,19 @@ impl Engine {
         let info = self.rt.model_info().clone();
         let layout = info.cache_layout();
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(max_new >= 1, "max_new must be >= 1 (a zero decode \
+                         budget would still emit the prompt-tail token)");
         anyhow::ensure!(prompt.len() + max_new <= info.max_seq,
                       "prompt {} + budget {max_new} exceeds window {}",
                       prompt.len(), info.max_seq);
 
         let id = self.next_session_id;
         self.next_session_id += 1;
-        let seed = self.cfg.seed ^ id.wrapping_mul(0x9E37_79B9);
+        // Seed from the request *content*, never from admission order: two
+        // servers admitting the same request in different orders (or
+        // across different shard counts — DESIGN.md §8) must probe the
+        // same positions and generate the same tokens.
+        let seed = request_seed(self.cfg.seed, &prompt, max_new);
         let mut s = Session::new(id, prompt, max_new, layout,
                                  self.cfg.quant.recompress_every, seed);
 
@@ -260,28 +266,29 @@ impl Engine {
             s.stream.record(&a_row[..smax], s.pos - 1);
         }
 
-        // Recompression cycle.
+        // Recompression cycle.  Timed with its own Instant: the compress
+        // histogram must cover only the recompression block (saliency
+        // merge + Split->Quant->Concat), not the decode artifact execution
+        // and row writes above — and the decode histogram must exclude the
+        // recompression span, or both would double-count the same wall
+        // time (the bug fixed in PR 2).
+        let mut compress_us = 0u64;
         if s.stream.step() {
+            let tc = Instant::now();
             let n_live = s.pos;
             if let Some(stream_sal) = s.stream.take_saliency(smax) {
-                // merge: streaming estimate where observed, prefill elsewhere
-                if s.norm_saliency.len() < smax {
-                    s.norm_saliency.resize(smax, 0.0);
-                }
-                for i in 0..smax {
-                    if stream_sal[i] > 0.0 {
-                        s.norm_saliency[i] = stream_sal[i];
-                    }
-                }
+                merge_streaming_saliency(&mut s.norm_saliency, &stream_sal);
             }
             self.compress_session(s, n_live)?;
-            self.metrics.compress.record_us(t0.elapsed().as_micros() as u64);
+            compress_us = tc.elapsed().as_micros() as u64;
+            self.metrics.compress.record_us(compress_us);
         }
 
         s.next_token = argmax(&logits) as u16;
         s.prompt_tail_pending = false;
-        s.decode_us += t0.elapsed().as_micros() as u64;
-        self.metrics.decode.record_us(t0.elapsed().as_micros() as u64);
+        let step_us = t0.elapsed().as_micros() as u64;
+        s.decode_us += step_us; // session wall time keeps the full step
+        self.metrics.decode.record_us(step_us.saturating_sub(compress_us));
         Ok(if emitting { Some(tok) } else { None })
     }
 
@@ -308,6 +315,37 @@ impl Engine {
         self.metrics.record_cache(s.cache_bytes,
                                   layout.fp16_baseline_bytes(n_live));
         Ok(())
+    }
+}
+
+/// Per-request seed: FNV-1a over the prompt tokens and budget, mixed with
+/// the engine's base seed.  A pure function of the request content, so the
+/// probe selection and streaming-probe draws it feeds are independent of
+/// admission order, batcher interleaving, and shard placement
+/// (DESIGN.md §8's determinism contract).
+pub fn request_seed(base: u64, prompt: &[u16], max_new: usize) -> u64 {
+    const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = FNV_OFFSET;
+    for &t in prompt {
+        h = (h ^ t as u64).wrapping_mul(FNV_PRIME);
+    }
+    h = (h ^ max_new as u64).wrapping_mul(FNV_PRIME);
+    // SplitMix64 finalize so low-entropy prompts still disperse.
+    crate::workload::rng::splitmix_mix(h ^ base)
+}
+
+/// The streaming-saliency merge rule (Alg. 3): positions the probe cycle
+/// observed (estimate > 0) take the fresh streaming estimate; everything
+/// else keeps its prior (prefill or earlier-cycle) value.
+pub fn merge_streaming_saliency(norm: &mut Vec<f32>, stream_sal: &[f32]) {
+    if norm.len() < stream_sal.len() {
+        norm.resize(stream_sal.len(), 0.0);
+    }
+    for (n, &s) in norm.iter_mut().zip(stream_sal) {
+        if s > 0.0 {
+            *n = s;
+        }
     }
 }
 
@@ -369,5 +407,31 @@ mod tests {
     fn argmax_basics() {
         assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
         assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn request_seed_is_content_derived() {
+        let p1 = vec![1u16, 2, 3];
+        let p2 = vec![1u16, 2, 4];
+        assert_eq!(request_seed(0, &p1, 4), request_seed(0, &p1, 4));
+        assert_ne!(request_seed(0, &p1, 4), request_seed(0, &p2, 4));
+        assert_ne!(request_seed(0, &p1, 4), request_seed(0, &p1, 5));
+        assert_ne!(request_seed(0, &p1, 4), request_seed(7, &p1, 4));
+    }
+
+    #[test]
+    fn merge_overwrites_only_observed_positions() {
+        let mut norm = vec![0.5, 0.6, 0.7, 0.8];
+        merge_streaming_saliency(&mut norm, &[0.0, 0.9, 0.0, 0.1]);
+        assert_eq!(norm, vec![0.5, 0.9, 0.7, 0.1]);
+    }
+
+    #[test]
+    fn merge_grows_short_prior() {
+        // A session whose prefill saliency was shorter than the window
+        // (flash path resizing) must extend before merging.
+        let mut norm = vec![0.5];
+        merge_streaming_saliency(&mut norm, &[0.0, 0.2, 0.0]);
+        assert_eq!(norm, vec![0.5, 0.2, 0.0]);
     }
 }

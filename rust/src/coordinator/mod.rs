@@ -14,5 +14,5 @@ pub mod engine;
 pub mod session;
 
 pub use batcher::{BatchOutcome, ContinuousBatcher};
-pub use engine::{Engine, GenerationOutput};
+pub use engine::{merge_streaming_saliency, request_seed, Engine, GenerationOutput};
 pub use session::Session;

@@ -8,8 +8,7 @@ use zipcache::config::{EngineConfig, PolicyKind};
 use zipcache::coordinator::Engine;
 use zipcache::eval::{score_generation, AccuracyReport};
 use zipcache::kvcache::ratio::RatioShape;
-use zipcache::metrics::LatencyStats;
-use zipcache::server::Server;
+use zipcache::server::{loadgen, Server};
 use zipcache::util::cli::Args;
 use zipcache::workload::{RequestTrace, Task, TaskGen};
 use zipcache::Result;
@@ -34,6 +33,7 @@ fn main() -> Result<()> {
     .flag("policy", "zipcache", "fp16|h2o|gear|kivi|mikv|zipcache")
     .flag("saliency-ratio", "0.6", "fraction of tokens at high precision")
     .flag("parallelism", "0", "compression worker threads (0 = per-core)")
+    .flag("shards", "1", "serve: engine shards (0 = per-core)")
     .flag("config", "", "optional key=value config file (overrides flags)")
     .flag("task", "gsm", "gsm | code | linesN (e.g. lines20)")
     .flag("samples", "50", "eval: number of samples")
@@ -78,6 +78,7 @@ fn build_config(args: &Args) -> Result<EngineConfig> {
     cfg.policy = args.get("policy").parse::<PolicyKind>()?;
     cfg.quant.saliency_ratio = args.get_f64("saliency-ratio")?;
     cfg.parallelism = args.get_usize("parallelism")?;
+    cfg.scheduler.shards = args.get_usize("shards")?;
     cfg.seed = args.get_u64("seed")?;
     cfg.validate()?;
     Ok(cfg)
@@ -156,38 +157,46 @@ fn eval(cfg: EngineConfig, task: Task, samples: usize, max_new: usize, seed: u64
 
 fn serve(cfg: EngineConfig, task: Task, requests: usize, rate: f64, max_new: usize)
          -> Result<()> {
+    // Window sizing: leave decode headroom inside the model's window.
+    let info = zipcache::runtime::load_model_info(&cfg.artifacts_dir, &cfg.model)?;
+    anyhow::ensure!(max_new >= 1 && max_new < info.max_seq,
+                    "max-new must be in [1, {}) for model '{}'",
+                    info.max_seq, cfg.model);
     let server = Server::start(cfg.clone())?;
-    // Window sizing: leave decode headroom inside the fixed window.
-    let trace = RequestTrace::poisson(task, 256 - max_new, requests, rate,
+    let trace = RequestTrace::poisson(task, info.max_seq - max_new, requests, rate,
                                       max_new, cfg.seed);
-    let t0 = std::time::Instant::now();
-    let mut workers = Vec::new();
-    for e in trace.entries {
-        let h = server.handle.clone();
-        workers.push(std::thread::spawn(move || {
-            std::thread::sleep(std::time::Duration::from_millis(e.arrival_ms as u64));
-            let t_sub = std::time::Instant::now();
-            let out = h.generate(e.sample.prompt().to_vec(), e.max_new_tokens);
-            (t_sub.elapsed(), e.sample, out)
-        }));
+    let report = loadgen::replay(&server.handle, &trace)?;
+
+    let mut acc = AccuracyReport::default();
+    for (i, out) in &report.outputs {
+        acc.add(score_generation(&trace.entries[*i].sample, &out.tokens));
     }
-    let mut report = AccuracyReport::default();
-    let mut lat = LatencyStats::default();
-    let mut tokens = 0usize;
-    for w in workers {
-        let (dur, sample, out) = w.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
-        let out = out?;
-        report.add(score_generation(&sample, &out.tokens));
-        lat.record(dur);
-        tokens += out.tokens.len();
-    }
-    let wall = t0.elapsed();
     println!(
-        "served {requests} requests in {:.2}s — {:.1} tok/s, acc {:.1}%",
-        wall.as_secs_f64(),
-        tokens as f64 / wall.as_secs_f64(),
-        report.accuracy_pct
+        "served {}/{requests} requests in {:.2}s across {} shard(s) — \
+         {:.1} req/s, {:.1} tok/s, acc {:.1}% (rejected {}, failed {})",
+        report.completed,
+        report.wall.as_secs_f64(),
+        server.handle.shards(),
+        report.requests_per_second(),
+        report.tokens_per_second(),
+        acc.accuracy_pct,
+        report.rejected,
+        report.failed,
     );
-    println!("request latency p50={:.0}ms p99={:.0}ms", lat.p50_ms(), lat.p99_ms());
+    println!("request latency p50={:.0}ms p99={:.0}ms",
+             report.latency.p50_ms(), report.latency.p99_ms());
+    let snap = server.handle.metrics();
+    println!(
+        "engine histograms: prefill p50={:.2}ms decode/step p50={:.3}ms \
+         compress p50={:.3}ms (n={})",
+        snap.total.prefill.p50_ms(),
+        snap.total.decode.p50_ms(),
+        snap.total.compress.p50_ms(),
+        snap.total.compress.count(),
+    );
+    for (i, m) in snap.per_shard.iter().enumerate() {
+        println!("  shard {i}: {} req, {} tok", m.requests_completed,
+                 m.tokens_generated);
+    }
     server.shutdown()
 }

@@ -51,6 +51,12 @@ impl LatencyStats {
     pub fn p99_ms(&self) -> f64 {
         self.percentile_ms(99.0)
     }
+
+    /// Fold another recorder's samples into this one (shard aggregation:
+    /// percentiles over the union are exact, not averaged).
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
 }
 
 /// Per-stage compression timing across a run: one [`LatencyStats`] per
@@ -89,6 +95,15 @@ impl CompressStageStats {
             return 1.0;
         }
         self.quant_cpu.mean_ms() / wall
+    }
+
+    /// Fold another shard's stage timings into this one.
+    pub fn merge(&mut self, other: &CompressStageStats) {
+        self.split.merge(&other.split);
+        self.quant_wall.merge(&other.quant_wall);
+        self.quant_cpu.merge(&other.quant_cpu);
+        self.concat.merge(&other.concat);
+        self.threads = self.threads.max(other.threads);
     }
 }
 
@@ -133,6 +148,50 @@ impl EngineMetrics {
             return 0.0;
         }
         self.tokens_generated as f64 / wall.as_secs_f64()
+    }
+
+    /// Fold another engine's metrics into this one: histograms take the
+    /// sample union, counters sum, and the peak-cache pair follows the
+    /// shard with the larger peak (it is a single-sequence high-water
+    /// mark, not an additive quantity).
+    pub fn merge(&mut self, other: &EngineMetrics) {
+        self.prefill.merge(&other.prefill);
+        self.decode.merge(&other.decode);
+        self.compress.merge(&other.compress);
+        self.compress_stages.merge(&other.compress_stages);
+        self.requests_completed += other.requests_completed;
+        self.tokens_generated += other.tokens_generated;
+        if other.peak_cache_bytes > self.peak_cache_bytes {
+            self.peak_cache_bytes = other.peak_cache_bytes;
+            self.peak_cache_baseline_bytes = other.peak_cache_baseline_bytes;
+        }
+    }
+}
+
+/// A coherent read of a sharded server's metrics (DESIGN.md §8): the
+/// per-shard [`EngineMetrics`] as captured, plus their aggregate.  Built
+/// by [`MetricsSnapshot::aggregate`]; obtained from a running server via
+/// `ServerHandle::metrics`.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// Union/sum across shards (histogram percentiles are exact over the
+    /// pooled samples).
+    pub total: EngineMetrics,
+    /// One entry per shard, in shard-index order.
+    pub per_shard: Vec<EngineMetrics>,
+}
+
+impl MetricsSnapshot {
+    pub fn aggregate(per_shard: Vec<EngineMetrics>) -> Self {
+        let mut total = EngineMetrics::default();
+        for m in &per_shard {
+            total.merge(m);
+        }
+        MetricsSnapshot { total, per_shard }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.per_shard.len()
     }
 }
 
@@ -190,5 +249,33 @@ mod tests {
         let mut m = EngineMetrics::default();
         m.tokens_generated = 200;
         assert!((m.tokens_per_second(Duration::from_secs(4)) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_aggregates_across_shards() {
+        let mut a = EngineMetrics::default();
+        a.requests_completed = 3;
+        a.tokens_generated = 30;
+        a.decode.record_us(1000);
+        a.decode.record_us(3000);
+        a.record_cache(100, 500);
+        let mut b = EngineMetrics::default();
+        b.requests_completed = 2;
+        b.tokens_generated = 20;
+        b.decode.record_us(2000);
+        b.record_cache(200, 800);
+        let snap = MetricsSnapshot::aggregate(vec![a, b]);
+        assert_eq!(snap.shards(), 2);
+        assert_eq!(snap.total.requests_completed, 5);
+        assert_eq!(snap.total.tokens_generated, 50);
+        // pooled samples: exact percentiles over the union
+        assert_eq!(snap.total.decode.count(), 3);
+        assert!((snap.total.decode.p50_ms() - 2.0).abs() < 1e-9);
+        // peak follows the larger shard's pair
+        assert_eq!(snap.total.peak_cache_bytes, 200);
+        assert_eq!(snap.total.peak_cache_baseline_bytes, 800);
+        // per-shard breakdown preserved
+        assert_eq!(snap.per_shard[0].requests_completed, 3);
+        assert_eq!(snap.per_shard[1].requests_completed, 2);
     }
 }

@@ -1,6 +1,8 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
-//! CPU PJRT client.  This is the only place the `xla` crate is touched;
-//! everything above works with plain `Tensor`s.
+//! Model runtime behind the engine: either the PJRT backend executing the
+//! AOT HLO-text artifacts on the CPU PJRT client, or the deterministic
+//! simulated backend ([`sim`], selected with `artifacts_dir = "sim"`) that
+//! needs no artifacts at all.  This is the only place the `xla` crate is
+//! touched; everything above works with plain `Tensor`s.
 //!
 //! Interchange is HLO **text** (see `python/compile/aot.py` and
 //! /opt/xla-example/README.md): jax >= 0.5 emits 64-bit instruction ids in
@@ -8,9 +10,11 @@
 //! reassigns ids and round-trips cleanly.
 
 pub mod manifest;
+pub mod sim;
 pub mod tensor;
 
 pub use manifest::{EntryInfo, Manifest, ModelInfo};
+pub use sim::{sim_model_info, SimModel, SIM_ARTIFACTS_DIR};
 pub use tensor::Tensor;
 
 use std::collections::HashMap;
@@ -18,20 +22,58 @@ use std::path::{Path, PathBuf};
 
 use crate::Result;
 
-/// A loaded model runtime: compiled executables for every entry point of
-/// one model config.
+/// Model hyper-parameters for `model` under `dir` *without* compiling
+/// anything: the sim registry for the `"sim"` sentinel, otherwise a plain
+/// manifest read.  Lets callers size windows/traces before (or without)
+/// paying runtime construction.
+pub fn load_model_info(dir: impl AsRef<Path>, model: &str) -> Result<ModelInfo> {
+    let dir = dir.as_ref();
+    if dir.as_os_str() == SIM_ARTIFACTS_DIR {
+        return sim_model_info(model)
+            .ok_or_else(|| anyhow::anyhow!("sim backend has no model '{model}'"));
+    }
+    let manifest = Manifest::load(dir.join("manifest.json"))?;
+    manifest
+        .configs
+        .get(model)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("model '{model}' not in manifest"))
+}
+
+/// Execution backend: compiled PJRT executables or the sim model.
+enum Backend {
+    Pjrt {
+        #[allow(dead_code)] // owns the executables' device context
+        client: xla::PjRtClient,
+        exes: HashMap<String, xla::PjRtLoadedExecutable>,
+        info: ModelInfo,
+    },
+    Sim(SimModel),
+}
+
+/// A loaded model runtime: every entry point of one model config, ready
+/// to execute (no JIT on the request path).
 pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
+    backend: Backend,
     model: String,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-    dir: PathBuf,
 }
 
 impl Runtime {
-    /// Load `manifest.json` from `dir` and compile all entries of `model`.
+    /// Load a runtime for `model` from `dir`.  The sentinel directory
+    /// `"sim"` selects the artifact-free simulated backend; anything else
+    /// loads `manifest.json` and compiles all the model's entries.
     pub fn load(dir: impl AsRef<Path>, model: &str) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
+        if dir.as_os_str() == SIM_ARTIFACTS_DIR {
+            return Ok(Runtime {
+                backend: Backend::Sim(SimModel::new(model)?),
+                model: model.to_string(),
+            });
+        }
+        Self::load_pjrt(dir, model)
+    }
+
+    fn load_pjrt(dir: PathBuf, model: &str) -> Result<Self> {
         let manifest = Manifest::load(dir.join("manifest.json"))?;
         anyhow::ensure!(
             manifest.configs.contains_key(model),
@@ -39,58 +81,49 @@ impl Runtime {
             manifest.configs.keys().collect::<Vec<_>>()
         );
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let mut rt = Runtime {
-            client,
-            manifest,
-            model: model.to_string(),
-            exes: HashMap::new(),
-            dir,
-        };
+        let mut exes = HashMap::new();
         // Compile every entry belonging to this model eagerly: serving must
         // never JIT on the request path.
-        let names: Vec<String> = rt
-            .manifest
-            .entries
-            .iter()
-            .filter(|(_, e)| e.config == model)
-            .map(|(n, _)| n.clone())
-            .collect();
-        for name in names {
-            rt.compile_entry(&name)?;
+        for (name, entry) in manifest.entries.iter().filter(|(_, e)| e.config == model) {
+            let path = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+            exes.insert(name.clone(), exe);
         }
-        Ok(rt)
+        let info = manifest.configs[model].clone();
+        Ok(Runtime {
+            backend: Backend::Pjrt { client, exes, info },
+            model: model.to_string(),
+        })
     }
 
-    fn compile_entry(&mut self, name: &str) -> Result<()> {
-        let entry = self
-            .manifest
-            .entries
-            .get(name)
-            .ok_or_else(|| anyhow::anyhow!("unknown entry '{name}'"))?;
-        let path = self.dir.join(&entry.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
-        self.exes.insert(name.to_string(), exe);
-        Ok(())
-    }
-
-    /// Model hyper-parameters from the manifest.
+    /// Model hyper-parameters (from the manifest, or the sim registry).
     pub fn model_info(&self) -> &ModelInfo {
-        &self.manifest.configs[&self.model]
+        match &self.backend {
+            Backend::Pjrt { info, .. } => info,
+            Backend::Sim(m) => m.info(),
+        }
     }
 
     pub fn model_name(&self) -> &str {
         &self.model
     }
 
-    /// Names of the compiled entries.
-    pub fn entries(&self) -> Vec<&str> {
-        self.exes.keys().map(|s| s.as_str()).collect()
+    /// True when running on the simulated backend.
+    pub fn is_sim(&self) -> bool {
+        matches!(self.backend, Backend::Sim(_))
+    }
+
+    /// Names of the executable entries.
+    pub fn entries(&self) -> Vec<String> {
+        match &self.backend {
+            Backend::Pjrt { exes, .. } => exes.keys().cloned().collect(),
+            Backend::Sim(m) => m.entries(),
+        }
     }
 
     /// Entry-point name helper: e.g. `entry("decode") == "decode_tiny"`.
@@ -102,10 +135,14 @@ impl Runtime {
     ///
     /// The AOT side lowers with `return_tuple=True`, so the single output
     /// literal is a tuple; it is decomposed into one `Tensor` per manifest
-    /// output name, in order.
+    /// output name, in order.  The sim backend produces the same output
+    /// order and shapes directly.
     pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let exe = self
-            .exes
+        let exes = match &self.backend {
+            Backend::Sim(m) => return m.execute(name, inputs),
+            Backend::Pjrt { exes, .. } => exes,
+        };
+        let exe = exes
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("entry '{name}' not compiled"))?;
         let lits: Vec<xla::Literal> = inputs

@@ -1,0 +1,436 @@
+//! Deterministic simulated runtime backend (`artifacts_dir = "sim"`).
+//!
+//! The offline build environment cannot compile or execute the AOT HLO
+//! artifacts (the vendored `xla` crate is a stub — DESIGN.md §6), which
+//! used to leave the whole serving stack untestable without a GPU-class
+//! toolchain.  This backend stands in for the PJRT executables with a
+//! *pure deterministic function* of the same entry-point signatures
+//! (`prefill_full`, `prefill_flash`, `decode` — same input order, same
+//! output order and shapes as `python/compile/aot.py` lowers), so the
+//! engine, batcher, sharded server, benches and CI smoke tests run
+//! end-to-end with no artifacts present (DESIGN.md §8).
+//!
+//! It is **not** a transformer: token/position-keyed hash projections
+//! stand in for the weights.  What it preserves is exactly what the
+//! serving-layer tests need:
+//!
+//! * **Determinism** — every output is a pure function of the inputs, so
+//!   per-request outputs are bit-identical regardless of scheduling,
+//!   pool width or shard count.
+//! * **Cache sensitivity** — decode logits read the session's
+//!   materialized value cache, so quantization policy genuinely changes
+//!   trajectories (compression is not a no-op here).
+//! * **Attention structure** — attention rows are positive, normalized
+//!   over valid columns, and carry persistent column-salient positions,
+//!   so the saliency/streaming-probe machinery sees realistic input.
+
+use crate::runtime::{ModelInfo, Tensor};
+use crate::workload::rng::splitmix_mix;
+use crate::Result;
+
+/// The `artifacts_dir` sentinel that selects this backend.
+pub const SIM_ARTIFACTS_DIR: &str = "sim";
+
+/// Built-in model configs mirroring `python/compile/model.py::CONFIGS`
+/// (vocab/layer/head/window dims identical, probe_count = 10% of window).
+pub fn sim_model_info(model: &str) -> Option<ModelInfo> {
+    let (vocab, d_model, n_layers, n_heads, d_ff, max_seq) = match model {
+        "micro" => (256, 64, 2, 4, 192, 64),
+        "tiny" => (256, 128, 2, 4, 384, 256),
+        "base" => (256, 256, 4, 8, 768, 512),
+        _ => return None,
+    };
+    let d_head = d_model / n_heads;
+    let per_layer = 4 * d_model * d_model + 3 * d_model * d_ff + 2 * d_model;
+    Some(ModelInfo {
+        vocab,
+        d_model,
+        n_layers,
+        n_heads,
+        d_head,
+        d_ff,
+        max_seq,
+        probe_count: (max_seq as f64 * 0.10).round() as usize,
+        n_params: vocab * d_model + n_layers * per_layer + d_model,
+        trained: None,
+    })
+}
+
+/// Combine up to four coordinates into one hash (shared SplitMix64
+/// output step — see `workload::rng::splitmix_mix`).
+#[inline]
+fn key(tag: u64, a: u64, b: u64, c: u64) -> u64 {
+    splitmix_mix(tag ^ splitmix_mix(a ^ splitmix_mix(b ^ splitmix_mix(c))))
+}
+
+/// Map a hash to f32 in [-1, 1): the top 24 bits over 2^23, recentered.
+#[inline]
+fn unit(h: u64) -> f32 {
+    ((h >> 40) as f32 / (1u64 << 23) as f32) - 1.0
+}
+
+// Domain-separation tags for the hash families.
+const TAG_KV: u64 = 0x6B76;
+const TAG_COL: u64 = 0x636F;
+const TAG_PAIR: u64 = 0x7072;
+const TAG_LOGIT: u64 = 0x6C67;
+const TAG_PROJ: u64 = 0x706A;
+
+/// A simulated model: the three entry points over one built-in config.
+#[derive(Debug, Clone)]
+pub struct SimModel {
+    info: ModelInfo,
+    model: String,
+}
+
+impl SimModel {
+    pub fn new(model: &str) -> Result<Self> {
+        let info = sim_model_info(model).ok_or_else(|| {
+            anyhow::anyhow!("sim backend has no model '{model}' (micro|tiny|base)")
+        })?;
+        Ok(SimModel { info, model: model.to_string() })
+    }
+
+    pub fn info(&self) -> &ModelInfo {
+        &self.info
+    }
+
+    /// Entry names, matching the manifest convention (`decode_micro`, ...).
+    pub fn entries(&self) -> Vec<String> {
+        ["prefill_full", "prefill_flash", "decode"]
+            .iter()
+            .map(|k| format!("{k}_{}", self.model))
+            .collect()
+    }
+
+    /// One pseudo K/V cache element for (k-or-v, layer, head, pos, chan)
+    /// holding token `tok` — the same function at prefill and decode, so a
+    /// decode-written row equals the row prefill would have produced.
+    #[inline]
+    fn kv_elem(&self, which: u64, l: usize, h: usize, pos: usize, ch: usize,
+               tok: u16) -> f32 {
+        let a = ((l as u64) << 32) | (h as u64);
+        let b = ((pos as u64) << 32) | (ch as u64);
+        unit(key(TAG_KV ^ which, a, b, tok as u64))
+    }
+
+    /// One attention row for the query `(tok, qpos)` at layer `l`:
+    /// positive weights over valid columns `<= qpos`, normalized to sum 1.
+    /// A column-intrinsic factor makes some positions persistently hot
+    /// (the "salient tokens" the saliency machinery must find); a
+    /// pair term adds per-query variation.
+    fn attn_row(&self, l: usize, tok: u16, qpos: usize, valid: &[f32]) -> Vec<f32> {
+        let smax = self.info.max_seq;
+        let mut row = vec![0f32; smax];
+        let mut sum = 0f32;
+        for (j, w) in row.iter_mut().enumerate().take(smax) {
+            if j > qpos || valid[j] <= 0.0 {
+                continue;
+            }
+            let col = 1.6 + unit(key(TAG_COL, l as u64, j as u64, 0));
+            let pair = 1.0
+                + 0.25
+                    * unit(key(TAG_PAIR, l as u64,
+                               ((qpos as u64) << 32) | (j as u64),
+                               tok as u64));
+            let v = col * col * pair;
+            *w = v;
+            sum += v;
+        }
+        if sum > 0.0 {
+            let inv = 1.0 / sum;
+            for w in row.iter_mut() {
+                *w *= inv;
+            }
+        }
+        row
+    }
+
+    /// Next-token logits for `(tok, pos)` reading the (possibly
+    /// quantized) value cache through the layer-0 attention row — this is
+    /// what makes compression policy observable in sim trajectories.
+    fn logits(&self, tok: u16, pos: usize, vbuf: &[f32], valid: &[f32]) -> Vec<f32> {
+        let dh = self.info.d_head;
+        let arow = self.attn_row(0, tok, pos, valid);
+        // Aggregate the (l=0, h=0) value plane — the first plane of the
+        // [L, H, S, dh] buffer — under the row weights.
+        let mut sig = vec![0f32; dh];
+        for (j, &w) in arow.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            let off = j * dh;
+            for (c, s) in sig.iter_mut().enumerate() {
+                *s += w * vbuf[off + c];
+            }
+        }
+        let mut logits = vec![0f32; self.info.vocab];
+        for (v, lg) in logits.iter_mut().enumerate() {
+            let mut x = 1.2 * unit(key(TAG_LOGIT, v as u64, tok as u64, 0));
+            for (c, &s) in sig.iter().enumerate() {
+                x += 0.35 * s * unit(key(TAG_PROJ, v as u64, c as u64, 0));
+            }
+            *lg = x;
+        }
+        logits
+    }
+
+    /// Dispatch one entry point.  `name` must be one of [`Self::entries`].
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let kind = name
+            .strip_suffix(&format!("_{}", self.model))
+            .ok_or_else(|| anyhow::anyhow!("sim: entry '{name}' not for model '{}'",
+                                           self.model))?;
+        match kind {
+            "prefill_full" => self.prefill(inputs, true),
+            "prefill_flash" => self.prefill(inputs, false),
+            "decode" => self.decode(inputs),
+            other => anyhow::bail!("sim: unknown entry kind '{other}'"),
+        }
+    }
+
+    /// Shared prefill: fills the KV cache for the prompt rows and computes
+    /// saliency.  `full` emits (logits, k, v, acc_sal, norm_sal); the
+    /// flash path emits (logits, k, v, norm_sal) with saliency estimated
+    /// from the probe rows only (Alg. 2).
+    fn prefill(&self, inputs: &[Tensor], full: bool) -> Result<Vec<Tensor>> {
+        let info = &self.info;
+        let (smax, layers, heads, dh) =
+            (info.max_seq, info.n_layers, info.n_heads, info.d_head);
+        anyhow::ensure!(inputs.len() >= 2, "sim prefill: need tokens + valid");
+        let tokens: Vec<u16> = match &inputs[0] {
+            Tensor::I32 { data, .. } => data.iter().map(|&t| t as u16).collect(),
+            _ => anyhow::bail!("sim prefill: tokens must be i32"),
+        };
+        let valid = inputs[1].as_f32().to_vec();
+        anyhow::ensure!(tokens.len() == smax && valid.len() == smax,
+                        "sim prefill: window mismatch");
+        let n = valid.iter().filter(|&&v| v > 0.0).count();
+
+        // KV cache rows for the prompt.
+        let mut k = vec![0f32; layers * heads * smax * dh];
+        let mut v = vec![0f32; layers * heads * smax * dh];
+        for l in 0..layers {
+            for h in 0..heads {
+                for pos in 0..n {
+                    let off = ((l * heads + h) * smax + pos) * dh;
+                    for c in 0..dh {
+                        k[off + c] = self.kv_elem(0, l, h, pos, c, tokens[pos]);
+                        v[off + c] = self.kv_elem(1, l, h, pos, c, tokens[pos]);
+                    }
+                }
+            }
+        }
+
+        // Saliency: accumulate attention rows per layer.  The full path
+        // walks every query row (Eq. 7 + Eq. 8); the flash path reads only
+        // the probe rows passed as input 3 (Eq. 8 approximation).
+        let mut acc = vec![0f32; layers * smax];
+        let mut nrm = vec![0f32; layers * smax];
+        if full {
+            for l in 0..layers {
+                for q in 0..n {
+                    let row = self.attn_row(l, tokens[q], q, &valid);
+                    for i in 0..smax {
+                        acc[l * smax + i] += row[i];
+                    }
+                }
+                for i in 0..n {
+                    // column i is visible to queries q >= i
+                    nrm[l * smax + i] = acc[l * smax + i] / (n - i).max(1) as f32;
+                }
+            }
+        } else {
+            anyhow::ensure!(inputs.len() >= 3, "sim prefill_flash: need probe idx");
+            let pidx: Vec<usize> = match &inputs[2] {
+                Tensor::I32 { data, .. } => {
+                    data.iter().map(|&i| (i.max(0) as usize).min(smax - 1)).collect()
+                }
+                _ => anyhow::bail!("sim prefill_flash: probe idx must be i32"),
+            };
+            for l in 0..layers {
+                let base = l * smax;
+                for &p in &pidx {
+                    let row = self.attn_row(l, tokens[p], p, &valid);
+                    for i in 0..smax {
+                        nrm[base + i] += row[i];
+                    }
+                }
+                for i in 0..smax {
+                    // coverage: probes at position >= i see column i
+                    let cover = pidx.iter().filter(|&&p| p >= i).count();
+                    nrm[base + i] /= cover.max(1) as f32;
+                }
+            }
+        }
+
+        // Prefill logits are produced but unused by the engine (the first
+        // generated token is decoded through the compressed cache).
+        let logits = vec![0f32; smax * info.vocab];
+        let cache_dims = [layers, heads, smax, dh];
+        let mut out = vec![
+            Tensor::f32(logits, &[smax, info.vocab]),
+            Tensor::f32(k, &cache_dims),
+            Tensor::f32(v, &cache_dims),
+        ];
+        if full {
+            out.push(Tensor::f32(acc, &[layers, smax]));
+        }
+        out.push(Tensor::f32(nrm, &[layers, smax]));
+        Ok(out)
+    }
+
+    /// Decode one token: logits over the cache, the new KV row, and the
+    /// per-layer attention row for the streaming probes.
+    fn decode(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let info = &self.info;
+        let (smax, layers, heads, dh) =
+            (info.max_seq, info.n_layers, info.n_heads, info.d_head);
+        anyhow::ensure!(inputs.len() == 5, "sim decode: need tok,pos,k,v,valid");
+        let tok = match &inputs[0] {
+            Tensor::I32 { data, .. } => data[0] as u16,
+            _ => anyhow::bail!("sim decode: tok must be i32"),
+        };
+        let pos = match &inputs[1] {
+            Tensor::I32 { data, .. } => data[0] as usize,
+            _ => anyhow::bail!("sim decode: pos must be i32"),
+        };
+        let vbuf = inputs[3].as_f32();
+        let valid = inputs[4].as_f32();
+        anyhow::ensure!(pos < smax, "sim decode: pos {pos} outside window {smax}");
+
+        let logits = self.logits(tok, pos, vbuf, valid);
+
+        let mut k_new = vec![0f32; layers * heads * dh];
+        let mut v_new = vec![0f32; layers * heads * dh];
+        for l in 0..layers {
+            for h in 0..heads {
+                let off = (l * heads + h) * dh;
+                for c in 0..dh {
+                    k_new[off + c] = self.kv_elem(0, l, h, pos, c, tok);
+                    v_new[off + c] = self.kv_elem(1, l, h, pos, c, tok);
+                }
+            }
+        }
+
+        // Attention row per layer for the query position itself (the row
+        // the engine may record into the streaming probe accumulator).
+        let mut q_valid = valid.to_vec();
+        q_valid[pos] = 1.0; // the new row attends to itself
+        let mut a_row = vec![0f32; layers * smax];
+        for l in 0..layers {
+            let row = self.attn_row(l, tok, pos, &q_valid);
+            a_row[l * smax..(l + 1) * smax].copy_from_slice(&row);
+        }
+
+        Ok(vec![
+            Tensor::f32(logits, &[info.vocab]),
+            Tensor::f32(k_new, &[layers, heads, dh]),
+            Tensor::f32(v_new, &[layers, heads, dh]),
+            Tensor::f32(a_row, &[layers, smax]),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> SimModel {
+        SimModel::new("micro").unwrap()
+    }
+
+    #[test]
+    fn configs_mirror_python_registry() {
+        let m = sim_model_info("micro").unwrap();
+        assert_eq!((m.vocab, m.d_model, m.n_layers, m.n_heads), (256, 64, 2, 4));
+        assert_eq!(m.max_seq, 64);
+        assert_eq!(m.probe_count, 6);
+        assert!(sim_model_info("tiny").is_some());
+        assert!(sim_model_info("nope").is_none());
+    }
+
+    #[test]
+    fn unit_stays_in_range_and_is_roughly_centered() {
+        let mut lo = f32::MAX;
+        let mut hi = f32::MIN;
+        let mut sum = 0f64;
+        for i in 0..10_000u64 {
+            let u = unit(splitmix_mix(i));
+            assert!((-1.0..1.0).contains(&u), "unit out of range: {u}");
+            lo = lo.min(u);
+            hi = hi.max(u);
+            sum += u as f64;
+        }
+        assert!(lo < -0.9 && hi > 0.9, "range barely covered: [{lo}, {hi}]");
+        assert!((sum / 10_000.0).abs() < 0.05, "mean drifted: {}", sum / 10_000.0);
+    }
+
+    #[test]
+    fn attn_rows_normalized_and_causal() {
+        let m = model();
+        let mut valid = vec![0f32; 64];
+        for v in valid.iter_mut().take(10) {
+            *v = 1.0;
+        }
+        let row = m.attn_row(0, 7, 9, &valid);
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert!(row.iter().take(10).all(|&w| w > 0.0));
+        assert!(row.iter().skip(10).all(|&w| w == 0.0));
+    }
+
+    #[test]
+    fn execute_is_deterministic() {
+        let m = model();
+        let smax = m.info().max_seq;
+        let mut tokens = vec![0i32; smax];
+        let mut valid = vec![0f32; smax];
+        for i in 0..8 {
+            tokens[i] = (i as i32) + 5;
+            valid[i] = 1.0;
+        }
+        let ins = [Tensor::i32(tokens, &[smax]), Tensor::f32(valid, &[smax])];
+        let a = m.execute("prefill_full_micro", &ins).unwrap();
+        let b = m.execute("prefill_full_micro", &ins).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 5);
+    }
+
+    #[test]
+    fn decode_reads_value_cache() {
+        // Perturbing the value cache must change the logits — this is the
+        // property that makes quantization observable in sim runs.
+        let m = model();
+        let info = m.info().clone();
+        let n = info.n_layers * info.n_heads * info.max_seq * info.d_head;
+        let mut valid = vec![0f32; info.max_seq];
+        for v in valid.iter_mut().take(4) {
+            *v = 1.0;
+        }
+        let k = vec![0.1f32; n];
+        let v1 = vec![0.2f32; n];
+        let mut v2 = v1.clone();
+        v2[3] += 1.0; // inside the (l=0,h=0) plane, a valid row
+        let run = |vb: Vec<f32>| {
+            let ins = [
+                Tensor::scalar_i32(9),
+                Tensor::scalar_i32(4),
+                Tensor::f32(k.clone(),
+                            &[info.n_layers, info.n_heads, info.max_seq, info.d_head]),
+                Tensor::f32(vb, &[info.n_layers, info.n_heads, info.max_seq,
+                                  info.d_head]),
+                Tensor::f32(valid.clone(), &[info.max_seq]),
+            ];
+            m.execute("decode_micro", &ins).unwrap().remove(0).into_f32()
+        };
+        assert_ne!(run(v1), run(v2));
+    }
+
+    #[test]
+    fn entry_names_follow_manifest_convention() {
+        let m = model();
+        assert!(m.entries().contains(&"decode_micro".to_string()));
+        assert!(m.execute("decode_tiny", &[]).is_err());
+    }
+}

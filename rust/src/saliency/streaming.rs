@@ -158,4 +158,85 @@ mod tests {
         let mut sp = StreamingProbe::new(10, 0.0, 0.0, 5);
         assert!(sp.take_saliency(4).is_none());
     }
+
+    /// Uniform causal attention over `n` query rows: row k spreads
+    /// 1/(k+1) over columns 0..=k.
+    fn uniform_causal(n: usize) -> Vec<f32> {
+        let mut a = vec![0f32; n * n];
+        for k in 0..n {
+            for i in 0..=k {
+                a[k * n + i] = 1.0 / (k + 1) as f32;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn full_cycle_matches_normalized_saliency_ground_truth() {
+        // A cycle that probes *every* step must reproduce Eq. 8 exactly:
+        // take_saliency == metric::normalized_saliency over the same
+        // score matrix (full probe coverage is the paper's exact case).
+        use crate::saliency::metric::normalized_saliency;
+        let n = 8;
+        let mut sp = StreamingProbe::new(n, 1.0, 0.0, 7);
+        let a = uniform_causal(n);
+        for k in 0..n {
+            assert!(sp.should_probe(), "recent_ratio=1.0 probes every step");
+            sp.record(&a[k * n..(k + 1) * n], k);
+            assert_eq!(sp.step(), k == n - 1,
+                       "recompression due exactly at the cycle boundary");
+        }
+        let sal = sp.take_saliency(n).unwrap();
+        let want = normalized_saliency(&a, n, n);
+        for (i, (x, y)) in sal.iter().zip(&want).enumerate() {
+            assert!((x - y).abs() < 1e-6, "col {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn cycles_do_not_leak_into_each_other() {
+        // Drive two full probe-everything cycles with *different* score
+        // matrices: each take_saliency must equal the ground truth of its
+        // own cycle's rows only (the reset really clears the accumulator).
+        use crate::saliency::metric::normalized_saliency;
+        let n = 6;
+        let mut sp = StreamingProbe::new(n, 1.0, 0.0, 3);
+        let uniform = uniform_causal(n);
+        // second cycle: all mass on column 2 (a planted hot token)
+        let mut hot = vec![0f32; n * n];
+        for k in 2..n {
+            hot[k * n + 2] = 1.0;
+        }
+        for (matrix, label) in [(&uniform, "uniform"), (&hot, "hot")] {
+            let mut due = 0;
+            for k in 0..n {
+                sp.record(&matrix[k * n..(k + 1) * n], k);
+                if sp.step() {
+                    due += 1;
+                }
+            }
+            assert_eq!(due, 1, "{label}: one recompression per cycle");
+            let sal = sp.take_saliency(n).unwrap();
+            let want = normalized_saliency(matrix, n, n);
+            for (i, (x, y)) in sal.iter().zip(&want).enumerate() {
+                assert!((x - y).abs() < 1e-6, "{label} col {i}: {x} vs {y}");
+            }
+            assert_eq!(sp.n_rows(), 0, "{label}: accumulator reset");
+        }
+    }
+
+    #[test]
+    fn cycle_period_stays_aligned_across_cycles() {
+        // step() must fire every `recompress_every` steps regardless of
+        // how many rows were recorded, across many cycles.
+        let mut sp = StreamingProbe::new(5, 0.0, 0.0, 11);
+        let mut due_steps = Vec::new();
+        for i in 1..=23 {
+            if sp.step() {
+                due_steps.push(i);
+                sp.take_saliency(4); // engine always drains at the boundary
+            }
+        }
+        assert_eq!(due_steps, vec![5, 10, 15, 20]);
+    }
 }

@@ -1,0 +1,270 @@
+//! Request dispatch for the sharded serving pool (DESIGN.md §8).
+//!
+//! The [`Dispatcher`] is the **single admission point** of the server:
+//! one global waiting-count bounded by `queue_depth` decides accept or
+//! reject at submit time, and an admitted request is routed to the
+//! least-loaded shard immediately.  Nothing downstream applies a second
+//! depth limit — the per-shard batcher only ever receives work it has a
+//! free decode slot for — so the configured depth is the *exact*
+//! rejection boundary (the seed stacked two queues, making the effective
+//! depth 2x the configured value and surfacing the inner rejection as a
+//! delivered error instead of submit-time backpressure).
+//!
+//! Accounting protocol (all counters SeqCst; traffic is far below
+//! contention-relevant rates):
+//!
+//! * `queued` (global) — requests admitted but not yet holding a decode
+//!   slot.  Incremented by [`Dispatcher::try_admit`]; decremented by the
+//!   owning shard via [`ShardCtx::note_activated`] the moment it pulls
+//!   the request into its batcher.
+//! * `load` (per shard) — requests in flight on that shard (waiting in
+//!   its channel + actively decoding).  Incremented at admission;
+//!   decremented via [`ShardCtx::note_done`] when the reply is sent.
+//!   `try_admit` routes to the shard with the minimum load (ties break
+//!   to the lowest shard index).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::GenerationOutput;
+use crate::Result;
+
+/// One admitted request, in flight to (or inside) a shard.
+pub(crate) struct ShardRequest {
+    pub prompt: Vec<u16>,
+    pub max_new: usize,
+    /// Global submission-order tag (diagnostics; outputs never depend on
+    /// it — seeds derive from request content, DESIGN.md §8).
+    pub tag: u64,
+    pub reply: Sender<Result<GenerationOutput>>,
+}
+
+/// The dispatcher's per-shard route: channel + load counter + liveness.
+/// The sender sits behind a mutex because `mpsc::Sender` is not `Sync`
+/// on older toolchains and the dispatcher is shared across submitter
+/// threads; the critical section is one non-blocking `send`.  `alive`
+/// flips to false the first time a send fails (shard thread exited on an
+/// engine error) so routing skips the dead shard from then on.
+struct ShardLink {
+    tx: Mutex<Sender<ShardRequest>>,
+    load: Arc<AtomicUsize>,
+    alive: AtomicBool,
+}
+
+/// Submit-side state shared by every [`super::ServerHandle`] clone.
+pub(crate) struct Dispatcher {
+    shards: Vec<ShardLink>,
+    queued: Arc<AtomicUsize>,
+    queue_depth: usize,
+    next_tag: AtomicU64,
+}
+
+/// Shard-side endpoints handed to each serving thread.
+pub(crate) struct ShardCtx {
+    pub rx: Receiver<ShardRequest>,
+    queued: Arc<AtomicUsize>,
+    load: Arc<AtomicUsize>,
+}
+
+impl ShardCtx {
+    /// The request just left the waiting queue for a decode slot.
+    pub fn note_activated(&self) {
+        self.queued.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// The request's reply has been sent (or dropped): frees shard load.
+    pub fn note_done(&self) {
+        self.load.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Build a dispatcher and its `n_shards` shard endpoints.
+pub(crate) fn build(n_shards: usize, queue_depth: usize) -> (Dispatcher, Vec<ShardCtx>) {
+    assert!(n_shards >= 1, "dispatcher needs at least one shard");
+    let queued = Arc::new(AtomicUsize::new(0));
+    let mut shards = Vec::with_capacity(n_shards);
+    let mut ctxs = Vec::with_capacity(n_shards);
+    for _ in 0..n_shards {
+        let (tx, rx) = mpsc::channel();
+        let load = Arc::new(AtomicUsize::new(0));
+        shards.push(ShardLink {
+            tx: Mutex::new(tx),
+            load: load.clone(),
+            alive: AtomicBool::new(true),
+        });
+        ctxs.push(ShardCtx { rx, queued: queued.clone(), load });
+    }
+    let dispatcher = Dispatcher {
+        shards,
+        queued,
+        queue_depth,
+        next_tag: AtomicU64::new(0),
+    };
+    (dispatcher, ctxs)
+}
+
+impl Dispatcher {
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Requests currently waiting for a decode slot (observability).
+    pub fn queued(&self) -> usize {
+        self.queued.load(Ordering::SeqCst)
+    }
+
+    /// Per-shard in-flight loads (observability).
+    pub fn loads(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.load.load(Ordering::SeqCst)).collect()
+    }
+
+    /// Admit one request or reject with backpressure.  On success the
+    /// request is already routed to the least-loaded shard; the returned
+    /// tag is its global submission index.
+    pub fn try_admit(
+        &self,
+        prompt: Vec<u16>,
+        max_new: usize,
+        reply: Sender<Result<GenerationOutput>>,
+    ) -> Result<u64> {
+        // Reserve a waiting slot with a CAS loop so the boundary is exact
+        // even under concurrent submitters.
+        let mut cur = self.queued.load(Ordering::SeqCst);
+        loop {
+            if cur >= self.queue_depth {
+                anyhow::bail!("queue full (backpressure)");
+            }
+            match self.queued.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+
+        // Least-loaded live shard; first index wins ties.  A failed send
+        // marks that shard dead and retries the next live one, so a
+        // single crashed shard never blackholes admissions while healthy
+        // shards have capacity (DESIGN.md §8).
+        let mut prompt = prompt;
+        let mut reply = reply;
+        loop {
+            let Some(link) = self
+                .shards
+                .iter()
+                .filter(|s| s.alive.load(Ordering::SeqCst))
+                .min_by_key(|s| s.load.load(Ordering::SeqCst))
+            else {
+                self.queued.fetch_sub(1, Ordering::SeqCst);
+                anyhow::bail!("server stopped (no live shards)");
+            };
+            link.load.fetch_add(1, Ordering::SeqCst);
+            let tag = self.next_tag.fetch_add(1, Ordering::SeqCst);
+            let sent = link
+                .tx
+                .lock()
+                .expect("dispatch sender poisoned")
+                .send(ShardRequest { prompt, max_new, tag, reply });
+            match sent {
+                Ok(()) => return Ok(tag),
+                Err(mpsc::SendError(req)) => {
+                    // Shard thread gone: roll its load back, mark it dead,
+                    // and re-route the request.
+                    link.load.fetch_sub(1, Ordering::SeqCst);
+                    link.alive.store(false, Ordering::SeqCst);
+                    prompt = req.prompt;
+                    reply = req.reply;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reply() -> Sender<Result<GenerationOutput>> {
+        mpsc::channel().0
+    }
+
+    #[test]
+    fn exact_rejection_boundary() {
+        // depth D admits exactly D waiting requests; D+1 rejects; freeing
+        // one waiting slot admits exactly one more.
+        let depth = 3;
+        let (d, ctxs) = build(2, depth);
+        for i in 0..depth {
+            assert!(d.try_admit(vec![1], 2, reply()).is_ok(), "admit {i}");
+        }
+        assert_eq!(d.queued(), depth);
+        let err = d.try_admit(vec![1], 2, reply()).unwrap_err();
+        assert!(err.to_string().contains("queue full"), "{err}");
+        // a shard pulls one request into its batcher -> one slot frees
+        ctxs[0].note_activated();
+        assert!(d.try_admit(vec![1], 2, reply()).is_ok());
+        assert!(d.try_admit(vec![1], 2, reply()).is_err());
+    }
+
+    #[test]
+    fn zero_depth_rejects_everything() {
+        let (d, _ctxs) = build(1, 0);
+        assert!(d.try_admit(vec![1], 2, reply()).is_err());
+    }
+
+    #[test]
+    fn least_loaded_routing_balances() {
+        let (d, ctxs) = build(3, 64);
+        for _ in 0..6 {
+            d.try_admit(vec![1], 2, reply()).unwrap();
+        }
+        assert_eq!(d.loads(), vec![2, 2, 2]);
+        // completion on shard 1 draws the next request there
+        ctxs[1].note_activated();
+        ctxs[1].note_done();
+        d.try_admit(vec![1], 2, reply()).unwrap();
+        assert_eq!(d.loads(), vec![2, 2, 2]);
+        // requests actually landed in the right channels
+        assert_eq!(ctxs[0].rx.try_iter().count(), 2);
+        assert_eq!(ctxs[1].rx.try_iter().count(), 3);
+        assert_eq!(ctxs[2].rx.try_iter().count(), 2);
+    }
+
+    #[test]
+    fn tags_are_submission_ordered() {
+        let (d, _ctxs) = build(2, 8);
+        let t0 = d.try_admit(vec![1], 1, reply()).unwrap();
+        let t1 = d.try_admit(vec![2], 1, reply()).unwrap();
+        assert_eq!((t0, t1), (0, 1));
+    }
+
+    #[test]
+    fn dead_shard_rolls_back_counters() {
+        let (d, ctxs) = build(1, 4);
+        drop(ctxs); // receiver gone
+        let err = d.try_admit(vec![1], 2, reply()).unwrap_err();
+        assert!(err.to_string().contains("no live shards"), "{err}");
+        assert_eq!(d.queued(), 0);
+        assert_eq!(d.loads(), vec![0]);
+    }
+
+    #[test]
+    fn routing_skips_dead_shard() {
+        // One crashed shard must not blackhole admissions: sends that hit
+        // its closed channel re-route to the live shard.
+        let (d, mut ctxs) = build(2, 16);
+        let live = ctxs.remove(1);
+        drop(ctxs); // shard 0's receiver gone (thread died)
+        for _ in 0..4 {
+            d.try_admit(vec![1], 2, reply()).unwrap();
+        }
+        assert_eq!(live.rx.try_iter().count(), 4, "requests lost");
+        assert_eq!(d.loads()[0], 0, "dead shard holds phantom load");
+        assert_eq!(d.loads()[1], 4);
+        assert_eq!(d.queued(), 4);
+    }
+}

@@ -1,0 +1,101 @@
+//! Trace-driven load generation against a running server (DESIGN.md §8).
+//!
+//! Replays a [`RequestTrace`]'s arrival process (open-loop: submission
+//! times follow the trace, not the server's progress) through a
+//! [`ServerHandle`], measuring per-request submit-to-completion latency,
+//! submit-time rejections (backpressure), and aggregate throughput.
+//! Used by the `serve` subcommand and `benches/serving_throughput.rs`.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::GenerationOutput;
+use crate::metrics::LatencyStats;
+use crate::workload::RequestTrace;
+use crate::Result;
+
+use super::ServerHandle;
+
+/// Outcome of one trace replay.
+#[derive(Debug, Default)]
+pub struct LoadReport {
+    /// Requests offered to the server (the whole trace).
+    pub submitted: usize,
+    /// Requests that completed with an output.
+    pub completed: usize,
+    /// Requests rejected at submit time (queue full / invalid).
+    pub rejected: usize,
+    /// Requests accepted but failed in flight (server error).
+    pub failed: usize,
+    /// Wall-clock of the whole replay (first submit to last completion).
+    pub wall: Duration,
+    /// Submit-to-completion latency of completed requests.
+    pub latency: LatencyStats,
+    /// `(trace index, output)` for every completed request, in trace
+    /// order — callers score accuracy by zipping with the trace entries.
+    pub outputs: Vec<(usize, GenerationOutput)>,
+}
+
+impl LoadReport {
+    pub fn requests_per_second(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s == 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / s
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.outputs.iter().map(|(_, o)| o.tokens.len()).sum()
+    }
+
+    pub fn tokens_per_second(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s == 0.0 {
+            return 0.0;
+        }
+        self.tokens() as f64 / s
+    }
+}
+
+/// Replay `trace` against `handle`: submit each entry at its arrival
+/// offset, wait for every accepted request, and aggregate the report.
+///
+/// Completion waits run on one short-lived thread per accepted request —
+/// requests complete out of order across shards, and latency must be
+/// measured at completion, not at a later poll.
+pub fn replay(handle: &ServerHandle, trace: &RequestTrace) -> Result<LoadReport> {
+    let t0 = Instant::now();
+    let mut report = LoadReport { submitted: trace.len(), ..LoadReport::default() };
+    let mut waiters = Vec::new();
+    for (i, e) in trace.entries.iter().enumerate() {
+        let target = Duration::from_micros((e.arrival_ms * 1000.0) as u64);
+        let now = t0.elapsed();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let t_sub = Instant::now();
+        match handle.submit(e.sample.prompt().to_vec(), e.max_new_tokens) {
+            Ok(h) => waiters.push(std::thread::spawn(move || {
+                let out = h.wait();
+                (i, t_sub.elapsed(), out)
+            })),
+            Err(_) => report.rejected += 1,
+        }
+    }
+    for w in waiters {
+        let (i, dur, out) = w
+            .join()
+            .map_err(|_| anyhow::anyhow!("loadgen waiter panicked"))?;
+        match out {
+            Ok(output) => {
+                report.completed += 1;
+                report.latency.record(dur);
+                report.outputs.push((i, output));
+            }
+            Err(_) => report.failed += 1,
+        }
+    }
+    report.outputs.sort_by_key(|(i, _)| *i);
+    report.wall = t0.elapsed();
+    Ok(report)
+}

@@ -1,36 +1,46 @@
-//! Serving front-end: a threaded service that owns the engine on a
-//! dedicated worker thread (PJRT executables are not `Send`) and exposes a
-//! request/response channel API with backpressure.
+//! Serving front-end: a sharded engine pool behind one admission point
+//! (DESIGN.md §8).
 //!
-//! Offline-build note: the environment ships no async runtime, so this is a
-//! blocking-channel design (std::sync::mpsc) rather than tokio; the public
-//! shape — submit returns a waitable handle, requests interleave through
-//! the continuous batcher — is the same (DESIGN.md §6).
+//! [`Server::start`] spawns `cfg.scheduler.shards` serving threads.  Each
+//! shard owns a full engine stack — an [`Engine`] (and therefore its own
+//! PJRT executables and plane-compression worker pool), plus a
+//! [`ContinuousBatcher`] interleaving up to `max_batch` sessions.  Engines
+//! are constructed *inside* their shard thread (PJRT executables are not
+//! `Send`), and a startup barrier reports construction failures from
+//! `Server::start` itself.
 //!
-//! The engine thread owns the compression worker pool: requests that hit a
-//! prefill or recompression point fan their plane work out across
-//! `cfg.parallelism` threads (DESIGN.md §5) while the serving loop itself
-//! stays single-threaded, so batcher scheduling order — and therefore
-//! per-tag output — is unchanged at any pool width.
+//! Requests flow through the private dispatcher module: one global
+//! `queue_depth` boundary decides accept/reject at submit time, then the
+//! request is routed to the least-loaded shard.  A shard pulls a waiting
+//! request only when it has a free decode slot, so no second queue ever
+//! stacks on the configured depth.  Per-tag outputs are independent of
+//! shard count and placement because sessions are independent and seeds
+//! derive from request content (`coordinator::engine::request_seed`).
+//!
+//! Offline-build note: the environment ships no async runtime, so this is
+//! a blocking-channel design (std::sync::mpsc) rather than tokio; the
+//! public shape — submit returns a waitable handle, requests interleave
+//! through per-shard continuous batchers — is the same (DESIGN.md §6).
 
-use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TrySendError};
+mod dispatch;
+pub mod loadgen;
+
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::config::EngineConfig;
 use crate::coordinator::batcher::{ContinuousBatcher, QueuedRequest};
 use crate::coordinator::{Engine, GenerationOutput};
+use crate::metrics::{EngineMetrics, MetricsSnapshot};
 use crate::Result;
 
-/// One request to the serving loop.
-struct ServerRequest {
-    prompt: Vec<u16>,
-    max_new: usize,
-    reply: Sender<Result<GenerationOutput>>,
-}
+use dispatch::{Dispatcher, ShardCtx, ShardRequest};
 
 /// A waitable response slot for one submitted request.
 pub struct ResponseHandle {
     rx: Receiver<Result<GenerationOutput>>,
+    tag: u64,
 }
 
 impl ResponseHandle {
@@ -40,137 +50,295 @@ impl ResponseHandle {
             .recv()
             .map_err(|_| anyhow::anyhow!("server dropped request"))?
     }
+
+    /// Global submission-order tag of this request (diagnostics).
+    pub fn tag(&self) -> u64 {
+        self.tag
+    }
 }
 
 /// Handle to a running server; cloneable, cheap to share across threads.
 #[derive(Clone)]
 pub struct ServerHandle {
-    tx: SyncSender<ServerRequest>,
+    dispatcher: Arc<Dispatcher>,
+    metrics: Arc<Vec<Mutex<EngineMetrics>>>,
+    /// Model window, for submit-time request validation.
+    max_seq: usize,
 }
 
 impl ServerHandle {
     /// Submit one generation request; returns a waitable handle.
-    /// Errors immediately when the queue is full (backpressure).
+    /// Errors immediately when the admission queue is full (backpressure)
+    /// or the request is malformed (`max_new == 0`, empty prompt, window
+    /// overflow).
     pub fn submit(&self, prompt: Vec<u16>, max_new: usize) -> Result<ResponseHandle> {
+        // Validate the full session-start contract at admission so a bad
+        // request is a submit-time error, never a poisoned shard: these
+        // mirror the `ensure!`s in `Engine::start_session`, whose failure
+        // inside a shard would tear the whole shard down (DESIGN.md §8).
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(max_new >= 1, "max_new must be >= 1");
+        anyhow::ensure!(
+            prompt.len() + max_new <= self.max_seq,
+            "prompt {} + budget {max_new} exceeds window {}",
+            prompt.len(),
+            self.max_seq
+        );
         let (reply, rx) = mpsc::channel();
-        match self.tx.try_send(ServerRequest { prompt, max_new, reply }) {
-            Ok(()) => Ok(ResponseHandle { rx }),
-            Err(TrySendError::Full(_)) => anyhow::bail!("queue full (backpressure)"),
-            Err(TrySendError::Disconnected(_)) => anyhow::bail!("server stopped"),
-        }
+        let tag = self.dispatcher.try_admit(prompt, max_new, reply)?;
+        Ok(ResponseHandle { rx, tag })
     }
 
     /// Submit and wait (convenience).
     pub fn generate(&self, prompt: Vec<u16>, max_new: usize) -> Result<GenerationOutput> {
         self.submit(prompt, max_new)?.wait()
     }
+
+    /// Number of engine shards serving this handle.
+    pub fn shards(&self) -> usize {
+        self.dispatcher.shard_count()
+    }
+
+    /// Requests currently waiting for a decode slot.
+    pub fn queued(&self) -> usize {
+        self.dispatcher.queued()
+    }
+
+    /// Per-shard in-flight request counts (waiting + active), in shard
+    /// index order.
+    pub fn shard_loads(&self) -> Vec<usize> {
+        self.dispatcher.loads()
+    }
+
+    /// A coherent metrics read: per-shard engine metrics (as last
+    /// published by each shard) plus their aggregate.  Lock-cheap: one
+    /// uncontended per-shard mutex clone each, no stop-the-world.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let per_shard: Vec<EngineMetrics> = self
+            .metrics
+            .iter()
+            .map(|slot| slot.lock().expect("metrics slot poisoned").clone())
+            .collect();
+        MetricsSnapshot::aggregate(per_shard)
+    }
 }
 
-/// A running server: engine thread + request channel.
+/// A running server: shard threads + dispatch state.
 pub struct Server {
     pub handle: ServerHandle,
-    join: JoinHandle<Result<()>>,
+    joins: Vec<JoinHandle<Result<()>>>,
 }
 
 impl Server {
-    /// Start the engine thread with iteration-level continuous batching.
+    /// Start the shard pool.  `cfg.scheduler.shards == 0` means one shard
+    /// per available core.  Fails fast if any shard's engine cannot be
+    /// constructed (bad artifacts dir, unknown model, ...).
     pub fn start(cfg: EngineConfig) -> Result<Self> {
-        let (tx, rx) = mpsc::sync_channel::<ServerRequest>(cfg.scheduler.queue_depth);
-        let max_batch = cfg.scheduler.max_batch;
-        let queue_depth = cfg.scheduler.queue_depth;
+        cfg.validate()?;
+        // Model window for submit-time validation (cheap: manifest read
+        // or sim registry, no compilation) — also fails fast here when
+        // the artifacts dir is unreadable, before any thread spawns.
+        let max_seq =
+            crate::runtime::load_model_info(&cfg.artifacts_dir, &cfg.model)?.max_seq;
+        let n_shards = if cfg.scheduler.shards == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            cfg.scheduler.shards
+        };
+        let (dispatcher, ctxs) = dispatch::build(n_shards, cfg.scheduler.queue_depth);
+        let metrics: Arc<Vec<Mutex<EngineMetrics>>> = Arc::new(
+            (0..n_shards).map(|_| Mutex::new(EngineMetrics::default())).collect(),
+        );
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
-        let join = std::thread::Builder::new()
-            .name("zipcache-engine".into())
-            .spawn(move || -> Result<()> {
-                let mut engine = Engine::new(cfg)?;
-                let mut batcher = ContinuousBatcher::new(max_batch, queue_depth);
-                let mut replies: Vec<(u64, Sender<Result<GenerationOutput>>)> = Vec::new();
-                let mut next_tag = 0u64;
-                loop {
-                    // Drain waiting requests without blocking while busy.
-                    loop {
-                        match rx.try_recv() {
-                            Ok(req) => {
-                                let tag = next_tag;
-                                next_tag += 1;
-                                if batcher
-                                    .submit(QueuedRequest {
-                                        prompt: req.prompt,
-                                        max_new: req.max_new,
-                                        tag,
-                                    })
-                                    .is_err()
-                                {
-                                    let _ = req
-                                        .reply
-                                        .send(Err(anyhow::anyhow!("queue full")));
-                                } else {
-                                    replies.push((tag, req.reply));
-                                }
-                            }
-                            Err(mpsc::TryRecvError::Empty) => break,
-                            Err(mpsc::TryRecvError::Disconnected) => {
-                                // Finish in-flight work, then exit.
-                                while !batcher.idle() {
-                                    batcher.step(&mut engine)?;
-                                    deliver(&mut batcher, &mut replies);
-                                }
-                                return Ok(());
-                            }
-                        }
-                    }
-                    if batcher.idle() {
-                        // Idle: block for the next request (or shutdown).
-                        match rx.recv() {
-                            Ok(req) => {
-                                let tag = next_tag;
-                                next_tag += 1;
-                                if batcher
-                                    .submit(QueuedRequest {
-                                        prompt: req.prompt,
-                                        max_new: req.max_new,
-                                        tag,
-                                    })
-                                    .is_err()
-                                {
-                                    let _ = req
-                                        .reply
-                                        .send(Err(anyhow::anyhow!("queue full")));
-                                } else {
-                                    replies.push((tag, req.reply));
-                                }
-                            }
-                            Err(_) => return Ok(()),
-                        }
-                        continue;
-                    }
-                    batcher.step(&mut engine)?;
-                    deliver(&mut batcher, &mut replies);
+        let mut joins = Vec::with_capacity(n_shards);
+        for (i, ctx) in ctxs.into_iter().enumerate() {
+            let cfg = cfg.clone();
+            let ready = ready_tx.clone();
+            let slot = metrics.clone();
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("zipcache-shard-{i}"))
+                    .spawn(move || shard_loop(i, cfg, ctx, slot, ready))?,
+            );
+        }
+        drop(ready_tx);
+
+        // Startup barrier: every shard reports engine construction.
+        let mut startup_err = None;
+        for _ in 0..n_shards {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => startup_err = Some(e),
+                Err(_) => {
+                    startup_err =
+                        Some(anyhow::anyhow!("shard thread died during startup"))
                 }
-            })?;
+            }
+        }
+        if let Some(e) = startup_err {
+            // Tear down: dropping the dispatcher closes every shard
+            // channel, so the healthy shards exit their loops.
+            drop(dispatcher);
+            for j in joins {
+                let _ = j.join();
+            }
+            return Err(e);
+        }
 
-        Ok(Server { handle: ServerHandle { tx }, join })
+        Ok(Server {
+            handle: ServerHandle {
+                dispatcher: Arc::new(dispatcher),
+                metrics,
+                max_seq,
+            },
+            joins,
+        })
     }
 
-    /// Graceful shutdown: close the channel and join the engine thread
-    /// (in-flight requests complete first).
+    /// Graceful shutdown: close the admission side and join every shard
+    /// (in-flight requests complete first).  Any outstanding
+    /// [`ServerHandle`] clones must be dropped by their owners for the
+    /// shards to observe disconnection.
     pub fn shutdown(self) -> Result<()> {
         drop(self.handle);
-        match self.join.join() {
-            Ok(r) => r,
-            Err(_) => anyhow::bail!("engine thread panicked"),
+        let mut result = Ok(());
+        for j in self.joins {
+            match j.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => result = Err(e),
+                Err(_) => result = Err(anyhow::anyhow!("shard thread panicked")),
+            }
+        }
+        result
+    }
+}
+
+/// One shard: engine + continuous batcher + reply routing.
+///
+/// Error altitude: requests that could fail `Engine::start_session` are
+/// rejected at submit time (see `ServerHandle::submit`), so a `?` out of
+/// `batcher.step` here means the *engine itself* failed (PJRT execute
+/// error, artifact corruption) — that shard exits with the error and its
+/// in-flight clients see "server dropped request", while other shards
+/// keep serving.  The seed's single-engine-thread design lost the whole
+/// server in that case; per-request error outcomes through the batcher
+/// are a possible future refinement (DESIGN.md §8).
+fn shard_loop(
+    shard_idx: usize,
+    cfg: EngineConfig,
+    ctx: ShardCtx,
+    slots: Arc<Vec<Mutex<EngineMetrics>>>,
+    ready: Sender<Result<()>>,
+) -> Result<()> {
+    let max_batch = cfg.scheduler.max_batch;
+    let mut engine = match Engine::new(cfg) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return Ok(()); // failure already reported through the barrier
+        }
+    };
+    // The batcher's own queue is a staging slot only: requests are pulled
+    // from the shard channel exclusively when a decode slot is free, so
+    // its depth never rejects and never stacks on the dispatcher's
+    // boundary (DESIGN.md §8).
+    let mut batcher = ContinuousBatcher::new(max_batch, max_batch);
+    let mut replies: Vec<(u64, Sender<Result<GenerationOutput>>)> = Vec::new();
+
+    loop {
+        // Pull waiting requests while decode slots are free.
+        while batcher.active() + batcher.pending() < max_batch {
+            match ctx.rx.try_recv() {
+                Ok(req) => admit(&mut batcher, &mut replies, req, &ctx),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    // Shutdown: finish in-flight work, publish, exit.
+                    while !batcher.idle() {
+                        batcher.step(&mut engine)?;
+                        deliver(&mut batcher, &mut replies, &ctx, &engine,
+                                &slots[shard_idx]);
+                    }
+                    publish(&slots[shard_idx], &engine);
+                    return Ok(());
+                }
+            }
+        }
+        if batcher.idle() {
+            // Idle: publish metrics, then block for the next request.
+            publish(&slots[shard_idx], &engine);
+            match ctx.rx.recv() {
+                Ok(req) => {
+                    admit(&mut batcher, &mut replies, req, &ctx);
+                    continue;
+                }
+                Err(_) => return Ok(()),
+            }
+        }
+        batcher.step(&mut engine)?;
+        deliver(&mut batcher, &mut replies, &ctx, &engine, &slots[shard_idx]);
+    }
+}
+
+/// Move a pulled request into the batcher and register its reply slot.
+fn admit(
+    batcher: &mut ContinuousBatcher,
+    replies: &mut Vec<(u64, Sender<Result<GenerationOutput>>)>,
+    req: ShardRequest,
+    ctx: &ShardCtx,
+) {
+    ctx.note_activated();
+    match batcher.submit(QueuedRequest {
+        prompt: req.prompt,
+        max_new: req.max_new,
+        tag: req.tag,
+    }) {
+        Ok(()) => replies.push((req.tag, req.reply)),
+        Err(_) => {
+            // Unreachable by construction (pulls are slot-gated), but do
+            // not let an accounting bug hang the client.
+            let _ = req
+                .reply
+                .send(Err(anyhow::anyhow!("internal: shard batcher rejected")));
+            ctx.note_done();
         }
     }
 }
 
+/// Send finished outcomes to their callers.  Metrics are published
+/// *before* the replies go out, so any client whose `wait()` returned is
+/// guaranteed to see its own request in the next snapshot.
 fn deliver(
     batcher: &mut ContinuousBatcher,
     replies: &mut Vec<(u64, Sender<Result<GenerationOutput>>)>,
+    ctx: &ShardCtx,
+    engine: &Engine,
+    slot: &Mutex<EngineMetrics>,
 ) {
-    for outcome in batcher.take_outcomes() {
+    let outcomes = batcher.take_outcomes();
+    if outcomes.is_empty() {
+        return;
+    }
+    publish(slot, engine);
+    for outcome in outcomes {
         if let Some(idx) = replies.iter().position(|(t, _)| *t == outcome.tag) {
             let (_, reply) = replies.swap_remove(idx);
             let _ = reply.send(Ok(outcome.output));
         }
+        ctx.note_done();
     }
+}
+
+/// Publish this shard's engine metrics into its shared snapshot slot.
+///
+/// This clones the full `EngineMetrics`, whose histograms keep every
+/// sample — per-delivery cost therefore grows with run length.  Fine at
+/// bench/test scale (exact percentiles are worth it); switching the
+/// recorders to fixed-bucket histograms is the knob to turn if serving
+/// runs ever get long enough for this clone to show up in a profile.
+fn publish(slot: &Mutex<EngineMetrics>, engine: &Engine) {
+    *slot.lock().expect("metrics slot poisoned") = engine.metrics.clone();
 }

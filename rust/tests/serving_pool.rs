@@ -1,0 +1,223 @@
+//! Sharded serving pool contracts (DESIGN.md §8), all runnable with no
+//! artifacts: the sim runtime backend (`artifacts_dir = "sim"`) stands in
+//! for the PJRT executables with a deterministic host-side model.
+//!
+//! * **Determinism** — per-tag outputs are bit-identical at any shard
+//!   count (sessions are independent; seeds derive from request content,
+//!   not admission order), and identical to a bare engine run.
+//! * **Admission** — the dispatcher is the single admission point:
+//!   `queue_depth` is the exact waiting-request boundary, rejections are
+//!   submit-time errors, and malformed requests never reach a shard.
+//! * **Decode accounting** — `max_new` boundaries enforced; the compress
+//!   histogram no longer double-counts decode wall time.
+
+use zipcache::config::EngineConfig;
+use zipcache::coordinator::batcher::{ContinuousBatcher, QueuedRequest};
+use zipcache::coordinator::Engine;
+use zipcache::server::Server;
+use zipcache::workload::{Task, TaskGen};
+
+fn sim_config(shards: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::load_default("sim", "micro").unwrap();
+    cfg.scheduler.shards = shards;
+    cfg.parallelism = 1; // pool-width parity is pinned in parallel_parity.rs
+    cfg
+}
+
+fn prompts(n: usize) -> Vec<Vec<u16>> {
+    let gen = TaskGen::new(Task::Code, 60);
+    (0..n).map(|i| gen.sample(i as u64).prompt().to_vec()).collect()
+}
+
+#[test]
+fn per_tag_outputs_identical_across_shard_counts() {
+    let ps = prompts(6);
+    let run = |shards: usize| -> Vec<(Vec<u16>, usize, f64)> {
+        let mut cfg = sim_config(shards);
+        cfg.quant.recompress_every = 4; // several streaming cycles per request
+        let server = Server::start(cfg).unwrap();
+        let handles: Vec<_> = ps
+            .iter()
+            .map(|p| server.handle.submit(p.clone(), 8).unwrap())
+            .collect();
+        let outs: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                let o = h.wait().unwrap();
+                (o.tokens, o.cache_bytes, o.compression_ratio)
+            })
+            .collect();
+        server.shutdown().unwrap();
+        outs
+    };
+    let one = run(1);
+    assert!(one.iter().all(|(t, _, _)| !t.is_empty()));
+    assert_eq!(one, run(2), "2 shards changed per-request outputs");
+    assert_eq!(one, run(4), "4 shards changed per-request outputs");
+}
+
+#[test]
+fn server_outputs_match_bare_engine() {
+    // Scheduling through the pool must be invisible: the same request
+    // through a bare engine yields the same tokens.
+    let ps = prompts(3);
+    let mut engine = Engine::new(sim_config(1)).unwrap();
+    let direct: Vec<Vec<u16>> = ps
+        .iter()
+        .map(|p| engine.generate(p, 5).unwrap().tokens)
+        .collect();
+    let server = Server::start(sim_config(2)).unwrap();
+    // submit in reverse order: admission order must not matter either
+    let served: Vec<Vec<u16>> = {
+        let handles: Vec<_> = ps
+            .iter()
+            .rev()
+            .map(|p| server.handle.submit(p.clone(), 5).unwrap())
+            .collect();
+        let mut outs: Vec<_> =
+            handles.into_iter().map(|h| h.wait().unwrap().tokens).collect();
+        outs.reverse();
+        outs
+    };
+    server.shutdown().unwrap();
+    assert_eq!(direct, served);
+}
+
+#[test]
+fn smoke_two_shards_complete_all_requests() {
+    let server = Server::start(sim_config(2)).unwrap();
+    assert_eq!(server.handle.shards(), 2);
+    let mut handles = Vec::new();
+    for p in prompts(6) {
+        handles.push(server.handle.submit(p, 3).unwrap());
+    }
+    for h in handles {
+        let out = h.wait().unwrap();
+        assert!(!out.tokens.is_empty() && out.tokens.len() <= 3);
+    }
+    let snap = server.handle.metrics();
+    assert_eq!(snap.shards(), 2);
+    assert_eq!(snap.total.requests_completed, 6);
+    assert_eq!(
+        snap.per_shard.iter().map(|m| m.requests_completed).sum::<u64>(),
+        6,
+        "per-shard breakdown must sum to the total"
+    );
+    assert!(snap.total.prefill.count() >= 6);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn max_new_boundaries() {
+    let mut engine = Engine::new(sim_config(1)).unwrap();
+    let p = prompts(1).remove(0);
+    // max_new = 0 is rejected at session start (the old off-by-one would
+    // have emitted one token anyway)...
+    assert!(engine.start_session(p.clone(), 0).is_err());
+    // ...and the server rejects it at submit time, before it can poison a
+    // shard.
+    let server = Server::start(sim_config(1)).unwrap();
+    assert!(server.handle.submit(p.clone(), 0).is_err());
+    assert!(server.handle.submit(Vec::new(), 3).is_err());
+    // Window overflow is also a submit-time error (micro window = 64),
+    // and the rejection must not consume an admission slot or poison the
+    // shard: a well-formed request right after still completes.
+    assert!(server.handle.submit(p.clone(), 64).is_err());
+    assert_eq!(server.handle.queued() + server.handle.shard_loads()[0], 0);
+    // max_new = 1 emits exactly one token.
+    let out = engine.generate(&p, 1).unwrap();
+    assert_eq!(out.tokens.len(), 1);
+    let out = server.handle.generate(p, 1).unwrap();
+    assert_eq!(out.tokens.len(), 1);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn overload_rejects_at_submit_time() {
+    let mut cfg = sim_config(1);
+    cfg.scheduler.max_batch = 1;
+    cfg.scheduler.queue_depth = 1;
+    let server = Server::start(cfg).unwrap();
+    let ps = prompts(8);
+    let mut accepted = Vec::new();
+    let mut rejected = 0;
+    for p in ps {
+        match server.handle.submit(p, 16) {
+            Ok(h) => accepted.push(h),
+            Err(e) => {
+                assert!(e.to_string().contains("queue full"), "{e}");
+                rejected += 1;
+            }
+        }
+    }
+    // One decode slot + one waiting slot: back-to-back submission of 8
+    // requests must hit backpressure (a shard can activate at most one
+    // request before the loop finishes submitting).
+    assert!(rejected >= 1, "no submit-time backpressure observed");
+    let completed = accepted.len();
+    for h in accepted {
+        h.wait().unwrap();
+    }
+    assert_eq!(completed + rejected, 8);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn start_fails_fast_on_unloadable_artifacts() {
+    let mut cfg = sim_config(2);
+    cfg.artifacts_dir = "definitely_missing_artifacts_dir".into();
+    assert!(Server::start(cfg).is_err());
+}
+
+#[test]
+fn batcher_interleaves_over_sim_engine() {
+    // The artifact-gated engine_e2e batcher test, runnable everywhere.
+    let mut engine = Engine::new(sim_config(1)).unwrap();
+    let mut b = ContinuousBatcher::new(2, 8);
+    for (tag, p) in prompts(5).into_iter().enumerate() {
+        b.submit(QueuedRequest { prompt: p, max_new: 3, tag: tag as u64 }).unwrap();
+    }
+    let outcomes = b.run_to_completion(&mut engine).unwrap();
+    assert_eq!(outcomes.len(), 5);
+    assert!(outcomes.iter().all(|o| !o.output.tokens.is_empty()));
+    assert_eq!(engine.metrics.requests_completed, 5);
+}
+
+#[test]
+fn decode_histogram_excludes_recompression_span() {
+    // Pin the accounting fix: per-step decode samples exclude the
+    // recompression block, so sum(decode) + sum(compress) cannot exceed
+    // the session's total decode wall time.  (The old code recorded the
+    // full step span into *both* histograms — sums then overshoot as soon
+    // as a cycle fires.)
+    let mut cfg = sim_config(1);
+    cfg.quant.recompress_every = 2;
+    let mut engine = Engine::new(cfg).unwrap();
+    let mut session_decode_ms = 0.0;
+    for p in prompts(4) {
+        session_decode_ms += engine.generate(&p, 12).unwrap().decode_ms;
+    }
+    let m = &engine.metrics;
+    assert!(m.compress.count() >= 1, "expected recompression cycles");
+    let decode_total = m.decode.mean_ms() * m.decode.count() as f64;
+    let compress_total = m.compress.mean_ms() * m.compress.count() as f64;
+    assert!(
+        decode_total + compress_total <= session_decode_ms + 0.2,
+        "histograms double-count: decode {decode_total:.3}ms + compress \
+         {compress_total:.3}ms > sessions {session_decode_ms:.3}ms"
+    );
+}
+
+#[test]
+fn streaming_recompression_triggers_on_sim() {
+    let mut cfg = sim_config(1);
+    cfg.quant.recompress_every = 4;
+    let mut engine = Engine::new(cfg).unwrap();
+    for p in prompts(3) {
+        let mut sess = engine.start_session(p, 16).unwrap();
+        while !sess.is_done() {
+            engine.decode_step(&mut sess).unwrap();
+        }
+    }
+    assert!(engine.metrics.compress.count() >= 1, "recompression never fired");
+}

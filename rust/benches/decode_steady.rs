@@ -1,0 +1,215 @@
+//! Steady-state decode bench with a counting allocator (EXPERIMENTS.md
+//! §Perf, DESIGN.md §9): per-token latency and per-step heap-allocation
+//! counts of `Engine::decode_step` on the sim backend, partitioned into
+//! non-recompression (steady) steps and recompression-cycle steps.
+//!
+//! This is the gate for the zero-allocation decode hot path: after a
+//! short per-session warm-up (two steps — the first step materializes the
+//! session scratch), every step that does not run a recompression cycle
+//! must perform **zero** heap allocations.  The bench panics otherwise,
+//! and emits `BENCH_decode.json` (consumed as a CI artifact by the
+//! `bench-smoke` job) to seed the perf trajectory.
+//!
+//! Run: `cargo bench --bench decode_steady` (append `-- --smoke` for the
+//! short CI variant).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use zipcache::config::EngineConfig;
+use zipcache::coordinator::Engine;
+
+/// The system allocator wrapped with allocation-event counters.  Frees
+/// are not counted: the hot-path contract is about *new* heap traffic.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        // Count only the growth: a 1 MB -> 2 MB regrow is 1 MB of new
+        // heap traffic, not 2 MB (shrinks count as an event, zero bytes).
+        ALLOC_BYTES.fetch_add(new_size.saturating_sub(layout.size()) as u64,
+                              Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> (u64, u64) {
+    (ALLOCS.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
+}
+
+#[derive(Default)]
+struct Bucket {
+    steps: u64,
+    ns: Vec<u64>,
+    allocs: u64,
+    bytes: u64,
+    max_allocs_one_step: u64,
+}
+
+impl Bucket {
+    fn record(&mut self, ns: u64, a: u64, b: u64) {
+        self.steps += 1;
+        self.ns.push(ns);
+        self.allocs += a;
+        self.bytes += b;
+        self.max_allocs_one_step = self.max_allocs_one_step.max(a);
+    }
+
+    fn p50_us(&mut self) -> f64 {
+        if self.ns.is_empty() {
+            return 0.0;
+        }
+        self.ns.sort_unstable();
+        self.ns[self.ns.len() / 2] as f64 / 1000.0
+    }
+
+    fn mean_us(&self) -> f64 {
+        if self.ns.is_empty() {
+            return 0.0;
+        }
+        self.ns.iter().sum::<u64>() as f64 / self.ns.len() as f64 / 1000.0
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let target_steps: u64 = if smoke { 240 } else { 1200 };
+
+    let mut cfg = EngineConfig::load_default("sim", "tiny").unwrap();
+    cfg.parallelism = 2;
+    let recompress_every = cfg.quant.recompress_every;
+    let mut engine = Engine::new(cfg).unwrap();
+    let smax = engine.layout().seq;
+
+    // Histogram pushes inside the engine are amortized-O(1); reserve
+    // generously (bounded by the 10k-session cap below) so the measured
+    // window never lands on a growth step.
+    engine.metrics.decode.reserve(1 << 20);
+    engine.metrics.compress.reserve(1 << 14);
+    engine.metrics.prefill.reserve(1 << 14);
+
+    let mut steady = Bucket::default();
+    let mut cycle = Bucket::default();
+    let mut sessions = 0u64;
+    let mut violations = 0u64;
+
+    // Run until the step target is met AND at least two recompression
+    // cycles were observed (sessions can end early on EOS; the session
+    // cap bounds the loop — everything here is deterministic, so this is
+    // belt-and-braces, not flake control).
+    while (steady.steps + cycle.steps < target_steps || cycle.steps < 2)
+        && sessions < 10_000
+    {
+        // A fresh prompt per session (content-derived seeds make each
+        // trajectory distinct); budget sized to the window.
+        let prompt: Vec<u16> = (0..16u64)
+            .map(|i| 16 + ((sessions * 31 + i * 7) % 200) as u16)
+            .collect();
+        let max_new = smax - prompt.len() - 1;
+        let mut s = engine.start_session(prompt, max_new).unwrap();
+        s.stream.reserve_rows(recompress_every, smax);
+        sessions += 1;
+
+        // Per-session warm-up: step 1 materializes the session scratch
+        // (execution slots, layer-mean buffer); from step 2 on the
+        // non-recompression path must be allocation-free.
+        for _ in 0..2 {
+            if s.is_done() {
+                break;
+            }
+            engine.decode_step(&mut s).unwrap();
+        }
+
+        while !s.is_done()
+            && (steady.steps + cycle.steps < target_steps || cycle.steps < 2)
+        {
+            let (a0, b0) = allocs();
+            let c0 = engine.metrics.compress.count();
+            let t = Instant::now();
+            engine.decode_step(&mut s).unwrap();
+            let ns = t.elapsed().as_nanos() as u64;
+            let (a1, b1) = allocs();
+            let recompressed = engine.metrics.compress.count() > c0;
+            let (da, db) = (a1 - a0, b1 - b0);
+            if recompressed {
+                cycle.record(ns, da, db);
+            } else {
+                steady.record(ns, da, db);
+                if da != 0 {
+                    violations += 1;
+                    eprintln!(
+                        "ALLOC VIOLATION: steady step did {da} allocations \
+                         ({db} bytes) at pos {}",
+                        s.pos
+                    );
+                }
+            }
+        }
+    }
+
+    let steady_steps = steady.steps;
+    let steady_p50 = steady.p50_us();
+    let steady_mean = steady.mean_us();
+    let steady_allocs_per_step = steady.allocs as f64 / steady.steps.max(1) as f64;
+    let steady_bytes_per_step = steady.bytes as f64 / steady.steps.max(1) as f64;
+    let steady_max_allocs = steady.max_allocs_one_step;
+    let cycle_steps = cycle.steps;
+    let cycle_p50 = cycle.p50_us();
+    let cycle_mean = cycle.mean_us();
+    let cycle_allocs = cycle.allocs as f64 / cycle.steps.max(1) as f64;
+    let json = format!(
+        "{{\n  \"bench\": \"decode_steady\",\n  \"model\": \"tiny\",\n  \
+         \"smoke\": {smoke},\n  \"sessions\": {sessions},\n  \
+         \"steady_steps\": {steady_steps},\n  \
+         \"steady_per_token_us_p50\": {steady_p50:.3},\n  \
+         \"steady_per_token_us_mean\": {steady_mean:.3},\n  \
+         \"steady_allocs_per_step\": {steady_allocs_per_step:.4},\n  \
+         \"steady_bytes_per_step\": {steady_bytes_per_step:.1},\n  \
+         \"steady_max_allocs_one_step\": {steady_max_allocs},\n  \
+         \"recompress_steps\": {cycle_steps},\n  \
+         \"recompress_us_p50\": {cycle_p50:.3},\n  \
+         \"recompress_us_mean\": {cycle_mean:.3},\n  \
+         \"recompress_allocs_per_step\": {cycle_allocs:.1}\n}}\n",
+    );
+    std::fs::write("BENCH_decode.json", &json).unwrap();
+
+    println!("== decode steady-state (sim backend, tiny) ==");
+    print!("{json}");
+
+    // The tentpole contract (ISSUE 3): zero heap allocations on the
+    // steady-state decode step, every recompression confined to its own
+    // cycle steps.
+    assert_eq!(
+        violations, 0,
+        "steady-state decode steps performed heap allocations"
+    );
+    assert!(
+        cycle.steps > 0,
+        "bench never exercised a recompression cycle — widen the window"
+    );
+    println!("OK: {} steady steps, 0 allocations/step", steady.steps);
+}

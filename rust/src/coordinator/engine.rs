@@ -13,9 +13,9 @@ use crate::baselines::{
     PolicyInput, ZipCachePolicy,
 };
 use crate::config::{EngineConfig, PolicyKind};
-use crate::kvcache::{CacheLayout, CompressedKV};
+use crate::kvcache::{CacheLayout, CompressScratch, CompressedKV};
 use crate::metrics::EngineMetrics;
-use crate::runtime::{Runtime, Tensor};
+use crate::runtime::{Runtime, Tensor, TensorView};
 use crate::saliency::{select_probes, ProbeStrategy};
 use crate::util::pool::WorkerPool;
 use crate::workload::tasks::EOS;
@@ -42,6 +42,12 @@ pub struct Engine {
     /// Plane-level compression pool (DESIGN.md §5), sized by
     /// `cfg.parallelism`.
     pool: WorkerPool,
+    /// Compression-cycle scratch reused across sessions and cycles
+    /// (DESIGN.md §9).
+    scratch: CompressScratch,
+    /// Precomputed `decode_<model>` entry name — the decode hot path must
+    /// not rebuild this string every step.
+    decode_entry: String,
     pub metrics: EngineMetrics,
     next_session_id: u64,
 }
@@ -52,7 +58,9 @@ impl Engine {
         let rt = Runtime::load(&cfg.artifacts_dir, &cfg.model)?;
         let policy = make_policy(&cfg);
         let pool = WorkerPool::new(cfg.parallelism);
-        Ok(Engine { cfg, rt, policy, pool, metrics: EngineMetrics::default(),
+        let decode_entry = rt.entry("decode");
+        Ok(Engine { cfg, rt, policy, pool, scratch: CompressScratch::default(),
+                    decode_entry, metrics: EngineMetrics::default(),
                     next_session_id: 0 })
     }
 
@@ -186,6 +194,24 @@ impl Engine {
         // (the paper's evaluation protocol: answers come from the compressed
         // state, not from uncompressed prefill activations).
         self.compress_session(&mut s, n - 1)?;
+        // Rows >= n-1 still hold whatever the prefill artifact emitted
+        // there: the withheld prompt-tail row, plus — on a real PJRT
+        // backend — anything the lowered graph wrote at padded positions
+        // (the sim zero-fills them, real artifacts need not).  The
+        // compression above covered only rows [0, n-1), so zero the whole
+        // dead tail once here; that establishes the session buffer
+        // invariant the scratch materialization relies on — rows >=
+        // n_tokens are neutral (DESIGN.md §9) — bit-exactly, not merely
+        // up to `valid` masking.  Decode steps rewrite rows as `pos`
+        // advances and every later cycle covers them, so one cold-path
+        // clear per session suffices.
+        let (dh, heads) = (layout.d_head, layout.heads);
+        let tail = (smax - (n - 1)) * dh;
+        for hi in 0..layout.layers * heads {
+            let o = hi * smax * dh + (n - 1) * dh;
+            s.kbuf[o..o + tail].fill(0.0);
+            s.vbuf[o..o + tail].fill(0.0);
+        }
         s.pos = n - 1;
         s.next_token = s.prompt[n - 1];
         s.prompt_tail_pending = true;
@@ -196,13 +222,24 @@ impl Engine {
 
     /// One decode step (Alg. 3): attend to the (quantized) cache, append
     /// the new KV row uncompressed, maybe probe, maybe recompress.
+    ///
+    /// Zero-allocation hot path (DESIGN.md §9): the K/V cache and
+    /// validity mask cross the runtime boundary as borrowed
+    /// [`TensorView`]s (the old owned-`Tensor` path cloned the whole
+    /// `[L,H,S,dh]` cache twice per step), outputs land in the session's
+    /// reusable scratch slots, and in the non-recompression case the
+    /// steady-state step performs no heap allocation at all (pinned by
+    /// `benches/decode_steady.rs`).
     pub fn decode_step(&mut self, s: &mut Session) -> Result<Option<u16>> {
         if s.is_done() {
             return Ok(None);
         }
-        let info = self.rt.model_info().clone();
-        let layout = info.cache_layout();
-        let smax = info.max_seq;
+        // Copy the scalar hyper-parameters out instead of cloning
+        // ModelInfo (its `trained` field owns a heap string).
+        let (layout, smax, n_layers) = {
+            let info = self.rt.model_info();
+            (info.cache_layout(), info.max_seq, info.n_layers)
+        };
         let t0 = Instant::now();
 
         let tok = s.next_token;
@@ -222,35 +259,43 @@ impl Engine {
             }
         }
 
-        let out = self.rt.execute(
-            &self.rt.entry("decode"),
+        let tok_in = [tok as i32];
+        let pos_in = [s.pos as i32];
+        let cache_dims = [layout.layers, layout.heads, smax, layout.d_head];
+        let valid_dims = [smax];
+        self.rt.execute_into(
+            &self.decode_entry,
             &[
-                Tensor::scalar_i32(tok as i32),
-                Tensor::scalar_i32(s.pos as i32),
-                Tensor::f32(s.kbuf.clone(), &[layout.layers, layout.heads, smax, layout.d_head]),
-                Tensor::f32(s.vbuf.clone(), &[layout.layers, layout.heads, smax, layout.d_head]),
-                Tensor::f32(s.valid.clone(), &[smax]),
+                TensorView::scalar_i32(&tok_in),
+                TensorView::scalar_i32(&pos_in),
+                TensorView::f32(&s.kbuf, &cache_dims),
+                TensorView::f32(&s.vbuf, &cache_dims),
+                TensorView::f32(&s.valid, &valid_dims),
             ],
+            &mut s.scratch.exec,
         )?;
-        // outputs: logits, k_new, v_new, a_row
-        let mut it = out.into_iter();
-        let logits = it.next().unwrap().into_f32();
-        let k_new = it.next().unwrap().into_f32();
-        let v_new = it.next().unwrap().into_f32();
-        let a_row = layer_mean(it.next().unwrap().into_f32(), info.n_layers, smax);
 
+        // outputs: logits, k_new, v_new, a_row — in session-owned slots.
         // Write the new row (uncompressed until the next recompression).
         let (dh, heads, layers) = (layout.d_head, layout.heads, layout.layers);
-        for l in 0..layers {
-            for h in 0..heads {
-                let src = (l * heads + h) * dh;
-                let dst = (l * heads + h) * smax * dh + s.pos * dh;
-                s.kbuf[dst..dst + dh].copy_from_slice(&k_new[src..src + dh]);
-                s.vbuf[dst..dst + dh].copy_from_slice(&v_new[src..src + dh]);
+        {
+            let k_new = s.scratch.exec.out_f32(1);
+            let v_new = s.scratch.exec.out_f32(2);
+            for l in 0..layers {
+                for h in 0..heads {
+                    let src = (l * heads + h) * dh;
+                    let dst = (l * heads + h) * smax * dh + s.pos * dh;
+                    s.kbuf[dst..dst + dh].copy_from_slice(&k_new[src..src + dh]);
+                    s.vbuf[dst..dst + dh].copy_from_slice(&v_new[src..src + dh]);
+                }
             }
         }
         s.valid[s.pos] = 1.0;
         s.pos += 1;
+
+        // Layer-mean of the attention row, into the session scratch.
+        layer_mean_into(s.scratch.exec.out_f32(3), n_layers, smax,
+                        &mut s.scratch.a_mean);
 
         // Streaming probes (Alg. 3): ZipCache probes selectively; the
         // accumulated-score baselines effectively track every row (they run
@@ -259,11 +304,11 @@ impl Engine {
             if s.acc_saliency.len() < smax {
                 s.acc_saliency.resize(smax, 0.0);
             }
-            for (acc, &a) in s.acc_saliency.iter_mut().zip(&a_row) {
+            for (acc, &a) in s.acc_saliency.iter_mut().zip(&s.scratch.a_mean) {
                 *acc += a;
             }
         } else if s.stream.should_probe() {
-            s.stream.record(&a_row[..smax], s.pos - 1);
+            s.stream.record(&s.scratch.a_mean[..smax], s.pos - 1);
         }
 
         // Recompression cycle.  Timed with its own Instant: the compress
@@ -284,7 +329,7 @@ impl Engine {
             self.metrics.compress.record_us(compress_us);
         }
 
-        s.next_token = argmax(&logits) as u16;
+        s.next_token = argmax(s.scratch.exec.out_f32(0)) as u16;
         s.prompt_tail_pending = false;
         let step_us = t0.elapsed().as_micros() as u64;
         s.decode_us += step_us; // session wall time keeps the full step
@@ -294,6 +339,8 @@ impl Engine {
 
     /// Compress rows `[0, n_live)` of the session cache under the policy
     /// and re-materialize the fp32 buffers the decode artifact reads.
+    /// Gather/staging buffers come from the engine's [`CompressScratch`],
+    /// reused across cycles and sessions (DESIGN.md §9).
     fn compress_session(&mut self, s: &mut Session, n_live: usize) -> Result<()> {
         let layout = self.layout();
         let input = PolicyInput {
@@ -304,11 +351,16 @@ impl Engine {
         let classes = self.policy.assign(&input);
         // Fan the independent (layer, head) planes out across the pool;
         // bit-identical to the sequential path at any width (DESIGN.md §5).
-        let (store, stages) = CompressedKV::compress_instrumented(
+        let (store, stages) = CompressedKV::compress_instrumented_scratch(
             &s.kbuf, &s.vbuf, layout, &classes, self.policy.quant_spec(),
-            &self.pool);
+            &self.pool, &mut self.scratch);
         self.metrics.record_compress_stages(&stages);
-        store.materialize_into(&mut s.kbuf, &mut s.vbuf, &mut s.valid);
+        // Zero-only-dead-rows materialization: rows beyond the live
+        // prefix are untouched, which is sound because a session row is
+        // only ever written at position `pos` and every later cycle
+        // covers it (DESIGN.md §9).
+        store.materialize_into_scratch(&mut s.kbuf, &mut s.vbuf, &mut s.valid,
+                                       &mut self.scratch);
         s.cache_bytes = store.storage_bytes(2);
         s.compression_ratio = store.compression_ratio();
         s.classes = classes;
@@ -364,10 +416,13 @@ fn make_policy(cfg: &EngineConfig) -> Box<dyn CompressionPolicy> {
     }
 }
 
-/// Mean over layers of a `[L, S]` row-major buffer -> `[S]`.
-fn layer_mean(x: Vec<f32>, layers: usize, s: usize) -> Vec<f32> {
+/// Mean over layers of a `[L, S]` row-major buffer, into `out` -> `[S]`.
+/// The decode hot path reuses the session's `a_mean` buffer; no
+/// steady-state allocation.
+fn layer_mean_into(x: &[f32], layers: usize, s: usize, out: &mut Vec<f32>) {
     debug_assert_eq!(x.len(), layers * s);
-    let mut out = vec![0f32; s];
+    out.clear();
+    out.resize(s, 0.0);
     for l in 0..layers {
         for i in 0..s {
             out[i] += x[l * s + i];
@@ -377,6 +432,12 @@ fn layer_mean(x: Vec<f32>, layers: usize, s: usize) -> Vec<f32> {
     for o in out.iter_mut() {
         *o *= inv;
     }
+}
+
+/// Allocating wrapper over [`layer_mean_into`] (prefill path).
+fn layer_mean(x: Vec<f32>, layers: usize, s: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(s);
+    layer_mean_into(&x, layers, s, &mut out);
     out
 }
 
@@ -385,12 +446,24 @@ fn last_row(logits: &[f32], n: usize, vocab: usize) -> Vec<f32> {
     logits[(n - 1) * vocab..n * vocab].to_vec()
 }
 
+/// Index of the maximum logit — NaN-safe and deterministic.
+///
+/// NaN entries never win (the old `partial_cmp(..).unwrap_or(Equal)`
+/// comparator let a NaN logit pick an arbitrary, ordering-dependent
+/// winner), exact ties resolve to the lowest index, and an empty or
+/// all-NaN slice yields 0.
 fn argmax(xs: &[f32]) -> usize {
-    xs.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-        .map(|(i, _)| i)
-        .unwrap_or(0)
+    let mut best: Option<(usize, f32)> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        if x.is_nan() {
+            continue;
+        }
+        match best {
+            Some((_, bx)) if x <= bx => {}
+            _ => best = Some((i, x)),
+        }
+    }
+    best.map_or(0, |(i, _)| i)
 }
 
 #[cfg(test)]
@@ -407,6 +480,38 @@ mod tests {
     fn argmax_basics() {
         assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
         assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn argmax_skips_nan() {
+        // A NaN logit must never win, wherever it sits.
+        assert_eq!(argmax(&[f32::NAN, 0.2, 0.9]), 2);
+        assert_eq!(argmax(&[0.9, f32::NAN, 0.2]), 0);
+        assert_eq!(argmax(&[0.2, 0.9, f32::NAN]), 1);
+        // All-NaN degenerates to 0, like empty.
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+    }
+
+    #[test]
+    fn argmax_exact_ties_take_lowest_index() {
+        assert_eq!(argmax(&[0.5, 0.9, 0.9, 0.1]), 1);
+        assert_eq!(argmax(&[0.7, 0.7, 0.7]), 0);
+        // Ties across a NaN gap still resolve to the first maximum.
+        assert_eq!(argmax(&[0.3, f32::NAN, 0.3]), 0);
+        // Negative-only inputs (max is the least-negative).
+        assert_eq!(argmax(&[-2.0, -1.0, -1.0]), 1);
+    }
+
+    #[test]
+    fn layer_mean_into_reuses_buffer() {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // [2, 3]
+        let mut out = Vec::new();
+        layer_mean_into(&x, 2, 3, &mut out);
+        assert_eq!(out, vec![2.5, 3.5, 4.5]);
+        let ptr = out.as_ptr();
+        layer_mean_into(&x, 2, 3, &mut out);
+        assert_eq!(out, vec![2.5, 3.5, 4.5]);
+        assert_eq!(out.as_ptr(), ptr); // no reallocation at steady state
     }
 
     #[test]

@@ -15,4 +15,4 @@ pub mod session;
 
 pub use batcher::{BatchOutcome, ContinuousBatcher};
 pub use engine::{merge_streaming_saliency, request_seed, Engine, GenerationOutput};
-pub use session::Session;
+pub use session::{Session, SessionScratch};

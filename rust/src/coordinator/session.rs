@@ -8,7 +8,20 @@
 //! paper's streaming scheme.
 
 use crate::kvcache::{CacheLayout, PrecisionClass};
+use crate::runtime::ExecScratch;
 use crate::saliency::StreamingProbe;
+
+/// Reusable per-session scratch for the decode hot path (DESIGN.md §9):
+/// the runtime execution slots plus the layer-mean attention-row buffer.
+/// Warm after the first decode step; no steady-state heap allocation.
+#[derive(Debug, Clone, Default)]
+pub struct SessionScratch {
+    /// Runtime boundary: borrowed-input execution + reusable output slots.
+    pub exec: ExecScratch,
+    /// Layer-mean of the decode attention row (`[S]`), fed to the
+    /// streaming probe accumulator.
+    pub a_mean: Vec<f32>,
+}
 
 /// State of one in-flight generation request.
 #[derive(Debug)]
@@ -48,6 +61,8 @@ pub struct Session {
     /// Wall-clock accounting (filled by the engine).
     pub prefill_us: u64,
     pub decode_us: u64,
+    /// Decode hot-path scratch (execution slots + layer-mean buffer).
+    pub scratch: SessionScratch,
 }
 
 impl Session {
@@ -58,7 +73,9 @@ impl Session {
             id,
             pos: prompt.len(),
             prompt,
-            generated: Vec::new(),
+            // Reserved up front: `generated` grows by one push per decode
+            // step and must never reallocate mid-generation.
+            generated: Vec::with_capacity(max_new),
             max_new,
             kbuf: vec![0f32; n],
             vbuf: vec![0f32; n],
@@ -74,6 +91,7 @@ impl Session {
             compression_ratio: 1.0,
             prefill_us: 0,
             decode_us: 0,
+            scratch: SessionScratch::default(),
         }
     }
 

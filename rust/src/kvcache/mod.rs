@@ -16,4 +16,5 @@ pub mod fp16;
 pub mod ratio;
 pub mod store;
 
-pub use store::{CacheLayout, CompressStats, CompressedKV, PrecisionClass, QuantSpec};
+pub use store::{CacheLayout, CompressScratch, CompressStats, CompressedKV,
+                PrecisionClass, QuantSpec};

@@ -9,11 +9,58 @@
 //! `rust/tests/parallel_parity.rs` via [`CompressedKV::content_digest`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::kvcache::fp16::round_f16;
 use crate::quant::{Granularity, QuantizedPlane};
 use crate::util::pool::WorkerPool;
+
+/// Per-worker gather/staging buffers for one plane compression (the
+/// `kg`/`vg` row gathers of `compress_plane`).
+#[derive(Debug, Default)]
+struct PlaneScratch {
+    kg: Vec<f32>,
+    vg: Vec<f32>,
+}
+
+/// Checkout pool of [`PlaneScratch`] shared across the worker fan-out.
+/// One uncontended lock per plane is noise next to the plane's
+/// quantization work (hundreds of µs), and the buffers persist across
+/// recompression cycles (DESIGN.md §9).
+#[derive(Debug, Default)]
+struct PlanePool {
+    free: Mutex<Vec<PlaneScratch>>,
+}
+
+impl PlanePool {
+    fn checkout(&self) -> PlaneScratch {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn restore(&self, s: PlaneScratch) {
+        self.free.lock().unwrap().push(s);
+    }
+}
+
+/// Reusable scratch for the whole compression cycle (DESIGN.md §9):
+/// the Split stage's class-group vectors, the per-worker gather buffers
+/// of the Quant stage, and the subset-dequant staging buffer of
+/// [`CompressedKV::materialize_into_scratch`].  Owned by the engine and
+/// reused across recompression cycles; a fresh default is equivalent
+/// (outputs are bit-identical either way — scratch holds no state
+/// between calls, only warm capacity).
+#[derive(Debug, Default)]
+pub struct CompressScratch {
+    /// Split output: `(class, member token rows)` in first-seen order.
+    groups: Vec<(PrecisionClass, Vec<u32>)>,
+    /// Retired group row vectors, kept for their capacity.
+    spare_rows: Vec<Vec<u32>>,
+    /// Per-worker plane gather buffers.
+    planes: PlanePool,
+    /// Subset-plane dequant staging for materialization.
+    setbuf: Vec<f32>,
+}
 
 /// Static shape of one sequence's cache.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -162,6 +209,9 @@ impl CompressedKV {
 
     /// [`CompressedKV::compress_with_pool`] plus per-stage timing
     /// ([`CompressStats`]) for the engine metrics and the hot-path bench.
+    /// Allocates its scratch per call; the recompression cycle passes a
+    /// persistent [`CompressScratch`] via
+    /// [`CompressedKV::compress_instrumented_scratch`].
     pub fn compress_instrumented(
         kcache: &[f32],
         vcache: &[f32],
@@ -170,36 +220,68 @@ impl CompressedKV {
         spec: QuantSpec,
         pool: &WorkerPool,
     ) -> (Self, CompressStats) {
+        let mut scratch = CompressScratch::default();
+        Self::compress_instrumented_scratch(kcache, vcache, layout, classes, spec,
+                                            pool, &mut scratch)
+    }
+
+    /// [`CompressedKV::compress_instrumented`] with caller-owned scratch:
+    /// the Split-stage class groups, the workers' plane gather buffers,
+    /// and (for materialization) the subset staging buffer all reuse
+    /// `scratch`'s warm capacity instead of reallocating every cycle
+    /// (DESIGN.md §9).  Output is bit-identical to the scratch-free path.
+    pub fn compress_instrumented_scratch(
+        kcache: &[f32],
+        vcache: &[f32],
+        layout: CacheLayout,
+        classes: &[PrecisionClass],
+        spec: QuantSpec,
+        pool: &WorkerPool,
+        scratch: &mut CompressScratch,
+    ) -> (Self, CompressStats) {
         assert_eq!(kcache.len(), layout.cache_len());
         assert_eq!(vcache.len(), layout.cache_len());
         let n_tokens = classes.len();
         assert!(n_tokens <= layout.seq);
+        let CompressScratch { groups, spare_rows, planes, setbuf: _ } = scratch;
         let t_all = Instant::now();
 
         // Split: group token indices by class (stable order within class).
-        let mut groups: Vec<(PrecisionClass, Vec<u32>)> = Vec::new();
+        // Retired row vectors from the previous cycle are recycled for
+        // their capacity.
+        spare_rows.extend(groups.drain(..).map(|(_, mut v)| {
+            v.clear();
+            v
+        }));
         for (t, &c) in classes.iter().enumerate() {
             if c.is_evicted() {
                 continue;
             }
             match groups.iter_mut().find(|(gc, _)| *gc == c) {
                 Some((_, v)) => v.push(t as u32),
-                None => groups.push((c, vec![t as u32])),
+                None => {
+                    let mut v = spare_rows.pop().unwrap_or_default();
+                    v.push(t as u32);
+                    groups.push((c, v));
+                }
             }
         }
         let split_us = t_all.elapsed().as_micros() as u64;
 
         // Quant: every (layer, head) plane is independent — fan out.
         let (s, dh) = (layout.seq, layout.d_head);
-        let planes = layout.layers * layout.heads;
+        let n_planes = layout.layers * layout.heads;
         let quant_cpu = AtomicU64::new(0);
+        let groups = &*groups;
         let t_quant = Instant::now();
-        let heads = pool.run(planes, |hi| {
+        let heads = pool.run(n_planes, |hi| {
             let t_plane = Instant::now();
             let base = hi * s * dh;
+            let mut ps = planes.checkout();
             let hs = compress_plane(&kcache[base..base + s * dh],
                                     &vcache[base..base + s * dh],
-                                    dh, &groups, spec);
+                                    dh, groups, spec, &mut ps);
+            planes.restore(ps);
             quant_cpu.fetch_add(t_plane.elapsed().as_micros() as u64,
                                 Ordering::Relaxed);
             hs
@@ -216,7 +298,7 @@ impl CompressedKV {
             quant_cpu_us: quant_cpu.load(Ordering::Relaxed),
             concat_us: t_concat.elapsed().as_micros() as u64,
             wall_us: t_all.elapsed().as_micros() as u64,
-            planes,
+            planes: n_planes,
             threads: pool.threads(),
         };
         (store, stats)
@@ -275,13 +357,56 @@ impl CompressedKV {
     /// Scatter the dequantized cache into fp32 buffers shaped `[L,H,S,dh]`
     /// and fill `valid` (length S): 1.0 for live tokens, 0.0 for evicted /
     /// beyond `n_tokens`.
+    ///
+    /// Clears the whole output first, so the buffers may hold anything on
+    /// entry.  The recompression cycle uses
+    /// [`CompressedKV::materialize_into_scratch`], which skips the full
+    /// clear under the session's buffer invariant (DESIGN.md §9).
     pub fn materialize_into(&self, kout: &mut [f32], vout: &mut [f32], valid: &mut [f32]) {
+        kout.fill(0.0);
+        vout.fill(0.0);
+        let mut setbuf: Vec<f32> = Vec::new();
+        self.scatter_live(kout, vout, valid, &mut setbuf, false);
+    }
+
+    /// [`CompressedKV::materialize_into`] for the steady-state
+    /// recompression cycle: reuses `scratch`'s staging buffer and zeroes
+    /// only the *dead* rows inside the live prefix (`Evicted` classes)
+    /// instead of `fill(0.0)` over the whole `[L,H,S,dh]` cache.
+    ///
+    /// Precondition (DESIGN.md §9): rows at positions `>= n_tokens` must
+    /// already be neutral in `kout`/`vout` — exactly the session buffer
+    /// invariant (the engine zeroes every row beyond the live prefix once
+    /// after the prefill compression, and decode only writes at `pos`,
+    /// which later cycles cover; consumers mask by `valid` regardless).
+    /// Under
+    /// that invariant the resulting buffers are bit-identical to the
+    /// full-clear path.
+    pub fn materialize_into_scratch(
+        &self,
+        kout: &mut [f32],
+        vout: &mut [f32],
+        valid: &mut [f32],
+        scratch: &mut CompressScratch,
+    ) {
+        self.scatter_live(kout, vout, valid, &mut scratch.setbuf, true);
+    }
+
+    /// Shared scatter core: rebuild `valid`, overwrite every live row
+    /// from the compressed planes, and (when `zero_dead_rows`) clear the
+    /// evicted rows of the live prefix.
+    fn scatter_live(
+        &self,
+        kout: &mut [f32],
+        vout: &mut [f32],
+        valid: &mut [f32],
+        setbuf: &mut Vec<f32>,
+        zero_dead_rows: bool,
+    ) {
         let lay = self.layout;
         assert_eq!(kout.len(), lay.cache_len());
         assert_eq!(vout.len(), lay.cache_len());
         assert_eq!(valid.len(), lay.seq);
-        kout.fill(0.0);
-        vout.fill(0.0);
         valid.fill(0.0);
         for (t, c) in self.classes.iter().enumerate() {
             if !c.is_evicted() {
@@ -289,16 +414,33 @@ impl CompressedKV {
             }
         }
         let (s, dh) = (lay.seq, lay.d_head);
+        // Evicted positions are plane-independent: collect them once, not
+        // once per (layer, head) plane.  The common zero-evictions case
+        // collects nothing (and allocates nothing).
+        let evicted: Vec<usize> = if zero_dead_rows {
+            self.classes
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.is_evicted())
+                .map(|(t, _)| t)
+                .collect()
+        } else {
+            Vec::new()
+        };
         // Perf (EXPERIMENTS.md §Perf): bulk-dequantize each subset plane
-        // once (word-level unpack) and scatter rows, instead of per-row
-        // random-access decode — ~2x on the recompression cycle.
-        let mut setbuf: Vec<f32> = Vec::new();
+        // once (fused unpack–dequant) and scatter rows, instead of
+        // per-row random-access decode — ~2x on the recompression cycle.
         for (hi, hs) in self.heads.iter().enumerate() {
             let base = hi * s * dh;
+            for &t in &evicted {
+                let o = base + t * dh;
+                kout[o..o + dh].fill(0.0);
+                vout[o..o + dh].fill(0.0);
+            }
             for (sets, out) in [(&hs.k_sets, &mut *kout), (&hs.v_sets, &mut *vout)] {
                 for set in sets {
                     setbuf.resize(set.rows.len() * dh, 0.0);
-                    set.plane.dequantize_into(&mut setbuf);
+                    set.plane.dequantize_into(setbuf);
                     for (i, &r) in set.rows.iter().enumerate() {
                         let o = base + r as usize * dh;
                         out[o..o + dh].copy_from_slice(&setbuf[i * dh..(i + 1) * dh]);
@@ -375,13 +517,15 @@ impl CompressedKV {
 
 /// Compress one `(layer, head)` pair of K/V planes under the pre-split
 /// class `groups` — the per-plane unit of work the pool fans out
-/// (Alg. 2's Quant stage).
+/// (Alg. 2's Quant stage).  `ps` holds the worker's reusable gather
+/// buffers (checked out of the [`CompressScratch`] plane pool).
 fn compress_plane(
     kplane: &[f32],
     vplane: &[f32],
     dh: usize,
     groups: &[(PrecisionClass, Vec<u32>)],
     spec: QuantSpec,
+    ps: &mut PlaneScratch,
 ) -> HeadStore {
     let mut hs = HeadStore::default();
     for (class, rows) in groups {
@@ -397,10 +541,12 @@ fn compress_plane(
                 }
             }
             PrecisionClass::Bits(bits) => {
-                // Gather rows, quantize the subset on its own
-                // statistics (Alg. 2's Split semantics).
-                let mut kg = Vec::with_capacity(rows.len() * dh);
-                let mut vg = Vec::with_capacity(rows.len() * dh);
+                // Gather rows into the reused scratch, quantize the
+                // subset on its own statistics (Alg. 2's Split
+                // semantics).
+                let (kg, vg) = (&mut ps.kg, &mut ps.vg);
+                kg.clear();
+                vg.clear();
                 for &r in rows {
                     let r0 = r as usize * dh;
                     kg.extend_from_slice(&kplane[r0..r0 + dh]);
@@ -409,12 +555,12 @@ fn compress_plane(
                 hs.k_sets.push(SubsetPlane {
                     rows: rows.clone(),
                     plane: QuantizedPlane::quantize(
-                        &kg, rows.len(), dh, *bits, spec.key_gran),
+                        kg, rows.len(), dh, *bits, spec.key_gran),
                 });
                 hs.v_sets.push(SubsetPlane {
                     rows: rows.clone(),
                     plane: QuantizedPlane::quantize(
-                        &vg, rows.len(), dh, *bits, spec.value_gran),
+                        vg, rows.len(), dh, *bits, spec.value_gran),
                 });
             }
             PrecisionClass::Evicted => unreachable!(),
@@ -562,6 +708,74 @@ mod tests {
         assert_eq!(st.planes, lay.layers * lay.heads);
         assert_eq!(st.threads, 2);
         assert!(st.wall_us >= st.quant_wall_us);
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        // One CompressScratch carried across cycles (different class
+        // assignments, growing live prefix) must give exactly the outputs
+        // of a fresh scratch every time.
+        let lay = CacheLayout { layers: 2, heads: 3, seq: 24, d_head: 8 };
+        let (k, v) = {
+            let n = lay.cache_len();
+            let k: Vec<f32> = (0..n).map(|i| ((i as f32 * 0.531).sin()) * 2.0).collect();
+            let v: Vec<f32> = (0..n).map(|i| ((i as f32 * 0.277).cos()) * 3.0).collect();
+            (k, v)
+        };
+        let pool = WorkerPool::new(3);
+        let mut scratch = CompressScratch::default();
+        for n_tokens in [7usize, 13, 24] {
+            let classes: Vec<PrecisionClass> = (0..n_tokens)
+                .map(|t| match t % 4 {
+                    0 => PrecisionClass::Bits(4),
+                    1 => PrecisionClass::Fp16,
+                    2 => PrecisionClass::Evicted,
+                    _ => PrecisionClass::Bits(2),
+                })
+                .collect();
+            let (warm, _) = CompressedKV::compress_instrumented_scratch(
+                &k, &v, lay, &classes, QuantSpec::default(), &pool, &mut scratch);
+            let fresh = CompressedKV::compress(&k, &v, lay, &classes,
+                                               QuantSpec::default());
+            assert_eq!(warm.content_digest(), fresh.content_digest(),
+                       "n_tokens={n_tokens}");
+        }
+    }
+
+    #[test]
+    fn scratch_materialize_matches_full_clear() {
+        // Under the session invariant (rows >= n_tokens neutral), the
+        // zero-dead-rows materialization must produce buffers bit-equal
+        // to the full-clear path — including when a row that was live in
+        // the previous cycle becomes evicted in the next one.
+        let lay = layout();
+        let (k, v) = caches(lay);
+        let n = lay.cache_len();
+        let mut classes = vec![PrecisionClass::Bits(4); 10];
+        classes[2] = PrecisionClass::Fp16;
+        let first = CompressedKV::compress(&k, &v, lay, &classes, QuantSpec::default());
+
+        let mut scratch = CompressScratch::default();
+        let (mut ks, mut vs, mut vas) = (vec![0f32; n], vec![0f32; n], vec![0f32; lay.seq]);
+        first.materialize_into_scratch(&mut ks, &mut vs, &mut vas, &mut scratch);
+        let (mut kf, mut vf, mut vaf) = (vec![0f32; n], vec![0f32; n], vec![0f32; lay.seq]);
+        first.materialize_into(&mut kf, &mut vf, &mut vaf);
+        assert_eq!(ks, kf);
+        assert_eq!(vs, vf);
+        assert_eq!(vas, vaf);
+
+        // Next cycle: longer prefix, token 2 now evicted — its stale
+        // fp16 content must be cleared by the dead-row pass.
+        let mut classes2 = vec![PrecisionClass::Bits(2); 12];
+        classes2[2] = PrecisionClass::Evicted;
+        let second = CompressedKV::compress(&k, &v, lay, &classes2, QuantSpec::default());
+        second.materialize_into_scratch(&mut ks, &mut vs, &mut vas, &mut scratch);
+        second.materialize_into(&mut kf, &mut vf, &mut vaf);
+        assert_eq!(ks, kf);
+        assert_eq!(vs, vf);
+        assert_eq!(vas, vaf);
+        let dh = lay.d_head;
+        assert!(ks[2 * dh..3 * dh].iter().all(|&x| x == 0.0));
     }
 
     #[test]

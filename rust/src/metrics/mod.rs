@@ -23,6 +23,13 @@ impl LatencyStats {
         self.samples_us.push(us);
     }
 
+    /// Pre-reserve room for `additional` samples.  Recording is an
+    /// amortized-O(1) push; callers that must not allocate mid-window
+    /// (the steady-state decode bench, DESIGN.md §9) reserve up front.
+    pub fn reserve(&mut self, additional: usize) {
+        self.samples_us.reserve(additional);
+    }
+
     pub fn count(&self) -> usize {
         self.samples_us.len()
     }

@@ -67,47 +67,63 @@ impl PackedCodes {
 
     /// Unpack into a caller-provided buffer (len must equal `self.len`).
     ///
-    /// Perf note (EXPERIMENTS.md §Perf): the whole-byte fast paths below
-    /// replace a per-element `div/mod` indexing scheme; on the 1M-code
-    /// recompression workload this is ~3x faster, which matters because
-    /// unpack feeds every cache materialization (one per decode
-    /// recompression cycle, Alg. 3).
+    /// Perf note (EXPERIMENTS.md §Perf): the whole-byte fast paths in
+    /// [`PackedCodes::for_each`] replace a per-element `div/mod` indexing
+    /// scheme; on the 1M-code recompression workload this is ~3x faster,
+    /// which matters because unpack feeds every cache materialization
+    /// (one per decode recompression cycle, Alg. 3).
     pub fn unpack_into(&self, out: &mut [u8]) {
         assert_eq!(out.len(), self.len);
+        if self.bits == 8 {
+            out.copy_from_slice(&self.data[..self.len]);
+            return;
+        }
+        self.for_each(|i, c| out[i] = c);
+    }
+
+    /// Visit every code in index order without materializing the unpacked
+    /// buffer — the fused unpack half of the unpack–dequant kernels
+    /// (EXPERIMENTS.md §Perf).  Whole bytes are decoded in unrolled lane
+    /// order; the ragged tail falls back to shifted extraction.
+    #[inline]
+    pub fn for_each<F: FnMut(usize, u8)>(&self, mut f: F) {
         match self.bits {
-            8 => out.copy_from_slice(&self.data[..self.len]),
+            8 => {
+                for (i, &b) in self.data[..self.len].iter().enumerate() {
+                    f(i, b);
+                }
+            }
             4 => {
                 let full = self.len / 2;
                 for (i, &b) in self.data[..full].iter().enumerate() {
-                    out[2 * i] = b & 0x0F;
-                    out[2 * i + 1] = b >> 4;
+                    f(2 * i, b & 0x0F);
+                    f(2 * i + 1, b >> 4);
                 }
                 if self.len % 2 == 1 {
-                    out[self.len - 1] = self.data[full] & 0x0F;
+                    f(self.len - 1, self.data[full] & 0x0F);
                 }
             }
             2 => {
                 let full = self.len / 4;
                 for (i, &b) in self.data[..full].iter().enumerate() {
-                    let o = &mut out[4 * i..4 * i + 4];
-                    o[0] = b & 0x3;
-                    o[1] = (b >> 2) & 0x3;
-                    o[2] = (b >> 4) & 0x3;
-                    o[3] = b >> 6;
+                    f(4 * i, b & 0x3);
+                    f(4 * i + 1, (b >> 2) & 0x3);
+                    f(4 * i + 2, (b >> 4) & 0x3);
+                    f(4 * i + 3, b >> 6);
                 }
                 for i in full * 4..self.len {
-                    out[i] = (self.data[i / 4] >> (2 * (i % 4))) & 0x3;
+                    f(i, (self.data[i / 4] >> (2 * (i % 4))) & 0x3);
                 }
             }
             1 => {
                 let full = self.len / 8;
                 for (i, &b) in self.data[..full].iter().enumerate() {
                     for j in 0..8 {
-                        out[8 * i + j] = (b >> j) & 1;
+                        f(8 * i + j, (b >> j) & 1);
                     }
                 }
                 for i in full * 8..self.len {
-                    out[i] = (self.data[i / 8] >> (i % 8)) & 0x1;
+                    f(i, (self.data[i / 8] >> (i % 8)) & 0x1);
                 }
             }
             _ => unreachable!(),
@@ -144,6 +160,70 @@ impl PackedCodes {
     }
 }
 
+/// Incremental packer: accepts one code at a time and produces the same
+/// dense byte stream as [`PackedCodes::pack`] — the fused pack half of the
+/// quantize-and-pack encode path (EXPERIMENTS.md §Perf).  Eliminates the
+/// unpacked `codes` staging vector the two-pass encoder needed.
+#[derive(Debug)]
+pub struct PackWriter {
+    bits: u8,
+    len: usize,
+    cur: u8,
+    shift: u8,
+    data: Vec<u8>,
+}
+
+impl PackWriter {
+    /// A writer for `n` expected codes at `bits` (capacity hint only —
+    /// pushing more than `n` codes still works).
+    pub fn with_capacity(bits: u8, n: usize) -> Self {
+        let pb = PackedCodes::per_byte(bits);
+        PackWriter {
+            bits,
+            len: 0,
+            cur: 0,
+            shift: 0,
+            data: Vec::with_capacity(n.div_ceil(pb)),
+        }
+    }
+
+    /// Append one code (`< 2^bits`), low lanes first — the exact lane
+    /// order of [`PackedCodes::pack`].
+    #[inline]
+    pub fn push(&mut self, code: u8) {
+        if self.bits == 8 {
+            self.data.push(code);
+        } else {
+            let mask = ((1u16 << self.bits) - 1) as u8;
+            self.cur |= (code & mask) << self.shift;
+            self.shift += self.bits;
+            if self.shift == 8 {
+                self.data.push(self.cur);
+                self.cur = 0;
+                self.shift = 0;
+            }
+        }
+        self.len += 1;
+    }
+
+    /// Codes pushed so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Flush the partial tail byte and seal the packed stream.
+    pub fn finish(mut self) -> PackedCodes {
+        if self.shift > 0 {
+            self.data.push(self.cur);
+        }
+        PackedCodes { bits: self.bits, len: self.len, data: self.data }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,5 +253,43 @@ mod tests {
         let codes = vec![3u8; 4096];
         let p = PackedCodes::pack(&codes, 2);
         assert_eq!(p.storage_bytes(), 1024);
+    }
+
+    #[test]
+    fn writer_matches_pack_bit_for_bit() {
+        for bits in [1u8, 2, 4, 8] {
+            let max = 1u32 << bits;
+            for n in [0usize, 1, 3, 5, 8, 9, 63, 64, 65, 1000] {
+                let codes: Vec<u8> =
+                    (0..n).map(|i| ((i * 11 + 5) as u32 % max) as u8).collect();
+                let two_pass = PackedCodes::pack(&codes, bits);
+                let mut w = PackWriter::with_capacity(bits, n);
+                for &c in &codes {
+                    w.push(c);
+                }
+                assert_eq!(w.len(), n);
+                let streamed = w.finish();
+                assert_eq!(streamed, two_pass, "bits={bits} n={n}");
+                assert_eq!(streamed.as_bytes(), two_pass.as_bytes());
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_visits_every_code_in_order() {
+        for bits in [1u8, 2, 4, 8] {
+            let max = 1u32 << bits;
+            for n in [0usize, 1, 7, 8, 9, 257] {
+                let codes: Vec<u8> =
+                    (0..n).map(|i| ((i * 13 + 1) as u32 % max) as u8).collect();
+                let packed = PackedCodes::pack(&codes, bits);
+                let mut seen = Vec::with_capacity(n);
+                packed.for_each(|i, c| {
+                    assert_eq!(i, seen.len(), "bits={bits} out-of-order index");
+                    seen.push(c);
+                });
+                assert_eq!(seen, codes, "bits={bits} n={n}");
+            }
+        }
     }
 }

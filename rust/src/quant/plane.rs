@@ -9,7 +9,7 @@
 //!   * `ChannelSeparableToken` — Alg. 1: per-channel `c = sqrt(max|col|)`
 //!     normalization, then `Token`, then rescale.
 
-use super::packing::PackedCodes;
+use super::packing::{PackWriter, PackedCodes};
 use super::{min_max, QuantParams};
 
 /// The quantization granularities compared in the paper's Table 1.
@@ -84,14 +84,16 @@ impl QuantizedPlane {
     fn quant_token(x: &[f32], rows: usize, cols: usize, bits: u8,
                    chan_scale: &[f32]) -> Self {
         let cst = !chan_scale.is_empty();
-        let mut codes = vec![0u8; rows * cols];
+        let mut w = PackWriter::with_capacity(bits, rows * cols);
         let mut params = Vec::with_capacity(rows);
         let mut normed = vec![0f32; cols];
         // Perf (EXPERIMENTS.md §Perf): the encode loop hoists 1/s out of
         // the per-element path (mul instead of div) — ~25% off the
-        // compress cycle.  The reciprocal can differ from `x / s` by one
-        // ulp on exact rounding ties; the cross-layer contract is an
-        // error-bound (not bit) match, verified in rust/tests.
+        // compress cycle — and packs through a `PackWriter` as it
+        // quantizes, so no unpacked staging buffer is materialized.  The
+        // reciprocal can differ from `x / s` by one ulp on exact rounding
+        // ties; the cross-layer contract is an error-bound (not bit)
+        // match, verified in rust/tests.
         let qmax = ((1u32 << bits) - 1) as f32;
         for r in 0..rows {
             let row = &x[r * cols..(r + 1) * cols];
@@ -106,9 +108,8 @@ impl QuantizedPlane {
             let (mn, mx) = min_max(src);
             let p = QuantParams::from_min_max(mn, mx, bits);
             let inv_s = 1.0 / p.scale;
-            let dst = &mut codes[r * cols..(r + 1) * cols];
-            for (c, &v) in dst.iter_mut().zip(src) {
-                *c = ((v * inv_s).round_ties_even() + p.zero).clamp(0.0, qmax) as u8;
+            for &v in src {
+                w.push(((v * inv_s).round_ties_even() + p.zero).clamp(0.0, qmax) as u8);
             }
             params.push(p);
         }
@@ -117,7 +118,7 @@ impl QuantizedPlane {
             granularity: if cst { Granularity::ChannelSeparableToken } else { Granularity::Token },
             rows,
             cols,
-            codes: PackedCodes::pack(&codes, bits),
+            codes: w.finish(),
             params,
             chan_scale: chan_scale.to_vec(),
         }
@@ -136,10 +137,10 @@ impl QuantizedPlane {
         let params: Vec<QuantParams> = (0..cols)
             .map(|j| QuantParams::from_min_max(mn[j], mx[j], bits))
             .collect();
-        let mut codes = vec![0u8; rows * cols];
+        let mut w = PackWriter::with_capacity(bits, rows * cols);
         for r in 0..rows {
-            for j in 0..cols {
-                codes[r * cols + j] = params[j].encode(x[r * cols + j], bits);
+            for (j, p) in params.iter().enumerate() {
+                w.push(p.encode(x[r * cols + j], bits));
             }
         }
         QuantizedPlane {
@@ -147,7 +148,7 @@ impl QuantizedPlane {
             granularity: Granularity::Channel,
             rows,
             cols,
-            codes: PackedCodes::pack(&codes, bits),
+            codes: w.finish(),
             params,
             chan_scale: vec![],
         }
@@ -157,7 +158,7 @@ impl QuantizedPlane {
         assert!(n > 0);
         let groups = cols.div_ceil(n);
         let mut params = Vec::with_capacity(rows * groups);
-        let mut codes = vec![0u8; rows * cols];
+        let mut w = PackWriter::with_capacity(bits, rows * cols);
         for r in 0..rows {
             for g in 0..groups {
                 let j0 = g * n;
@@ -165,8 +166,8 @@ impl QuantizedPlane {
                 let seg = &x[r * cols + j0..r * cols + j1];
                 let (mn, mx) = min_max(seg);
                 let p = QuantParams::from_min_max(mn, mx, bits);
-                for (off, &v) in seg.iter().enumerate() {
-                    codes[r * cols + j0 + off] = p.encode(v, bits);
+                for &v in seg {
+                    w.push(p.encode(v, bits));
                 }
                 params.push(p);
             }
@@ -176,14 +177,90 @@ impl QuantizedPlane {
             granularity: Granularity::Group(n),
             rows,
             cols,
-            codes: PackedCodes::pack(&codes, bits),
+            codes: w.finish(),
             params,
             chan_scale: vec![],
         }
     }
 
     /// Dequantize the whole plane into `out` (`rows*cols`, row-major).
+    ///
+    /// Fused unpack–dequant (EXPERIMENTS.md §Perf): 1/2/4/8-bit lanes are
+    /// decoded straight from the packed bytes via
+    /// [`PackedCodes::for_each`], eliminating the `rows*cols` intermediate
+    /// byte buffer the old two-pass kernel allocated on every
+    /// materialization.  Bit-identical to the two-pass reference (same
+    /// `QuantParams::decode` on the same codes in the same order; pinned
+    /// by the `fused_dequant_matches_reference` property test).
     pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.rows * self.cols);
+        let cols = self.cols;
+        match self.granularity {
+            Granularity::Token => {
+                let params = &self.params;
+                let (mut r, mut j) = (0usize, 0usize);
+                self.codes.for_each(|i, c| {
+                    out[i] = params[r].decode(c);
+                    j += 1;
+                    if j == cols {
+                        j = 0;
+                        r += 1;
+                    }
+                });
+            }
+            Granularity::ChannelSeparableToken => {
+                let params = &self.params;
+                let scale = &self.chan_scale;
+                let (mut r, mut j) = (0usize, 0usize);
+                self.codes.for_each(|i, c| {
+                    out[i] = params[r].decode(c) * scale[j];
+                    j += 1;
+                    if j == cols {
+                        j = 0;
+                        r += 1;
+                    }
+                });
+            }
+            Granularity::Channel => {
+                let params = &self.params;
+                let mut j = 0usize;
+                self.codes.for_each(|i, c| {
+                    out[i] = params[j].decode(c);
+                    j += 1;
+                    if j == cols {
+                        j = 0;
+                    }
+                });
+            }
+            Granularity::Group(n) => {
+                let groups = cols.div_ceil(n);
+                let params = &self.params;
+                // Running (row, group, column-within-group) counters avoid
+                // the per-element division of the two-pass kernel.
+                let (mut base, mut g, mut jg, mut j) = (0usize, 0usize, 0usize, 0usize);
+                self.codes.for_each(|i, c| {
+                    out[i] = params[base + g].decode(c);
+                    jg += 1;
+                    j += 1;
+                    if j == cols {
+                        j = 0;
+                        jg = 0;
+                        g = 0;
+                        base += groups;
+                    } else if jg == n {
+                        jg = 0;
+                        g += 1;
+                    }
+                });
+            }
+        }
+    }
+
+    /// Two-pass unpack-then-decode reference implementation of
+    /// [`QuantizedPlane::dequantize_into`] — kept as the oracle for the
+    /// fused-kernel property tests.
+    #[cfg(test)]
+    pub(crate) fn dequantize_into_reference(&self, out: &mut [f32]) {
         assert_eq!(out.len(), self.rows * self.cols);
         let mut raw = vec![0u8; self.rows * self.cols];
         self.codes.unpack_into(&mut raw);
@@ -342,5 +419,41 @@ mod tests {
         let q = QuantizedPlane::quantize(&x, 64, 32, 2, Granularity::Token);
         // codes: 64*32 at 2 bits = 512 bytes; params: 2*64 at 2 bytes
         assert_eq!(q.storage_bytes(2), 512 + 256);
+    }
+
+    #[test]
+    fn fused_dequant_matches_reference() {
+        // Property: the fused unpack–dequant kernel is bit-identical to
+        // the two-pass unpack-then-decode reference across every bit
+        // width × granularity × ragged plane shape (rows/cols chosen so
+        // packed rows straddle byte boundaries).
+        use crate::util::prop::check;
+        check("fused-dequant == two-pass reference", 120, |g| {
+            let rows = g.usize_in(1, 33);
+            let cols = g.usize_in(1, 40);
+            let bits = *g.choice(&[1u8, 2, 4, 8]);
+            let group_n = g.usize_in(1, cols + 3);
+            let gran = *g.choice(&[
+                Granularity::Token,
+                Granularity::Channel,
+                Granularity::Group(group_n),
+                Granularity::ChannelSeparableToken,
+            ]);
+            let x = g.vec_f32(rows * cols, -6.0, 6.0);
+            let q = QuantizedPlane::quantize(&x, rows, cols, bits, gran);
+            let mut fused = vec![0f32; rows * cols];
+            let mut reference = vec![0f32; rows * cols];
+            q.dequantize_into(&mut fused);
+            q.dequantize_into_reference(&mut reference);
+            for (i, (a, b)) in fused.iter().zip(&reference).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "{gran:?} {rows}x{cols}@{bits}b: element {i} \
+                         fused {a} != reference {b}"
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 }

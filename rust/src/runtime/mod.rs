@@ -15,7 +15,7 @@ pub mod tensor;
 
 pub use manifest::{EntryInfo, Manifest, ModelInfo};
 pub use sim::{sim_model_info, SimModel, SIM_ARTIFACTS_DIR};
-pub use tensor::Tensor;
+pub use tensor::{ExecScratch, Tensor, TensorView};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -137,9 +137,31 @@ impl Runtime {
     /// literal is a tuple; it is decomposed into one `Tensor` per manifest
     /// output name, in order.  The sim backend produces the same output
     /// order and shapes directly.
+    ///
+    /// Allocates fresh output tensors per call; the decode hot path uses
+    /// [`Runtime::execute_into`] instead (DESIGN.md §9).
     pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let views: Vec<TensorView<'_>> = inputs.iter().map(Tensor::as_view).collect();
+        let mut scr = ExecScratch::default();
+        self.execute_into(name, &views, &mut scr)?;
+        Ok(scr.outs)
+    }
+
+    /// Execute an entry point with borrowed inputs and reusable outputs:
+    /// inputs are [`TensorView`]s over caller-owned storage (no input
+    /// clone), outputs land in `scr.outs` slots reshaped in place
+    /// (no output allocation at steady state on the sim backend).  Output
+    /// order and shapes are identical to [`Runtime::execute`] — this is
+    /// the same computation through a copy-minimal boundary
+    /// (DESIGN.md §9).
+    pub fn execute_into(
+        &self,
+        name: &str,
+        inputs: &[TensorView<'_>],
+        scr: &mut ExecScratch,
+    ) -> Result<()> {
         let exes = match &self.backend {
-            Backend::Sim(m) => return m.execute(name, inputs),
+            Backend::Sim(m) => return m.execute_into(name, inputs, scr),
             Backend::Pjrt { exes, .. } => exes,
         };
         let exe = exes
@@ -147,7 +169,7 @@ impl Runtime {
             .ok_or_else(|| anyhow::anyhow!("entry '{name}' not compiled"))?;
         let lits: Vec<xla::Literal> = inputs
             .iter()
-            .map(tensor::to_literal)
+            .map(tensor::view_to_literal)
             .collect::<Result<_>>()?;
         let result = exe
             .execute::<xla::Literal>(&lits)
@@ -156,7 +178,13 @@ impl Runtime {
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
         let parts = out.to_tuple().map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
-        parts.into_iter().map(tensor::from_literal).collect()
+        // The PJRT device fetch materializes owned literals anyway; move
+        // them into the slots (device transfer dominates on this path).
+        scr.outs.clear();
+        for p in parts {
+            scr.outs.push(tensor::from_literal(p)?);
+        }
+        Ok(())
     }
 }
 

@@ -24,7 +24,7 @@
 //!   over valid columns, and carry persistent column-salient positions,
 //!   so the saliency/streaming-probe machinery sees realistic input.
 
-use crate::runtime::{ModelInfo, Tensor};
+use crate::runtime::{ExecScratch, ModelInfo, Tensor, TensorView};
 use crate::workload::rng::splitmix_mix;
 use crate::Result;
 
@@ -114,14 +114,17 @@ impl SimModel {
         unit(key(TAG_KV ^ which, a, b, tok as u64))
     }
 
-    /// One attention row for the query `(tok, qpos)` at layer `l`:
-    /// positive weights over valid columns `<= qpos`, normalized to sum 1.
-    /// A column-intrinsic factor makes some positions persistently hot
-    /// (the "salient tokens" the saliency machinery must find); a
-    /// pair term adds per-query variation.
-    fn attn_row(&self, l: usize, tok: u16, qpos: usize, valid: &[f32]) -> Vec<f32> {
+    /// One attention row for the query `(tok, qpos)` at layer `l`,
+    /// written into `row` (length `max_seq`): positive weights over valid
+    /// columns `<= qpos`, normalized to sum 1.  A column-intrinsic factor
+    /// makes some positions persistently hot (the "salient tokens" the
+    /// saliency machinery must find); a pair term adds per-query
+    /// variation.
+    fn attn_row_into(&self, l: usize, tok: u16, qpos: usize, valid: &[f32],
+                     row: &mut [f32]) {
         let smax = self.info.max_seq;
-        let mut row = vec![0f32; smax];
+        debug_assert_eq!(row.len(), smax);
+        row.fill(0.0);
         let mut sum = 0f32;
         for (j, w) in row.iter_mut().enumerate().take(smax) {
             if j > qpos || valid[j] <= 0.0 {
@@ -143,19 +146,30 @@ impl SimModel {
                 *w *= inv;
             }
         }
+    }
+
+    /// Allocating convenience wrapper over [`Self::attn_row_into`].
+    fn attn_row(&self, l: usize, tok: u16, qpos: usize, valid: &[f32]) -> Vec<f32> {
+        let mut row = vec![0f32; self.info.max_seq];
+        self.attn_row_into(l, tok, qpos, valid, &mut row);
         row
     }
 
     /// Next-token logits for `(tok, pos)` reading the (possibly
     /// quantized) value cache through the layer-0 attention row — this is
     /// what makes compression policy observable in sim trajectories.
-    fn logits(&self, tok: u16, pos: usize, vbuf: &[f32], valid: &[f32]) -> Vec<f32> {
+    /// `row`/`sig` are caller-owned scratch; `out` (length `vocab`)
+    /// receives the logits.
+    fn logits_into(&self, tok: u16, pos: usize, vbuf: &[f32], valid: &[f32],
+                   row: &mut Vec<f32>, sig: &mut Vec<f32>, out: &mut [f32]) {
         let dh = self.info.d_head;
-        let arow = self.attn_row(0, tok, pos, valid);
+        row.resize(self.info.max_seq, 0.0);
+        self.attn_row_into(0, tok, pos, valid, row);
         // Aggregate the (l=0, h=0) value plane — the first plane of the
         // [L, H, S, dh] buffer — under the row weights.
-        let mut sig = vec![0f32; dh];
-        for (j, &w) in arow.iter().enumerate() {
+        sig.clear();
+        sig.resize(dh, 0.0);
+        for (j, &w) in row.iter().enumerate() {
             if w == 0.0 {
                 continue;
             }
@@ -164,27 +178,39 @@ impl SimModel {
                 *s += w * vbuf[off + c];
             }
         }
-        let mut logits = vec![0f32; self.info.vocab];
-        for (v, lg) in logits.iter_mut().enumerate() {
+        for (v, lg) in out.iter_mut().enumerate() {
             let mut x = 1.2 * unit(key(TAG_LOGIT, v as u64, tok as u64, 0));
             for (c, &s) in sig.iter().enumerate() {
                 x += 0.35 * s * unit(key(TAG_PROJ, v as u64, c as u64, 0));
             }
             *lg = x;
         }
-        logits
     }
 
-    /// Dispatch one entry point.  `name` must be one of [`Self::entries`].
+    /// Dispatch one entry point into fresh output tensors.  `name` must
+    /// be one of [`Self::entries`].
     pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let views: Vec<TensorView<'_>> = inputs.iter().map(Tensor::as_view).collect();
+        let mut scr = ExecScratch::default();
+        self.execute_into(name, &views, &mut scr)?;
+        Ok(scr.outs)
+    }
+
+    /// Dispatch one entry point with borrowed inputs and reusable output
+    /// slots — the allocation-free twin of [`Self::execute`]
+    /// (DESIGN.md §9).  The decode entry performs no heap allocation at
+    /// steady state (same shapes every call).
+    pub fn execute_into(&self, name: &str, inputs: &[TensorView<'_>],
+                        scr: &mut ExecScratch) -> Result<()> {
         let kind = name
-            .strip_suffix(&format!("_{}", self.model))
+            .strip_suffix(&self.model)
+            .and_then(|k| k.strip_suffix('_'))
             .ok_or_else(|| anyhow::anyhow!("sim: entry '{name}' not for model '{}'",
                                            self.model))?;
         match kind {
-            "prefill_full" => self.prefill(inputs, true),
-            "prefill_flash" => self.prefill(inputs, false),
-            "decode" => self.decode(inputs),
+            "prefill_full" => self.prefill(inputs, true, scr),
+            "prefill_flash" => self.prefill(inputs, false, scr),
+            "decode" => self.decode(inputs, scr),
             other => anyhow::bail!("sim: unknown entry kind '{other}'"),
         }
     }
@@ -192,17 +218,23 @@ impl SimModel {
     /// Shared prefill: fills the KV cache for the prompt rows and computes
     /// saliency.  `full` emits (logits, k, v, acc_sal, norm_sal); the
     /// flash path emits (logits, k, v, norm_sal) with saliency estimated
-    /// from the probe rows only (Alg. 2).
-    fn prefill(&self, inputs: &[Tensor], full: bool) -> Result<Vec<Tensor>> {
+    /// from the probe rows only (Alg. 2).  Cold path (once per session):
+    /// internal buffers are allocated per call and moved into the output
+    /// slots.
+    fn prefill(&self, inputs: &[TensorView<'_>], full: bool,
+               scr: &mut ExecScratch) -> Result<()> {
         let info = &self.info;
         let (smax, layers, heads, dh) =
             (info.max_seq, info.n_layers, info.n_heads, info.d_head);
         anyhow::ensure!(inputs.len() >= 2, "sim prefill: need tokens + valid");
         let tokens: Vec<u16> = match &inputs[0] {
-            Tensor::I32 { data, .. } => data.iter().map(|&t| t as u16).collect(),
+            TensorView::I32 { data, .. } => data.iter().map(|&t| t as u16).collect(),
             _ => anyhow::bail!("sim prefill: tokens must be i32"),
         };
-        let valid = inputs[1].as_f32().to_vec();
+        let valid = match &inputs[1] {
+            TensorView::F32 { data, .. } => *data,
+            _ => anyhow::bail!("sim prefill: valid must be f32"),
+        };
         anyhow::ensure!(tokens.len() == smax && valid.len() == smax,
                         "sim prefill: window mismatch");
         let n = valid.iter().filter(|&&v| v > 0.0).count();
@@ -230,7 +262,7 @@ impl SimModel {
         if full {
             for l in 0..layers {
                 for q in 0..n {
-                    let row = self.attn_row(l, tokens[q], q, &valid);
+                    let row = self.attn_row(l, tokens[q], q, valid);
                     for i in 0..smax {
                         acc[l * smax + i] += row[i];
                     }
@@ -243,7 +275,7 @@ impl SimModel {
         } else {
             anyhow::ensure!(inputs.len() >= 3, "sim prefill_flash: need probe idx");
             let pidx: Vec<usize> = match &inputs[2] {
-                Tensor::I32 { data, .. } => {
+                TensorView::I32 { data, .. } => {
                     data.iter().map(|&i| (i.max(0) as usize).min(smax - 1)).collect()
                 }
                 _ => anyhow::bail!("sim prefill_flash: probe idx must be i32"),
@@ -251,7 +283,7 @@ impl SimModel {
             for l in 0..layers {
                 let base = l * smax;
                 for &p in &pidx {
-                    let row = self.attn_row(l, tokens[p], p, &valid);
+                    let row = self.attn_row(l, tokens[p], p, valid);
                     for i in 0..smax {
                         nrm[base + i] += row[i];
                     }
@@ -268,67 +300,74 @@ impl SimModel {
         // generated token is decoded through the compressed cache).
         let logits = vec![0f32; smax * info.vocab];
         let cache_dims = [layers, heads, smax, dh];
-        let mut out = vec![
-            Tensor::f32(logits, &[smax, info.vocab]),
-            Tensor::f32(k, &cache_dims),
-            Tensor::f32(v, &cache_dims),
-        ];
+        scr.outs.clear();
+        scr.outs.push(Tensor::f32(logits, &[smax, info.vocab]));
+        scr.outs.push(Tensor::f32(k, &cache_dims));
+        scr.outs.push(Tensor::f32(v, &cache_dims));
         if full {
-            out.push(Tensor::f32(acc, &[layers, smax]));
+            scr.outs.push(Tensor::f32(acc, &[layers, smax]));
         }
-        out.push(Tensor::f32(nrm, &[layers, smax]));
-        Ok(out)
+        scr.outs.push(Tensor::f32(nrm, &[layers, smax]));
+        Ok(())
     }
 
     /// Decode one token: logits over the cache, the new KV row, and the
-    /// per-layer attention row for the streaming probes.
-    fn decode(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    /// per-layer attention row for the streaming probes.  Hot path: every
+    /// temporary lives in `scr`, every output lands in a reshaped slot —
+    /// zero heap allocation at steady state (DESIGN.md §9).
+    fn decode(&self, inputs: &[TensorView<'_>], scr: &mut ExecScratch) -> Result<()> {
         let info = &self.info;
         let (smax, layers, heads, dh) =
             (info.max_seq, info.n_layers, info.n_heads, info.d_head);
         anyhow::ensure!(inputs.len() == 5, "sim decode: need tok,pos,k,v,valid");
         let tok = match &inputs[0] {
-            Tensor::I32 { data, .. } => data[0] as u16,
+            TensorView::I32 { data, .. } => data[0] as u16,
             _ => anyhow::bail!("sim decode: tok must be i32"),
         };
         let pos = match &inputs[1] {
-            Tensor::I32 { data, .. } => data[0] as usize,
+            TensorView::I32 { data, .. } => data[0] as usize,
             _ => anyhow::bail!("sim decode: pos must be i32"),
         };
         let vbuf = inputs[3].as_f32();
         let valid = inputs[4].as_f32();
         anyhow::ensure!(pos < smax, "sim decode: pos {pos} outside window {smax}");
 
-        let logits = self.logits(tok, pos, vbuf, valid);
+        scr.ensure_outs(4);
+        let ExecScratch { outs, mask, row, sig } = scr;
 
-        let mut k_new = vec![0f32; layers * heads * dh];
-        let mut v_new = vec![0f32; layers * heads * dh];
+        let logits = outs[0].reset_f32(&[info.vocab]);
+        self.logits_into(tok, pos, vbuf, valid, row, sig, logits);
+
+        let k_new = outs[1].reset_f32(&[layers, heads, dh]);
         for l in 0..layers {
             for h in 0..heads {
                 let off = (l * heads + h) * dh;
                 for c in 0..dh {
                     k_new[off + c] = self.kv_elem(0, l, h, pos, c, tok);
+                }
+            }
+        }
+        let v_new = outs[2].reset_f32(&[layers, heads, dh]);
+        for l in 0..layers {
+            for h in 0..heads {
+                let off = (l * heads + h) * dh;
+                for c in 0..dh {
                     v_new[off + c] = self.kv_elem(1, l, h, pos, c, tok);
                 }
             }
         }
 
         // Attention row per layer for the query position itself (the row
-        // the engine may record into the streaming probe accumulator).
-        let mut q_valid = valid.to_vec();
-        q_valid[pos] = 1.0; // the new row attends to itself
-        let mut a_row = vec![0f32; layers * smax];
+        // the engine may record into the streaming probe accumulator),
+        // written straight into the output slot.
+        mask.clear();
+        mask.extend_from_slice(valid);
+        mask[pos] = 1.0; // the new row attends to itself
+        let a_row = outs[3].reset_f32(&[layers, smax]);
         for l in 0..layers {
-            let row = self.attn_row(l, tok, pos, &q_valid);
-            a_row[l * smax..(l + 1) * smax].copy_from_slice(&row);
+            self.attn_row_into(l, tok, pos, mask, &mut a_row[l * smax..(l + 1) * smax]);
         }
-
-        Ok(vec![
-            Tensor::f32(logits, &[info.vocab]),
-            Tensor::f32(k_new, &[layers, heads, dh]),
-            Tensor::f32(v_new, &[layers, heads, dh]),
-            Tensor::f32(a_row, &[layers, smax]),
-        ])
+        Ok(())
     }
 }
 

@@ -3,6 +3,12 @@
 //! The coordinator never touches `xla::Literal` directly; it trades in
 //! [`Tensor`] (f32 or i32 data + dims), and this module converts at the
 //! runtime boundary.
+//!
+//! The decode hot path trades in [`TensorView`] instead: a borrowed
+//! tensor over caller-owned storage (the session's `kbuf`/`vbuf`), so
+//! per-step inputs cross the runtime boundary without cloning the cache
+//! (DESIGN.md §9).  Outputs land in reusable [`Tensor`] slots reshaped in
+//! place by [`Tensor::reset_f32`].
 
 use crate::Result;
 
@@ -11,6 +17,70 @@ use crate::Result;
 pub enum Tensor {
     F32 { data: Vec<f32>, dims: Vec<usize> },
     I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+/// A borrowed tensor at the runtime boundary: row-major data + dims, both
+/// referencing caller-owned storage.  This is what lets `decode_step`
+/// hand the session's `[L,H,S,dh]` cache buffers to the runtime without
+/// the two full-cache clones the owned [`Tensor`] input path required
+/// (DESIGN.md §9).
+#[derive(Debug, Clone, Copy)]
+pub enum TensorView<'a> {
+    F32 { data: &'a [f32], dims: &'a [usize] },
+    I32 { data: &'a [i32], dims: &'a [usize] },
+}
+
+impl<'a> TensorView<'a> {
+    pub fn f32(data: &'a [f32], dims: &'a [usize]) -> Self {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        TensorView::F32 { data, dims }
+    }
+
+    pub fn i32(data: &'a [i32], dims: &'a [usize]) -> Self {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        TensorView::I32 { data, dims }
+    }
+
+    /// Scalar view over a caller-owned one-element buffer (the borrowed
+    /// twin of [`Tensor::scalar_i32`]).
+    pub fn scalar_i32(v: &'a [i32; 1]) -> Self {
+        TensorView::I32 { data: v, dims: &[] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            TensorView::F32 { dims, .. } | TensorView::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorView::F32 { data, .. } => data.len(),
+            TensorView::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow as f32 slice (panics if i32 — programming error).  The
+    /// view is `Copy`, so the returned borrow carries the underlying
+    /// `'a`, not the view's own lifetime.
+    pub fn as_f32(&self) -> &'a [f32] {
+        match *self {
+            TensorView::F32 { data, .. } => data,
+            TensorView::I32 { .. } => panic!("expected f32 tensor view"),
+        }
+    }
+
+    /// Borrow as i32 slice (panics if f32 — programming error).
+    pub fn as_i32(&self) -> &'a [i32] {
+        match *self {
+            TensorView::I32 { data, .. } => data,
+            TensorView::F32 { .. } => panic!("expected i32 tensor view"),
+        }
+    }
 }
 
 impl Tensor {
@@ -60,32 +130,94 @@ impl Tensor {
             Tensor::I32 { data, .. } => data.into_iter().map(|v| v as f32).collect(),
         }
     }
+
+    /// Borrow this tensor as a [`TensorView`].
+    pub fn as_view(&self) -> TensorView<'_> {
+        match self {
+            Tensor::F32 { data, dims } => TensorView::F32 { data, dims },
+            Tensor::I32 { data, dims } => TensorView::I32 { data, dims },
+        }
+    }
+
+    /// An empty f32 tensor — the initial state of a reusable output slot.
+    pub fn empty() -> Self {
+        Tensor::F32 { data: Vec::new(), dims: Vec::new() }
+    }
+
+    /// Reshape this slot in place to an f32 tensor of `dims`, reusing the
+    /// existing allocations, and return the writable (zero-filled) data.
+    /// At steady state (same shape every call) this performs no heap
+    /// allocation — the core of the `execute_into` output contract
+    /// (DESIGN.md §9).
+    pub fn reset_f32(&mut self, dims: &[usize]) -> &mut [f32] {
+        let n = dims.iter().product::<usize>();
+        if !matches!(self, Tensor::F32 { .. }) {
+            *self = Tensor::empty();
+        }
+        match self {
+            Tensor::F32 { data, dims: d } => {
+                data.clear();
+                data.resize(n, 0.0);
+                d.clear();
+                d.extend_from_slice(dims);
+                data
+            }
+            Tensor::I32 { .. } => unreachable!(),
+        }
+    }
+}
+
+/// Reusable execution scratch for [`crate::runtime::Runtime::execute_into`]:
+/// output slots reshaped in place per call, plus backend-internal
+/// temporaries (the sim backend's attention row / mask / head-signal
+/// buffers).  Owned by the caller (one per [`crate::coordinator::Session`])
+/// so the steady-state decode loop performs no heap allocation
+/// (DESIGN.md §9).
+#[derive(Debug, Clone, Default)]
+pub struct ExecScratch {
+    /// Output slots, one [`Tensor`] per entry-point output, reshaped in
+    /// place by the backend on every call.
+    pub outs: Vec<Tensor>,
+    /// Sim backend: the query-step validity mask (`valid` with the query
+    /// position switched live).
+    pub(crate) mask: Vec<f32>,
+    /// Sim backend: one attention row.
+    pub(crate) row: Vec<f32>,
+    /// Sim backend: the aggregated head signal feeding the logits.
+    pub(crate) sig: Vec<f32>,
+}
+
+impl ExecScratch {
+    /// Ensure `n` output slots exist (empty f32 tensors are appended).
+    pub fn ensure_outs(&mut self, n: usize) {
+        while self.outs.len() < n {
+            self.outs.push(Tensor::empty());
+        }
+        self.outs.truncate(n);
+    }
+
+    /// Borrow output `i` as f32 (panics when absent — programming error).
+    pub fn out_f32(&self, i: usize) -> &[f32] {
+        self.outs[i].as_f32()
+    }
 }
 
 /// Tensor -> xla literal (reshaped to the tensor's dims).
 pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let lit = match t {
-        Tensor::F32 { data, dims } => {
-            let l = xla::Literal::vec1(data.as_slice());
-            if dims.is_empty() {
-                // () scalar: vec1 gives [1]; reshape to scalar shape
-                l.reshape(&[]).map_err(|e| anyhow::anyhow!("{e:?}"))?
-            } else {
-                let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
-                l.reshape(&d).map_err(|e| anyhow::anyhow!("{e:?}"))?
-            }
-        }
-        Tensor::I32 { data, dims } => {
-            let l = xla::Literal::vec1(data.as_slice());
-            if dims.is_empty() {
-                l.reshape(&[]).map_err(|e| anyhow::anyhow!("{e:?}"))?
-            } else {
-                let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
-                l.reshape(&d).map_err(|e| anyhow::anyhow!("{e:?}"))?
-            }
-        }
+    view_to_literal(&t.as_view())
+}
+
+/// TensorView -> xla literal: one host copy into the literal, then a
+/// zero-copy in-place reshape (`Literal::into_reshape`) — the owned-path
+/// `vec1` + `reshape` pair cloned the payload twice (DESIGN.md §9).
+pub fn view_to_literal(t: &TensorView<'_>) -> Result<xla::Literal> {
+    let (l, dims) = match t {
+        TensorView::F32 { data, dims } => (xla::Literal::vec1(*data), *dims),
+        TensorView::I32 { data, dims } => (xla::Literal::vec1(*data), *dims),
     };
-    Ok(lit)
+    // `&[]` reshapes the one-element vec1 to a () scalar.
+    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+    l.into_reshape(&d).map_err(|e| anyhow::anyhow!("{e:?}"))
 }
 
 /// xla literal -> Tensor (f32 or i32 by element type).
@@ -146,5 +278,59 @@ mod tests {
         let lit = to_literal(&t).unwrap();
         let back = from_literal(lit).unwrap();
         assert_eq!(back, t);
+    }
+
+    #[test]
+    fn view_roundtrip_matches_owned() {
+        let t = Tensor::f32(vec![1.0, -2.5, 3.25, 0.0, 9.0, 1.5], &[2, 3]);
+        let lit = view_to_literal(&t.as_view()).unwrap();
+        assert_eq!(from_literal(lit).unwrap(), t);
+        let buf = [7i32];
+        let v = TensorView::scalar_i32(&buf);
+        assert!(v.dims().is_empty());
+        assert_eq!(v.as_i32(), &[7]);
+        let lit = view_to_literal(&v).unwrap();
+        assert_eq!(from_literal(lit).unwrap(), Tensor::scalar_i32(7));
+    }
+
+    #[test]
+    fn view_borrows_without_copying() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0];
+        let dims = [2usize, 2];
+        let v = TensorView::f32(&data, &dims);
+        assert_eq!(v.len(), 4);
+        assert!(!v.is_empty());
+        assert_eq!(v.as_f32().as_ptr(), data.as_ptr()); // borrowed, not cloned
+    }
+
+    #[test]
+    fn reset_f32_reuses_allocation_at_steady_state() {
+        let mut slot = Tensor::empty();
+        let first_ptr = {
+            let buf = slot.reset_f32(&[4, 2]);
+            buf[7] = 9.0;
+            buf.as_ptr()
+        };
+        assert_eq!(slot.dims(), &[4, 2]);
+        // Same shape again: same allocation, contents re-zeroed.
+        let buf = slot.reset_f32(&[4, 2]);
+        assert_eq!(buf.as_ptr(), first_ptr);
+        assert!(buf.iter().all(|&x| x == 0.0));
+        // Slot type flips transparently.
+        let mut islot = Tensor::scalar_i32(3);
+        let buf = islot.reset_f32(&[3]);
+        assert_eq!(buf.len(), 3);
+        assert_eq!(islot.dims(), &[3]);
+    }
+
+    #[test]
+    fn exec_scratch_slots() {
+        let mut s = ExecScratch::default();
+        s.ensure_outs(3);
+        assert_eq!(s.outs.len(), 3);
+        s.outs[1].reset_f32(&[2])[0] = 5.0;
+        assert_eq!(s.out_f32(1), &[5.0, 0.0]);
+        s.ensure_outs(2); // shrink drops the tail slot
+        assert_eq!(s.outs.len(), 2);
     }
 }

@@ -23,6 +23,10 @@ pub struct StreamingProbe {
     step_in_cycle: usize,
     rows: Vec<Vec<f32>>,      // probe attention rows (length = window cols)
     row_positions: Vec<usize>, // absolute query position of each row
+    /// Retired row buffers recycled across cycles (DESIGN.md §9): after
+    /// the first cycle, recording a probe row costs a copy, not an
+    /// allocation.
+    free: Vec<Vec<f32>>,
 }
 
 impl StreamingProbe {
@@ -36,6 +40,18 @@ impl StreamingProbe {
             step_in_cycle: 0,
             rows: Vec::new(),
             row_positions: Vec::new(),
+            free: Vec::new(),
+        }
+    }
+
+    /// Pre-warm the row pool with `n` buffers of `cols` capacity, so the
+    /// first cycle's recordings allocate nothing either (the steady-state
+    /// bench reserves `recompress_every` rows — the per-cycle maximum).
+    pub fn reserve_rows(&mut self, n: usize, cols: usize) {
+        self.rows.reserve(n);
+        self.row_positions.reserve(n);
+        while self.free.len() < n {
+            self.free.push(Vec::with_capacity(cols));
         }
     }
 
@@ -51,9 +67,13 @@ impl StreamingProbe {
     }
 
     /// Record one probe attention row (`a_row` over the cache columns) for
-    /// the query at absolute position `pos`.
+    /// the query at absolute position `pos`.  Reuses a retired buffer
+    /// when one is available.
     pub fn record(&mut self, a_row: &[f32], pos: usize) {
-        self.rows.push(a_row.to_vec());
+        let mut buf = self.free.pop().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(a_row);
+        self.rows.push(buf);
         self.row_positions.push(pos);
     }
 
@@ -87,7 +107,7 @@ impl StreamingProbe {
 
     fn reset(&mut self) {
         self.step_in_cycle = 0;
-        self.rows.clear();
+        self.free.append(&mut self.rows); // recycle row buffers
         self.row_positions.clear();
     }
 }
@@ -157,6 +177,22 @@ mod tests {
     fn empty_cycle_yields_none() {
         let mut sp = StreamingProbe::new(10, 0.0, 0.0, 5);
         assert!(sp.take_saliency(4).is_none());
+    }
+
+    #[test]
+    fn row_buffers_recycle_across_cycles() {
+        let mut sp = StreamingProbe::new(4, 1.0, 0.0, 9);
+        sp.reserve_rows(4, 4);
+        // Two cycles with identical recordings: the pooled path must not
+        // change the computed saliency.
+        let mut sals = vec![];
+        for _ in 0..2 {
+            sp.record(&[0.5, 0.25, 0.25, 0.0], 2);
+            sp.record(&[0.1, 0.1, 0.4, 0.4], 3);
+            sals.push(sp.take_saliency(4).unwrap());
+            assert_eq!(sp.n_rows(), 0);
+        }
+        assert_eq!(sals[0], sals[1]);
     }
 
     /// Uniform causal attention over `n` query rows: row k spreads

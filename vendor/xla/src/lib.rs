@@ -149,6 +149,15 @@ impl Literal {
     /// Reinterpret with new dimensions (element count must match; `&[]`
     /// produces a scalar).
     pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        self.clone().into_reshape(dims)
+    }
+
+    /// By-value [`Literal::reshape`]: moves the payload instead of
+    /// cloning it.  The `vec1` + `reshape` marshalling pair used to copy
+    /// every input tensor twice; the decode hot path builds literals with
+    /// `vec1` + `into_reshape` so the payload is copied exactly once
+    /// (zipcache DESIGN.md §9).
+    pub fn into_reshape(self, dims: &[i64]) -> Result<Literal> {
         let want: i64 = dims.iter().product();
         if self.len() as i64 != want {
             return Err(Error {
@@ -157,10 +166,10 @@ impl Literal {
         }
         match self {
             Literal::F32 { data, .. } => {
-                Ok(Literal::F32 { data: data.clone(), dims: dims.to_vec() })
+                Ok(Literal::F32 { data, dims: dims.to_vec() })
             }
             Literal::S32 { data, .. } => {
-                Ok(Literal::S32 { data: data.clone(), dims: dims.to_vec() })
+                Ok(Literal::S32 { data, dims: dims.to_vec() })
             }
             Literal::Tuple(_) => Err(Error { msg: "reshape on tuple literal".into() }),
         }
@@ -269,6 +278,24 @@ mod tests {
         assert_eq!(s.ty(), ElementType::F32);
         assert_eq!(r.to_vec::<f32>().unwrap().len(), 6);
         assert!(l.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn into_reshape_moves_payload() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let ptr = match &l {
+            Literal::F32 { data, .. } => data.as_ptr(),
+            _ => unreachable!(),
+        };
+        let r = l.into_reshape(&[2, 2]).unwrap();
+        match &r {
+            Literal::F32 { data, dims } => {
+                assert_eq!(data.as_ptr(), ptr); // moved, not cloned
+                assert_eq!(dims, &[2, 2]);
+            }
+            _ => unreachable!(),
+        }
+        assert!(r.into_reshape(&[5]).is_err());
     }
 
     #[test]

@@ -35,7 +35,7 @@ fn main() -> Result<()> {
     let sample = gen.sample(args.get_u64("seed")?);
     let sess = engine.start_session(sample.prompt().to_vec(), 2)?;
     let n = sample.prompt_len;
-    let (k, v) = (&sess.kbuf, &sess.vbuf);
+    let (k, v) = (sess.kbuf(), sess.vbuf());
 
     let variants: Vec<(&str, QuantSpec)> = vec![
         ("groupwise/groupwise", QuantSpec {

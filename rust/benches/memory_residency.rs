@@ -1,0 +1,154 @@
+//! Memory-residency sweep (EXPERIMENTS.md §Memory, DESIGN.md §10):
+//! peak resident bytes, park cycles, and throughput across
+//! `memory.slots` x `max_batch` configurations on the sim backend.
+//!
+//! The contract under test: dense fp32 memory is bounded by the slot
+//! pool — peak resident bytes never exceed
+//! `slots x slot_bytes + batch x worst_case_compressed` — while per-tag
+//! outputs stay bit-identical at every slot count (park/unpark is
+//! bit-exact), so shrinking `slots` trades park/re-materialization
+//! cycles for bounded memory, never accuracy.  Emits
+//! `BENCH_memory.json` (uploaded by the CI `bench-smoke` job).
+//!
+//! Run: `cargo bench --bench memory_residency` (append `-- --smoke` for
+//! the short CI variant).
+
+use std::time::Instant;
+
+use zipcache::config::EngineConfig;
+use zipcache::coordinator::batcher::{ContinuousBatcher, QueuedRequest};
+use zipcache::coordinator::Engine;
+use zipcache::kvcache::worst_case_resident_bytes;
+use zipcache::util::bench::Table;
+use zipcache::workload::{Task, TaskGen};
+
+const MAX_NEW: usize = 12;
+const SEED: u64 = 42;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let batches: &[usize] = if smoke { &[4] } else { &[4, 8] };
+    let requests_per_batch = if smoke { 2 } else { 3 };
+
+    let mut table = Table::new(&[
+        "batch", "slots", "park cycles", "preempted", "peak slots",
+        "peak resident KiB", "dense bound KiB", "tok/s", "wall ms",
+    ]);
+    let mut rows = Vec::new();
+
+    for &batch in batches {
+        let n_requests = batch * requests_per_batch;
+        // Per-tag outputs must be identical at every slot count — the
+        // determinism contract the sweep rides on.
+        let mut reference: Option<Vec<(u64, Vec<u16>)>> = None;
+
+        for slots in [1usize, 2, batch] {
+            let mut cfg = EngineConfig::load_default("sim", "micro")
+                .expect("sim config");
+            cfg.scheduler.max_batch = batch;
+            cfg.memory.slots = slots;
+            cfg.quant.recompress_every = 4;
+            cfg.parallelism = 1;
+            cfg.seed = SEED;
+            let recompress = cfg.quant.recompress_every;
+            let mut engine = Engine::new(cfg).expect("engine");
+            let layout = engine.layout();
+            let slot_bytes = engine.slot_pool().slot_bytes();
+
+            let gen = TaskGen::new(Task::Code, layout.seq - MAX_NEW);
+            let mut batcher = ContinuousBatcher::new(batch, n_requests);
+            for tag in 0..n_requests as u64 {
+                batcher
+                    .submit(QueuedRequest {
+                        prompt: gen.sample(tag).prompt().to_vec(),
+                        max_new: MAX_NEW,
+                        tag,
+                    })
+                    .expect("queue sized to the trace");
+            }
+            let t0 = Instant::now();
+            let outcomes = batcher.run_to_completion(&mut engine).expect("run");
+            let wall = t0.elapsed();
+            assert_eq!(outcomes.len(), n_requests, "requests dropped");
+
+            let outputs: Vec<(u64, Vec<u16>)> = outcomes
+                .iter()
+                .map(|o| (o.tag, o.output.tokens.clone()))
+                .collect();
+            match &reference {
+                None => reference = Some(outputs),
+                Some(want) => assert_eq!(
+                    want, &outputs,
+                    "batch={batch} slots={slots} changed per-request outputs"
+                ),
+            }
+
+            // The residency contract: dense memory bounded by the slot
+            // pool, compressed state bounded by the worst case per
+            // active session.
+            let peak_resident = engine.metrics.peak_resident_bytes;
+            let peak_slots = engine.slot_pool().peak_in_use();
+            let wc = worst_case_resident_bytes(layout, layout.seq, recompress);
+            assert!(peak_slots <= slots,
+                    "batch={batch} slots={slots}: {peak_slots} dense slots");
+            assert!(
+                peak_resident <= slots * slot_bytes + batch * wc,
+                "batch={batch} slots={slots}: peak resident {peak_resident} B \
+                 exceeds {slots} x {slot_bytes} + {batch} x {wc}"
+            );
+            // And the dense part is real: at least one slot's worth was
+            // resident at the peak.
+            assert!(peak_resident >= slot_bytes,
+                    "peak resident below a single dense slot");
+            let park_cycles = engine.metrics.park_cycles;
+            if slots == batch {
+                assert_eq!(park_cycles, 0, "full pool must never park");
+            } else {
+                assert!(park_cycles > 0, "bounded pool never parked");
+            }
+
+            let tokens: usize =
+                outcomes.iter().map(|o| o.output.tokens.len()).sum();
+            let tok_s = tokens as f64 / wall.as_secs_f64();
+            table.row(&[
+                batch.to_string(),
+                slots.to_string(),
+                park_cycles.to_string(),
+                batcher.preempted().to_string(),
+                peak_slots.to_string(),
+                format!("{:.1}", peak_resident as f64 / 1024.0),
+                format!("{:.1}", (slots * slot_bytes) as f64 / 1024.0),
+                format!("{tok_s:.0}"),
+                format!("{:.1}", wall.as_secs_f64() * 1000.0),
+            ]);
+            rows.push(format!(
+                "    {{\"batch\": {batch}, \"slots\": {slots}, \
+                 \"park_cycles\": {park_cycles}, \
+                 \"preempted\": {}, \
+                 \"peak_slots_in_use\": {peak_slots}, \
+                 \"peak_resident_bytes\": {peak_resident}, \
+                 \"dense_slot_bytes\": {slot_bytes}, \
+                 \"worst_case_request_bytes\": {wc}, \
+                 \"tok_per_s\": {tok_s:.1}, \
+                 \"wall_ms\": {:.1}}}",
+                batcher.preempted(),
+                wall.as_secs_f64() * 1000.0,
+            ));
+        }
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"memory_residency\",\n  \"model\": \"micro\",\n  \
+         \"smoke\": {smoke},\n  \"max_new\": {MAX_NEW},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_memory.json", &json).unwrap();
+
+    println!("== memory residency (sim backend, micro) ==");
+    table.print();
+    print!("{json}");
+    println!(
+        "\nOK: outputs bit-identical across slot counts; peak resident \
+         bounded by slots x dense + batch x worst-case compressed"
+    );
+}

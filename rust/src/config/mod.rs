@@ -108,6 +108,24 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// Memory-residency knobs (DESIGN.md §10).  The all-zero default means
+/// "one slot per decode slot, no byte budget" — today's unbounded
+/// behaviour.
+#[derive(Debug, Clone, Default)]
+pub struct MemoryConfig {
+    /// Dense materialization slots per shard: sessions beyond this stay
+    /// compressed-resident and are parked/unparked by the batcher's park
+    /// policy.  `0` = one slot per decode slot (`max_batch`, the
+    /// bit-identical unbounded behaviour); otherwise must be
+    /// `<= max_batch`.
+    pub slots: usize,
+    /// Per-shard byte budget for worst-case compressed session
+    /// footprints: admission rejects a request when no shard can reserve
+    /// its worst-case bytes (exact CAS boundary, like `queue_depth`).
+    /// `0` = unlimited.
+    pub budget_bytes: usize,
+}
+
 /// Full engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -118,6 +136,7 @@ pub struct EngineConfig {
     pub policy: PolicyKind,
     pub quant: QuantConfig,
     pub scheduler: SchedulerConfig,
+    pub memory: MemoryConfig,
     /// Worker threads for plane-level compression (DESIGN.md §5):
     /// `0` = one per available core, `1` = sequential.  Output is
     /// bit-identical at any width, so this is a pure latency knob.
@@ -135,6 +154,7 @@ impl EngineConfig {
             policy: PolicyKind::Zipcache,
             quant: QuantConfig::default(),
             scheduler: SchedulerConfig::default(),
+            memory: MemoryConfig::default(),
             parallelism: 0,
             seed: 0,
         };
@@ -161,6 +181,10 @@ impl EngineConfig {
                 queue_depth: c.get_usize("scheduler.queue_depth", 256)?,
                 shards: c.get_usize("scheduler.shards", 1)?,
             },
+            memory: MemoryConfig {
+                slots: c.get_usize("memory.slots", 0)?,
+                budget_bytes: c.get_usize("memory.budget_bytes", 0)?,
+            },
             parallelism: c.get_usize("parallelism", 0)?,
             seed: c.get_u64("seed", 0)?,
         };
@@ -180,6 +204,13 @@ impl EngineConfig {
         ensure!(q.bits_high >= q.bits_low, "bits_high >= bits_low");
         ensure!(q.recompress_every > 0, "recompress_every > 0");
         ensure!(self.scheduler.max_batch > 0, "max_batch > 0");
+        ensure!(
+            self.memory.slots <= self.scheduler.max_batch,
+            "memory.slots ({}) must be <= scheduler.max_batch ({}) — extra \
+             slots beyond the decode width can never be used",
+            self.memory.slots,
+            self.scheduler.max_batch
+        );
         ensure!(!self.model.is_empty(), "model name required");
         Ok(())
     }
@@ -252,6 +283,30 @@ max_batch = 4
         assert_eq!(c.scheduler.shards, 4);
         let d = EngineConfig::load_default("sim", "micro").unwrap();
         assert_eq!(d.scheduler.shards, 1);
+    }
+
+    #[test]
+    fn memory_from_file_and_default() {
+        let text = "model = \"tiny\"\n[scheduler]\nmax_batch = 4\n\
+                    [memory]\nslots = 2\nbudget_bytes = 65536\n";
+        let path = std::env::temp_dir().join("zipcache_cfg_mem_test.conf");
+        std::fs::write(&path, text).unwrap();
+        let c = EngineConfig::from_file(&path).unwrap();
+        assert_eq!(c.memory.slots, 2);
+        assert_eq!(c.memory.budget_bytes, 65536);
+        let d = EngineConfig::load_default("sim", "micro").unwrap();
+        assert_eq!(d.memory.slots, 0); // 0 = one slot per decode slot
+        assert_eq!(d.memory.budget_bytes, 0); // 0 = unlimited
+    }
+
+    #[test]
+    fn slots_beyond_max_batch_rejected() {
+        let mut c = EngineConfig::load_default("sim", "micro").unwrap();
+        c.scheduler.max_batch = 4;
+        c.memory.slots = 4;
+        assert!(c.validate().is_ok());
+        c.memory.slots = 5;
+        assert!(c.validate().is_err());
     }
 
     #[test]

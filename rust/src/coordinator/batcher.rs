@@ -1,11 +1,21 @@
 //! Continuous batcher: round-robin token-level interleaving of active
-//! sessions (Orca-style iteration-level scheduling) with admission control.
+//! sessions (Orca-style iteration-level scheduling) with admission control
+//! and bounded dense residency (DESIGN.md §10).
 //!
 //! The decode artifact is single-sequence, so "batching" here is
 //! interleaved scheduling rather than a batched matmul — the scheduling
 //! behaviour (admission, fairness, completion-triggered refill from the
 //! queue) is the part of the serving stack the paper's efficiency claims
 //! interact with.  DESIGN.md records this substitution.
+//!
+//! Dense residency: the engine's slot pool holds at most `memory.slots`
+//! materialization slots, so when more sessions are active than slots
+//! exist, each iteration *schedules in* only `slots` of them (per the
+//! pluggable [`ParkPolicy`]) and parks the rest — their compressed
+//! snapshot stays resident, the dense buffers do not.  With
+//! `slots == max_batch` every active session is scheduled every
+//! iteration and nothing is ever parked, reproducing the unbounded
+//! behaviour bit-identically.
 //!
 //! `queue_depth` only applies when the batcher is driven directly (bench
 //! harnesses, run_to_completion).  Under the sharded server the
@@ -36,23 +46,125 @@ pub struct BatchOutcome {
     pub output: GenerationOutput,
 }
 
+/// Scheduling view of one active session, handed to the [`ParkPolicy`].
+#[derive(Debug, Clone, Copy)]
+pub struct SessionMeta {
+    /// Engine-assigned session id (monotone in admission order on one
+    /// engine — the round-robin cursor walks it).
+    pub session_id: u64,
+    /// Batcher iteration at which this session last decoded a token
+    /// (admission iteration until then).
+    pub last_step: u64,
+    /// Currently holding a dense materialization slot?
+    pub resident: bool,
+}
+
+/// Which active sessions hold dense slots this iteration — the park
+/// decision inverted (everyone *not* selected is parked as needed).
+/// Implementations must be deterministic: the residency refactor keeps
+/// outputs independent of the policy (park/unpark is bit-exact), but
+/// park counts and latency profiles are part of the bench surface.
+pub trait ParkPolicy: Send {
+    fn name(&self) -> &'static str;
+    /// Append up to `n_run` indices into `metas` onto `out` (which
+    /// arrives empty): the sessions to schedule in.
+    fn schedule(&mut self, metas: &[SessionMeta], n_run: usize, out: &mut Vec<usize>);
+}
+
+/// Rotate a window of `n_run` sessions through the active list in
+/// session-id order: every session is scheduled once per
+/// `ceil(active / slots)` iterations.
+#[derive(Debug, Default)]
+pub struct RoundRobinPark {
+    cursor: u64,
+}
+
+impl ParkPolicy for RoundRobinPark {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn schedule(&mut self, metas: &[SessionMeta], n_run: usize, out: &mut Vec<usize>) {
+        if metas.is_empty() || n_run == 0 {
+            return;
+        }
+        // Indices in cyclic session-id order starting at the cursor.
+        let mut order: Vec<usize> = (0..metas.len()).collect();
+        order.sort_by_key(|&i| metas[i].session_id);
+        let start = order
+            .iter()
+            .position(|&i| metas[i].session_id >= self.cursor)
+            .unwrap_or(0);
+        for k in 0..n_run.min(order.len()) {
+            out.push(order[(start + k) % order.len()]);
+        }
+        let last = out[out.len() - 1];
+        self.cursor = metas[last].session_id + 1;
+    }
+}
+
+/// Schedule the sessions that decoded least recently (oldest
+/// `last_step` first; session id breaks ties).  Equivalent to
+/// round-robin under a static batch, fairer when sessions join and
+/// leave mid-flight.
+#[derive(Debug, Default)]
+pub struct LruByLastStep;
+
+impl ParkPolicy for LruByLastStep {
+    fn name(&self) -> &'static str {
+        "lru-by-last-step"
+    }
+
+    fn schedule(&mut self, metas: &[SessionMeta], n_run: usize, out: &mut Vec<usize>) {
+        let mut order: Vec<usize> = (0..metas.len()).collect();
+        order.sort_by_key(|&i| (metas[i].last_step, metas[i].session_id));
+        out.extend(order.into_iter().take(n_run));
+    }
+}
+
+struct Active {
+    tag: u64,
+    sess: Session,
+    last_step: u64,
+}
+
 /// Iteration-level continuous batcher over one engine.
 pub struct ContinuousBatcher {
     max_batch: usize,
     queue_depth: usize,
     queue: VecDeque<QueuedRequest>,
-    active: Vec<(u64, Session)>,
+    active: Vec<Active>,
     outcomes: Vec<BatchOutcome>,
+    policy: Box<dyn ParkPolicy>,
+    /// Iteration counter feeding `SessionMeta::last_step`.
+    step_counter: u64,
+    /// Sessions parked to free a slot (admission or schedule-in).
+    preempted: u64,
+    // Reusable scheduling scratch.
+    sched: Vec<usize>,
+    metas: Vec<SessionMeta>,
 }
 
 impl ContinuousBatcher {
     pub fn new(max_batch: usize, queue_depth: usize) -> Self {
+        Self::with_policy(max_batch, queue_depth,
+                          Box::new(RoundRobinPark::default()))
+    }
+
+    /// Like [`ContinuousBatcher::new`] with an explicit park policy.
+    pub fn with_policy(max_batch: usize, queue_depth: usize,
+                       policy: Box<dyn ParkPolicy>) -> Self {
         ContinuousBatcher {
             max_batch,
             queue_depth,
             queue: VecDeque::new(),
             active: Vec::new(),
             outcomes: Vec::new(),
+            policy,
+            step_counter: 0,
+            preempted: 0,
+            sched: Vec::new(),
+            metas: Vec::new(),
         }
     }
 
@@ -77,30 +189,131 @@ impl ContinuousBatcher {
         self.queue.is_empty() && self.active.is_empty()
     }
 
+    /// Sessions parked to free a materialization slot so far.
+    pub fn preempted(&self) -> u64 {
+        self.preempted
+    }
+
+    /// Bytes currently resident across active sessions: compressed
+    /// snapshots + parked tails + checked-out dense slots
+    /// (DESIGN.md §10).  The dispatcher weights routing by this, and the
+    /// scheduler publishes it into the engine's resident gauge.
+    pub fn active_bytes(&self) -> usize {
+        self.active.iter().map(|a| a.sess.resident_bytes()).sum()
+    }
+
     /// Run one scheduler iteration: refill the batch from the queue
-    /// (prefill), then advance every active session by one token.
+    /// (prefill — parking a victim when the slot pool is exhausted),
+    /// schedule up to `slots` sessions dense, advance each of them by
+    /// one token, and retire the finished ones.
     pub fn step(&mut self, engine: &mut Engine) -> Result<()> {
-        // Admission: fill free slots (prefill happens here).
-        while self.active.len() < self.max_batch {
-            let Some(req) = self.queue.pop_front() else { break };
+        self.step_counter += 1;
+        // Admission: fill free decode slots (prefill happens here, so
+        // each admission needs a dense materialization slot).
+        while self.active.len() < self.max_batch && !self.queue.is_empty() {
+            if engine.free_slots() == 0 && !self.park_one(engine) {
+                break;
+            }
+            let req = self.queue.pop_front().expect("checked non-empty");
             let sess = engine.start_session(req.prompt, req.max_new)?;
-            self.active.push((req.tag, sess));
+            self.active.push(Active {
+                tag: req.tag,
+                sess,
+                last_step: self.step_counter,
+            });
         }
-        // Iteration-level decode across the batch.
-        for (_, sess) in self.active.iter_mut() {
-            engine.decode_step(sess)?;
+
+        // Schedule-in: pick which sessions hold dense slots this
+        // iteration.  When every active session fits (slots >=
+        // active — always true at `slots == max_batch`), skip the
+        // policy entirely: nothing is parked and the decode order is
+        // exactly the unbounded batcher's.
+        let n_run = engine.slot_capacity().min(self.active.len());
+        self.sched.clear();
+        if n_run == self.active.len() {
+            self.sched.extend(0..self.active.len());
+            // Everyone fits — but a session parked under earlier pressure
+            // (batch has since drained) still needs its slot back.
+            // No-op for dense sessions, so the `slots == max_batch` path
+            // stays exactly the unbounded batcher.
+            for &i in &self.sched {
+                engine.unpark(&mut self.active[i].sess)?;
+            }
+        } else {
+            self.metas.clear();
+            self.metas.extend(self.active.iter().map(|a| SessionMeta {
+                session_id: a.sess.id,
+                last_step: a.last_step,
+                resident: !a.sess.is_parked(),
+            }));
+            self.policy.schedule(&self.metas, n_run, &mut self.sched);
+            // Decode in active order regardless of policy order (outputs
+            // are interleaving-independent; this keeps traces readable).
+            self.sched.sort_unstable();
+            // Park every resident session not scheduled in — exactly the
+            // slots the scheduled parked sessions are about to take.
+            for i in 0..self.active.len() {
+                if self.sched.binary_search(&i).is_err()
+                    && !self.active[i].sess.is_parked()
+                {
+                    engine.park(&mut self.active[i].sess);
+                    self.preempted += 1;
+                }
+            }
+            for &i in &self.sched {
+                engine.unpark(&mut self.active[i].sess)?;
+            }
         }
+
+        // Iteration-level decode across the scheduled set.
+        for &i in &self.sched {
+            let a = &mut self.active[i];
+            engine.decode_step(&mut a.sess)?;
+            a.last_step = self.step_counter;
+        }
+
         // Retire finished sessions.
         let mut i = 0;
         while i < self.active.len() {
-            if self.active[i].1.is_done() {
-                let (tag, sess) = self.active.swap_remove(i);
-                self.outcomes.push(BatchOutcome { tag, output: engine.finish(sess) });
+            if self.active[i].sess.is_done() {
+                let a = self.active.swap_remove(i);
+                self.outcomes.push(BatchOutcome {
+                    tag: a.tag,
+                    output: engine.finish(a.sess),
+                });
             } else {
                 i += 1;
             }
         }
+        engine.metrics.note_resident(self.active_bytes());
         Ok(())
+    }
+
+    /// Park one resident session (the policy's last pick survives
+    /// longest: we keep the `residents - 1` sessions it would schedule
+    /// and park the leftover).  Returns false when nothing is parkable.
+    fn park_one(&mut self, engine: &mut Engine) -> bool {
+        let residents: Vec<usize> = (0..self.active.len())
+            .filter(|&i| !self.active[i].sess.is_parked())
+            .collect();
+        if residents.is_empty() {
+            return false;
+        }
+        self.metas.clear();
+        self.metas.extend(residents.iter().map(|&i| SessionMeta {
+            session_id: self.active[i].sess.id,
+            last_step: self.active[i].last_step,
+            resident: true,
+        }));
+        self.sched.clear();
+        self.policy
+            .schedule(&self.metas, self.metas.len() - 1, &mut self.sched);
+        let victim = (0..self.metas.len())
+            .find(|m| !self.sched.contains(m))
+            .expect("n-1 of n scheduled leaves one victim");
+        engine.park(&mut self.active[residents[victim]].sess);
+        self.preempted += 1;
+        true
     }
 
     /// Drive until every queued/active request completes; returns outcomes
@@ -139,5 +352,69 @@ mod tests {
         let b = ContinuousBatcher::new(4, 8);
         assert!(b.idle());
         assert_eq!(b.active(), 0);
+        assert_eq!(b.preempted(), 0);
+        assert_eq!(b.active_bytes(), 0);
+    }
+
+    fn metas(ids: &[u64], steps: &[u64]) -> Vec<SessionMeta> {
+        ids.iter()
+            .zip(steps)
+            .map(|(&session_id, &last_step)| SessionMeta {
+                session_id,
+                last_step,
+                resident: true,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_rotates_across_calls() {
+        let mut p = RoundRobinPark::default();
+        let m = metas(&[0, 1, 2], &[0, 0, 0]);
+        let mut out = Vec::new();
+        p.schedule(&m, 1, &mut out);
+        assert_eq!(out, vec![0]);
+        out.clear();
+        p.schedule(&m, 1, &mut out);
+        assert_eq!(out, vec![1]);
+        out.clear();
+        p.schedule(&m, 1, &mut out);
+        assert_eq!(out, vec![2]);
+        out.clear();
+        p.schedule(&m, 1, &mut out); // wraps
+        assert_eq!(out, vec![0]);
+        out.clear();
+        p.schedule(&m, 2, &mut out); // window > 1 advances past its end
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn round_robin_survives_retirement() {
+        let mut p = RoundRobinPark::default();
+        let mut out = Vec::new();
+        p.schedule(&metas(&[0, 1, 2], &[0, 0, 0]), 1, &mut out);
+        assert_eq!(out, vec![0]);
+        // Session 1 retired; cursor (=1) falls through to id 2.
+        out.clear();
+        p.schedule(&metas(&[0, 2], &[0, 0]), 1, &mut out);
+        assert_eq!(out, vec![1]); // index of id 2
+    }
+
+    #[test]
+    fn lru_prefers_oldest_last_step() {
+        let mut p = LruByLastStep;
+        let m = metas(&[0, 1, 2], &[5, 2, 9]);
+        let mut out = Vec::new();
+        p.schedule(&m, 2, &mut out);
+        assert_eq!(out, vec![1, 0]); // steps 2, then 5
+    }
+
+    #[test]
+    fn lru_ties_break_by_session_id() {
+        let mut p = LruByLastStep;
+        let m = metas(&[7, 3, 5], &[4, 4, 4]);
+        let mut out = Vec::new();
+        p.schedule(&m, 1, &mut out);
+        assert_eq!(out, vec![1]); // id 3 is the lowest
     }
 }

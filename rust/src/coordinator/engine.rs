@@ -13,7 +13,7 @@ use crate::baselines::{
     PolicyInput, ZipCachePolicy,
 };
 use crate::config::{EngineConfig, PolicyKind};
-use crate::kvcache::{CacheLayout, CompressScratch, CompressedKV};
+use crate::kvcache::{CacheLayout, CompressScratch, CompressedKV, SlotPool};
 use crate::metrics::EngineMetrics;
 use crate::runtime::{Runtime, Tensor, TensorView};
 use crate::saliency::{select_probes, ProbeStrategy};
@@ -21,7 +21,7 @@ use crate::util::pool::WorkerPool;
 use crate::workload::tasks::EOS;
 use crate::Result;
 
-use super::session::Session;
+use super::session::{Residency, Session};
 
 /// Result of one completed generation.
 #[derive(Debug, Clone)]
@@ -45,6 +45,10 @@ pub struct Engine {
     /// Compression-cycle scratch reused across sessions and cycles
     /// (DESIGN.md §9).
     scratch: CompressScratch,
+    /// Bounded pool of dense materialization slots (DESIGN.md §10):
+    /// `memory.slots` of them (default `max_batch`), checked out by the
+    /// sessions currently scheduled for decode.
+    slots: SlotPool,
     /// Precomputed `decode_<model>` entry name — the decode hot path must
     /// not rebuild this string every step.
     decode_entry: String,
@@ -59,14 +63,35 @@ impl Engine {
         let policy = make_policy(&cfg);
         let pool = WorkerPool::new(cfg.parallelism);
         let decode_entry = rt.entry("decode");
+        let slot_cap = if cfg.memory.slots == 0 {
+            cfg.scheduler.max_batch
+        } else {
+            cfg.memory.slots
+        };
+        let slots = SlotPool::new(slot_cap.max(1), rt.model_info().cache_layout());
         Ok(Engine { cfg, rt, policy, pool, scratch: CompressScratch::default(),
-                    decode_entry, metrics: EngineMetrics::default(),
+                    slots, decode_entry, metrics: EngineMetrics::default(),
                     next_session_id: 0 })
     }
 
     /// The compression worker pool (width follows `cfg.parallelism`).
     pub fn pool(&self) -> &WorkerPool {
         &self.pool
+    }
+
+    /// The dense materialization-slot pool (DESIGN.md §10).
+    pub fn slot_pool(&self) -> &SlotPool {
+        &self.slots
+    }
+
+    /// Total materialization slots (`memory.slots`, default `max_batch`).
+    pub fn slot_capacity(&self) -> usize {
+        self.slots.capacity()
+    }
+
+    /// Slots acquirable right now (schedulers park a session when 0).
+    pub fn free_slots(&self) -> usize {
+        self.slots.available()
     }
 
     /// Swap the compression policy (bench harnesses sweep these).
@@ -98,6 +123,10 @@ impl Engine {
 
     pub fn finish(&mut self, s: Session) -> GenerationOutput {
         self.metrics.requests_completed += 1;
+        // Return the dense slot to the pool (a parked session holds none).
+        if let Residency::Dense(slot) = s.residency {
+            self.slots.release(slot);
+        }
         GenerationOutput {
             tokens: s.generated,
             prefill_ms: s.prefill_us as f64 / 1000.0,
@@ -107,7 +136,10 @@ impl Engine {
         }
     }
 
-    /// Alg. 2: prefill, saliency, compression; returns a live session.
+    /// Alg. 2: prefill, saliency, compression; returns a live session
+    /// holding a dense slot checked out of the pool (DESIGN.md §10).
+    /// Fails when the pool is exhausted — schedulers park a session
+    /// first ([`Engine::park`]).
     pub fn start_session(&mut self, prompt: Vec<u16>, max_new: usize) -> Result<Session> {
         let info = self.rt.model_info().clone();
         let layout = info.cache_layout();
@@ -125,14 +157,12 @@ impl Engine {
         // across different shard counts — DESIGN.md §8) must probe the
         // same positions and generate the same tokens.
         let seed = request_seed(self.cfg.seed, &prompt, max_new);
-        let mut s = Session::new(id, prompt, max_new, layout,
-                                 self.cfg.quant.recompress_every, seed);
 
         let t0 = Instant::now();
-        let n = s.prompt.len();
+        let n = prompt.len();
         let smax = info.max_seq;
         let mut tokens = vec![0i32; smax];
-        for (i, &t) in s.prompt.iter().enumerate() {
+        for (i, &t) in prompt.iter().enumerate() {
             tokens[i] = t as i32;
         }
         let mut valid = vec![0f32; smax];
@@ -140,22 +170,22 @@ impl Engine {
             *v = 1.0;
         }
 
-        let (logits_last, norm_sal, acc_sal) = if self.policy.requires_full_scores() {
+        let (kc, vc, norm_sal, acc_sal) = if self.policy.requires_full_scores() {
             // Baseline path: standard attention, full scores materialized.
             let out = self.rt.execute(
                 &self.rt.entry("prefill_full"),
                 &[Tensor::i32(tokens, &[smax]), Tensor::f32(valid.clone(), &[smax])],
             )?;
             // outputs: logits, kcache, vcache, acc_saliency, norm_saliency
+            // (the logits are unused — the first token is produced through
+            // the compressed cache, see below)
             let mut it = out.into_iter();
-            let logits = it.next().unwrap().into_f32();
+            let _logits = it.next().unwrap();
             let kc = it.next().unwrap().into_f32();
             let vc = it.next().unwrap().into_f32();
             let acc = layer_mean(it.next().unwrap().into_f32(), info.n_layers, smax);
             let nrm = layer_mean(it.next().unwrap().into_f32(), info.n_layers, smax);
-            s.kbuf.copy_from_slice(&kc);
-            s.vbuf.copy_from_slice(&vc);
-            (last_row(&logits, n, info.vocab), nrm, acc)
+            (kc, vc, nrm, acc)
         } else {
             // ZipCache fast path: FlashAttention + probe saliency (Alg. 2).
             let probes = select_probes(ProbeStrategy::RandomRecent, n,
@@ -175,25 +205,36 @@ impl Engine {
             )?;
             // outputs: logits, kcache, vcache, norm_saliency
             let mut it = out.into_iter();
-            let logits = it.next().unwrap().into_f32();
+            let _logits = it.next().unwrap();
             let kc = it.next().unwrap().into_f32();
             let vc = it.next().unwrap().into_f32();
             let nrm = layer_mean(it.next().unwrap().into_f32(), info.n_layers, smax);
-            s.kbuf.copy_from_slice(&kc);
-            s.vbuf.copy_from_slice(&vc);
-            (last_row(&logits, n, info.vocab), nrm, Vec::new())
+            (kc, vc, nrm, Vec::new())
         };
 
+        // All fallible work is behind us: check a materialization slot
+        // out of the pool and scatter the prefill cache into it.  (The
+        // acquire sits after the execute so an execute error can never
+        // strand a checked-out slot.)
+        let mut slot = self.slots.acquire().ok_or_else(|| {
+            anyhow::anyhow!(
+                "no free materialization slot ({} in use; park a session first)",
+                self.slots.capacity()
+            )
+        })?;
+        slot.kbuf.copy_from_slice(&kc);
+        slot.vbuf.copy_from_slice(&vc);
+        let mut s = Session::new(id, prompt, max_new, layout,
+                                 self.cfg.quant.recompress_every, seed, slot);
         s.norm_saliency = norm_sal;
         s.acc_saliency = acc_sal;
-        let _ = logits_last; // the first token is produced through the cache
 
         // Compress the prompt cache under the policy — withholding the final
         // prompt token, which is then re-fed through the decode artifact so
         // the first generated token genuinely reads the *quantized* cache
         // (the paper's evaluation protocol: answers come from the compressed
         // state, not from uncompressed prefill activations).
-        self.compress_session(&mut s, n - 1)?;
+        self.compress_session(&mut s, n - 1);
         // Rows >= n-1 still hold whatever the prefill artifact emitted
         // there: the withheld prompt-tail row, plus — on a real PJRT
         // backend — anything the lowered graph wrote at padded positions
@@ -207,10 +248,13 @@ impl Engine {
         // clear per session suffices.
         let (dh, heads) = (layout.d_head, layout.heads);
         let tail = (smax - (n - 1)) * dh;
-        for hi in 0..layout.layers * heads {
-            let o = hi * smax * dh + (n - 1) * dh;
-            s.kbuf[o..o + tail].fill(0.0);
-            s.vbuf[o..o + tail].fill(0.0);
+        {
+            let slot = s.slot_mut();
+            for hi in 0..layout.layers * heads {
+                let o = hi * smax * dh + (n - 1) * dh;
+                slot.kbuf[o..o + tail].fill(0.0);
+                slot.vbuf[o..o + tail].fill(0.0);
+            }
         }
         s.pos = n - 1;
         s.next_token = s.prompt[n - 1];
@@ -234,6 +278,8 @@ impl Engine {
         if s.is_done() {
             return Ok(None);
         }
+        anyhow::ensure!(!s.is_parked(),
+                        "decode_step on a parked session (unpark first)");
         // Copy the scalar hyper-parameters out instead of cloning
         // ModelInfo (its `trained` field owns a heap string).
         let (layout, smax, n_layers) = {
@@ -263,34 +309,44 @@ impl Engine {
         let pos_in = [s.pos as i32];
         let cache_dims = [layout.layers, layout.heads, smax, layout.d_head];
         let valid_dims = [smax];
-        self.rt.execute_into(
-            &self.decode_entry,
-            &[
-                TensorView::scalar_i32(&tok_in),
-                TensorView::scalar_i32(&pos_in),
-                TensorView::f32(&s.kbuf, &cache_dims),
-                TensorView::f32(&s.vbuf, &cache_dims),
-                TensorView::f32(&s.valid, &valid_dims),
-            ],
-            &mut s.scratch.exec,
-        )?;
-
-        // outputs: logits, k_new, v_new, a_row — in session-owned slots.
-        // Write the new row (uncompressed until the next recompression).
-        let (dh, heads, layers) = (layout.d_head, layout.heads, layout.layers);
         {
-            let k_new = s.scratch.exec.out_f32(1);
-            let v_new = s.scratch.exec.out_f32(2);
+            // Field-level split borrow: the decode artifact reads the
+            // checked-out slot's buffers while its outputs land in the
+            // sibling scratch slots.
+            let Session { residency, scratch, pos, .. } = &mut *s;
+            let Residency::Dense(slot) = residency else {
+                // The ensure! at entry rejected parked sessions before
+                // any state mutation; nothing in between re-parks.
+                unreachable!("dense checked at entry");
+            };
+            self.rt.execute_into(
+                &self.decode_entry,
+                &[
+                    TensorView::scalar_i32(&tok_in),
+                    TensorView::scalar_i32(&pos_in),
+                    TensorView::f32(&slot.kbuf, &cache_dims),
+                    TensorView::f32(&slot.vbuf, &cache_dims),
+                    TensorView::f32(&slot.valid, &valid_dims),
+                ],
+                &mut scratch.exec,
+            )?;
+
+            // outputs: logits, k_new, v_new, a_row — in session-owned
+            // slots.  Write the new row (uncompressed until the next
+            // recompression).
+            let (dh, heads, layers) = (layout.d_head, layout.heads, layout.layers);
+            let k_new = scratch.exec.out_f32(1);
+            let v_new = scratch.exec.out_f32(2);
             for l in 0..layers {
                 for h in 0..heads {
                     let src = (l * heads + h) * dh;
-                    let dst = (l * heads + h) * smax * dh + s.pos * dh;
-                    s.kbuf[dst..dst + dh].copy_from_slice(&k_new[src..src + dh]);
-                    s.vbuf[dst..dst + dh].copy_from_slice(&v_new[src..src + dh]);
+                    let dst = (l * heads + h) * smax * dh + *pos * dh;
+                    slot.kbuf[dst..dst + dh].copy_from_slice(&k_new[src..src + dh]);
+                    slot.vbuf[dst..dst + dh].copy_from_slice(&v_new[src..src + dh]);
                 }
             }
+            slot.valid[*pos] = 1.0;
         }
-        s.valid[s.pos] = 1.0;
         s.pos += 1;
 
         // Layer-mean of the attention row, into the session scratch.
@@ -324,7 +380,7 @@ impl Engine {
             if let Some(stream_sal) = s.stream.take_saliency(smax) {
                 merge_streaming_saliency(&mut s.norm_saliency, &stream_sal);
             }
-            self.compress_session(s, n_live)?;
+            self.compress_session(s, n_live);
             compress_us = tc.elapsed().as_micros() as u64;
             self.metrics.compress.record_us(compress_us);
         }
@@ -340,8 +396,10 @@ impl Engine {
     /// Compress rows `[0, n_live)` of the session cache under the policy
     /// and re-materialize the fp32 buffers the decode artifact reads.
     /// Gather/staging buffers come from the engine's [`CompressScratch`],
-    /// reused across cycles and sessions (DESIGN.md §9).
-    fn compress_session(&mut self, s: &mut Session, n_live: usize) -> Result<()> {
+    /// reused across cycles and sessions (DESIGN.md §9).  The compressed
+    /// store is *retained* on the session as its resident cache form
+    /// (DESIGN.md §10) — parking drops the dense slot and keeps it.
+    fn compress_session(&mut self, s: &mut Session, n_live: usize) {
         let layout = self.layout();
         let input = PolicyInput {
             n_tokens: n_live,
@@ -349,23 +407,133 @@ impl Engine {
             norm_saliency: if s.norm_saliency.is_empty() { None } else { Some(&s.norm_saliency) },
         };
         let classes = self.policy.assign(&input);
+        let Residency::Dense(slot) = &mut s.residency else {
+            panic!("compress_session on a parked session");
+        };
         // Fan the independent (layer, head) planes out across the pool;
         // bit-identical to the sequential path at any width (DESIGN.md §5).
         let (store, stages) = CompressedKV::compress_instrumented_scratch(
-            &s.kbuf, &s.vbuf, layout, &classes, self.policy.quant_spec(),
+            &slot.kbuf, &slot.vbuf, layout, &classes, self.policy.quant_spec(),
             &self.pool, &mut self.scratch);
         self.metrics.record_compress_stages(&stages);
         // Zero-only-dead-rows materialization: rows beyond the live
         // prefix are untouched, which is sound because a session row is
         // only ever written at position `pos` and every later cycle
         // covers it (DESIGN.md §9).
-        store.materialize_into_scratch(&mut s.kbuf, &mut s.vbuf, &mut s.valid,
-                                       &mut self.scratch);
-        s.cache_bytes = store.storage_bytes(2);
+        store.materialize_into_scratch(&mut slot.kbuf, &mut slot.vbuf,
+                                       &mut slot.valid, &mut self.scratch);
+        s.cache_bytes = store.resident_bytes();
         s.compression_ratio = store.compression_ratio();
         s.classes = classes;
+        s.compressed = Some(store);
         self.metrics.record_cache(s.cache_bytes,
                                   layout.fp16_baseline_bytes(n_live));
+    }
+
+    /// Park `s` out of its materialization slot (DESIGN.md §10): the
+    /// retained compressed snapshot becomes the resident form, the fp32
+    /// rows appended since that snapshot (the streaming tail, at most
+    /// `recompress_every` of them) are saved exactly, and the dense slot
+    /// returns to the pool.  Bit-exact: [`Engine::unpark`] reconstructs
+    /// the dense buffers as they were, so parking at any point never
+    /// perturbs the tokens a session goes on to generate.  No-op when
+    /// already parked.
+    pub fn park(&mut self, s: &mut Session) {
+        if s.is_parked() {
+            return;
+        }
+        // The snapshot always exists after start_session; a session that
+        // somehow never compressed falls back to a fresh compression
+        // through the existing scratch path.
+        if s.compressed.is_none() {
+            self.compress_session(s, s.pos);
+        }
+        let tail_from = s.compressed.as_ref().unwrap().n_tokens;
+        let lay = s.layout;
+        let rows = s.pos - tail_from;
+        // Tail buffers recycle through the session scratch (warm after
+        // the first park; no per-cycle allocation under a bounded pool,
+        // where a park can happen every scheduler iteration).
+        let (mut tail_k, mut tail_v) = std::mem::take(&mut s.scratch.tail_spare);
+        tail_k.clear();
+        tail_v.clear();
+        if rows > 0 {
+            let (smax, dh) = (lay.seq, lay.d_head);
+            let slot = s.slot();
+            tail_k.reserve(lay.layers * lay.heads * rows * dh);
+            tail_v.reserve(lay.layers * lay.heads * rows * dh);
+            for hi in 0..lay.layers * lay.heads {
+                let o = hi * smax * dh + tail_from * dh;
+                tail_k.extend_from_slice(&slot.kbuf[o..o + rows * dh]);
+                tail_v.extend_from_slice(&slot.vbuf[o..o + rows * dh]);
+            }
+        }
+        let Residency::Dense(slot) = std::mem::replace(
+            &mut s.residency,
+            Residency::Parked { tail_k, tail_v, tail_from },
+        ) else {
+            unreachable!("checked above");
+        };
+        self.slots.release(slot);
+        // The decode scratch (exec slots + a_mean, O(vocab + planes))
+        // stays on the session: re-warming it every park/unpark cycle
+        // would put allocations back on the bounded-residency decode
+        // path that PR 3 made allocation-free.
+        self.metrics.park_cycles += 1;
+    }
+
+    /// Schedule `s` back in: check a slot out of the pool, materialize
+    /// the retained compressed snapshot into it
+    /// ([`CompressedKV::materialize_into_scratch`] — the slot comes back
+    /// zeroed, so the neutral-rows precondition holds), and restore the
+    /// saved fp32 tail bit-exactly.  Fails when the pool is exhausted
+    /// (park another session first).  No-op when already dense.
+    pub fn unpark(&mut self, s: &mut Session) -> Result<()> {
+        if !s.is_parked() {
+            return Ok(());
+        }
+        let mut slot = self.slots.acquire().ok_or_else(|| {
+            anyhow::anyhow!(
+                "no free materialization slot to unpark session {} \
+                 ({} in use; park another session first)",
+                s.id,
+                self.slots.capacity()
+            )
+        })?;
+        let store = s
+            .compressed
+            .as_ref()
+            .expect("parked session without a compressed snapshot");
+        store.materialize_into_scratch(&mut slot.kbuf, &mut slot.vbuf,
+                                       &mut slot.valid, &mut self.scratch);
+        let Residency::Parked { tail_k, tail_v, tail_from } = &s.residency else {
+            unreachable!("checked above");
+        };
+        let lay = s.layout;
+        let (smax, dh) = (lay.seq, lay.d_head);
+        let rows = s.pos - tail_from;
+        if rows > 0 {
+            for hi in 0..lay.layers * lay.heads {
+                let src = hi * rows * dh;
+                let o = hi * smax * dh + tail_from * dh;
+                slot.kbuf[o..o + rows * dh]
+                    .copy_from_slice(&tail_k[src..src + rows * dh]);
+                slot.vbuf[o..o + rows * dh]
+                    .copy_from_slice(&tail_v[src..src + rows * dh]);
+            }
+            for t in *tail_from..s.pos {
+                slot.valid[t] = 1.0;
+            }
+        }
+        // Recycle the tail buffers' capacity for the next park.
+        match std::mem::replace(&mut s.residency, Residency::Dense(slot)) {
+            Residency::Parked { mut tail_k, mut tail_v, .. } => {
+                tail_k.clear();
+                tail_v.clear();
+                s.scratch.tail_spare = (tail_k, tail_v);
+            }
+            Residency::Dense(_) => unreachable!("checked at entry"),
+        }
         Ok(())
     }
 }
@@ -439,11 +607,6 @@ fn layer_mean(x: Vec<f32>, layers: usize, s: usize) -> Vec<f32> {
     let mut out = Vec::with_capacity(s);
     layer_mean_into(&x, layers, s, &mut out);
     out
-}
-
-/// Row `row` of a `[rows, vocab]` logits buffer — here row = n-1.
-fn last_row(logits: &[f32], n: usize, vocab: usize) -> Vec<f32> {
-    logits[(n - 1) * vocab..n * vocab].to_vec()
 }
 
 /// Index of the maximum logit — NaN-safe and deterministic.

@@ -2,17 +2,20 @@
 //! Alg. 3 (decode + streaming recompression) orchestrated over the PJRT
 //! runtime, with continuous batching across sessions.
 //!
-//! * [`engine`] — [`Engine`]: owns the runtime + policy, runs prefill,
-//!   compression, and single-token decode steps.
-//! * [`session`] — per-request decode state (cache buffers, streaming
-//!   probe accumulator, generated tokens).
+//! * [`engine`] — [`Engine`]: owns the runtime + policy + the bounded
+//!   materialization-slot pool, runs prefill, compression, single-token
+//!   decode steps, and park/unpark transitions (DESIGN.md §10).
+//! * [`session`] — per-request decode state (compressed-resident cache,
+//!   dense-slot residency, streaming probe accumulator, generated
+//!   tokens).
 //! * [`batcher`] — round-robin continuous batcher over active sessions
-//!   with admission control.
+//!   with admission control and park-policy slot scheduling.
 
 pub mod batcher;
 pub mod engine;
 pub mod session;
 
-pub use batcher::{BatchOutcome, ContinuousBatcher};
+pub use batcher::{BatchOutcome, ContinuousBatcher, LruByLastStep, ParkPolicy,
+                  RoundRobinPark, SessionMeta};
 pub use engine::{merge_streaming_saliency, request_seed, Engine, GenerationOutput};
-pub use session::{Session, SessionScratch};
+pub use session::{Residency, Session, SessionScratch};

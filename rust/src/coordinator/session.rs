@@ -1,13 +1,18 @@
 //! Per-request decode state.
 //!
-//! A session owns the *materialized* fp32 cache buffers the decode
-//! artifact consumes (scattered from the compressed store), the validity
-//! mask, and the streaming-probe accumulator of Alg. 3.  The compressed
-//! (`CompressedKV`) form is re-created at every recompression point; the
-//! fp32 buffers in between hold recent uncompressed rows exactly like the
-//! paper's streaming scheme.
+//! A session's durable state is its **compressed** cache
+//! (`CompressedKV`, retained from the last compression point) plus the
+//! probe/saliency accumulators — exactly the paper's residency story.
+//! The dense fp32 buffers the decode artifact consumes are *not* owned
+//! by the session: they live in a shard-bounded [`SlotPool`]
+//! (DESIGN.md §10), and a session holds one [`DenseSlot`] only while it
+//! is scheduled for decode ([`Residency::Dense`]).  A parked session
+//! ([`Residency::Parked`]) keeps just the fp32 rows appended since the
+//! last recompression cycle (the streaming scheme's recent-token tail,
+//! at most `recompress_every` rows), so park -> unpark reconstructs the
+//! dense buffers bit-exactly.
 
-use crate::kvcache::{CacheLayout, PrecisionClass};
+use crate::kvcache::{CacheLayout, CompressedKV, DenseSlot, PrecisionClass};
 use crate::runtime::ExecScratch;
 use crate::saliency::StreamingProbe;
 
@@ -21,6 +26,26 @@ pub struct SessionScratch {
     /// Layer-mean of the decode attention row (`[S]`), fed to the
     /// streaming probe accumulator.
     pub a_mean: Vec<f32>,
+    /// Retired park-tail buffers, kept for their capacity: `Engine::park`
+    /// fills these instead of allocating per cycle, and `Engine::unpark`
+    /// puts them back (DESIGN.md §10).
+    pub tail_spare: (Vec<f32>, Vec<f32>),
+}
+
+/// Where a session's dense working set currently lives (DESIGN.md §10).
+#[derive(Debug)]
+pub enum Residency {
+    /// Scheduled for decode: holds one checked-out materialization slot.
+    Dense(DenseSlot),
+    /// Parked: the compressed snapshot is the resident form; only the
+    /// fp32 rows appended since that snapshot are saved (per plane
+    /// contiguous, rows `[tail_from, pos)`).
+    Parked {
+        tail_k: Vec<f32>,
+        tail_v: Vec<f32>,
+        /// First row of the saved tail (= the snapshot's `n_tokens`).
+        tail_from: usize,
+    },
 }
 
 /// State of one in-flight generation request.
@@ -35,11 +60,14 @@ pub struct Session {
     pub generated: Vec<u16>,
     /// Decode budget.
     pub max_new: usize,
-    /// Materialized fp32 caches, `[L, H, S, dh]`.
-    pub kbuf: Vec<f32>,
-    pub vbuf: Vec<f32>,
-    /// Validity mask (1.0 = live row; 0 = evicted or empty).
-    pub valid: Vec<f32>,
+    /// Cache shape (sizes the slot this session materializes into).
+    pub layout: CacheLayout,
+    /// Dense slot or parked tail (DESIGN.md §10).
+    pub residency: Residency,
+    /// Latest compressed snapshot — the session's resident cache form,
+    /// retained from the last compression point (prefill or streaming
+    /// recompression) instead of being rebuilt and discarded.
+    pub compressed: Option<CompressedKV>,
     /// Current per-token precision classes (from the last compression).
     pub classes: Vec<PrecisionClass>,
     /// Prefill-time saliency (normalized / accumulated), layer-averaged.
@@ -55,7 +83,8 @@ pub struct Session {
     /// Engine::start_session).
     pub prompt_tail_pending: bool,
     pub done: bool,
-    /// Bytes of the last compressed snapshot + its ratio.
+    /// Bytes of the last compressed snapshot (resident accounting:
+    /// payload + params + class metadata) + its ratio.
     pub cache_bytes: usize,
     pub compression_ratio: f64,
     /// Wall-clock accounting (filled by the engine).
@@ -67,8 +96,7 @@ pub struct Session {
 
 impl Session {
     pub fn new(id: u64, prompt: Vec<u16>, max_new: usize, layout: CacheLayout,
-               recompress_every: usize, seed: u64) -> Self {
-        let n = layout.cache_len();
+               recompress_every: usize, seed: u64, slot: DenseSlot) -> Self {
         Session {
             id,
             pos: prompt.len(),
@@ -77,9 +105,9 @@ impl Session {
             // step and must never reallocate mid-generation.
             generated: Vec::with_capacity(max_new),
             max_new,
-            kbuf: vec![0f32; n],
-            vbuf: vec![0f32; n],
-            valid: vec![0f32; layout.seq],
+            layout,
+            residency: Residency::Dense(slot),
+            compressed: None,
             classes: Vec::new(),
             norm_saliency: Vec::new(),
             acc_saliency: Vec::new(),
@@ -104,19 +132,90 @@ impl Session {
     pub fn is_done(&self) -> bool {
         self.done
     }
+
+    /// Parked out of its materialization slot?
+    pub fn is_parked(&self) -> bool {
+        matches!(self.residency, Residency::Parked { .. })
+    }
+
+    /// The checked-out dense slot; panics when the session is parked
+    /// (callers schedule-in through `Engine::unpark` first).
+    pub fn slot(&self) -> &DenseSlot {
+        match &self.residency {
+            Residency::Dense(slot) => slot,
+            Residency::Parked { .. } => panic!("session {} is parked", self.id),
+        }
+    }
+
+    pub fn slot_mut(&mut self) -> &mut DenseSlot {
+        match &mut self.residency {
+            Residency::Dense(slot) => slot,
+            Residency::Parked { .. } => panic!("session {} is parked", self.id),
+        }
+    }
+
+    /// Materialized fp32 K cache, `[L, H, S, dh]` (dense sessions only).
+    pub fn kbuf(&self) -> &[f32] {
+        &self.slot().kbuf
+    }
+
+    /// Materialized fp32 V cache, `[L, H, S, dh]` (dense sessions only).
+    pub fn vbuf(&self) -> &[f32] {
+        &self.slot().vbuf
+    }
+
+    /// Bytes this session keeps resident right now: the retained
+    /// compressed snapshot (payload + params + metadata), plus either
+    /// the checked-out dense slot or the parked fp32 tail
+    /// (DESIGN.md §10).  Probe/saliency accumulators are O(S) floats and
+    /// excluded, like every other per-request bookkeeping struct.
+    pub fn resident_bytes(&self) -> usize {
+        let residency = match &self.residency {
+            Residency::Dense(slot) => slot.bytes(),
+            Residency::Parked { tail_k, tail_v, .. } => {
+                (tail_k.len() + tail_v.len()) * 4
+            }
+        };
+        self.cache_bytes + residency
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::SlotPool;
 
     #[test]
     fn session_init() {
         let lay = CacheLayout { layers: 2, heads: 2, seq: 16, d_head: 4 };
-        let s = Session::new(1, vec![1, 2, 3], 5, lay, 100, 0);
+        let mut pool = SlotPool::new(1, lay);
+        let s = Session::new(1, vec![1, 2, 3], 5, lay, 100, 0,
+                             pool.acquire().unwrap());
         assert_eq!(s.pos, 3);
-        assert_eq!(s.kbuf.len(), lay.cache_len());
+        assert!(!s.is_parked());
+        assert_eq!(s.kbuf().len(), lay.cache_len());
         assert_eq!(s.remaining_window(16), 13);
         assert!(!s.is_done());
+        // Dense resident bytes = slot bytes (no snapshot yet).
+        assert_eq!(s.resident_bytes(), pool.slot_bytes());
+    }
+
+    #[test]
+    fn parked_resident_bytes_count_tail_only() {
+        let lay = CacheLayout { layers: 1, heads: 1, seq: 8, d_head: 2 };
+        let mut pool = SlotPool::new(1, lay);
+        let mut s = Session::new(2, vec![1, 2], 2, lay, 100, 0,
+                                 pool.acquire().unwrap());
+        s.cache_bytes = 100;
+        let Residency::Dense(slot) = std::mem::replace(
+            &mut s.residency,
+            Residency::Parked { tail_k: vec![0.0; 4], tail_v: vec![0.0; 4],
+                                tail_from: 2 },
+        ) else {
+            unreachable!()
+        };
+        pool.release(slot);
+        assert!(s.is_parked());
+        assert_eq!(s.resident_bytes(), 100 + 8 * 4);
     }
 }

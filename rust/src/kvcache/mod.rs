@@ -10,11 +10,16 @@
 //!
 //! [`store::CompressedKV`] owns the packed bytes and the accounting;
 //! [`ratio`] reproduces the paper's Appendix-A compression-ratio formulas
-//! exactly (unit-tested against the printed 3.200 / 3.992 / 3.995).
+//! exactly (unit-tested against the printed 3.200 / 3.992 / 3.995);
+//! [`slab`] bounds the dense fp32 working set with a pool of reusable
+//! materialization slots so the compressed form is what stays resident
+//! (DESIGN.md §10).
 
 pub mod fp16;
 pub mod ratio;
+pub mod slab;
 pub mod store;
 
+pub use slab::{worst_case_resident_bytes, DenseSlot, SlotPool};
 pub use store::{CacheLayout, CompressScratch, CompressStats, CompressedKV,
                 PrecisionClass, QuantSpec};

@@ -1,0 +1,316 @@
+//! Bounded pool of dense materialization slots (DESIGN.md §10).
+//!
+//! ZipCache's residency story is that the *compressed* cache is what
+//! lives in memory; the dense fp32 `[L, H, S, dh]` buffers the decode
+//! artifact consumes are a transient working set.  This module makes
+//! that physical: a shard owns one [`SlotPool`] of at most
+//! `memory.slots` reusable [`DenseSlot`]s (default `max_batch`), a
+//! session *checks a slot out* while it is scheduled for decode and
+//! returns it when parked, and shard dense memory is therefore bounded
+//! by `slots x slot_bytes` regardless of how many sessions are live.
+//!
+//! Ownership rules (DESIGN.md §10): a slot is either in the pool's free
+//! list or moved by value into exactly one `Session`'s
+//! `Residency::Dense`; there is no aliasing and no index indirection.
+//! A [`DenseSlot`] carries a handle back to its home pool and returns
+//! its buffers on `Drop`, so a dropped session — an error path, a bench
+//! that never calls `Engine::finish`, a torn-down shard — can never
+//! leak pool capacity.  Buffers are zeroed on the way back in, so a
+//! freshly acquired slot always satisfies the session buffer invariant
+//! (rows beyond the live prefix are neutral — DESIGN.md §9) that
+//! `CompressedKV::materialize_into_scratch` relies on.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::kvcache::CacheLayout;
+
+/// The buffer payload that cycles through a pool's free list.
+#[derive(Debug, Default)]
+struct SlotBufs {
+    kbuf: Vec<f32>,
+    vbuf: Vec<f32>,
+    valid: Vec<f32>,
+}
+
+impl SlotBufs {
+    fn new(layout: CacheLayout) -> Self {
+        let n = layout.cache_len();
+        SlotBufs {
+            kbuf: vec![0f32; n],
+            vbuf: vec![0f32; n],
+            valid: vec![0f32; layout.seq],
+        }
+    }
+}
+
+/// Pool state shared with every checked-out slot (so `Drop` can find
+/// the way home).  The mutex is uncontended — one engine thread checks
+/// slots in and out; slot traffic is the cold park/admission path.
+#[derive(Debug)]
+struct PoolShared {
+    free: Mutex<Vec<SlotBufs>>,
+    in_use: AtomicUsize,
+    peak_in_use: AtomicUsize,
+}
+
+/// One dense materialization target: the fp32 K/V caches plus the
+/// validity mask, exactly the borrowed inputs of the decode artifact.
+/// Returns itself to its home pool on drop (zeroed).
+#[derive(Debug)]
+pub struct DenseSlot {
+    /// Materialized fp32 caches, `[L, H, S, dh]`.
+    pub kbuf: Vec<f32>,
+    pub vbuf: Vec<f32>,
+    /// Validity mask (1.0 = live row; 0 = evicted or empty).
+    pub valid: Vec<f32>,
+    home: Arc<PoolShared>,
+}
+
+impl DenseSlot {
+    /// Physical bytes of this slot (two fp32 caches + the mask).
+    pub fn bytes(&self) -> usize {
+        (self.kbuf.len() + self.vbuf.len() + self.valid.len()) * 4
+    }
+}
+
+impl Drop for DenseSlot {
+    fn drop(&mut self) {
+        let mut bufs = SlotBufs {
+            kbuf: std::mem::take(&mut self.kbuf),
+            vbuf: std::mem::take(&mut self.vbuf),
+            valid: std::mem::take(&mut self.valid),
+        };
+        // Zero on the way in (the cold path) so acquire hands out
+        // buffers already satisfying the neutral-rows invariant.
+        bufs.kbuf.fill(0.0);
+        bufs.vbuf.fill(0.0);
+        bufs.valid.fill(0.0);
+        self.home.in_use.fetch_sub(1, Ordering::Relaxed);
+        self.home.free.lock().expect("slot pool poisoned").push(bufs);
+    }
+}
+
+/// Bounded free-list of [`DenseSlot`]s for one shard/engine.
+///
+/// Slots are allocated lazily (first `capacity` acquires), so a
+/// single-session caller over a large pool never pays for slots it does
+/// not touch; `peak_in_use` records the high-water mark the
+/// memory-residency bench asserts against.
+#[derive(Debug)]
+pub struct SlotPool {
+    layout: CacheLayout,
+    capacity: usize,
+    shared: Arc<PoolShared>,
+}
+
+impl SlotPool {
+    pub fn new(capacity: usize, layout: CacheLayout) -> Self {
+        assert!(capacity >= 1, "slot pool needs at least one slot");
+        SlotPool {
+            layout,
+            capacity,
+            shared: Arc::new(PoolShared {
+                free: Mutex::new(Vec::new()),
+                in_use: AtomicUsize::new(0),
+                peak_in_use: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// Check a zeroed slot out of the pool; `None` when every slot is in
+    /// use (the caller must park a session first).
+    pub fn acquire(&mut self) -> Option<DenseSlot> {
+        let bufs = {
+            let mut free = self.shared.free.lock().expect("slot pool poisoned");
+            match free.pop() {
+                Some(b) => b,
+                None if self.in_use() < self.capacity => SlotBufs::new(self.layout),
+                None => return None,
+            }
+        };
+        let now = self.shared.in_use.fetch_add(1, Ordering::Relaxed) + 1;
+        self.shared.peak_in_use.fetch_max(now, Ordering::Relaxed);
+        Some(DenseSlot {
+            kbuf: bufs.kbuf,
+            vbuf: bufs.vbuf,
+            valid: bufs.valid,
+            home: self.shared.clone(),
+        })
+    }
+
+    /// Return a slot to the pool explicitly.  Equivalent to dropping it
+    /// (the `Drop` impl does the actual return), kept as the engine's
+    /// named release point with a layout sanity check.
+    pub fn release(&mut self, slot: DenseSlot) {
+        debug_assert_eq!(slot.kbuf.len(), self.layout.cache_len(),
+                         "released slot has a foreign layout");
+        drop(slot);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.shared.in_use.load(Ordering::Relaxed)
+    }
+
+    /// Slots acquirable right now.
+    pub fn available(&self) -> usize {
+        self.capacity - self.in_use()
+    }
+
+    /// High-water mark of concurrently checked-out slots.
+    pub fn peak_in_use(&self) -> usize {
+        self.shared.peak_in_use.load(Ordering::Relaxed)
+    }
+
+    /// Bytes of one dense slot under this pool's layout.
+    pub fn slot_bytes(&self) -> usize {
+        (2 * self.layout.cache_len() + self.layout.seq) * 4
+    }
+}
+
+/// Worst-case resident bytes of one session with an `n_tokens` live
+/// window — the admission bound the dispatcher's byte budget reserves
+/// against (DESIGN.md §10).
+///
+/// The bound covers the compressed-resident state of a *parked* session
+/// (dense slots are bounded separately by the pool and are not part of
+/// the per-request budget):
+///
+/// * every token at the largest precision class, `Fp16` (2 B/value for
+///   K and V — quantized classes store strictly less *payload* per row
+///   at the paper's granularities): `fp16_baseline_bytes(n_tokens)`;
+/// * quantization-parameter slack per plane and side, covering the
+///   densest parameterization any engine class mix can produce.
+///   Row-wise pairs: Token/CST granularity costs one `(s, z)` pair per
+///   row; `Group(g)` costs `ceil(d_head / g)` pairs per row, and the
+///   smallest group any engine policy uses is 32 (GEAR/KIVI), so rows
+///   are charged `ceil(d_head / 32)` pairs each.  Subset-fixed params:
+///   each precision class quantizes as its own subset plane with its
+///   own parameters, and `PrecisionClass::Bits` admits 4 distinct
+///   widths ({1, 2, 4, 8}), so up to 4 subsets of channelwise pairs
+///   (`2 * d_head` values) plus CST channel scales (`d_head` values)
+///   each — `12 * d_head` total.  The per-subset term is what keeps the
+///   bound an upper bound at *small* `n`, where fixed per-subset
+///   channel params dominate the payload;
+/// * the per-token class/validity metadata sidecar (1 B/token,
+///   `CompressedKV::metadata_bytes`);
+/// * the fp32 uncompressed tail of rows appended since the last
+///   recompression cycle, at most `recompress_every` rows.
+pub fn worst_case_resident_bytes(
+    layout: CacheLayout,
+    n_tokens: usize,
+    recompress_every: usize,
+) -> usize {
+    let planes = layout.layers * layout.heads;
+    let payload = layout.fp16_baseline_bytes(n_tokens);
+    let row_pair_values = 2 * n_tokens * layout.d_head.div_ceil(32).max(1);
+    let params = 2 * planes * (row_pair_values + 12 * layout.d_head) * 2;
+    let metadata = n_tokens;
+    let tail = 2 * planes * recompress_every.min(n_tokens) * layout.d_head * 4;
+    payload + params + metadata + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> CacheLayout {
+        CacheLayout { layers: 2, heads: 2, seq: 8, d_head: 4 }
+    }
+
+    #[test]
+    fn pool_bounds_and_recycles() {
+        let mut p = SlotPool::new(2, layout());
+        assert_eq!(p.available(), 2);
+        let a = p.acquire().unwrap();
+        let b = p.acquire().unwrap();
+        assert!(p.acquire().is_none(), "pool exceeded its bound");
+        assert_eq!((p.in_use(), p.available()), (2, 0));
+        p.release(a);
+        let c = p.acquire().unwrap();
+        assert_eq!(p.peak_in_use(), 2);
+        p.release(b);
+        p.release(c);
+        assert_eq!(p.in_use(), 0);
+    }
+
+    #[test]
+    fn dropped_slot_returns_to_pool() {
+        // A Session dropped without Engine::finish/park must not leak
+        // pool capacity: the slot's Drop impl returns the buffers.
+        let mut p = SlotPool::new(1, layout());
+        let s = p.acquire().unwrap();
+        assert_eq!(p.available(), 0);
+        drop(s);
+        assert_eq!((p.in_use(), p.available()), (0, 1));
+        let s = p.acquire().unwrap();
+        assert!(s.kbuf.iter().all(|&x| x == 0.0), "recycled slot not zeroed");
+        drop(s);
+        assert_eq!(p.peak_in_use(), 1);
+    }
+
+    #[test]
+    fn released_slots_come_back_zeroed() {
+        let mut p = SlotPool::new(1, layout());
+        let mut s = p.acquire().unwrap();
+        s.kbuf[3] = 7.0;
+        s.vbuf[0] = -1.0;
+        s.valid[2] = 1.0;
+        p.release(s);
+        let s = p.acquire().unwrap();
+        assert!(s.kbuf.iter().all(|&x| x == 0.0));
+        assert!(s.vbuf.iter().all(|&x| x == 0.0));
+        assert!(s.valid.iter().all(|&x| x == 0.0));
+        p.release(s);
+    }
+
+    #[test]
+    fn slot_bytes_match_layout() {
+        let lay = layout();
+        let mut p = SlotPool::new(1, lay);
+        let s = p.acquire().unwrap();
+        assert_eq!(s.bytes(), p.slot_bytes());
+        assert_eq!(s.bytes(), (2 * lay.cache_len() + lay.seq) * 4);
+        p.release(s);
+    }
+
+    #[test]
+    fn worst_case_dominates_fp16_payload_and_grows() {
+        let lay = layout();
+        let w4 = worst_case_resident_bytes(lay, 4, 100);
+        let w8 = worst_case_resident_bytes(lay, 8, 100);
+        assert!(w4 > lay.fp16_baseline_bytes(4));
+        assert!(w8 > w4, "bound must grow with the window");
+    }
+
+    #[test]
+    fn worst_case_dominates_actual_storage_at_small_n() {
+        // The short-window regime is where fixed per-subset channel
+        // params dominate the payload: a two-class mix on a 2-token
+        // window must still come in under the bound (the original
+        // formula counted channel params once, not per subset, and was
+        // NOT an upper bound here).
+        use crate::kvcache::{CompressedKV, PrecisionClass, QuantSpec};
+        let lay = CacheLayout { layers: 2, heads: 4, seq: 64, d_head: 16 };
+        let k: Vec<f32> = (0..lay.cache_len()).map(|i| (i as f32 * 0.13).sin()).collect();
+        let v: Vec<f32> = (0..lay.cache_len()).map(|i| (i as f32 * 0.29).cos()).collect();
+        for n in 1..=6usize {
+            // Worst realistic mix: alternate the two widest classes so
+            // every plane carries two fully-parameterized subsets.
+            let classes: Vec<PrecisionClass> = (0..n)
+                .map(|t| if t % 2 == 0 { PrecisionClass::Bits(8) } else { PrecisionClass::Bits(4) })
+                .collect();
+            let c = CompressedKV::compress(&k, &v, lay, &classes, QuantSpec::default());
+            let bound = worst_case_resident_bytes(lay, n, 100);
+            assert!(
+                c.resident_bytes() <= bound,
+                "n={n}: resident {} exceeds bound {bound}",
+                c.resident_bytes()
+            );
+        }
+    }
+}

@@ -455,8 +455,12 @@ impl CompressedKV {
         }
     }
 
-    /// Physical storage in bytes.  `param_bytes` selects the accounting for
-    /// quantization parameters (paper Appendix A uses 16-bit => 2).
+    /// Physical storage in bytes of the quantized payload: packed codes,
+    /// quantization parameters (`param_bytes` selects their accounting —
+    /// paper Appendix A uses 16-bit => 2), CST channel scales, and fp16
+    /// rows.  The per-token class/validity sidecar is accounted
+    /// separately by [`CompressedKV::metadata_bytes`]; use
+    /// [`CompressedKV::resident_bytes`] for the full footprint.
     pub fn storage_bytes(&self, param_bytes: usize) -> usize {
         let dh = self.layout.d_head;
         let mut total = 0;
@@ -469,11 +473,33 @@ impl CompressedKV {
         total
     }
 
+    /// Bytes of the class/validity sidecar: one byte per live-window
+    /// token encoding its [`PrecisionClass`].  The per-plane row-index
+    /// lists and the validity mask are both derivable from it (classes
+    /// are shared across every `(layer, head)` plane, and `Evicted` *is*
+    /// the invalidity marker), so this one sidecar is the entire
+    /// metadata footprint.
+    pub fn metadata_bytes(&self) -> usize {
+        self.n_tokens
+    }
+
+    /// Full resident footprint of the compressed cache: quantized
+    /// payload (params at the paper's 16-bit accounting) plus the
+    /// class/validity metadata sidecar.  This is the number the engine
+    /// reports as `cache_bytes` and the byte-budget admission reserves
+    /// against (DESIGN.md §10).
+    pub fn resident_bytes(&self) -> usize {
+        self.storage_bytes(2) + self.metadata_bytes()
+    }
+
     /// Achieved compression ratio vs. the FP16 dense cache for the live
-    /// prefix (the number the paper's tables report).
+    /// prefix (the number the paper's tables report).  Uses the full
+    /// resident footprint — quantization parameters *and* the
+    /// class/validity metadata — so the ratio never overstates what the
+    /// quantizer saves.
     pub fn compression_ratio(&self) -> f64 {
         let base = self.layout.fp16_baseline_bytes(self.n_tokens) as f64;
-        let used = self.storage_bytes(2) as f64;
+        let used = self.resident_bytes() as f64;
         if used == 0.0 {
             f64::INFINITY
         } else {
@@ -650,6 +676,36 @@ mod tests {
         let classes2 = vec![PrecisionClass::Bits(2); 16];
         let c2 = CompressedKV::compress(&k, &v, lay, &classes2, QuantSpec::default());
         assert!(c2.compression_ratio() > r);
+    }
+
+    #[test]
+    fn byte_accounting_pinned_on_hand_computed_layout() {
+        // 1 layer x 1 head, 4-token window, d_head = 2, two live tokens,
+        // both Bits(4), tokenwise K and V — small enough to account by
+        // hand:
+        //   codes     : 2 rows x 2 cols x 4 bit = 2 B  (per plane, K and V)
+        //   params    : Token => one (s, z) pair per row = 2 pairs
+        //               -> 4 values x 2 B = 8 B          (per plane, K and V)
+        //   payload   : (2 + 8) x 2 planes              = 20 B
+        //   metadata  : 1 B/token class sidecar x 2     =  2 B
+        //   resident  : 20 + 2                          = 22 B
+        let lay = CacheLayout { layers: 1, heads: 1, seq: 4, d_head: 2 };
+        let spec = QuantSpec {
+            key_gran: Granularity::Token,
+            value_gran: Granularity::Token,
+        };
+        let k: Vec<f32> = (0..lay.cache_len()).map(|i| i as f32 * 0.5).collect();
+        let v: Vec<f32> = (0..lay.cache_len()).map(|i| 1.0 - i as f32).collect();
+        let classes = vec![PrecisionClass::Bits(4); 2];
+        let c = CompressedKV::compress(&k, &v, lay, &classes, spec);
+        assert_eq!(c.storage_bytes(2), 20);
+        assert_eq!(c.metadata_bytes(), 2);
+        assert_eq!(c.resident_bytes(), 22);
+        // fp16 baseline for 2 tokens: 2 (K,V) x 2 tokens x 2 cols x 2 B = 16 B
+        assert_eq!(lay.fp16_baseline_bytes(2), 16);
+        assert!((c.compression_ratio() - 16.0 / 22.0).abs() < 1e-12);
+        // Honest-f32 params accounting doubles only the param bytes.
+        assert_eq!(c.storage_bytes(4), 2 * 2 + 8 * 2 * 2);
     }
 
     #[test]

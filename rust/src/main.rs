@@ -34,12 +34,17 @@ fn main() -> Result<()> {
     .flag("saliency-ratio", "0.6", "fraction of tokens at high precision")
     .flag("parallelism", "0", "compression worker threads (0 = per-core)")
     .flag("shards", "1", "serve: engine shards (0 = per-core)")
+    .flag("memory-slots", "0",
+          "dense materialization slots per shard (0 = max_batch)")
+    .flag("memory-budget", "0",
+          "per-shard worst-case byte budget for admission (0 = unlimited)")
     .flag("config", "", "optional key=value config file (overrides flags)")
     .flag("task", "gsm", "gsm | code | linesN (e.g. lines20)")
     .flag("samples", "50", "eval: number of samples")
     .flag("max-new", "4", "decode budget per request")
     .flag("requests", "16", "serve: number of requests")
     .flag("rate", "8.0", "serve: arrival rate (req/s)")
+    .flag("trace", "poisson", "serve: poisson | memory-pressure")
     .flag("seed", "0", "base seed")
     .parse()?;
 
@@ -64,6 +69,7 @@ fn main() -> Result<()> {
             args.get_usize("requests")?,
             args.get_f64("rate")?,
             args.get_usize("max-new")?,
+            &args.get("trace"),
         ),
         other => anyhow::bail!("unknown subcommand '{other}'\n{}", args.usage()),
     }
@@ -79,6 +85,8 @@ fn build_config(args: &Args) -> Result<EngineConfig> {
     cfg.quant.saliency_ratio = args.get_f64("saliency-ratio")?;
     cfg.parallelism = args.get_usize("parallelism")?;
     cfg.scheduler.shards = args.get_usize("shards")?;
+    cfg.memory.slots = args.get_usize("memory-slots")?;
+    cfg.memory.budget_bytes = args.get_usize("memory-budget")?;
     cfg.seed = args.get_u64("seed")?;
     cfg.validate()?;
     Ok(cfg)
@@ -155,16 +163,21 @@ fn eval(cfg: EngineConfig, task: Task, samples: usize, max_new: usize, seed: u64
     Ok(())
 }
 
-fn serve(cfg: EngineConfig, task: Task, requests: usize, rate: f64, max_new: usize)
-         -> Result<()> {
+fn serve(cfg: EngineConfig, task: Task, requests: usize, rate: f64, max_new: usize,
+         trace_kind: &str) -> Result<()> {
     // Window sizing: leave decode headroom inside the model's window.
     let info = zipcache::runtime::load_model_info(&cfg.artifacts_dir, &cfg.model)?;
     anyhow::ensure!(max_new >= 1 && max_new < info.max_seq,
                     "max-new must be in [1, {}) for model '{}'",
                     info.max_seq, cfg.model);
     let server = Server::start(cfg.clone())?;
-    let trace = RequestTrace::poisson(task, info.max_seq - max_new, requests, rate,
-                                      max_new, cfg.seed);
+    let trace = match trace_kind {
+        "poisson" => RequestTrace::poisson(task, info.max_seq - max_new, requests,
+                                           rate, max_new, cfg.seed),
+        "memory-pressure" => loadgen::memory_pressure_trace(info.max_seq, requests,
+                                                            cfg.seed),
+        other => anyhow::bail!("unknown trace '{other}' (poisson|memory-pressure)"),
+    };
     let report = loadgen::replay(&server.handle, &trace)?;
 
     let mut acc = AccuracyReport::default();
@@ -193,6 +206,11 @@ fn serve(cfg: EngineConfig, task: Task, requests: usize, rate: f64, max_new: usi
         snap.total.decode.p50_ms(),
         snap.total.compress.p50_ms(),
         snap.total.compress.count(),
+    );
+    println!(
+        "memory: peak resident {:.1} KiB across shards, {} park cycle(s)",
+        snap.total.peak_resident_bytes as f64 / 1024.0,
+        snap.total.park_cycles,
     );
     for (i, m) in snap.per_shard.iter().enumerate() {
         println!("  shard {i}: {} req, {} tok", m.requests_completed,

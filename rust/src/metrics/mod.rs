@@ -128,6 +128,16 @@ pub struct EngineMetrics {
     pub peak_cache_bytes: usize,
     /// FP16-equivalent bytes of the same prefixes (for the ratio).
     pub peak_cache_baseline_bytes: usize,
+    /// Bytes currently resident across live sessions (compressed
+    /// snapshots + parked tails + checked-out dense slots), as last
+    /// recorded by the scheduler (DESIGN.md §10).
+    pub resident_bytes: usize,
+    /// High-water mark of `resident_bytes` over the run.
+    pub peak_resident_bytes: usize,
+    /// Sessions parked out of their materialization slot
+    /// (`Engine::park` calls; unparks mirror them 1:1 while a session
+    /// is live).
+    pub park_cycles: u64,
 }
 
 impl EngineMetrics {
@@ -136,6 +146,12 @@ impl EngineMetrics {
             self.peak_cache_bytes = used;
             self.peak_cache_baseline_bytes = baseline;
         }
+    }
+
+    /// Record the current resident-bytes gauge (and its peak).
+    pub fn note_resident(&mut self, bytes: usize) {
+        self.resident_bytes = bytes;
+        self.peak_resident_bytes = self.peak_resident_bytes.max(bytes);
     }
 
     /// Record one compression pass's stage timing.
@@ -172,6 +188,12 @@ impl EngineMetrics {
             self.peak_cache_bytes = other.peak_cache_bytes;
             self.peak_cache_baseline_bytes = other.peak_cache_baseline_bytes;
         }
+        // Resident gauges are per-shard sums: currents add exactly;
+        // the peak sum is an upper bound on the fleet-wide peak (shards
+        // need not peak simultaneously).
+        self.resident_bytes += other.resident_bytes;
+        self.peak_resident_bytes += other.peak_resident_bytes;
+        self.park_cycles += other.park_cycles;
     }
 }
 
@@ -249,6 +271,23 @@ mod tests {
         assert_eq!(m.compress_stages.threads, 4);
         assert_eq!(m.compress_stages.quant_wall.count(), 1);
         assert!((m.compress_stages.mean_quant_speedup() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resident_gauge_tracks_current_and_peak() {
+        let mut m = EngineMetrics::default();
+        m.note_resident(500);
+        m.note_resident(200);
+        assert_eq!(m.resident_bytes, 200);
+        assert_eq!(m.peak_resident_bytes, 500);
+        let mut other = EngineMetrics::default();
+        other.note_resident(300);
+        other.park_cycles = 4;
+        m.park_cycles = 1;
+        m.merge(&other);
+        assert_eq!(m.resident_bytes, 500); // current sums across shards
+        assert_eq!(m.peak_resident_bytes, 800); // per-shard peak sum
+        assert_eq!(m.park_cycles, 5);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Request dispatch for the sharded serving pool (DESIGN.md §8).
+//! Request dispatch for the sharded serving pool (DESIGN.md §8, §10).
 //!
 //! The [`Dispatcher`] is the **single admission point** of the server:
 //! one global waiting-count bounded by `queue_depth` decides accept or
@@ -10,6 +10,14 @@
 //! depth 2x the configured value and surfacing the inner rejection as a
 //! delivered error instead of submit-time backpressure).
 //!
+//! On top of the depth boundary sits the per-shard **byte budget**
+//! (DESIGN.md §10): each shard carries a CAS-reserved count of the
+//! worst-case compressed-resident bytes of its in-flight requests, and a
+//! request is admitted only onto a shard whose reservation stays within
+//! `memory.budget_bytes`.  Like the depth, the boundary is exact under
+//! concurrent submitters; unlike the depth, it is per shard, so a
+//! request is rejected only when *no* live shard can hold it.
+//!
 //! Accounting protocol (all counters SeqCst; traffic is far below
 //! contention-relevant rates):
 //!
@@ -20,8 +28,14 @@
 //! * `load` (per shard) — requests in flight on that shard (waiting in
 //!   its channel + actively decoding).  Incremented at admission;
 //!   decremented via [`ShardCtx::note_done`] when the reply is sent.
-//!   `try_admit` routes to the shard with the minimum load (ties break
-//!   to the lowest shard index).
+//! * `reserved` (per shard) — worst-case resident bytes of in-flight
+//!   requests.  CAS-reserved at admission against the budget; released
+//!   by [`ShardCtx::note_done`] with the amount carried on the request.
+//! * `resident` (per shard) — live resident bytes last published by the
+//!   shard's batcher ([`ShardCtx::publish_resident`]).  `try_admit`
+//!   routes to the shard with the minimum `(load, resident, index)` —
+//!   resident bytes break load ties, so two shards with equal request
+//!   counts route by who actually holds less memory.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -37,10 +51,13 @@ pub(crate) struct ShardRequest {
     /// Global submission-order tag (diagnostics; outputs never depend on
     /// it — seeds derive from request content, DESIGN.md §8).
     pub tag: u64,
+    /// Worst-case resident bytes reserved on the owning shard's budget
+    /// (0 when no budget is configured); released at `note_done`.
+    pub reserved_bytes: usize,
     pub reply: Sender<Result<GenerationOutput>>,
 }
 
-/// The dispatcher's per-shard route: channel + load counter + liveness.
+/// The dispatcher's per-shard route: channel + accounting + liveness.
 /// The sender sits behind a mutex because `mpsc::Sender` is not `Sync`
 /// on older toolchains and the dispatcher is shared across submitter
 /// threads; the critical section is one non-blocking `send`.  `alive`
@@ -49,6 +66,8 @@ pub(crate) struct ShardRequest {
 struct ShardLink {
     tx: Mutex<Sender<ShardRequest>>,
     load: Arc<AtomicUsize>,
+    reserved: Arc<AtomicUsize>,
+    resident: Arc<AtomicUsize>,
     alive: AtomicBool,
 }
 
@@ -57,6 +76,8 @@ pub(crate) struct Dispatcher {
     shards: Vec<ShardLink>,
     queued: Arc<AtomicUsize>,
     queue_depth: usize,
+    /// Per-shard worst-case byte budget; 0 = unlimited.
+    budget_bytes: usize,
     next_tag: AtomicU64,
 }
 
@@ -65,6 +86,8 @@ pub(crate) struct ShardCtx {
     pub rx: Receiver<ShardRequest>,
     queued: Arc<AtomicUsize>,
     load: Arc<AtomicUsize>,
+    reserved: Arc<AtomicUsize>,
+    resident: Arc<AtomicUsize>,
 }
 
 impl ShardCtx {
@@ -73,14 +96,26 @@ impl ShardCtx {
         self.queued.fetch_sub(1, Ordering::SeqCst);
     }
 
-    /// The request's reply has been sent (or dropped): frees shard load.
-    pub fn note_done(&self) {
+    /// The request's reply has been sent (or dropped): frees shard load
+    /// and releases its worst-case byte reservation.
+    pub fn note_done(&self, reserved_bytes: usize) {
         self.load.fetch_sub(1, Ordering::SeqCst);
+        self.reserved.fetch_sub(reserved_bytes, Ordering::SeqCst);
+    }
+
+    /// Publish the shard's live resident bytes (routing weight).
+    pub fn publish_resident(&self, bytes: usize) {
+        self.resident.store(bytes, Ordering::SeqCst);
     }
 }
 
 /// Build a dispatcher and its `n_shards` shard endpoints.
-pub(crate) fn build(n_shards: usize, queue_depth: usize) -> (Dispatcher, Vec<ShardCtx>) {
+/// `budget_bytes` is the per-shard worst-case byte budget (0 = off).
+pub(crate) fn build(
+    n_shards: usize,
+    queue_depth: usize,
+    budget_bytes: usize,
+) -> (Dispatcher, Vec<ShardCtx>) {
     assert!(n_shards >= 1, "dispatcher needs at least one shard");
     let queued = Arc::new(AtomicUsize::new(0));
     let mut shards = Vec::with_capacity(n_shards);
@@ -88,20 +123,41 @@ pub(crate) fn build(n_shards: usize, queue_depth: usize) -> (Dispatcher, Vec<Sha
     for _ in 0..n_shards {
         let (tx, rx) = mpsc::channel();
         let load = Arc::new(AtomicUsize::new(0));
+        let reserved = Arc::new(AtomicUsize::new(0));
+        let resident = Arc::new(AtomicUsize::new(0));
         shards.push(ShardLink {
             tx: Mutex::new(tx),
             load: load.clone(),
+            reserved: reserved.clone(),
+            resident: resident.clone(),
             alive: AtomicBool::new(true),
         });
-        ctxs.push(ShardCtx { rx, queued: queued.clone(), load });
+        ctxs.push(ShardCtx { rx, queued: queued.clone(), load, reserved, resident });
     }
     let dispatcher = Dispatcher {
         shards,
         queued,
         queue_depth,
+        budget_bytes,
         next_tag: AtomicU64::new(0),
     };
     (dispatcher, ctxs)
+}
+
+/// CAS-reserve `n` on `a` without exceeding `bound`; exact under
+/// concurrent reservers (the same discipline as the queue-depth CAS).
+fn try_reserve(a: &AtomicUsize, n: usize, bound: usize) -> bool {
+    let mut cur = a.load(Ordering::SeqCst);
+    loop {
+        if cur + n > bound {
+            return false;
+        }
+        match a.compare_exchange_weak(cur, cur + n, Ordering::SeqCst,
+                                      Ordering::SeqCst) {
+            Ok(_) => return true,
+            Err(now) => cur = now,
+        }
+    }
 }
 
 impl Dispatcher {
@@ -119,13 +175,33 @@ impl Dispatcher {
         self.shards.iter().map(|s| s.load.load(Ordering::SeqCst)).collect()
     }
 
-    /// Admit one request or reject with backpressure.  On success the
-    /// request is already routed to the least-loaded shard; the returned
-    /// tag is its global submission index.
+    /// Per-shard reserved worst-case bytes (observability).
+    pub fn reserved_bytes(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .map(|s| s.reserved.load(Ordering::SeqCst))
+            .collect()
+    }
+
+    /// Per-shard published live resident bytes (observability).
+    pub fn resident_bytes(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .map(|s| s.resident.load(Ordering::SeqCst))
+            .collect()
+    }
+
+    /// Admit one request or reject with backpressure.  `wc_bytes` is the
+    /// request's worst-case resident footprint, reserved against the
+    /// per-shard byte budget when one is configured.  On success the
+    /// request is already routed to the least-loaded shard (resident
+    /// bytes break load ties) that could hold the reservation; the
+    /// returned tag is its global submission index.
     pub fn try_admit(
         &self,
         prompt: Vec<u16>,
         max_new: usize,
+        wc_bytes: usize,
         reply: Sender<Result<GenerationOutput>>,
     ) -> Result<u64> {
         // Reserve a waiting slot with a CAS loop so the boundary is exact
@@ -146,35 +222,68 @@ impl Dispatcher {
             }
         }
 
-        // Least-loaded live shard; first index wins ties.  A failed send
-        // marks that shard dead and retries the next live one, so a
+        // Route to the best live shard that can also hold the request's
+        // worst-case byte reservation: candidates in (load, resident,
+        // index) order, first reservable one wins.  A failed send marks
+        // that shard dead, rolls its accounting back, and retries, so a
         // single crashed shard never blackholes admissions while healthy
         // shards have capacity (DESIGN.md §8).
         let mut prompt = prompt;
         let mut reply = reply;
         loop {
-            let Some(link) = self
-                .shards
-                .iter()
-                .filter(|s| s.alive.load(Ordering::SeqCst))
-                .min_by_key(|s| s.load.load(Ordering::SeqCst))
-            else {
+            let route_key = |i: usize| {
+                let s = &self.shards[i];
+                (s.load.load(Ordering::SeqCst),
+                 s.resident.load(Ordering::SeqCst), i)
+            };
+            let mut live = (0..self.shards.len())
+                .filter(|&i| self.shards[i].alive.load(Ordering::SeqCst))
+                .peekable();
+            if live.peek().is_none() {
                 self.queued.fetch_sub(1, Ordering::SeqCst);
                 anyhow::bail!("server stopped (no live shards)");
+            }
+            let reserved_bytes = if self.budget_bytes > 0 { wc_bytes } else { 0 };
+            let chosen = if self.budget_bytes == 0 {
+                // No budget: allocation-free min scan, first index wins
+                // ties through the key's index component.
+                live.min_by_key(|&i| route_key(i))
+            } else {
+                // Budget: candidates in routing order; the first one
+                // whose reservation fits wins, so a full best shard
+                // spills to the next rather than rejecting.
+                let mut order: Vec<usize> = live.collect();
+                order.sort_by_key(|&i| route_key(i));
+                order.into_iter().find(|&i| {
+                    try_reserve(&self.shards[i].reserved, wc_bytes,
+                                self.budget_bytes)
+                })
             };
+            let Some(idx) = chosen else {
+                // Every live shard's budget is exhausted (or the request
+                // can never fit): exact submit-time backpressure.
+                self.queued.fetch_sub(1, Ordering::SeqCst);
+                anyhow::bail!(
+                    "memory budget exceeded (worst-case {wc_bytes} B does not \
+                     fit any shard's {} B budget — backpressure)",
+                    self.budget_bytes
+                );
+            };
+            let link = &self.shards[idx];
             link.load.fetch_add(1, Ordering::SeqCst);
             let tag = self.next_tag.fetch_add(1, Ordering::SeqCst);
             let sent = link
                 .tx
                 .lock()
                 .expect("dispatch sender poisoned")
-                .send(ShardRequest { prompt, max_new, tag, reply });
+                .send(ShardRequest { prompt, max_new, tag, reserved_bytes, reply });
             match sent {
                 Ok(()) => return Ok(tag),
                 Err(mpsc::SendError(req)) => {
-                    // Shard thread gone: roll its load back, mark it dead,
-                    // and re-route the request.
+                    // Shard thread gone: roll its accounting back, mark it
+                    // dead, and re-route the request.
                     link.load.fetch_sub(1, Ordering::SeqCst);
+                    link.reserved.fetch_sub(reserved_bytes, Ordering::SeqCst);
                     link.alive.store(false, Ordering::SeqCst);
                     prompt = req.prompt;
                     reply = req.reply;
@@ -197,36 +306,36 @@ mod tests {
         // depth D admits exactly D waiting requests; D+1 rejects; freeing
         // one waiting slot admits exactly one more.
         let depth = 3;
-        let (d, ctxs) = build(2, depth);
+        let (d, ctxs) = build(2, depth, 0);
         for i in 0..depth {
-            assert!(d.try_admit(vec![1], 2, reply()).is_ok(), "admit {i}");
+            assert!(d.try_admit(vec![1], 2, 0, reply()).is_ok(), "admit {i}");
         }
         assert_eq!(d.queued(), depth);
-        let err = d.try_admit(vec![1], 2, reply()).unwrap_err();
+        let err = d.try_admit(vec![1], 2, 0, reply()).unwrap_err();
         assert!(err.to_string().contains("queue full"), "{err}");
         // a shard pulls one request into its batcher -> one slot frees
         ctxs[0].note_activated();
-        assert!(d.try_admit(vec![1], 2, reply()).is_ok());
-        assert!(d.try_admit(vec![1], 2, reply()).is_err());
+        assert!(d.try_admit(vec![1], 2, 0, reply()).is_ok());
+        assert!(d.try_admit(vec![1], 2, 0, reply()).is_err());
     }
 
     #[test]
     fn zero_depth_rejects_everything() {
-        let (d, _ctxs) = build(1, 0);
-        assert!(d.try_admit(vec![1], 2, reply()).is_err());
+        let (d, _ctxs) = build(1, 0, 0);
+        assert!(d.try_admit(vec![1], 2, 0, reply()).is_err());
     }
 
     #[test]
     fn least_loaded_routing_balances() {
-        let (d, ctxs) = build(3, 64);
+        let (d, ctxs) = build(3, 64, 0);
         for _ in 0..6 {
-            d.try_admit(vec![1], 2, reply()).unwrap();
+            d.try_admit(vec![1], 2, 0, reply()).unwrap();
         }
         assert_eq!(d.loads(), vec![2, 2, 2]);
         // completion on shard 1 draws the next request there
         ctxs[1].note_activated();
-        ctxs[1].note_done();
-        d.try_admit(vec![1], 2, reply()).unwrap();
+        ctxs[1].note_done(0);
+        d.try_admit(vec![1], 2, 0, reply()).unwrap();
         assert_eq!(d.loads(), vec![2, 2, 2]);
         // requests actually landed in the right channels
         assert_eq!(ctxs[0].rx.try_iter().count(), 2);
@@ -235,32 +344,103 @@ mod tests {
     }
 
     #[test]
+    fn resident_bytes_break_load_ties() {
+        // Equal loads everywhere; shard 1 publishes the smallest live
+        // resident footprint, so the next request routes there instead of
+        // falling through to the lowest index.
+        let (d, ctxs) = build(3, 64, 0);
+        ctxs[0].publish_resident(9_000);
+        ctxs[1].publish_resident(1_000);
+        ctxs[2].publish_resident(5_000);
+        d.try_admit(vec![1], 2, 0, reply()).unwrap();
+        assert_eq!(d.loads(), vec![0, 1, 0]);
+        assert_eq!(ctxs[1].rx.try_iter().count(), 1);
+        // With shard 1 now ahead on load, the tie among 0 and 2 goes to
+        // the lighter shard 2, not the lower index.
+        d.try_admit(vec![1], 2, 0, reply()).unwrap();
+        assert_eq!(d.loads(), vec![0, 1, 1]);
+        assert_eq!(ctxs[2].rx.try_iter().count(), 1);
+        // Exact load+resident tie: lowest index wins.
+        ctxs[0].publish_resident(5_000);
+        ctxs[2].publish_resident(5_000);
+        d.try_admit(vec![1], 2, 0, reply()).unwrap();
+        assert_eq!(ctxs[0].rx.try_iter().count(), 1);
+    }
+
+    #[test]
+    fn budget_boundary_is_exact() {
+        // Budget = 2 x wc: two requests reserve exactly the budget, the
+        // third rejects at submit time, and releasing one reservation
+        // admits exactly one more — the queue-depth discipline, in bytes.
+        let wc = 1000;
+        let (d, ctxs) = build(1, 64, 2 * wc);
+        assert!(d.try_admit(vec![1], 2, wc, reply()).is_ok());
+        assert!(d.try_admit(vec![1], 2, wc, reply()).is_ok());
+        assert_eq!(d.reserved_bytes(), vec![2 * wc]);
+        let err = d.try_admit(vec![1], 2, wc, reply()).unwrap_err();
+        assert!(err.to_string().contains("memory budget"), "{err}");
+        // queued was rolled back: the rejection is a budget rejection,
+        // not a stuck waiting slot.
+        assert_eq!(d.queued(), 2);
+        ctxs[0].note_activated();
+        ctxs[0].note_done(wc);
+        assert_eq!(d.reserved_bytes(), vec![wc]);
+        assert!(d.try_admit(vec![1], 2, wc, reply()).is_ok());
+        assert!(d.try_admit(vec![1], 2, wc, reply()).is_err());
+    }
+
+    #[test]
+    fn oversized_request_rejected_even_when_idle() {
+        let (d, _ctxs) = build(2, 64, 1000);
+        let err = d.try_admit(vec![1], 2, 1001, reply()).unwrap_err();
+        assert!(err.to_string().contains("memory budget"), "{err}");
+        assert_eq!(d.queued(), 0);
+        assert_eq!(d.reserved_bytes(), vec![0, 0]);
+    }
+
+    #[test]
+    fn budget_spills_to_sibling_shard() {
+        // Shard 0's budget is full; the request must land on shard 1
+        // rather than reject — rejection only when *no* shard fits.
+        let wc = 500;
+        let (d, ctxs) = build(2, 64, 2 * wc);
+        for _ in 0..4 {
+            d.try_admit(vec![1], 2, wc, reply()).unwrap();
+        }
+        assert_eq!(d.reserved_bytes(), vec![2 * wc, 2 * wc]);
+        assert!(d.try_admit(vec![1], 2, wc, reply()).is_err());
+        assert_eq!(ctxs[0].rx.try_iter().count(), 2);
+        assert_eq!(ctxs[1].rx.try_iter().count(), 2);
+    }
+
+    #[test]
     fn tags_are_submission_ordered() {
-        let (d, _ctxs) = build(2, 8);
-        let t0 = d.try_admit(vec![1], 1, reply()).unwrap();
-        let t1 = d.try_admit(vec![2], 1, reply()).unwrap();
+        let (d, _ctxs) = build(2, 8, 0);
+        let t0 = d.try_admit(vec![1], 1, 0, reply()).unwrap();
+        let t1 = d.try_admit(vec![2], 1, 0, reply()).unwrap();
         assert_eq!((t0, t1), (0, 1));
     }
 
     #[test]
     fn dead_shard_rolls_back_counters() {
-        let (d, ctxs) = build(1, 4);
+        let (d, ctxs) = build(1, 4, 4096);
         drop(ctxs); // receiver gone
-        let err = d.try_admit(vec![1], 2, reply()).unwrap_err();
+        let err = d.try_admit(vec![1], 2, 100, reply()).unwrap_err();
         assert!(err.to_string().contains("no live shards"), "{err}");
         assert_eq!(d.queued(), 0);
         assert_eq!(d.loads(), vec![0]);
+        assert_eq!(d.reserved_bytes(), vec![0], "reservation leaked");
     }
 
     #[test]
     fn routing_skips_dead_shard() {
         // One crashed shard must not blackhole admissions: sends that hit
         // its closed channel re-route to the live shard.
-        let (d, mut ctxs) = build(2, 16);
+        let (d, mut ctxs) = build(2, 16, 0);
         let live = ctxs.remove(1);
         drop(ctxs); // shard 0's receiver gone (thread died)
         for _ in 0..4 {
-            d.try_admit(vec![1], 2, reply()).unwrap();
+            d.try_admit(vec![1], 2, 0, reply()).unwrap();
         }
         assert_eq!(live.rx.try_iter().count(), 4, "requests lost");
         assert_eq!(d.loads()[0], 0, "dead shard holds phantom load");

@@ -10,10 +10,34 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::GenerationOutput;
 use crate::metrics::LatencyStats;
-use crate::workload::RequestTrace;
+use crate::workload::{RequestTrace, Task};
 use crate::Result;
 
 use super::ServerHandle;
+
+/// Memory-pressure scenario (DESIGN.md §10): `n` concurrent long-window,
+/// short-decode requests — line-retrieval prompts sized to nearly fill
+/// the model window, a 2-token decode budget, and every arrival at t=0.
+/// Each admitted session pins close to the worst-case byte footprint for
+/// almost its whole lifetime, so replaying this trace against a
+/// budget-configured server exercises the admission boundary (and, with
+/// `memory.slots < max_batch`, the park/unpark path) under real
+/// concurrency rather than only in unit tests.
+///
+/// Window ceiling: line-retrieval indexes lines with two digits, so
+/// prompts cap at 100 lines (605 tokens).  Every current model config
+/// (micro/tiny/base, windows 64–512) sits below that; for a future
+/// window beyond ~612 tokens the prompts stop tracking the window and
+/// callers sizing budgets from `worst_case_resident_bytes(full window)`
+/// would over-admit — size the budget from this trace's actual prompt
+/// lengths instead in that regime.
+pub fn memory_pressure_trace(max_seq: usize, n: usize, seed: u64) -> RequestTrace {
+    let max_new = 2;
+    // Line-retrieval prompts are `6 * lines + 5` tokens; size `lines` so
+    // prompt + decode budget just fits the window.
+    let lines = (max_seq.saturating_sub(max_new + 5) / 6).clamp(1, 100);
+    RequestTrace::batch(Task::Lines(lines), max_seq - max_new, n, max_new, seed)
+}
 
 /// Outcome of one trace replay.
 #[derive(Debug, Default)]

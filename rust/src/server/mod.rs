@@ -32,6 +32,7 @@ use std::thread::JoinHandle;
 use crate::config::EngineConfig;
 use crate::coordinator::batcher::{ContinuousBatcher, QueuedRequest};
 use crate::coordinator::{Engine, GenerationOutput};
+use crate::kvcache::{worst_case_resident_bytes, CacheLayout};
 use crate::metrics::{EngineMetrics, MetricsSnapshot};
 use crate::Result;
 
@@ -62,15 +63,19 @@ impl ResponseHandle {
 pub struct ServerHandle {
     dispatcher: Arc<Dispatcher>,
     metrics: Arc<Vec<Mutex<EngineMetrics>>>,
-    /// Model window, for submit-time request validation.
-    max_seq: usize,
+    /// Cache shape, for submit-time validation and the worst-case
+    /// byte-footprint bound the budget admission reserves (DESIGN.md §10).
+    layout: CacheLayout,
+    /// Streaming recompression period (sizes the worst-case fp32 tail).
+    recompress_every: usize,
 }
 
 impl ServerHandle {
     /// Submit one generation request; returns a waitable handle.
-    /// Errors immediately when the admission queue is full (backpressure)
-    /// or the request is malformed (`max_new == 0`, empty prompt, window
-    /// overflow).
+    /// Errors immediately when the admission queue is full (backpressure),
+    /// no shard can hold the request's worst-case byte footprint (memory
+    /// budget), or the request is malformed (`max_new == 0`, empty
+    /// prompt, window overflow).
     pub fn submit(&self, prompt: Vec<u16>, max_new: usize) -> Result<ResponseHandle> {
         // Validate the full session-start contract at admission so a bad
         // request is a submit-time error, never a poisoned shard: these
@@ -79,13 +84,15 @@ impl ServerHandle {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         anyhow::ensure!(max_new >= 1, "max_new must be >= 1");
         anyhow::ensure!(
-            prompt.len() + max_new <= self.max_seq,
+            prompt.len() + max_new <= self.layout.seq,
             "prompt {} + budget {max_new} exceeds window {}",
             prompt.len(),
-            self.max_seq
+            self.layout.seq
         );
+        let wc = worst_case_resident_bytes(self.layout, prompt.len() + max_new,
+                                           self.recompress_every);
         let (reply, rx) = mpsc::channel();
-        let tag = self.dispatcher.try_admit(prompt, max_new, reply)?;
+        let tag = self.dispatcher.try_admit(prompt, max_new, wc, reply)?;
         Ok(ResponseHandle { rx, tag })
     }
 
@@ -108,6 +115,18 @@ impl ServerHandle {
     /// index order.
     pub fn shard_loads(&self) -> Vec<usize> {
         self.dispatcher.loads()
+    }
+
+    /// Per-shard live resident bytes as last published by each shard's
+    /// batcher (DESIGN.md §10), in shard index order.
+    pub fn shard_resident_bytes(&self) -> Vec<usize> {
+        self.dispatcher.resident_bytes()
+    }
+
+    /// Per-shard worst-case bytes currently reserved against the memory
+    /// budget (always 0 when `memory.budget_bytes = 0`).
+    pub fn shard_reserved_bytes(&self) -> Vec<usize> {
+        self.dispatcher.reserved_bytes()
     }
 
     /// A coherent metrics read: per-shard engine metrics (as last
@@ -135,17 +154,19 @@ impl Server {
     /// constructed (bad artifacts dir, unknown model, ...).
     pub fn start(cfg: EngineConfig) -> Result<Self> {
         cfg.validate()?;
-        // Model window for submit-time validation (cheap: manifest read
-        // or sim registry, no compilation) — also fails fast here when
-        // the artifacts dir is unreadable, before any thread spawns.
-        let max_seq =
-            crate::runtime::load_model_info(&cfg.artifacts_dir, &cfg.model)?.max_seq;
+        // Model shape for submit-time validation and worst-case byte
+        // bounds (cheap: manifest read or sim registry, no compilation)
+        // — also fails fast here when the artifacts dir is unreadable,
+        // before any thread spawns.
+        let layout = crate::runtime::load_model_info(&cfg.artifacts_dir, &cfg.model)?
+            .cache_layout();
         let n_shards = if cfg.scheduler.shards == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             cfg.scheduler.shards
         };
-        let (dispatcher, ctxs) = dispatch::build(n_shards, cfg.scheduler.queue_depth);
+        let (dispatcher, ctxs) = dispatch::build(n_shards, cfg.scheduler.queue_depth,
+                                                 cfg.memory.budget_bytes);
         let metrics: Arc<Vec<Mutex<EngineMetrics>>> = Arc::new(
             (0..n_shards).map(|_| Mutex::new(EngineMetrics::default())).collect(),
         );
@@ -190,7 +211,8 @@ impl Server {
             handle: ServerHandle {
                 dispatcher: Arc::new(dispatcher),
                 metrics,
-                max_seq,
+                layout,
+                recompress_every: cfg.quant.recompress_every,
             },
             joins,
         })
@@ -247,7 +269,7 @@ fn shard_loop(
     // its depth never rejects and never stacks on the dispatcher's
     // boundary (DESIGN.md §8).
     let mut batcher = ContinuousBatcher::new(max_batch, max_batch);
-    let mut replies: Vec<(u64, Sender<Result<GenerationOutput>>)> = Vec::new();
+    let mut replies: Vec<ReplySlot> = Vec::new();
 
     loop {
         // Pull waiting requests while decode slots are free.
@@ -262,6 +284,7 @@ fn shard_loop(
                         deliver(&mut batcher, &mut replies, &ctx, &engine,
                                 &slots[shard_idx]);
                     }
+                    ctx.publish_resident(0);
                     publish(&slots[shard_idx], &engine);
                     return Ok(());
                 }
@@ -269,6 +292,7 @@ fn shard_loop(
         }
         if batcher.idle() {
             // Idle: publish metrics, then block for the next request.
+            ctx.publish_resident(0);
             publish(&slots[shard_idx], &engine);
             match ctx.rx.recv() {
                 Ok(req) => {
@@ -279,14 +303,25 @@ fn shard_loop(
             }
         }
         batcher.step(&mut engine)?;
+        // Routing weight (DESIGN.md §10): the dispatcher breaks load
+        // ties by these live resident bytes, so publish every iteration.
+        ctx.publish_resident(batcher.active_bytes());
         deliver(&mut batcher, &mut replies, &ctx, &engine, &slots[shard_idx]);
     }
+}
+
+/// One in-flight request's reply channel plus the worst-case byte
+/// reservation to release when it completes.
+struct ReplySlot {
+    tag: u64,
+    reserved_bytes: usize,
+    reply: Sender<Result<GenerationOutput>>,
 }
 
 /// Move a pulled request into the batcher and register its reply slot.
 fn admit(
     batcher: &mut ContinuousBatcher,
-    replies: &mut Vec<(u64, Sender<Result<GenerationOutput>>)>,
+    replies: &mut Vec<ReplySlot>,
     req: ShardRequest,
     ctx: &ShardCtx,
 ) {
@@ -296,14 +331,18 @@ fn admit(
         max_new: req.max_new,
         tag: req.tag,
     }) {
-        Ok(()) => replies.push((req.tag, req.reply)),
+        Ok(()) => replies.push(ReplySlot {
+            tag: req.tag,
+            reserved_bytes: req.reserved_bytes,
+            reply: req.reply,
+        }),
         Err(_) => {
             // Unreachable by construction (pulls are slot-gated), but do
             // not let an accounting bug hang the client.
             let _ = req
                 .reply
                 .send(Err(anyhow::anyhow!("internal: shard batcher rejected")));
-            ctx.note_done();
+            ctx.note_done(req.reserved_bytes);
         }
     }
 }
@@ -313,7 +352,7 @@ fn admit(
 /// guaranteed to see its own request in the next snapshot.
 fn deliver(
     batcher: &mut ContinuousBatcher,
-    replies: &mut Vec<(u64, Sender<Result<GenerationOutput>>)>,
+    replies: &mut Vec<ReplySlot>,
     ctx: &ShardCtx,
     engine: &Engine,
     slot: &Mutex<EngineMetrics>,
@@ -324,11 +363,17 @@ fn deliver(
     }
     publish(slot, engine);
     for outcome in outcomes {
-        if let Some(idx) = replies.iter().position(|(t, _)| *t == outcome.tag) {
-            let (_, reply) = replies.swap_remove(idx);
-            let _ = reply.send(Ok(outcome.output));
+        // Release accounting (load + byte reservation) *before* the
+        // reply goes out, like the metrics publish above: a client whose
+        // `wait()` has returned must observe its reservation gone.
+        match replies.iter().position(|r| r.tag == outcome.tag) {
+            Some(idx) => {
+                let r = replies.swap_remove(idx);
+                ctx.note_done(r.reserved_bytes);
+                let _ = r.reply.send(Ok(outcome.output));
+            }
+            None => ctx.note_done(0),
         }
-        ctx.note_done();
     }
 }
 

@@ -7,7 +7,7 @@
 //! ```
 
 use zipcache::config::{EngineConfig, PolicyKind};
-use zipcache::coordinator::Engine;
+use zipcache::coordinator::{Engine, GenerationRequest};
 use zipcache::kvcache::{CompressedKV, PrecisionClass, QuantSpec};
 use zipcache::quant::Granularity;
 use zipcache::util::bench::Table;
@@ -33,7 +33,8 @@ fn main() -> Result<()> {
     // Pull real K/V from a prefill.
     let gen = TaskGen::new(Task::Gsm, info.max_seq - 2);
     let sample = gen.sample(args.get_u64("seed")?);
-    let sess = engine.start_session(sample.prompt().to_vec(), 2)?;
+    let sess = engine
+        .start_session(GenerationRequest::new(sample.prompt().to_vec(), 2))?;
     let n = sample.prompt_len;
     let (k, v) = (sess.kbuf(), sess.vbuf());
 

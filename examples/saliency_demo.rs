@@ -12,7 +12,7 @@
 //! ```
 
 use zipcache::config::{EngineConfig, PolicyKind};
-use zipcache::coordinator::Engine;
+use zipcache::coordinator::{Engine, GenerationRequest};
 use zipcache::saliency::metric::select_salient;
 use zipcache::util::cli::Args;
 use zipcache::workload::{Task, TaskGen};
@@ -38,7 +38,8 @@ fn main() -> Result<()> {
              sample.salient_span, n - 3, n);
 
     // Run a session start: the engine stores layer-averaged saliency.
-    let sess = engine.start_session(sample.prompt().to_vec(), 2)?;
+    let sess = engine
+        .start_session(GenerationRequest::new(sample.prompt().to_vec(), 2))?;
     let acc = &sess.acc_saliency[..n];
     let nrm = &sess.norm_saliency[..n];
 

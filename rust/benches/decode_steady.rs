@@ -18,7 +18,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use zipcache::config::EngineConfig;
-use zipcache::coordinator::Engine;
+use zipcache::coordinator::{Engine, GenerationRequest};
 
 /// The system allocator wrapped with allocation-event counters.  Frees
 /// are not counted: the hot-path contract is about *new* heap traffic.
@@ -130,7 +130,9 @@ fn main() {
             .map(|i| 16 + ((sessions * 31 + i * 7) % 200) as u16)
             .collect();
         let max_new = smax - prompt.len() - 1;
-        let mut s = engine.start_session(prompt, max_new).unwrap();
+        let mut s = engine
+            .start_session(GenerationRequest::new(prompt, max_new))
+            .unwrap();
         s.stream.reserve_rows(recompress_every, smax);
         sessions += 1;
 

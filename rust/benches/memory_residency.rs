@@ -17,7 +17,7 @@ use std::time::Instant;
 
 use zipcache::config::EngineConfig;
 use zipcache::coordinator::batcher::{ContinuousBatcher, QueuedRequest};
-use zipcache::coordinator::Engine;
+use zipcache::coordinator::{Engine, GenerationRequest};
 use zipcache::kvcache::worst_case_resident_bytes;
 use zipcache::util::bench::Table;
 use zipcache::workload::{Task, TaskGen};
@@ -60,8 +60,8 @@ fn main() {
             for tag in 0..n_requests as u64 {
                 batcher
                     .submit(QueuedRequest {
-                        prompt: gen.sample(tag).prompt().to_vec(),
-                        max_new: MAX_NEW,
+                        request: GenerationRequest::new(
+                            gen.sample(tag).prompt().to_vec(), MAX_NEW),
                         tag,
                     })
                     .expect("queue sized to the trace");
@@ -73,7 +73,7 @@ fn main() {
 
             let outputs: Vec<(u64, Vec<u16>)> = outcomes
                 .iter()
-                .map(|o| (o.tag, o.output.tokens.clone()))
+                .map(|o| (o.tag, o.tokens.clone()))
                 .collect();
             match &reference {
                 None => reference = Some(outputs),
@@ -108,7 +108,7 @@ fn main() {
             }
 
             let tokens: usize =
-                outcomes.iter().map(|o| o.output.tokens.len()).sum();
+                outcomes.iter().map(|o| o.tokens.len()).sum();
             let tok_s = tokens as f64 / wall.as_secs_f64();
             table.row(&[
                 batch.to_string(),

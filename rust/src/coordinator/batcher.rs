@@ -1,12 +1,28 @@
-//! Continuous batcher: round-robin token-level interleaving of active
-//! sessions (Orca-style iteration-level scheduling) with admission control
-//! and bounded dense residency (DESIGN.md §10).
+//! Continuous batcher: token-level interleaving of active sessions
+//! (Orca-style iteration-level scheduling) with priority-ordered
+//! admission, deadline shedding, cancellation, token streaming, and
+//! bounded dense residency (DESIGN.md §10, §11).
 //!
 //! The decode artifact is single-sequence, so "batching" here is
 //! interleaved scheduling rather than a batched matmul — the scheduling
 //! behaviour (admission, fairness, completion-triggered refill from the
 //! queue) is the part of the serving stack the paper's efficiency claims
 //! interact with.  DESIGN.md records this substitution.
+//!
+//! Admission (DESIGN.md §11): the staging queue is *priority-ordered* —
+//! pops take the waiting request with the lowest
+//! `(Priority::rank, tag)`, so `Interactive` requests jump `Background`
+//! ones, and equal priorities preserve submission order (which keeps the
+//! all-defaults path identical to the old FIFO).  Both the pop order and
+//! the park policy apply a [`STARVATION_AGE`] boost, so priority delays
+//! low-class work but can never starve it — every admitted request
+//! eventually activates and every active session keeps progressing,
+//! like the seed's FIFO.  At pop time, cancelled
+//! requests and requests whose deadline already passed retire immediately
+//! with `Cancelled` / `DeadlineExpired` outcomes — they never consume a
+//! materialization slot.  Active sessions whose [`CancelToken`] fires are
+//! retired at the next iteration, before admission, so their dense slot
+//! is back in the pool for the same iteration's refill.
 //!
 //! Dense residency: the engine's slot pool holds at most `memory.slots`
 //! materialization slots, so when more sessions are active than slots
@@ -19,31 +35,37 @@
 //!
 //! `queue_depth` only applies when the batcher is driven directly (bench
 //! harnesses, run_to_completion).  Under the sharded server the
-//! dispatcher is the single admission point and feeds the batcher
-//! strictly within its free decode slots, so this depth never stacks on
-//! the server's boundary (DESIGN.md §8).
+//! dispatcher is the single admission point: its global waiting count is
+//! decremented only when a request leaves the staging queue (activation
+//! or shed — [`StepReport::activated`]), so staging requests here never
+//! stacks a second depth on the server's boundary (DESIGN.md §8).
 
-use std::collections::VecDeque;
+use std::time::Instant;
 
 use crate::Result;
 
-use super::engine::{Engine, GenerationOutput};
+use super::engine::Engine;
+use super::request::{FinishReason, GenerationRequest, GenerationResponse,
+                     Priority};
 use super::session::Session;
 
-/// A queued request.
+/// A queued request: the typed request plus its submission-order tag.
 #[derive(Debug, Clone)]
 pub struct QueuedRequest {
-    pub prompt: Vec<u16>,
-    pub max_new: usize,
-    /// Opaque tag returned with the outcome (e.g. trace index).
+    pub request: GenerationRequest,
+    /// Opaque tag carried onto the outcome (e.g. trace index or the
+    /// dispatcher's global submission index).
     pub tag: u64,
 }
 
-/// Completed request + its output.
-#[derive(Debug)]
-pub struct BatchOutcome {
-    pub tag: u64,
-    pub output: GenerationOutput,
+/// What one scheduler iteration did, beyond decoding: how many waiting
+/// requests left the staging queue (activated into a session, or retired
+/// at pop as cancelled/deadline-shed).  The sharded server decrements its
+/// global `queued` gauge by this, keeping `queue_depth` an exact boundary
+/// even though requests stage here (DESIGN.md §8, §11).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepReport {
+    pub activated: usize,
 }
 
 /// Scheduling view of one active session, handed to the [`ParkPolicy`].
@@ -57,6 +79,9 @@ pub struct SessionMeta {
     pub last_step: u64,
     /// Currently holding a dense materialization slot?
     pub resident: bool,
+    /// Request urgency class (the priority-aware policy parks
+    /// `Background` first).
+    pub priority: Priority,
 }
 
 /// Which active sessions hold dense slots this iteration — the park
@@ -122,22 +147,96 @@ impl ParkPolicy for LruByLastStep {
     }
 }
 
+/// Iterations a request may go unserved before its class stops
+/// outranking it, applied on both priority surfaces: the staging-queue
+/// pop ([`ContinuousBatcher`]'s `best_waiting`) and the park policy
+/// ([`PriorityPark`]).  Starvation is therefore bounded end to end —
+/// an admitted `Background` request activates within `STARVATION_AGE`
+/// iterations of queue pressure, and once active decodes at least one
+/// token every `STARVATION_AGE` iterations even under sustained
+/// `Interactive` pressure — so it always progresses toward completion
+/// (and toward releasing its queue_depth slot and byte-budget
+/// reservation) instead of blocking its client forever.
+const STARVATION_AGE: u64 = 8;
+
+/// Priority-aware parking (DESIGN.md §11): schedule `Interactive`
+/// sessions first and `Background` last, LRU (then session id) inside a
+/// class — so under slot pressure `Background` sessions are the first to
+/// lose their dense slot.  Strict priority is tempered by aging: a
+/// session unscheduled for [`STARVATION_AGE`] iterations is treated as
+/// top-class (and, being the least-recent inside it, scheduled first),
+/// so no class can be starved indefinitely.  The sharded server's
+/// batchers run this policy.  Outputs are still policy-independent
+/// (park/unpark is bit-exact); only park counts and latency profiles
+/// move.
+#[derive(Debug, Default)]
+pub struct PriorityPark;
+
+impl ParkPolicy for PriorityPark {
+    fn name(&self) -> &'static str {
+        "priority-lru"
+    }
+
+    fn schedule(&mut self, metas: &[SessionMeta], n_run: usize, out: &mut Vec<usize>) {
+        // Age is measured against the most recently scheduled session
+        // (the policy sees no global clock; the freshest `last_step` is
+        // at most one iteration behind it).
+        let newest = metas.iter().map(|m| m.last_step).max().unwrap_or(0);
+        let mut order: Vec<usize> = (0..metas.len()).collect();
+        order.sort_by_key(|&i| {
+            let m = &metas[i];
+            let rank = if newest.saturating_sub(m.last_step) >= STARVATION_AGE {
+                0
+            } else {
+                m.priority.rank()
+            };
+            (rank, m.last_step, m.session_id)
+        });
+        out.extend(order.into_iter().take(n_run));
+    }
+}
+
 struct Active {
-    tag: u64,
     sess: Session,
     last_step: u64,
+}
+
+/// One staged (waiting) request plus the scheduler iteration it entered
+/// the queue at — the aging reference that keeps strict priority pops
+/// from starving an admitted low-priority request (the seed's FIFO
+/// guaranteed eventual activation; the aged pop restores that bound).
+struct Staged {
+    req: QueuedRequest,
+    staged_step: u64,
 }
 
 /// Iteration-level continuous batcher over one engine.
 pub struct ContinuousBatcher {
     max_batch: usize,
     queue_depth: usize,
-    queue: VecDeque<QueuedRequest>,
+    /// Priority-ordered staging queue (pop order is by
+    /// `(aged priority rank, tag)`, decided at pop — storage order is
+    /// irrelevant).
+    queue: Vec<Staged>,
     active: Vec<Active>,
-    outcomes: Vec<BatchOutcome>,
+    outcomes: Vec<GenerationResponse>,
+    /// `(tag, token)` stream of the latest iteration's decode output, in
+    /// emission order; the serving loop drains it after every step and
+    /// forwards each token to its request's `ResponseHandle`
+    /// (DESIGN.md §11).  Cleared at the top of each step, so it never
+    /// grows past one iteration's tokens.
+    emitted: Vec<(u64, u16)>,
     policy: Box<dyn ParkPolicy>,
     /// Iteration counter feeding `SessionMeta::last_step`.
     step_counter: u64,
+    /// Requests that left the staging queue (activated into a session or
+    /// retired at pop) whose departure has not yet been reported through
+    /// a [`StepReport`].  Nonzero only mid-step — or after a step
+    /// errored out part-way, in which case the server's fault cleanup
+    /// drains it ([`ContinuousBatcher::take_departed`]) so the global
+    /// waiting gauge stays exact even for departures inside a failed
+    /// step.
+    departed: usize,
     /// Sessions parked to free a slot (admission or schedule-in).
     preempted: u64,
     // Reusable scheduling scratch.
@@ -157,11 +256,13 @@ impl ContinuousBatcher {
         ContinuousBatcher {
             max_batch,
             queue_depth,
-            queue: VecDeque::new(),
+            queue: Vec::new(),
             active: Vec::new(),
             outcomes: Vec::new(),
+            emitted: Vec::new(),
             policy,
             step_counter: 0,
+            departed: 0,
             preempted: 0,
             sched: Vec::new(),
             metas: Vec::new(),
@@ -173,7 +274,7 @@ impl ContinuousBatcher {
         if self.queue.len() >= self.queue_depth {
             return Err(req);
         }
-        self.queue.push_back(req);
+        self.queue.push(Staged { req, staged_step: self.step_counter });
         Ok(())
     }
 
@@ -202,25 +303,101 @@ impl ContinuousBatcher {
         self.active.iter().map(|a| a.sess.resident_bytes()).sum()
     }
 
-    /// Run one scheduler iteration: refill the batch from the queue
-    /// (prefill — parking a victim when the slot pool is exhausted),
-    /// schedule up to `slots` sessions dense, advance each of them by
-    /// one token, and retire the finished ones.
-    pub fn step(&mut self, engine: &mut Engine) -> Result<()> {
+    /// The waiting request to pop next: lowest `(priority rank, tag)`,
+    /// with the same [`STARVATION_AGE`] boost as the park policy — a
+    /// request waiting that many scheduler iterations is treated as
+    /// top-class (tag order then favors it over fresher arrivals), so
+    /// sustained high-priority traffic delays a `Background` request but
+    /// can never pin its queue_depth slot and byte-budget reservation
+    /// forever (the seed's FIFO guaranteed eventual activation; this
+    /// restores that bound under priority ordering).
+    fn best_waiting(&self) -> Option<usize> {
+        (0..self.queue.len()).min_by_key(|&i| {
+            let e = &self.queue[i];
+            let rank = if self.step_counter.saturating_sub(e.staged_step)
+                >= STARVATION_AGE
+            {
+                0
+            } else {
+                e.req.request.priority.rank()
+            };
+            (rank, e.req.tag)
+        })
+    }
+
+    /// Run one scheduler iteration: retire cancelled sessions (their
+    /// slots free up first), refill the batch from the staging queue in
+    /// priority order — shedding cancelled/expired requests at pop time
+    /// without a slot — schedule up to `slots` sessions dense, advance
+    /// each of them by one token, and retire the finished ones.
+    pub fn step(&mut self, engine: &mut Engine) -> Result<StepReport> {
         self.step_counter += 1;
-        // Admission: fill free decode slots (prefill happens here, so
-        // each admission needs a dense materialization slot).
-        while self.active.len() < self.max_batch && !self.queue.is_empty() {
+        // The token stream covers one iteration: callers that want it
+        // (the serving loop) drain between steps; everyone else —
+        // run_to_completion, bench harnesses driving step() directly —
+        // must not accumulate it unboundedly.  Clearing keeps capacity,
+        // so the steady-state loop still allocates nothing here.
+        self.emitted.clear();
+
+        // Cancellation sweep: flag fired since the last iteration —
+        // retire *before* admission so the dense slot is already back in
+        // the pool when the refill below needs one.
+        let mut swept = false;
+        for a in &mut self.active {
+            if !a.sess.is_done() && a.sess.cancel.is_cancelled() {
+                a.sess.finish = FinishReason::Cancelled;
+                a.sess.done = true;
+                swept = true;
+            }
+        }
+        if swept {
+            self.retire_finished(engine);
+        }
+
+        // Waiting-queue lifecycle sweep: every staged request whose
+        // cancel token fired or whose deadline passed retires *now* —
+        // regardless of queue position or free decode slots — so its
+        // outcome (and the server-side load/byte reservation keyed on
+        // it) is released this iteration, never stuck behind
+        // higher-priority traffic.
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.queue.len() {
+            let cancelled = self.queue[i].req.request.cancel.is_cancelled();
+            let expired = self.queue[i].req.request.expired(now);
+            if !(cancelled || expired) {
+                i += 1;
+                continue;
+            }
+            let q = self.queue.swap_remove(i).req;
+            let finish = if cancelled {
+                engine.metrics.cancelled += 1;
+                FinishReason::Cancelled
+            } else {
+                engine.metrics.shed_by_priority[q.request.priority.rank()] += 1;
+                FinishReason::DeadlineExpired
+            };
+            self.outcomes
+                .push(GenerationResponse::without_session(q.tag, finish));
+            self.departed += 1;
+        }
+
+        // Admission, in priority order: pop the lowest
+        // `(Priority::rank, tag)` while decode slots remain (prefill
+        // happens at start_session, parking a victim when the pool is
+        // exhausted).  A cancel firing between the sweep above and the
+        // pop is caught by the next iteration's active-session sweep.
+        while self.active.len() < self.max_batch {
+            let Some(best) = self.best_waiting() else { break };
             if engine.free_slots() == 0 && !self.park_one(engine) {
                 break;
             }
-            let req = self.queue.pop_front().expect("checked non-empty");
-            let sess = engine.start_session(req.prompt, req.max_new)?;
-            self.active.push(Active {
-                tag: req.tag,
-                sess,
-                last_step: self.step_counter,
-            });
+            let q = self.queue.swap_remove(best).req;
+            let tag = q.tag;
+            self.departed += 1;
+            let mut sess = engine.start_session(q.request)?;
+            sess.tag = tag;
+            self.active.push(Active { sess, last_step: self.step_counter });
         }
 
         // Schedule-in: pick which sessions hold dense slots this
@@ -245,6 +422,7 @@ impl ContinuousBatcher {
                 session_id: a.sess.id,
                 last_step: a.last_step,
                 resident: !a.sess.is_parked(),
+                priority: a.sess.priority,
             }));
             self.policy.schedule(&self.metas, n_run, &mut self.sched);
             // Decode in active order regardless of policy order (outputs
@@ -265,28 +443,42 @@ impl ContinuousBatcher {
             }
         }
 
-        // Iteration-level decode across the scheduled set.
+        // Iteration-level decode across the scheduled set; every emitted
+        // token is streamed (tag-keyed) for incremental delivery.
         for &i in &self.sched {
             let a = &mut self.active[i];
-            engine.decode_step(&mut a.sess)?;
+            if let Some(tok) = engine.decode_step(&mut a.sess)? {
+                self.emitted.push((a.sess.tag, tok));
+            }
             a.last_step = self.step_counter;
         }
 
         // Retire finished sessions.
+        self.retire_finished(engine);
+        engine.metrics.note_resident(self.active_bytes());
+        Ok(StepReport { activated: std::mem::take(&mut self.departed) })
+    }
+
+    /// Departures (queue exits) not yet reported through a
+    /// [`StepReport`] — nonzero only after a `step` error interrupted
+    /// the report.  The serving loop's fault cleanup drains this so a
+    /// failed step's activations still leave the global waiting gauge.
+    pub fn take_departed(&mut self) -> usize {
+        std::mem::take(&mut self.departed)
+    }
+
+    /// Move every done session out of the active set, through
+    /// `Engine::finish` (slot release + metrics), into the outcome list.
+    fn retire_finished(&mut self, engine: &mut Engine) {
         let mut i = 0;
         while i < self.active.len() {
             if self.active[i].sess.is_done() {
                 let a = self.active.swap_remove(i);
-                self.outcomes.push(BatchOutcome {
-                    tag: a.tag,
-                    output: engine.finish(a.sess),
-                });
+                self.outcomes.push(engine.finish(a.sess));
             } else {
                 i += 1;
             }
         }
-        engine.metrics.note_resident(self.active_bytes());
-        Ok(())
     }
 
     /// Park one resident session (the policy's last pick survives
@@ -304,6 +496,7 @@ impl ContinuousBatcher {
             session_id: self.active[i].sess.id,
             last_step: self.active[i].last_step,
             resident: true,
+            priority: self.active[i].sess.priority,
         }));
         self.sched.clear();
         self.policy
@@ -316,9 +509,10 @@ impl ContinuousBatcher {
         true
     }
 
-    /// Drive until every queued/active request completes; returns outcomes
-    /// sorted by tag.
-    pub fn run_to_completion(&mut self, engine: &mut Engine) -> Result<Vec<BatchOutcome>> {
+    /// Drive until every queued/active request completes; returns
+    /// responses sorted by tag.
+    pub fn run_to_completion(&mut self, engine: &mut Engine)
+                             -> Result<Vec<GenerationResponse>> {
         while !self.idle() {
             self.step(engine)?;
         }
@@ -327,9 +521,20 @@ impl ContinuousBatcher {
         Ok(out)
     }
 
-    /// Take completed outcomes accumulated so far.
-    pub fn take_outcomes(&mut self) -> Vec<BatchOutcome> {
+    /// Take completed responses accumulated so far.
+    pub fn take_outcomes(&mut self) -> Vec<GenerationResponse> {
         std::mem::take(&mut self.outcomes)
+    }
+
+    /// Drain the `(tag, token)` stream emitted by the *latest*
+    /// [`ContinuousBatcher::step`], in emission order (each step clears
+    /// the previous iteration's stream, so undrained tokens do not
+    /// accumulate in direct-drive mode).  A drain (not `mem::take`) so
+    /// the buffer keeps its capacity: the serving loop calls this every
+    /// scheduler iteration and must not re-allocate the stream Vec per
+    /// step (DESIGN.md §9's allocation discipline).
+    pub fn drain_emitted(&mut self) -> std::vec::Drain<'_, (u64, u16)> {
+        self.emitted.drain(..)
     }
 }
 
@@ -337,13 +542,16 @@ impl ContinuousBatcher {
 mod tests {
     use super::*;
 
+    fn req(tag: u64) -> QueuedRequest {
+        QueuedRequest { request: GenerationRequest::new(vec![1], 1), tag }
+    }
+
     #[test]
     fn backpressure_rejects_when_full() {
         let mut b = ContinuousBatcher::new(2, 2);
-        let req = QueuedRequest { prompt: vec![1], max_new: 1, tag: 0 };
-        assert!(b.submit(req.clone()).is_ok());
-        assert!(b.submit(req.clone()).is_ok());
-        assert!(b.submit(req).is_err());
+        assert!(b.submit(req(0)).is_ok());
+        assert!(b.submit(req(1)).is_ok());
+        assert!(b.submit(req(2)).is_err());
         assert_eq!(b.pending(), 2);
     }
 
@@ -356,13 +564,58 @@ mod tests {
         assert_eq!(b.active_bytes(), 0);
     }
 
+    #[test]
+    fn pop_order_is_priority_then_tag() {
+        let mut b = ContinuousBatcher::new(4, 8);
+        let mk = |tag, p: Priority| QueuedRequest {
+            request: GenerationRequest::new(vec![1], 1).priority(p),
+            tag,
+        };
+        b.submit(mk(0, Priority::Background)).unwrap();
+        b.submit(mk(1, Priority::Interactive)).unwrap();
+        b.submit(mk(2, Priority::Batch)).unwrap();
+        b.submit(mk(3, Priority::Interactive)).unwrap();
+        let mut order = Vec::new();
+        while let Some(i) = b.best_waiting() {
+            order.push(b.queue.swap_remove(i).req.tag);
+        }
+        // Interactive (by tag), then Batch, then Background.
+        assert_eq!(order, vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn waiting_queue_ages_starved_requests_to_the_front() {
+        // A Background request staged STARVATION_AGE iterations ago is
+        // boosted to top class and outranks a fresh Interactive arrival
+        // (tag order inside the class favors the older request) — the
+        // pop-side half of the anti-starvation bound.
+        let mut b = ContinuousBatcher::new(4, 8);
+        let mk = |tag, p: Priority| QueuedRequest {
+            request: GenerationRequest::new(vec![1], 1).priority(p),
+            tag,
+        };
+        b.submit(mk(0, Priority::Background)).unwrap(); // staged at step 0
+        b.step_counter = STARVATION_AGE;
+        b.submit(mk(1, Priority::Interactive)).unwrap();
+        assert_eq!(b.best_waiting(), Some(0), "starved request must pop first");
+        // One iteration earlier it would still lose to Interactive.
+        b.step_counter = STARVATION_AGE - 1;
+        assert_eq!(b.best_waiting(), Some(1));
+    }
+
     fn metas(ids: &[u64], steps: &[u64]) -> Vec<SessionMeta> {
+        metas_p(ids, steps, &vec![Priority::Interactive; ids.len()])
+    }
+
+    fn metas_p(ids: &[u64], steps: &[u64], prios: &[Priority]) -> Vec<SessionMeta> {
         ids.iter()
             .zip(steps)
-            .map(|(&session_id, &last_step)| SessionMeta {
+            .zip(prios)
+            .map(|((&session_id, &last_step), &priority)| SessionMeta {
                 session_id,
                 last_step,
                 resident: true,
+                priority,
             })
             .collect()
     }
@@ -416,5 +669,56 @@ mod tests {
         let mut out = Vec::new();
         p.schedule(&m, 1, &mut out);
         assert_eq!(out, vec![1]); // id 3 is the lowest
+    }
+
+    #[test]
+    fn priority_park_schedules_background_out_first() {
+        let mut p = PriorityPark;
+        // Background decoded least recently — LRU alone would keep it,
+        // but priority outranks recency across classes (ages here are
+        // all below the starvation threshold).
+        let m = metas_p(&[0, 1, 2], &[9, 7, 8],
+                        &[Priority::Interactive, Priority::Background,
+                          Priority::Batch]);
+        let mut out = Vec::new();
+        p.schedule(&m, 2, &mut out);
+        assert_eq!(out, vec![0, 2], "Background must be the parked leftover");
+        // Inside a class, LRU (then id) still orders.
+        out.clear();
+        let m = metas_p(&[0, 1, 2], &[5, 2, 2],
+                        &[Priority::Batch, Priority::Batch, Priority::Batch]);
+        p.schedule(&m, 2, &mut out);
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn priority_park_ages_starved_sessions_back_in() {
+        let mut p = PriorityPark;
+        // A Background session unscheduled for STARVATION_AGE iterations
+        // is boosted to top class and (being least-recent there)
+        // scheduled first — bounded starvation, not strict priority.
+        let m = metas_p(&[0, 1], &[20, 20 - STARVATION_AGE],
+                        &[Priority::Interactive, Priority::Background]);
+        let mut out = Vec::new();
+        p.schedule(&m, 1, &mut out);
+        assert_eq!(out, vec![1], "starved Background must be boosted");
+        // One iteration younger: still below the threshold, priority wins.
+        out.clear();
+        let m = metas_p(&[0, 1], &[20, 20 - STARVATION_AGE + 1],
+                        &[Priority::Interactive, Priority::Background]);
+        p.schedule(&m, 1, &mut out);
+        assert_eq!(out, vec![0]);
+    }
+
+    #[test]
+    fn priority_park_matches_lru_when_unprioritized() {
+        // All-defaults requests must schedule exactly like LruByLastStep
+        // (the serving pool's previous behaviour modulo policy).
+        let m = metas(&[3, 1, 2], &[7, 7, 4]);
+        let (mut a, mut b) = (PriorityPark, LruByLastStep);
+        let (mut oa, mut ob) = (Vec::new(), Vec::new());
+        a.schedule(&m, 2, &mut oa);
+        b.schedule(&m, 2, &mut ob);
+        assert_eq!(oa, ob);
     }
 }

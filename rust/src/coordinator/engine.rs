@@ -12,27 +12,16 @@ use crate::baselines::{
     CompressionPolicy, Fp16Policy, GearPolicy, H2oPolicy, KiviPolicy, MikvPolicy,
     PolicyInput, ZipCachePolicy,
 };
-use crate::config::{EngineConfig, PolicyKind};
+use crate::config::{EngineConfig, PolicyKind, QuantConfig};
 use crate::kvcache::{CacheLayout, CompressScratch, CompressedKV, SlotPool};
 use crate::metrics::EngineMetrics;
 use crate::runtime::{Runtime, Tensor, TensorView};
 use crate::saliency::{select_probes, ProbeStrategy};
 use crate::util::pool::WorkerPool;
-use crate::workload::tasks::EOS;
 use crate::Result;
 
-use super::session::{Residency, Session};
-
-/// Result of one completed generation.
-#[derive(Debug, Clone)]
-pub struct GenerationOutput {
-    pub tokens: Vec<u16>,
-    pub prefill_ms: f64,
-    pub decode_ms: f64,
-    /// Ratio achieved by the last compression snapshot.
-    pub compression_ratio: f64,
-    pub cache_bytes: usize,
-}
+use super::request::{FinishReason, GenerationRequest, GenerationResponse};
+use super::session::{PolicyOverride, Residency, Session};
 
 /// The serving engine for one model config + one compression policy.
 pub struct Engine {
@@ -112,22 +101,54 @@ impl Engine {
         &self.rt
     }
 
-    /// Convenience: run one prompt to completion.
-    pub fn generate(&mut self, prompt: &[u16], max_new: usize) -> Result<GenerationOutput> {
-        let mut s = self.start_session(prompt.to_vec(), max_new)?;
+    /// Convenience: run one prompt to completion with a defaults-built
+    /// request (the legacy positional signature, kept as a thin wrapper
+    /// — DESIGN.md §11).
+    pub fn generate(&mut self, prompt: &[u16], max_new: usize)
+                    -> Result<GenerationResponse> {
+        self.generate_request(GenerationRequest::new(prompt.to_vec(), max_new))
+    }
+
+    /// Run one typed request to completion.
+    pub fn generate_request(&mut self, req: GenerationRequest)
+                            -> Result<GenerationResponse> {
+        let mut s = self.start_session(req)?;
         while !s.is_done() {
             self.decode_step(&mut s)?;
         }
         Ok(self.finish(s))
     }
 
-    pub fn finish(&mut self, s: Session) -> GenerationOutput {
-        self.metrics.requests_completed += 1;
+    pub fn finish(&mut self, s: Session) -> GenerationResponse {
+        // Counting discipline (DESIGN.md §11): `requests_completed` counts
+        // *natural* completions only, so it always equals the
+        // `completed_by_priority` sum — a cancel lands in `cancelled`
+        // whether it fired while the request was still waiting (pop-time
+        // retirement, no session) or mid-decode (this path), instead of
+        // shifting between counters with cancel timing.
+        match s.finish {
+            _ if s.finish.is_natural() => {
+                self.metrics.requests_completed += 1;
+                self.metrics.completed_by_priority[s.priority.rank()] += 1;
+            }
+            FinishReason::Cancelled => self.metrics.cancelled += 1,
+            // Unreachable today: deadlines are checked only at pop time,
+            // before a session exists (the batcher counts the shed
+            // there).  Kept so a future mid-decode deadline check lands
+            // in the same counter — for any one request the two paths
+            // are mutually exclusive, so this can never double-count.
+            FinishReason::DeadlineExpired => {
+                self.metrics.shed_by_priority[s.priority.rank()] += 1;
+            }
+            _ => unreachable!("is_natural covers Eos and MaxTokens"),
+        }
         // Return the dense slot to the pool (a parked session holds none).
         if let Residency::Dense(slot) = s.residency {
             self.slots.release(slot);
         }
-        GenerationOutput {
+        GenerationResponse {
+            tag: s.tag,
+            finish: s.finish,
             tokens: s.generated,
             prefill_ms: s.prefill_us as f64 / 1000.0,
             decode_ms: s.decode_us as f64 / 1000.0,
@@ -139,24 +160,23 @@ impl Engine {
     /// Alg. 2: prefill, saliency, compression; returns a live session
     /// holding a dense slot checked out of the pool (DESIGN.md §10).
     /// Fails when the pool is exhausted — schedulers park a session
-    /// first ([`Engine::park`]).
-    pub fn start_session(&mut self, prompt: Vec<u16>, max_new: usize) -> Result<Session> {
+    /// first ([`Engine::park`]).  Request validation goes through the
+    /// shared [`GenerationRequest::validate`] contract (DESIGN.md §11),
+    /// the same check `ServerHandle` applies at submit time.
+    pub fn start_session(&mut self, req: GenerationRequest) -> Result<Session> {
         let info = self.rt.model_info().clone();
         let layout = info.cache_layout();
-        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
-        anyhow::ensure!(max_new >= 1, "max_new must be >= 1 (a zero decode \
-                         budget would still emit the prompt-tail token)");
-        anyhow::ensure!(prompt.len() + max_new <= info.max_seq,
-                      "prompt {} + budget {max_new} exceeds window {}",
-                      prompt.len(), info.max_seq);
+        req.validate(info.max_seq)?;
+        let (prompt, max_new) = (&req.prompt, req.max_new);
 
         let id = self.next_session_id;
         self.next_session_id += 1;
         // Seed from the request *content*, never from admission order: two
         // servers admitting the same request in different orders (or
         // across different shard counts — DESIGN.md §8) must probe the
-        // same positions and generate the same tokens.
-        let seed = request_seed(self.cfg.seed, &prompt, max_new);
+        // same positions and generate the same tokens.  A per-request
+        // seed override swaps the *base*; the content mix stays.
+        let seed = request_seed(req.seed.unwrap_or(self.cfg.seed), prompt, max_new);
 
         let t0 = Instant::now();
         let n = prompt.len();
@@ -224,10 +244,23 @@ impl Engine {
         })?;
         slot.kbuf.copy_from_slice(&kc);
         slot.vbuf.copy_from_slice(&vc);
-        let mut s = Session::new(id, prompt, max_new, layout,
+        let mut s = Session::new(id, req, layout,
                                  self.cfg.quant.recompress_every, seed, slot);
         s.norm_saliency = norm_sal;
         s.acc_saliency = acc_sal;
+        // Compile the per-request quant override once (DESIGN.md §11):
+        // same policy *kind* as the engine (so the prefill path and
+        // saliency inputs match) with the request's knobs swapped in.
+        // Every compression cycle borrows this instead of rebuilding it.
+        if let Some(q) = &s.quant {
+            let mut quant = self.cfg.quant.clone();
+            quant.bits_high = q.bits_high;
+            quant.bits_low = q.bits_low;
+            quant.saliency_ratio = q.saliency_ratio;
+            s.policy_override =
+                Some(PolicyOverride(build_policy(self.cfg.policy, &quant)));
+        }
+        self.metrics.admitted_by_priority[s.priority.rank()] += 1;
 
         // Compress the prompt cache under the policy — withholding the final
         // prompt token, which is then re-fed through the decode artifact so
@@ -294,11 +327,18 @@ impl Engine {
             s.generated.push(tok);
             self.metrics.tokens_generated += 1;
 
-            // Budget/window/EOS termination BEFORE running the step for the
-            // next token (the emitted token is already decided).
-            if tok == EOS || s.generated.len() >= s.max_new
+            // Budget/window/EOS-or-stop-token termination BEFORE running
+            // the step for the next token (the emitted token is already
+            // decided).
+            let stopped = GenerationRequest::is_stop(&s.stop_tokens, tok);
+            if stopped || s.generated.len() >= s.max_new
                 || s.remaining_window(smax) == 0
             {
+                s.finish = if stopped {
+                    FinishReason::Eos
+                } else {
+                    FinishReason::MaxTokens
+                };
                 s.done = true;
                 s.decode_us += t0.elapsed().as_micros() as u64;
                 return Ok(Some(tok));
@@ -406,14 +446,21 @@ impl Engine {
             acc_saliency: if s.acc_saliency.is_empty() { None } else { Some(&s.acc_saliency) },
             norm_saliency: if s.norm_saliency.is_empty() { None } else { Some(&s.norm_saliency) },
         };
-        let classes = self.policy.assign(&input);
+        // Per-request quantization override (DESIGN.md §11): the
+        // session carries its policy pre-built by start_session, so a
+        // cycle borrows it — no per-cycle construction.
+        let policy: &dyn CompressionPolicy = match &s.policy_override {
+            Some(p) => &*p.0,
+            None => &*self.policy,
+        };
+        let classes = policy.assign(&input);
         let Residency::Dense(slot) = &mut s.residency else {
             panic!("compress_session on a parked session");
         };
         // Fan the independent (layer, head) planes out across the pool;
         // bit-identical to the sequential path at any width (DESIGN.md §5).
         let (store, stages) = CompressedKV::compress_instrumented_scratch(
-            &slot.kbuf, &slot.vbuf, layout, &classes, self.policy.quant_spec(),
+            &slot.kbuf, &slot.vbuf, layout, &classes, policy.quant_spec(),
             &self.pool, &mut self.scratch);
         self.metrics.record_compress_stages(&stages);
         // Zero-only-dead-rows materialization: rows beyond the live
@@ -571,8 +618,13 @@ pub fn merge_streaming_saliency(norm: &mut Vec<f32>, stream_sal: &[f32]) {
 
 /// Build the configured policy.
 fn make_policy(cfg: &EngineConfig) -> Box<dyn CompressionPolicy> {
-    let q = &cfg.quant;
-    match cfg.policy {
+    build_policy(cfg.policy, &cfg.quant)
+}
+
+/// Build a policy of `kind` over an explicit quant-knob set (the
+/// per-request override path swaps the knobs, never the kind).
+fn build_policy(kind: PolicyKind, q: &QuantConfig) -> Box<dyn CompressionPolicy> {
+    match kind {
         PolicyKind::Fp16 => Box::new(Fp16Policy),
         PolicyKind::H2o => Box::new(H2oPolicy::default()),
         PolicyKind::Gear => Box::new(GearPolicy { bits: q.bits_high }),

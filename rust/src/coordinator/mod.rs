@@ -8,14 +8,21 @@
 //! * [`session`] — per-request decode state (compressed-resident cache,
 //!   dense-slot residency, streaming probe accumulator, generated
 //!   tokens).
-//! * [`batcher`] — round-robin continuous batcher over active sessions
-//!   with admission control and park-policy slot scheduling.
+//! * [`batcher`] — priority-ordered continuous batcher over active
+//!   sessions with deadline shedding, cancellation, token streaming, and
+//!   park-policy slot scheduling.
+//! * [`request`] — the typed request/response surface (DESIGN.md §11):
+//!   [`GenerationRequest`] builder, [`Priority`], [`QuantOverride`],
+//!   [`CancelToken`], [`FinishReason`], [`GenerationResponse`].
 
 pub mod batcher;
 pub mod engine;
+pub mod request;
 pub mod session;
 
-pub use batcher::{BatchOutcome, ContinuousBatcher, LruByLastStep, ParkPolicy,
-                  RoundRobinPark, SessionMeta};
-pub use engine::{merge_streaming_saliency, request_seed, Engine, GenerationOutput};
+pub use batcher::{ContinuousBatcher, LruByLastStep, ParkPolicy, PriorityPark,
+                  QueuedRequest, RoundRobinPark, SessionMeta, StepReport};
+pub use engine::{merge_streaming_saliency, request_seed, Engine};
+pub use request::{CancelToken, FinishReason, GenerationOutput, GenerationRequest,
+                  GenerationResponse, Priority, QuantOverride};
 pub use session::{Residency, Session, SessionScratch};

@@ -1,0 +1,424 @@
+//! Typed request/response objects for the serving surface (DESIGN.md §11).
+//!
+//! One [`GenerationRequest`] travels the whole path — `ServerHandle` →
+//! dispatcher → shard channel → [`super::batcher::ContinuousBatcher`] →
+//! [`Engine::start_session`](super::Engine::start_session) — replacing
+//! the positional `(prompt, max_new)` tuple the seed API hard-wired at
+//! every layer.  The request carries everything admission and decode need
+//! to know about *this* request: priority class, optional deadline,
+//! optional per-request quantization override, optional seed override,
+//! extra stop tokens, and the cancellation token its
+//! [`ResponseHandle`](crate::server::ResponseHandle) shares.
+//!
+//! The admission contract lives in exactly one place,
+//! [`GenerationRequest::validate`]: `ServerHandle::submit_request`
+//! (submit-time rejection, so a bad request can never poison a shard) and
+//! `Engine::start_session` (the engine's own invariant) both call it, so
+//! the two checks cannot drift (they were hand-mirrored `ensure!` blocks
+//! before).
+//!
+//! Determinism: a request built with all defaults is *bit-identical* to
+//! the legacy `submit(prompt, max_new)` path — same content-derived seed
+//! (`request_seed(cfg.seed, ..)`), same policy, same stop condition —
+//! pinned by `rust/tests/serving_pool.rs`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::workload::tasks::EOS;
+use crate::Result;
+
+/// Request urgency class (DESIGN.md §11).  Order matters: admission pops
+/// the queue in `rank()` order and the priority-aware park policy parks
+/// `Background` sessions first under slot pressure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Latency-sensitive: scheduled first, parked last.
+    #[default]
+    Interactive,
+    /// Throughput work: behind Interactive, ahead of Background.
+    Batch,
+    /// Best-effort: parked first under slot pressure, scheduled last.
+    Background,
+}
+
+impl Priority {
+    pub const ALL: [Priority; 3] =
+        [Priority::Interactive, Priority::Batch, Priority::Background];
+
+    /// Scheduling rank: lower pops first (`Interactive` = 0).  Also the
+    /// index into the per-priority metrics counters
+    /// (`EngineMetrics::admitted_by_priority` and friends).
+    pub fn rank(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+            Priority::Background => 2,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+            Priority::Background => "background",
+        }
+    }
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "interactive" => Priority::Interactive,
+            "batch" => Priority::Batch,
+            "background" => Priority::Background,
+            other => anyhow::bail!(
+                "unknown priority '{other}' (interactive|batch|background)"
+            ),
+        })
+    }
+}
+
+/// Per-request quantization override: a tenant-level precision/footprint
+/// trade-off on top of the engine's configured policy kind (the paper's
+/// per-workload knobs, but per request — DESIGN.md §11).  Only the class
+/// mix and widths are overridable; the policy *kind* (and therefore the
+/// prefill path it requires) stays the engine's.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantOverride {
+    /// Bits for salient tokens (must be in {1, 2, 4, 8}).
+    pub bits_high: u8,
+    /// Bits for regular tokens (must be in {1, 2, 4, 8}, `<= bits_high`).
+    pub bits_low: u8,
+    /// Fraction of tokens treated as salient, in [0, 1].
+    pub saliency_ratio: f64,
+}
+
+/// Shared cancellation flag: cloned between a request (read by the
+/// batcher at pop time and between decode steps) and its
+/// `ResponseHandle` (whose `cancel()` sets it).  Cancellation is
+/// observed at the next scheduler iteration: the session's dense slot
+/// returns to the pool and its byte-budget reservation is released
+/// immediately, not at natural completion (DESIGN.md §11).
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation (idempotent, thread-safe).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// One generation request, built with the builder-style setters:
+///
+/// ```ignore
+/// let req = GenerationRequest::new(prompt, 32)
+///     .priority(Priority::Background)
+///     .deadline_in(Duration::from_millis(500))
+///     .quant(QuantOverride { bits_high: 8, bits_low: 4, saliency_ratio: 0.8 })
+///     .stop_token(SEP);
+/// ```
+///
+/// All-defaults requests reproduce the legacy positional path bit-exactly.
+#[derive(Debug, Clone, Default)]
+pub struct GenerationRequest {
+    /// The prompt (token ids); non-empty, `len + max_new <= window`.
+    pub prompt: Vec<u16>,
+    /// Decode budget (>= 1).
+    pub max_new: usize,
+    /// Urgency class: queue pop order + park order (default Interactive).
+    pub priority: Priority,
+    /// Shed the request (with `FinishReason::DeadlineExpired`) if it is
+    /// still waiting for a decode slot past this instant; checked at pop
+    /// time, so an expired request never occupies a slot.
+    pub deadline: Option<Instant>,
+    /// Per-request quantization override (None = engine config).
+    pub quant: Option<QuantOverride>,
+    /// Per-request base-seed override (None = engine `cfg.seed`).  The
+    /// effective seed is still content-derived
+    /// (`request_seed(base, prompt, max_new)`), so determinism contracts
+    /// hold per (override, content) pair.
+    pub seed: Option<u64>,
+    /// Extra stop tokens: generation finishes with `FinishReason::Eos`
+    /// when the decoded token is `EOS` *or* any of these.
+    pub stop_tokens: Vec<u16>,
+    /// Cancellation flag shared with the request's `ResponseHandle`.
+    pub cancel: CancelToken,
+}
+
+impl GenerationRequest {
+    pub fn new(prompt: Vec<u16>, max_new: usize) -> Self {
+        GenerationRequest { prompt, max_new, ..GenerationRequest::default() }
+    }
+
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
+    /// Absolute deadline.
+    pub fn deadline(mut self, at: Instant) -> Self {
+        self.deadline = Some(at);
+        self
+    }
+
+    /// Deadline relative to now (submission-side convenience).
+    pub fn deadline_in(self, d: Duration) -> Self {
+        self.deadline(Instant::now() + d)
+    }
+
+    pub fn quant(mut self, q: QuantOverride) -> Self {
+        self.quant = Some(q);
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = Some(s);
+        self
+    }
+
+    /// Add one stop token (besides the built-in `EOS`).
+    pub fn stop_token(mut self, t: u16) -> Self {
+        self.stop_tokens.push(t);
+        self
+    }
+
+    /// Share an externally created cancellation token (e.g. to cancel a
+    /// request deterministically before it is ever popped).  `submit`
+    /// paths clone the same token into the `ResponseHandle`.
+    pub fn cancel_token(mut self, c: CancelToken) -> Self {
+        self.cancel = c;
+        self
+    }
+
+    /// Deadline expired as of `now`?
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+
+    /// Does decoding `tok` finish the generation with `FinishReason::Eos`?
+    pub fn is_stop(stop_tokens: &[u16], tok: u16) -> bool {
+        tok == EOS || stop_tokens.contains(&tok)
+    }
+
+    /// The single admission contract (DESIGN.md §11), shared by
+    /// `ServerHandle::submit_request` (submit-time rejection) and
+    /// `Engine::start_session` (engine invariant) so the two can never
+    /// drift.  `window` is the model's max sequence length.
+    pub fn validate(&self, window: usize) -> Result<()> {
+        anyhow::ensure!(!self.prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(self.max_new >= 1,
+                        "max_new must be >= 1 (a zero decode budget would \
+                         still emit the prompt-tail token)");
+        anyhow::ensure!(
+            self.prompt.len() + self.max_new <= window,
+            "prompt {} + budget {} exceeds window {window}",
+            self.prompt.len(),
+            self.max_new
+        );
+        if let Some(q) = &self.quant {
+            anyhow::ensure!(matches!(q.bits_high, 1 | 2 | 4 | 8),
+                            "override bits_high in {{1,2,4,8}}");
+            anyhow::ensure!(matches!(q.bits_low, 1 | 2 | 4 | 8),
+                            "override bits_low in {{1,2,4,8}}");
+            anyhow::ensure!(q.bits_high >= q.bits_low,
+                            "override bits_high >= bits_low");
+            anyhow::ensure!((0.0..=1.0).contains(&q.saliency_ratio),
+                            "override saliency_ratio must be in [0,1]");
+        }
+        Ok(())
+    }
+}
+
+/// Why a generation finished (DESIGN.md §11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FinishReason {
+    /// Decoded `EOS` or a request stop token.
+    Eos,
+    /// Exhausted the decode budget or the model window.
+    #[default]
+    MaxTokens,
+    /// Cancelled via `ResponseHandle::cancel` / the request's
+    /// [`CancelToken`]; tokens generated before the cancel are kept.
+    Cancelled,
+    /// Shed at pop time: the deadline passed while the request waited
+    /// for a decode slot (it never held one).
+    DeadlineExpired,
+}
+
+impl FinishReason {
+    /// Did the generation run to a natural end (`Eos` / `MaxTokens`)?
+    /// The single definition of "natural completion" — metrics counting,
+    /// load reports, and accuracy scoring all key off this, so a future
+    /// finish reason classifies in one place.
+    pub fn is_natural(self) -> bool {
+        matches!(self, FinishReason::Eos | FinishReason::MaxTokens)
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Eos => "eos",
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::DeadlineExpired => "deadline_expired",
+        }
+    }
+}
+
+impl std::fmt::Display for FinishReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Result of one completed request: the legacy `GenerationOutput` fields
+/// plus the request tag and the finish reason, so outcomes are
+/// self-describing wherever they surface (batcher outcomes, server
+/// replies, load reports).
+#[derive(Debug, Clone)]
+pub struct GenerationResponse {
+    /// Global submission-order tag (0 for bare-engine runs).
+    pub tag: u64,
+    pub finish: FinishReason,
+    /// Generated tokens (excluding the prompt).  For `Cancelled`, the
+    /// tokens generated before the cancel; for `DeadlineExpired`, empty.
+    pub tokens: Vec<u16>,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    /// Ratio achieved by the last compression snapshot.
+    pub compression_ratio: f64,
+    pub cache_bytes: usize,
+}
+
+impl GenerationResponse {
+    /// A response for a request that never held a session (deadline shed
+    /// or cancelled while waiting).
+    pub fn without_session(tag: u64, finish: FinishReason) -> Self {
+        GenerationResponse {
+            tag,
+            finish,
+            tokens: Vec::new(),
+            prefill_ms: 0.0,
+            decode_ms: 0.0,
+            compression_ratio: 1.0,
+            cache_bytes: 0,
+        }
+    }
+}
+
+/// Legacy alias: the pre-§11 name for a completed generation.  Field
+/// accesses (`tokens`, `cache_bytes`, ...) are source-compatible.
+pub type GenerationOutput = GenerationResponse;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_are_the_legacy_contract() {
+        let r = GenerationRequest::new(vec![1, 2, 3], 4);
+        assert_eq!(r.priority, Priority::Interactive);
+        assert!(r.deadline.is_none() && r.quant.is_none() && r.seed.is_none());
+        assert!(r.stop_tokens.is_empty());
+        assert!(!r.cancel.is_cancelled());
+        assert!(r.validate(16).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_requests() {
+        assert!(GenerationRequest::new(vec![], 4).validate(16).is_err());
+        assert!(GenerationRequest::new(vec![1], 0).validate(16).is_err());
+        assert!(GenerationRequest::new(vec![1; 13], 4).validate(16).is_err());
+        assert!(GenerationRequest::new(vec![1; 12], 4).validate(16).is_ok());
+    }
+
+    #[test]
+    fn validate_checks_quant_override() {
+        let ok = QuantOverride { bits_high: 8, bits_low: 2, saliency_ratio: 0.5 };
+        assert!(GenerationRequest::new(vec![1], 2).quant(ok).validate(16).is_ok());
+        let bad_bits = QuantOverride { bits_high: 3, ..ok };
+        assert!(GenerationRequest::new(vec![1], 2).quant(bad_bits)
+            .validate(16).is_err());
+        let inverted = QuantOverride { bits_high: 2, bits_low: 4,
+                                       saliency_ratio: 0.5 };
+        assert!(GenerationRequest::new(vec![1], 2).quant(inverted)
+            .validate(16).is_err());
+        let bad_ratio = QuantOverride { saliency_ratio: 1.5, ..ok };
+        assert!(GenerationRequest::new(vec![1], 2).quant(bad_ratio)
+            .validate(16).is_err());
+    }
+
+    #[test]
+    fn priority_rank_orders_interactive_first() {
+        assert!(Priority::Interactive.rank() < Priority::Batch.rank());
+        assert!(Priority::Batch.rank() < Priority::Background.rank());
+        assert_eq!("background".parse::<Priority>().unwrap(),
+                   Priority::Background);
+        assert!("urgent".parse::<Priority>().is_err());
+    }
+
+    #[test]
+    fn cancel_token_is_shared() {
+        let c = CancelToken::new();
+        let r = GenerationRequest::new(vec![1], 2).cancel_token(c.clone());
+        assert!(!r.cancel.is_cancelled());
+        c.cancel();
+        assert!(r.cancel.is_cancelled(), "token must be shared, not copied");
+    }
+
+    #[test]
+    fn deadline_expiry() {
+        let now = Instant::now();
+        let r = GenerationRequest::new(vec![1], 2).deadline(now);
+        assert!(r.expired(now));
+        let r = GenerationRequest::new(vec![1], 2)
+            .deadline_in(Duration::from_secs(3600));
+        assert!(!r.expired(Instant::now()));
+        assert!(!GenerationRequest::new(vec![1], 2).expired(now));
+    }
+
+    #[test]
+    fn stop_tokens_extend_eos() {
+        let stops = [7u16, 9];
+        assert!(GenerationRequest::is_stop(&stops, EOS));
+        assert!(GenerationRequest::is_stop(&stops, 7));
+        assert!(GenerationRequest::is_stop(&stops, 9));
+        assert!(!GenerationRequest::is_stop(&stops, 8));
+        assert!(GenerationRequest::is_stop(&[], EOS));
+        assert!(!GenerationRequest::is_stop(&[], 5));
+    }
+
+    #[test]
+    fn is_natural_classifies_reasons() {
+        assert!(FinishReason::Eos.is_natural());
+        assert!(FinishReason::MaxTokens.is_natural());
+        assert!(!FinishReason::Cancelled.is_natural());
+        assert!(!FinishReason::DeadlineExpired.is_natural());
+    }
+
+    #[test]
+    fn without_session_response_shape() {
+        let r = GenerationResponse::without_session(7, FinishReason::DeadlineExpired);
+        assert_eq!(r.tag, 7);
+        assert_eq!(r.finish, FinishReason::DeadlineExpired);
+        assert!(r.tokens.is_empty());
+        assert_eq!(r.cache_bytes, 0);
+    }
+}

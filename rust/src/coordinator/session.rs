@@ -12,9 +12,26 @@
 //! at most `recompress_every` rows), so park -> unpark reconstructs the
 //! dense buffers bit-exactly.
 
+use crate::baselines::CompressionPolicy;
 use crate::kvcache::{CacheLayout, CompressedKV, DenseSlot, PrecisionClass};
 use crate::runtime::ExecScratch;
 use crate::saliency::StreamingProbe;
+
+use super::request::{CancelToken, FinishReason, GenerationRequest, Priority,
+                     QuantOverride};
+
+/// The compiled form of a request's [`QuantOverride`]: the policy object
+/// the engine builds once at session start and reuses at every
+/// compression cycle (rebuilding per cycle would put a box allocation on
+/// each recompression — DESIGN.md §9's discipline).  A newtype so
+/// `Session` can keep deriving `Debug` over a non-`Debug` trait object.
+pub struct PolicyOverride(pub Box<dyn CompressionPolicy>);
+
+impl std::fmt::Debug for PolicyOverride {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PolicyOverride({})", self.0.name())
+    }
+}
 
 /// Reusable per-session scratch for the decode hot path (DESIGN.md §9):
 /// the runtime execution slots plus the layer-mean attention-row buffer.
@@ -52,6 +69,24 @@ pub enum Residency {
 #[derive(Debug)]
 pub struct Session {
     pub id: u64,
+    /// Global submission-order tag, set by the batcher at activation
+    /// (0 for bare-engine sessions); carried onto the
+    /// [`GenerationResponse`](super::GenerationResponse).
+    pub tag: u64,
+    /// Request urgency class (queue pop order + park order).
+    pub priority: Priority,
+    /// Extra stop tokens from the request (besides the built-in `EOS`).
+    pub stop_tokens: Vec<u16>,
+    /// Per-request quantization override (None = engine config).
+    pub quant: Option<QuantOverride>,
+    /// Compiled form of `quant`: built once by `Engine::start_session`,
+    /// used by every compression cycle (None = engine policy).
+    pub policy_override: Option<PolicyOverride>,
+    /// Cancellation flag shared with the request's `ResponseHandle`; the
+    /// batcher retires the session at the next iteration once set.
+    pub cancel: CancelToken,
+    /// Why the generation finished (meaningful once `done`).
+    pub finish: FinishReason,
     /// The prompt (token ids), length <= layout.seq.
     pub prompt: Vec<u16>,
     /// Number of live cache rows (prompt + generated so far).
@@ -95,10 +130,22 @@ pub struct Session {
 }
 
 impl Session {
-    pub fn new(id: u64, prompt: Vec<u16>, max_new: usize, layout: CacheLayout,
+    /// Build the per-request state from a validated [`GenerationRequest`]
+    /// (the engine validates before calling).  The batcher fills `tag`
+    /// at activation.
+    pub fn new(id: u64, req: GenerationRequest, layout: CacheLayout,
                recompress_every: usize, seed: u64, slot: DenseSlot) -> Self {
+        let GenerationRequest { prompt, max_new, priority, quant, stop_tokens,
+                                cancel, .. } = req;
         Session {
             id,
+            tag: 0,
+            priority,
+            stop_tokens,
+            quant,
+            policy_override: None,
+            cancel,
+            finish: FinishReason::default(),
             pos: prompt.len(),
             prompt,
             // Reserved up front: `generated` grows by one push per decode
@@ -189,9 +236,11 @@ mod tests {
     fn session_init() {
         let lay = CacheLayout { layers: 2, heads: 2, seq: 16, d_head: 4 };
         let mut pool = SlotPool::new(1, lay);
-        let s = Session::new(1, vec![1, 2, 3], 5, lay, 100, 0,
-                             pool.acquire().unwrap());
+        let s = Session::new(1, GenerationRequest::new(vec![1, 2, 3], 5), lay,
+                             100, 0, pool.acquire().unwrap());
         assert_eq!(s.pos, 3);
+        assert_eq!((s.tag, s.priority), (0, Priority::Interactive));
+        assert!(!s.cancel.is_cancelled());
         assert!(!s.is_parked());
         assert_eq!(s.kbuf().len(), lay.cache_len());
         assert_eq!(s.remaining_window(16), 13);
@@ -204,8 +253,8 @@ mod tests {
     fn parked_resident_bytes_count_tail_only() {
         let lay = CacheLayout { layers: 1, heads: 1, seq: 8, d_head: 2 };
         let mut pool = SlotPool::new(1, lay);
-        let mut s = Session::new(2, vec![1, 2], 2, lay, 100, 0,
-                                 pool.acquire().unwrap());
+        let mut s = Session::new(2, GenerationRequest::new(vec![1, 2], 2), lay,
+                                 100, 0, pool.acquire().unwrap());
         s.cache_bytes = 100;
         let Residency::Dense(slot) = std::mem::replace(
             &mut s.residency,

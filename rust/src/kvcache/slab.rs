@@ -200,6 +200,18 @@ impl SlotPool {
 ///   `CompressedKV::metadata_bytes`);
 /// * the fp32 uncompressed tail of rows appended since the last
 ///   recompression cycle, at most `recompress_every` rows.
+///
+/// Per-request quantization overrides (`QuantOverride`, DESIGN.md §11)
+/// never break this bound: an override only re-mixes
+/// `PrecisionClass::Bits` widths within {1, 2, 4, 8} and the saliency
+/// split, and the bound already charges the engine maximum on both axes
+/// — fp16 payload (2 B/value, strictly above the widest 8-bit override
+/// payload at every granularity) and the densest 4-subset class mix in
+/// the params term.  The dispatcher therefore reserves the same
+/// conservative figure for every request regardless of override
+/// (pinned by `override_bits_stay_under_worst_case_bound` in
+/// `kvcache::store` and the hand-computed 8-bit layout test beside
+/// PR-4's 22 B pin).
 pub fn worst_case_resident_bytes(
     layout: CacheLayout,
     n_tokens: usize,

@@ -709,6 +709,63 @@ mod tests {
     }
 
     #[test]
+    fn widest_override_byte_accounting_pinned_by_hand() {
+        // The widest per-request quant override, Bits(8) everywhere
+        // (DESIGN.md §11), on the same hand-accountable layout as the
+        // 22 B pin above:
+        //   codes     : 2 rows x 2 cols x 8 bit = 4 B  (per plane, K and V)
+        //   params    : Token => one (s, z) pair per row = 2 pairs
+        //               -> 4 values x 2 B = 8 B          (per plane, K and V)
+        //   payload   : (4 + 8) x 2 planes              = 24 B
+        //   metadata  : 1 B/token class sidecar x 2     =  2 B
+        //   resident  : 24 + 2                          = 26 B
+        let lay = CacheLayout { layers: 1, heads: 1, seq: 4, d_head: 2 };
+        let spec = QuantSpec {
+            key_gran: Granularity::Token,
+            value_gran: Granularity::Token,
+        };
+        let k: Vec<f32> = (0..lay.cache_len()).map(|i| i as f32 * 0.5).collect();
+        let v: Vec<f32> = (0..lay.cache_len()).map(|i| 1.0 - i as f32).collect();
+        let classes = vec![PrecisionClass::Bits(8); 2];
+        let c = CompressedKV::compress(&k, &v, lay, &classes, spec);
+        assert_eq!(c.storage_bytes(2), 24);
+        assert_eq!(c.metadata_bytes(), 2);
+        assert_eq!(c.resident_bytes(), 26);
+        // ...and the dispatcher's override-independent admission bound
+        // dominates it (fp16 payload + densest-mix params slack).
+        assert!(c.resident_bytes()
+                <= crate::kvcache::worst_case_resident_bytes(lay, 2, 100));
+    }
+
+    #[test]
+    fn override_bits_stay_under_worst_case_bound() {
+        // Byte-budget soundness for per-request quant overrides
+        // (DESIGN.md §11): every admissible override width — uniform or
+        // mixed — stays under the override-independent worst-case bound
+        // the dispatcher reserves at admission.
+        let lay = layout();
+        let (k, v) = caches(lay);
+        let n = lay.seq;
+        let wc = crate::kvcache::worst_case_resident_bytes(lay, n, 100);
+        for bits in [1u8, 2, 4, 8] {
+            let classes = vec![PrecisionClass::Bits(bits); n];
+            let c = CompressedKV::compress(&k, &v, lay, &classes,
+                                           QuantSpec::default());
+            assert!(c.resident_bytes() <= wc,
+                    "bits={bits}: {} B exceeds the worst-case bound {wc} B",
+                    c.resident_bytes());
+        }
+        // A salient/regular split like an override produces (8-bit heads,
+        // 1-bit tail) is bounded too.
+        let mut classes = vec![PrecisionClass::Bits(1); n];
+        for c in classes.iter_mut().take(n / 2) {
+            *c = PrecisionClass::Bits(8);
+        }
+        let c = CompressedKV::compress(&k, &v, lay, &classes, QuantSpec::default());
+        assert!(c.resident_bytes() <= wc);
+    }
+
+    #[test]
     fn eviction_reduces_storage_to_zero() {
         let lay = layout();
         let (k, v) = caches(lay);

@@ -44,7 +44,7 @@ fn main() -> Result<()> {
     .flag("max-new", "4", "decode budget per request")
     .flag("requests", "16", "serve: number of requests")
     .flag("rate", "8.0", "serve: arrival rate (req/s)")
-    .flag("trace", "poisson", "serve: poisson | memory-pressure")
+    .flag("trace", "poisson", "serve: poisson | memory-pressure | priority-mix")
     .flag("seed", "0", "base seed")
     .parse()?;
 
@@ -176,17 +176,26 @@ fn serve(cfg: EngineConfig, task: Task, requests: usize, rate: f64, max_new: usi
                                            rate, max_new, cfg.seed),
         "memory-pressure" => loadgen::memory_pressure_trace(info.max_seq, requests,
                                                             cfg.seed),
-        other => anyhow::bail!("unknown trace '{other}' (poisson|memory-pressure)"),
+        "priority-mix" => loadgen::priority_mix_trace(info.max_seq, requests,
+                                                      max_new, cfg.seed),
+        other => anyhow::bail!(
+            "unknown trace '{other}' (poisson|memory-pressure|priority-mix)"
+        ),
     };
     let report = loadgen::replay(&server.handle, &trace)?;
 
     let mut acc = AccuracyReport::default();
     for (i, out) in &report.outputs {
-        acc.add(score_generation(&trace.entries[*i].sample, &out.tokens));
+        // Cancelled / deadline-shed requests carry no (full) answer;
+        // accuracy covers natural completions only.
+        if out.finish.is_natural() {
+            acc.add(score_generation(&trace.entries[*i].sample, &out.tokens));
+        }
     }
     println!(
         "served {}/{requests} requests in {:.2}s across {} shard(s) — \
-         {:.1} req/s, {:.1} tok/s, acc {:.1}% (rejected {}, failed {})",
+         {:.1} req/s, {:.1} tok/s, acc {:.1}% (rejected {}, failed {}, \
+         cancelled {}, shed {})",
         report.completed,
         report.wall.as_secs_f64(),
         server.handle.shards(),
@@ -195,6 +204,8 @@ fn serve(cfg: EngineConfig, task: Task, requests: usize, rate: f64, max_new: usi
         acc.accuracy_pct,
         report.rejected,
         report.failed,
+        report.cancelled,
+        report.shed,
     );
     println!("request latency p50={:.0}ms p99={:.0}ms",
              report.latency.p50_ms(), report.latency.p99_ms());
@@ -211,6 +222,21 @@ fn serve(cfg: EngineConfig, task: Task, requests: usize, rate: f64, max_new: usi
         "memory: peak resident {:.1} KiB across shards, {} park cycle(s)",
         snap.total.peak_resident_bytes as f64 / 1024.0,
         snap.total.park_cycles,
+    );
+    println!(
+        "priority (admitted/completed/shed by class, DESIGN.md §11): \
+         interactive {}/{}/{}, batch {}/{}/{}, background {}/{}/{}; \
+         cancelled {}",
+        snap.total.admitted_by_priority[0],
+        snap.total.completed_by_priority[0],
+        snap.total.shed_by_priority[0],
+        snap.total.admitted_by_priority[1],
+        snap.total.completed_by_priority[1],
+        snap.total.shed_by_priority[1],
+        snap.total.admitted_by_priority[2],
+        snap.total.completed_by_priority[2],
+        snap.total.shed_by_priority[2],
+        snap.total.cancelled,
     );
     for (i, m) in snap.per_shard.iter().enumerate() {
         println!("  shard {i}: {} req, {} tok", m.requests_completed,

@@ -122,8 +122,21 @@ pub struct EngineMetrics {
     pub compress: LatencyStats,
     /// Stage-level breakdown of every compression pass (DESIGN.md §5).
     pub compress_stages: CompressStageStats,
+    /// Naturally completed requests (`Eos` / `MaxTokens`) — always equals
+    /// the `completed_by_priority` sum; cancelled and deadline-shed
+    /// requests are counted only in `cancelled` / `shed_by_priority`.
     pub requests_completed: u64,
     pub tokens_generated: u64,
+    /// Sessions started, indexed by `Priority::rank()`
+    /// (interactive / batch / background — DESIGN.md §11).
+    pub admitted_by_priority: [u64; 3],
+    /// Natural completions (`Eos` / `MaxTokens`), by `Priority::rank()`.
+    pub completed_by_priority: [u64; 3],
+    /// Requests shed with `DeadlineExpired` (at pop time, before ever
+    /// holding a slot), by `Priority::rank()`.
+    pub shed_by_priority: [u64; 3],
+    /// Requests finishing with `Cancelled` (waiting or mid-decode).
+    pub cancelled: u64,
     /// Peak compressed-cache bytes across live sequences.
     pub peak_cache_bytes: usize,
     /// FP16-equivalent bytes of the same prefixes (for the ratio).
@@ -184,6 +197,12 @@ impl EngineMetrics {
         self.compress_stages.merge(&other.compress_stages);
         self.requests_completed += other.requests_completed;
         self.tokens_generated += other.tokens_generated;
+        for i in 0..3 {
+            self.admitted_by_priority[i] += other.admitted_by_priority[i];
+            self.completed_by_priority[i] += other.completed_by_priority[i];
+            self.shed_by_priority[i] += other.shed_by_priority[i];
+        }
+        self.cancelled += other.cancelled;
         if other.peak_cache_bytes > self.peak_cache_bytes {
             self.peak_cache_bytes = other.peak_cache_bytes;
             self.peak_cache_baseline_bytes = other.peak_cache_baseline_bytes;
@@ -288,6 +307,25 @@ mod tests {
         assert_eq!(m.resident_bytes, 500); // current sums across shards
         assert_eq!(m.peak_resident_bytes, 800); // per-shard peak sum
         assert_eq!(m.park_cycles, 5);
+    }
+
+    #[test]
+    fn priority_and_cancellation_counters_sum_across_shards() {
+        let mut a = EngineMetrics::default();
+        a.admitted_by_priority = [3, 1, 0];
+        a.completed_by_priority = [2, 1, 0];
+        a.shed_by_priority = [0, 0, 2];
+        a.cancelled = 1;
+        let mut b = EngineMetrics::default();
+        b.admitted_by_priority = [1, 0, 4];
+        b.completed_by_priority = [1, 0, 3];
+        b.shed_by_priority = [1, 0, 0];
+        b.cancelled = 2;
+        a.merge(&b);
+        assert_eq!(a.admitted_by_priority, [4, 1, 4]);
+        assert_eq!(a.completed_by_priority, [3, 1, 3]);
+        assert_eq!(a.shed_by_priority, [1, 0, 2]);
+        assert_eq!(a.cancelled, 3);
     }
 
     #[test]

@@ -4,10 +4,12 @@
 //! one global waiting-count bounded by `queue_depth` decides accept or
 //! reject at submit time, and an admitted request is routed to the
 //! least-loaded shard immediately.  Nothing downstream applies a second
-//! depth limit — the per-shard batcher only ever receives work it has a
-//! free decode slot for — so the configured depth is the *exact*
-//! rejection boundary (the seed stacked two queues, making the effective
-//! depth 2x the configured value and surfacing the inner rejection as a
+//! depth limit — the per-shard batcher stages waiting requests in its
+//! priority-ordered queue but never rejects (its depth is unbounded
+//! under the server), and the global count tracks them until they hold
+//! a decode slot — so the configured depth is the *exact* rejection
+//! boundary (the seed stacked two queues, making the effective depth 2x
+//! the configured value and surfacing the inner rejection as a
 //! delivered error instead of submit-time backpressure).
 //!
 //! On top of the depth boundary sits the per-shard **byte budget**
@@ -23,8 +25,11 @@
 //!
 //! * `queued` (global) — requests admitted but not yet holding a decode
 //!   slot.  Incremented by [`Dispatcher::try_admit`]; decremented by the
-//!   owning shard via [`ShardCtx::note_activated`] the moment it pulls
-//!   the request into its batcher.
+//!   owning shard via [`ShardCtx::note_activated`] as requests leave its
+//!   batcher's priority-ordered staging queue — by activating into a
+//!   session *or* retiring at pop (cancelled / deadline-shed), so the
+//!   boundary counts exactly the requests still waiting for a slot even
+//!   though shards stage eagerly (DESIGN.md §11).
 //! * `load` (per shard) — requests in flight on that shard (waiting in
 //!   its channel + actively decoding).  Incremented at admission;
 //!   decremented via [`ShardCtx::note_done`] when the reply is sent.
@@ -41,20 +46,33 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::GenerationOutput;
+use crate::coordinator::request::GenerationRequest;
 use crate::Result;
+
+use super::ResponseEvent;
+
+/// Everything `try_admit` needs for one submission — the typed request
+/// plus the submit-side plumbing (one struct, DESIGN.md §11; the seed
+/// API threaded four positional arguments through here).
+pub(crate) struct AdmitRequest {
+    pub request: GenerationRequest,
+    /// Worst-case resident footprint, reserved against the per-shard
+    /// byte budget when one is configured.
+    pub wc_bytes: usize,
+    /// Streamed token / final response channel back to the handle.
+    pub reply: Sender<ResponseEvent>,
+}
 
 /// One admitted request, in flight to (or inside) a shard.
 pub(crate) struct ShardRequest {
-    pub prompt: Vec<u16>,
-    pub max_new: usize,
+    pub request: GenerationRequest,
     /// Global submission-order tag (diagnostics; outputs never depend on
     /// it — seeds derive from request content, DESIGN.md §8).
     pub tag: u64,
     /// Worst-case resident bytes reserved on the owning shard's budget
     /// (0 when no budget is configured); released at `note_done`.
     pub reserved_bytes: usize,
-    pub reply: Sender<Result<GenerationOutput>>,
+    pub reply: Sender<ResponseEvent>,
 }
 
 /// The dispatcher's per-shard route: channel + accounting + liveness.
@@ -91,9 +109,10 @@ pub(crate) struct ShardCtx {
 }
 
 impl ShardCtx {
-    /// The request just left the waiting queue for a decode slot.
-    pub fn note_activated(&self) {
-        self.queued.fetch_sub(1, Ordering::SeqCst);
+    /// `n` requests just left the shard's staging queue (activated into a
+    /// session, or retired at pop as cancelled/deadline-shed).
+    pub fn note_activated(&self, n: usize) {
+        self.queued.fetch_sub(n, Ordering::SeqCst);
     }
 
     /// The request's reply has been sent (or dropped): frees shard load
@@ -191,19 +210,15 @@ impl Dispatcher {
             .collect()
     }
 
-    /// Admit one request or reject with backpressure.  `wc_bytes` is the
-    /// request's worst-case resident footprint, reserved against the
-    /// per-shard byte budget when one is configured.  On success the
+    /// Admit one request or reject with backpressure.  The
+    /// [`AdmitRequest`] carries the typed request, its worst-case
+    /// resident footprint (reserved against the per-shard byte budget
+    /// when one is configured), and the reply channel.  On success the
     /// request is already routed to the least-loaded shard (resident
     /// bytes break load ties) that could hold the reservation; the
     /// returned tag is its global submission index.
-    pub fn try_admit(
-        &self,
-        prompt: Vec<u16>,
-        max_new: usize,
-        wc_bytes: usize,
-        reply: Sender<Result<GenerationOutput>>,
-    ) -> Result<u64> {
+    pub fn try_admit(&self, admit: AdmitRequest) -> Result<u64> {
+        let AdmitRequest { request, wc_bytes, reply } = admit;
         // Reserve a waiting slot with a CAS loop so the boundary is exact
         // even under concurrent submitters.
         let mut cur = self.queued.load(Ordering::SeqCst);
@@ -228,7 +243,7 @@ impl Dispatcher {
         // that shard dead, rolls its accounting back, and retries, so a
         // single crashed shard never blackholes admissions while healthy
         // shards have capacity (DESIGN.md §8).
-        let mut prompt = prompt;
+        let mut request = request;
         let mut reply = reply;
         loop {
             let route_key = |i: usize| {
@@ -276,7 +291,7 @@ impl Dispatcher {
                 .tx
                 .lock()
                 .expect("dispatch sender poisoned")
-                .send(ShardRequest { prompt, max_new, tag, reserved_bytes, reply });
+                .send(ShardRequest { request, tag, reserved_bytes, reply });
             match sent {
                 Ok(()) => return Ok(tag),
                 Err(mpsc::SendError(req)) => {
@@ -285,7 +300,7 @@ impl Dispatcher {
                     link.load.fetch_sub(1, Ordering::SeqCst);
                     link.reserved.fetch_sub(reserved_bytes, Ordering::SeqCst);
                     link.alive.store(false, Ordering::SeqCst);
-                    prompt = req.prompt;
+                    request = req.request;
                     reply = req.reply;
                 }
             }
@@ -297,8 +312,13 @@ impl Dispatcher {
 mod tests {
     use super::*;
 
-    fn reply() -> Sender<Result<GenerationOutput>> {
-        mpsc::channel().0
+    /// A minimal admission packet (`wc` = worst-case bytes reserved).
+    fn packet(wc: usize) -> AdmitRequest {
+        AdmitRequest {
+            request: GenerationRequest::new(vec![1], 2),
+            wc_bytes: wc,
+            reply: mpsc::channel().0,
+        }
     }
 
     #[test]
@@ -308,34 +328,34 @@ mod tests {
         let depth = 3;
         let (d, ctxs) = build(2, depth, 0);
         for i in 0..depth {
-            assert!(d.try_admit(vec![1], 2, 0, reply()).is_ok(), "admit {i}");
+            assert!(d.try_admit(packet(0)).is_ok(), "admit {i}");
         }
         assert_eq!(d.queued(), depth);
-        let err = d.try_admit(vec![1], 2, 0, reply()).unwrap_err();
+        let err = d.try_admit(packet(0)).unwrap_err();
         assert!(err.to_string().contains("queue full"), "{err}");
         // a shard pulls one request into its batcher -> one slot frees
-        ctxs[0].note_activated();
-        assert!(d.try_admit(vec![1], 2, 0, reply()).is_ok());
-        assert!(d.try_admit(vec![1], 2, 0, reply()).is_err());
+        ctxs[0].note_activated(1);
+        assert!(d.try_admit(packet(0)).is_ok());
+        assert!(d.try_admit(packet(0)).is_err());
     }
 
     #[test]
     fn zero_depth_rejects_everything() {
         let (d, _ctxs) = build(1, 0, 0);
-        assert!(d.try_admit(vec![1], 2, 0, reply()).is_err());
+        assert!(d.try_admit(packet(0)).is_err());
     }
 
     #[test]
     fn least_loaded_routing_balances() {
         let (d, ctxs) = build(3, 64, 0);
         for _ in 0..6 {
-            d.try_admit(vec![1], 2, 0, reply()).unwrap();
+            d.try_admit(packet(0)).unwrap();
         }
         assert_eq!(d.loads(), vec![2, 2, 2]);
         // completion on shard 1 draws the next request there
-        ctxs[1].note_activated();
+        ctxs[1].note_activated(1);
         ctxs[1].note_done(0);
-        d.try_admit(vec![1], 2, 0, reply()).unwrap();
+        d.try_admit(packet(0)).unwrap();
         assert_eq!(d.loads(), vec![2, 2, 2]);
         // requests actually landed in the right channels
         assert_eq!(ctxs[0].rx.try_iter().count(), 2);
@@ -352,18 +372,18 @@ mod tests {
         ctxs[0].publish_resident(9_000);
         ctxs[1].publish_resident(1_000);
         ctxs[2].publish_resident(5_000);
-        d.try_admit(vec![1], 2, 0, reply()).unwrap();
+        d.try_admit(packet(0)).unwrap();
         assert_eq!(d.loads(), vec![0, 1, 0]);
         assert_eq!(ctxs[1].rx.try_iter().count(), 1);
         // With shard 1 now ahead on load, the tie among 0 and 2 goes to
         // the lighter shard 2, not the lower index.
-        d.try_admit(vec![1], 2, 0, reply()).unwrap();
+        d.try_admit(packet(0)).unwrap();
         assert_eq!(d.loads(), vec![0, 1, 1]);
         assert_eq!(ctxs[2].rx.try_iter().count(), 1);
         // Exact load+resident tie: lowest index wins.
         ctxs[0].publish_resident(5_000);
         ctxs[2].publish_resident(5_000);
-        d.try_admit(vec![1], 2, 0, reply()).unwrap();
+        d.try_admit(packet(0)).unwrap();
         assert_eq!(ctxs[0].rx.try_iter().count(), 1);
     }
 
@@ -374,25 +394,25 @@ mod tests {
         // admits exactly one more — the queue-depth discipline, in bytes.
         let wc = 1000;
         let (d, ctxs) = build(1, 64, 2 * wc);
-        assert!(d.try_admit(vec![1], 2, wc, reply()).is_ok());
-        assert!(d.try_admit(vec![1], 2, wc, reply()).is_ok());
+        assert!(d.try_admit(packet(wc)).is_ok());
+        assert!(d.try_admit(packet(wc)).is_ok());
         assert_eq!(d.reserved_bytes(), vec![2 * wc]);
-        let err = d.try_admit(vec![1], 2, wc, reply()).unwrap_err();
+        let err = d.try_admit(packet(wc)).unwrap_err();
         assert!(err.to_string().contains("memory budget"), "{err}");
         // queued was rolled back: the rejection is a budget rejection,
         // not a stuck waiting slot.
         assert_eq!(d.queued(), 2);
-        ctxs[0].note_activated();
+        ctxs[0].note_activated(1);
         ctxs[0].note_done(wc);
         assert_eq!(d.reserved_bytes(), vec![wc]);
-        assert!(d.try_admit(vec![1], 2, wc, reply()).is_ok());
-        assert!(d.try_admit(vec![1], 2, wc, reply()).is_err());
+        assert!(d.try_admit(packet(wc)).is_ok());
+        assert!(d.try_admit(packet(wc)).is_err());
     }
 
     #[test]
     fn oversized_request_rejected_even_when_idle() {
         let (d, _ctxs) = build(2, 64, 1000);
-        let err = d.try_admit(vec![1], 2, 1001, reply()).unwrap_err();
+        let err = d.try_admit(packet(1001)).unwrap_err();
         assert!(err.to_string().contains("memory budget"), "{err}");
         assert_eq!(d.queued(), 0);
         assert_eq!(d.reserved_bytes(), vec![0, 0]);
@@ -405,10 +425,10 @@ mod tests {
         let wc = 500;
         let (d, ctxs) = build(2, 64, 2 * wc);
         for _ in 0..4 {
-            d.try_admit(vec![1], 2, wc, reply()).unwrap();
+            d.try_admit(packet(wc)).unwrap();
         }
         assert_eq!(d.reserved_bytes(), vec![2 * wc, 2 * wc]);
-        assert!(d.try_admit(vec![1], 2, wc, reply()).is_err());
+        assert!(d.try_admit(packet(wc)).is_err());
         assert_eq!(ctxs[0].rx.try_iter().count(), 2);
         assert_eq!(ctxs[1].rx.try_iter().count(), 2);
     }
@@ -416,8 +436,8 @@ mod tests {
     #[test]
     fn tags_are_submission_ordered() {
         let (d, _ctxs) = build(2, 8, 0);
-        let t0 = d.try_admit(vec![1], 1, 0, reply()).unwrap();
-        let t1 = d.try_admit(vec![2], 1, 0, reply()).unwrap();
+        let t0 = d.try_admit(packet(0)).unwrap();
+        let t1 = d.try_admit(packet(0)).unwrap();
         assert_eq!((t0, t1), (0, 1));
     }
 
@@ -425,7 +445,7 @@ mod tests {
     fn dead_shard_rolls_back_counters() {
         let (d, ctxs) = build(1, 4, 4096);
         drop(ctxs); // receiver gone
-        let err = d.try_admit(vec![1], 2, 100, reply()).unwrap_err();
+        let err = d.try_admit(packet(100)).unwrap_err();
         assert!(err.to_string().contains("no live shards"), "{err}");
         assert_eq!(d.queued(), 0);
         assert_eq!(d.loads(), vec![0]);
@@ -440,7 +460,7 @@ mod tests {
         let live = ctxs.remove(1);
         drop(ctxs); // shard 0's receiver gone (thread died)
         for _ in 0..4 {
-            d.try_admit(vec![1], 2, 0, reply()).unwrap();
+            d.try_admit(packet(0)).unwrap();
         }
         assert_eq!(live.rx.try_iter().count(), 4, "requests lost");
         assert_eq!(d.loads()[0], 0, "dead shard holds phantom load");

@@ -1,14 +1,18 @@
-//! Trace-driven load generation against a running server (DESIGN.md §8).
+//! Trace-driven load generation against a running server (DESIGN.md §8,
+//! §11).
 //!
 //! Replays a [`RequestTrace`]'s arrival process (open-loop: submission
 //! times follow the trace, not the server's progress) through a
 //! [`ServerHandle`], measuring per-request submit-to-completion latency,
 //! submit-time rejections (backpressure), and aggregate throughput.
-//! Used by the `serve` subcommand and `benches/serving_throughput.rs`.
+//! Entries carry the typed request options (priority class, deadline,
+//! pre-fired cancellation), and the report breaks completions down by
+//! [`FinishReason`].  Used by the `serve` subcommand and
+//! `benches/serving_throughput.rs`.
 
 use std::time::{Duration, Instant};
 
-use crate::coordinator::GenerationOutput;
+use crate::coordinator::request::{FinishReason, GenerationResponse, Priority};
 use crate::metrics::LatencyStats;
 use crate::workload::{RequestTrace, Task};
 use crate::Result;
@@ -39,24 +43,57 @@ pub fn memory_pressure_trace(max_seq: usize, n: usize, seed: u64) -> RequestTrac
     RequestTrace::batch(Task::Lines(lines), max_seq - max_new, n, max_new, seed)
 }
 
+/// Mixed-priority scenario (DESIGN.md §11): `n` concurrent code-task
+/// requests whose priority classes cycle
+/// `Interactive -> Batch -> Background` in trace order, plus two special
+/// entries exercising the non-natural finish paths deterministically:
+/// the last entry is submitted pre-cancelled (retires with
+/// `FinishReason::Cancelled` at pop, holding no slot) and the
+/// second-to-last carries an already-expired deadline (deterministically
+/// shed with `FinishReason::DeadlineExpired`).  Replaying it against any
+/// server therefore produces at least one cancelled and one shed request
+/// and per-priority traffic for all three classes (with `n >= 5`).
+pub fn priority_mix_trace(max_seq: usize, n: usize, max_new: usize,
+                          seed: u64) -> RequestTrace {
+    let max_new = max_new.clamp(1, max_seq.saturating_sub(1).max(1));
+    let mut trace =
+        RequestTrace::batch(Task::Code, max_seq - max_new, n, max_new, seed);
+    for (i, e) in trace.entries.iter_mut().enumerate() {
+        e.priority = Priority::ALL[i % Priority::ALL.len()];
+    }
+    let n = trace.entries.len();
+    if n >= 1 {
+        trace.entries[n - 1].cancelled = true;
+    }
+    if n >= 2 {
+        trace.entries[n - 2].deadline_ms = Some(0.0);
+    }
+    trace
+}
+
 /// Outcome of one trace replay.
 #[derive(Debug, Default)]
 pub struct LoadReport {
     /// Requests offered to the server (the whole trace).
     pub submitted: usize,
-    /// Requests that completed with an output.
+    /// Requests that completed naturally (`Eos` / `MaxTokens`).
     pub completed: usize,
     /// Requests rejected at submit time (queue full / invalid).
     pub rejected: usize,
     /// Requests accepted but failed in flight (server error).
     pub failed: usize,
+    /// Requests finishing with `FinishReason::Cancelled`.
+    pub cancelled: usize,
+    /// Requests shed with `FinishReason::DeadlineExpired`.
+    pub shed: usize,
     /// Wall-clock of the whole replay (first submit to last completion).
     pub wall: Duration,
-    /// Submit-to-completion latency of completed requests.
+    /// Submit-to-completion latency of naturally completed requests.
     pub latency: LatencyStats,
-    /// `(trace index, output)` for every completed request, in trace
-    /// order — callers score accuracy by zipping with the trace entries.
-    pub outputs: Vec<(usize, GenerationOutput)>,
+    /// `(trace index, response)` for every request the server resolved
+    /// (any finish reason), in trace order — callers score accuracy by
+    /// zipping the natural completions with the trace entries.
+    pub outputs: Vec<(usize, GenerationResponse)>,
 }
 
 impl LoadReport {
@@ -82,7 +119,8 @@ impl LoadReport {
 }
 
 /// Replay `trace` against `handle`: submit each entry at its arrival
-/// offset, wait for every accepted request, and aggregate the report.
+/// offset (with its priority/deadline/cancellation options), wait for
+/// every accepted request, and aggregate the report.
 ///
 /// Completion waits run on one short-lived thread per accepted request —
 /// requests complete out of order across shards, and latency must be
@@ -98,7 +136,7 @@ pub fn replay(handle: &ServerHandle, trace: &RequestTrace) -> Result<LoadReport>
             std::thread::sleep(target - now);
         }
         let t_sub = Instant::now();
-        match handle.submit(e.sample.prompt().to_vec(), e.max_new_tokens) {
+        match handle.submit_request(e.request()) {
             Ok(h) => waiters.push(std::thread::spawn(move || {
                 let out = h.wait();
                 (i, t_sub.elapsed(), out)
@@ -111,10 +149,17 @@ pub fn replay(handle: &ServerHandle, trace: &RequestTrace) -> Result<LoadReport>
             .join()
             .map_err(|_| anyhow::anyhow!("loadgen waiter panicked"))?;
         match out {
-            Ok(output) => {
-                report.completed += 1;
-                report.latency.record(dur);
-                report.outputs.push((i, output));
+            Ok(response) => {
+                match response.finish {
+                    f if f.is_natural() => {
+                        report.completed += 1;
+                        report.latency.record(dur);
+                    }
+                    FinishReason::Cancelled => report.cancelled += 1,
+                    FinishReason::DeadlineExpired => report.shed += 1,
+                    f => unreachable!("is_natural covers {f}"),
+                }
+                report.outputs.push((i, response));
             }
             Err(_) => report.failed += 1,
         }

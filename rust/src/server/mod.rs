@@ -1,5 +1,6 @@
 //! Serving front-end: a sharded engine pool behind one admission point
-//! (DESIGN.md §8).
+//! (DESIGN.md §8), speaking the typed request/response API
+//! (DESIGN.md §11).
 //!
 //! [`Server::start`] spawns `cfg.scheduler.shards` serving threads.  Each
 //! shard owns a full engine stack — an [`Engine`] (and therefore its own
@@ -9,52 +10,125 @@
 //! `Send`), and a startup barrier reports construction failures from
 //! `Server::start` itself.
 //!
-//! Requests flow through the private dispatcher module: one global
-//! `queue_depth` boundary decides accept/reject at submit time, then the
-//! request is routed to the least-loaded shard.  A shard pulls a waiting
-//! request only when it has a free decode slot, so no second queue ever
-//! stacks on the configured depth.  Per-tag outputs are independent of
-//! shard count and placement because sessions are independent and seeds
-//! derive from request content (`coordinator::engine::request_seed`).
+//! Requests are [`GenerationRequest`]s (priority class, optional
+//! deadline, per-request quant/seed overrides, stop tokens) and flow
+//! through the private dispatcher module: one global `queue_depth`
+//! boundary decides accept/reject at submit time, then the request is
+//! routed to the least-loaded shard.  Inside a shard, waiting requests
+//! stage in the batcher's *priority-ordered* queue; the global waiting
+//! count is decremented only when a request actually leaves that queue
+//! (decode slot granted, deadline shed, or cancelled at pop), so the
+//! configured depth stays the exact rejection boundary (DESIGN.md §8).
+//! Per-tag outputs are independent of shard count and placement because
+//! sessions are independent and seeds derive from request content
+//! (`coordinator::engine::request_seed`).
+//!
+//! Responses stream: a [`ResponseHandle`] yields tokens incrementally as
+//! the batcher emits them ([`ResponseHandle::next_token`], or iterate the
+//! handle), supports [`ResponseHandle::cancel`], and resolves to a
+//! [`GenerationResponse`] carrying a
+//! [`FinishReason`](crate::coordinator::FinishReason).
 //!
 //! Offline-build note: the environment ships no async runtime, so this is
 //! a blocking-channel design (std::sync::mpsc) rather than tokio; the
-//! public shape — submit returns a waitable handle, requests interleave
+//! public shape — submit returns a streamable handle, requests interleave
 //! through per-shard continuous batchers — is the same (DESIGN.md §6).
 
 mod dispatch;
 pub mod loadgen;
 
+use std::collections::HashMap;
 use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::config::EngineConfig;
-use crate::coordinator::batcher::{ContinuousBatcher, QueuedRequest};
-use crate::coordinator::{Engine, GenerationOutput};
+use crate::coordinator::batcher::{ContinuousBatcher, PriorityPark, QueuedRequest};
+use crate::coordinator::request::{CancelToken, GenerationRequest,
+                                  GenerationResponse};
+use crate::coordinator::Engine;
 use crate::kvcache::{worst_case_resident_bytes, CacheLayout};
 use crate::metrics::{EngineMetrics, MetricsSnapshot};
 use crate::Result;
 
-use dispatch::{Dispatcher, ShardCtx, ShardRequest};
+use dispatch::{AdmitRequest, Dispatcher, ShardCtx, ShardRequest};
 
-/// A waitable response slot for one submitted request.
+/// One streamed event on a request's reply channel: an incremental token
+/// or the final response.  Tokens always precede their `Done`, and their
+/// concatenation equals `GenerationResponse::tokens` exactly.
+pub(crate) enum ResponseEvent {
+    Token(u16),
+    Done(Result<GenerationResponse>),
+}
+
+/// A streamable response slot for one submitted request (DESIGN.md §11).
+///
+/// Consume incrementally with [`ResponseHandle::next_token`] (or by
+/// iterating: `for tok in &mut handle { .. }`), then finish with
+/// [`ResponseHandle::wait`]; or call `wait()` directly to block until
+/// completion.  [`ResponseHandle::cancel`] requests cancellation — the
+/// shard retires the session at its next scheduler iteration, releasing
+/// its dense slot and byte-budget reservation immediately, and the final
+/// response arrives with
+/// [`FinishReason::Cancelled`](crate::coordinator::FinishReason::Cancelled)
+/// carrying the tokens
+/// generated so far.
 pub struct ResponseHandle {
-    rx: Receiver<Result<GenerationOutput>>,
+    rx: Receiver<ResponseEvent>,
     tag: u64,
+    cancel: CancelToken,
+    /// Final result observed while streaming, stashed for `wait()`.
+    done: Option<Result<GenerationResponse>>,
 }
 
 impl ResponseHandle {
-    /// Block until the generation completes.
-    pub fn wait(self) -> Result<GenerationOutput> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server dropped request"))?
+    /// Block for the next streamed token; `None` once the generation has
+    /// finished (then [`ResponseHandle::wait`] returns the final
+    /// response without blocking).
+    pub fn next_token(&mut self) -> Option<u16> {
+        if self.done.is_some() {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(ResponseEvent::Token(t)) => Some(t),
+            Ok(ResponseEvent::Done(r)) => {
+                self.done = Some(r);
+                None
+            }
+            Err(_) => {
+                self.done = Some(Err(anyhow::anyhow!("server dropped request")));
+                None
+            }
+        }
+    }
+
+    /// Block until the generation completes (draining any unread
+    /// streamed tokens — they are a prefix of the final `tokens`).
+    pub fn wait(mut self) -> Result<GenerationResponse> {
+        while self.done.is_none() {
+            self.next_token();
+        }
+        self.done.take().expect("loop exits only once done is set")
+    }
+
+    /// Request cancellation (idempotent).  Safe at any point in the
+    /// request lifecycle: waiting requests retire at pop time, active
+    /// sessions at the next scheduler iteration.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
     }
 
     /// Global submission-order tag of this request (diagnostics).
     pub fn tag(&self) -> u64 {
         self.tag
+    }
+}
+
+impl Iterator for ResponseHandle {
+    type Item = u16;
+
+    fn next(&mut self) -> Option<u16> {
+        self.next_token()
     }
 }
 
@@ -71,33 +145,40 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Submit one generation request; returns a waitable handle.
+    /// Submit one typed generation request; returns a streamable handle.
     /// Errors immediately when the admission queue is full (backpressure),
     /// no shard can hold the request's worst-case byte footprint (memory
-    /// budget), or the request is malformed (`max_new == 0`, empty
-    /// prompt, window overflow).
-    pub fn submit(&self, prompt: Vec<u16>, max_new: usize) -> Result<ResponseHandle> {
-        // Validate the full session-start contract at admission so a bad
-        // request is a submit-time error, never a poisoned shard: these
-        // mirror the `ensure!`s in `Engine::start_session`, whose failure
-        // inside a shard would tear the whole shard down (DESIGN.md §8).
-        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
-        anyhow::ensure!(max_new >= 1, "max_new must be >= 1");
-        anyhow::ensure!(
-            prompt.len() + max_new <= self.layout.seq,
-            "prompt {} + budget {max_new} exceeds window {}",
-            prompt.len(),
-            self.layout.seq
-        );
-        let wc = worst_case_resident_bytes(self.layout, prompt.len() + max_new,
+    /// budget), or the request fails the shared
+    /// [`GenerationRequest::validate`] contract — the same check
+    /// `Engine::start_session` applies, so a bad request is a submit-time
+    /// error, never a poisoned shard (DESIGN.md §8, §11).
+    pub fn submit_request(&self, req: GenerationRequest) -> Result<ResponseHandle> {
+        req.validate(self.layout.seq)?;
+        // Worst-case resident footprint for the budget reservation.  The
+        // bound is conservative for *any* admissible quant override: its
+        // payload term charges fp16 (2 B/value), which dominates every
+        // override width (max 8 bits), and its param term already assumes
+        // the densest class mix — see `worst_case_resident_bytes`.
+        let wc = worst_case_resident_bytes(self.layout,
+                                           req.prompt.len() + req.max_new,
                                            self.recompress_every);
+        let cancel = req.cancel.clone();
         let (reply, rx) = mpsc::channel();
-        let tag = self.dispatcher.try_admit(prompt, max_new, wc, reply)?;
-        Ok(ResponseHandle { rx, tag })
+        let tag = self
+            .dispatcher
+            .try_admit(AdmitRequest { request: req, wc_bytes: wc, reply })?;
+        Ok(ResponseHandle { rx, tag, cancel, done: None })
+    }
+
+    /// Legacy positional submit: a thin wrapper over builder defaults
+    /// (DESIGN.md §11) — bit-identical to the pre-§11 path.
+    pub fn submit(&self, prompt: Vec<u16>, max_new: usize) -> Result<ResponseHandle> {
+        self.submit_request(GenerationRequest::new(prompt, max_new))
     }
 
     /// Submit and wait (convenience).
-    pub fn generate(&self, prompt: Vec<u16>, max_new: usize) -> Result<GenerationOutput> {
+    pub fn generate(&self, prompt: Vec<u16>, max_new: usize)
+                    -> Result<GenerationResponse> {
         self.submit(prompt, max_new)?.wait()
     }
 
@@ -238,14 +319,22 @@ impl Server {
 
 /// One shard: engine + continuous batcher + reply routing.
 ///
+/// The batcher runs the priority-aware park policy (`PriorityPark`,
+/// DESIGN.md §11) and stages every waiting request in its
+/// priority-ordered queue; its depth is effectively unbounded here
+/// because the dispatcher's global `queue_depth` is the single admission
+/// boundary, decremented per
+/// [`StepReport::activated`](crate::coordinator::StepReport) as requests
+/// leave the staging queue.
+///
 /// Error altitude: requests that could fail `Engine::start_session` are
-/// rejected at submit time (see `ServerHandle::submit`), so a `?` out of
-/// `batcher.step` here means the *engine itself* failed (PJRT execute
-/// error, artifact corruption) — that shard exits with the error and its
-/// in-flight clients see "server dropped request", while other shards
-/// keep serving.  The seed's single-engine-thread design lost the whole
-/// server in that case; per-request error outcomes through the batcher
-/// are a possible future refinement (DESIGN.md §8).
+/// rejected at submit time (see `ServerHandle::submit_request`), so a `?`
+/// out of `batcher.step` here means the *engine itself* failed (PJRT
+/// execute error, artifact corruption) — that shard exits with the error
+/// and its in-flight clients see "server dropped request", while other
+/// shards keep serving.  The seed's single-engine-thread design lost the
+/// whole server in that case; per-request error outcomes through the
+/// batcher are a possible future refinement (DESIGN.md §8).
 fn shard_loop(
     shard_idx: usize,
     cfg: EngineConfig,
@@ -264,28 +353,57 @@ fn shard_loop(
             return Ok(()); // failure already reported through the barrier
         }
     };
-    // The batcher's own queue is a staging slot only: requests are pulled
-    // from the shard channel exclusively when a decode slot is free, so
-    // its depth never rejects and never stacks on the dispatcher's
-    // boundary (DESIGN.md §8).
-    let mut batcher = ContinuousBatcher::new(max_batch, max_batch);
-    let mut replies: Vec<ReplySlot> = Vec::new();
+    let mut batcher = ContinuousBatcher::with_policy(max_batch, usize::MAX,
+                                                     Box::new(PriorityPark));
+    // Tag-keyed: eager staging can hold up to the whole global
+    // queue_depth here (not just max_batch), and every streamed token
+    // and completion looks its slot up — O(1), not a linear scan.
+    let mut replies: HashMap<u64, ReplySlot> = HashMap::new();
 
+    let result = serve_shard(shard_idx, &mut engine, &mut batcher, &mut replies,
+                             &ctx, &slots);
+    if result.is_err() {
+        // Fault isolation (DESIGN.md §8): this shard dies, the others
+        // keep serving — which requires releasing the *global* waiting
+        // slots of every request this shard still holds, or a dead
+        // shard permanently shrinks the `queue_depth` boundary for the
+        // healthy ones (the staging queue is unbounded here, so up to
+        // the whole depth could be pinned).  Clients see "server
+        // dropped request" when the reply senders drop.
+        fail_pending(&mut batcher, &mut replies, &ctx);
+    }
+    result
+}
+
+/// The shard's serving loop proper; an `Err` is an engine failure
+/// (`shard_loop` releases the shard's global accounting afterwards).
+fn serve_shard(
+    shard_idx: usize,
+    engine: &mut Engine,
+    batcher: &mut ContinuousBatcher,
+    replies: &mut HashMap<u64, ReplySlot>,
+    ctx: &ShardCtx,
+    slots: &[Mutex<EngineMetrics>],
+) -> Result<()> {
     loop {
-        // Pull waiting requests while decode slots are free.
-        while batcher.active() + batcher.pending() < max_batch {
+        // Stage every waiting request into the priority queue (pop order
+        // is decided there; the global `queued` gauge still counts them
+        // until they activate or shed).
+        loop {
             match ctx.rx.try_recv() {
-                Ok(req) => admit(&mut batcher, &mut replies, req, &ctx),
+                Ok(req) => stage(batcher, replies, req, ctx),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     // Shutdown: finish in-flight work, publish, exit.
                     while !batcher.idle() {
-                        batcher.step(&mut engine)?;
-                        deliver(&mut batcher, &mut replies, &ctx, &engine,
+                        let report = batcher.step(engine)?;
+                        ctx.note_activated(report.activated);
+                        stream_tokens(batcher, replies);
+                        deliver(batcher, replies, ctx, engine,
                                 &slots[shard_idx]);
                     }
                     ctx.publish_resident(0);
-                    publish(&slots[shard_idx], &engine);
+                    publish(&slots[shard_idx], engine);
                     return Ok(());
                 }
             }
@@ -293,56 +411,98 @@ fn shard_loop(
         if batcher.idle() {
             // Idle: publish metrics, then block for the next request.
             ctx.publish_resident(0);
-            publish(&slots[shard_idx], &engine);
+            publish(&slots[shard_idx], engine);
             match ctx.rx.recv() {
                 Ok(req) => {
-                    admit(&mut batcher, &mut replies, req, &ctx);
+                    stage(batcher, replies, req, ctx);
                     continue;
                 }
                 Err(_) => return Ok(()),
             }
         }
-        batcher.step(&mut engine)?;
+        let report = batcher.step(engine)?;
+        ctx.note_activated(report.activated);
+        // Streamed tokens go out before any completion below, so a
+        // handle's token stream is always a prefix of its final tokens.
+        stream_tokens(batcher, replies);
         // Routing weight (DESIGN.md §10): the dispatcher breaks load
         // ties by these live resident bytes, so publish every iteration.
         ctx.publish_resident(batcher.active_bytes());
-        deliver(&mut batcher, &mut replies, &ctx, &engine, &slots[shard_idx]);
+        deliver(batcher, replies, ctx, engine, &slots[shard_idx]);
+    }
+}
+
+/// Release the global/per-shard accounting of everything a failed shard
+/// still holds: staged requests leave the global waiting gauge
+/// (`note_activated`), every reply slot's load + byte reservation is
+/// released, and the channel backlog (requests routed here before the
+/// dispatcher learns of the death via its first failed send) is drained
+/// the same way.  A request arriving in the instant between this drain
+/// and the receiver dropping still leaks its waiting slot — the same
+/// small race the pre-§11 design documented; everything a shard
+/// *observably* held is now rolled back.
+fn fail_pending(
+    batcher: &mut ContinuousBatcher,
+    replies: &mut HashMap<u64, ReplySlot>,
+    ctx: &ShardCtx,
+) {
+    // Still-pending requests, plus departures inside the very step that
+    // errored (its StepReport was lost to the `?`): both classes leave
+    // the waiting gauge exactly once.
+    ctx.note_activated(batcher.take_departed() + batcher.pending());
+    for (_, r) in replies.drain() {
+        ctx.note_done(r.reserved_bytes);
+    }
+    while let Ok(req) = ctx.rx.try_recv() {
+        ctx.note_activated(1);
+        ctx.note_done(req.reserved_bytes);
     }
 }
 
 /// One in-flight request's reply channel plus the worst-case byte
-/// reservation to release when it completes.
+/// reservation to release when it completes (keyed by tag in the shard's
+/// reply map).
 struct ReplySlot {
-    tag: u64,
     reserved_bytes: usize,
-    reply: Sender<Result<GenerationOutput>>,
+    reply: Sender<ResponseEvent>,
 }
 
-/// Move a pulled request into the batcher and register its reply slot.
-fn admit(
+/// Move a pulled request into the batcher's staging queue and register
+/// its reply slot.  Never rejects: the staging depth is unbounded and
+/// the dispatcher's global boundary has already admitted the request.
+fn stage(
     batcher: &mut ContinuousBatcher,
-    replies: &mut Vec<ReplySlot>,
+    replies: &mut HashMap<u64, ReplySlot>,
     req: ShardRequest,
     ctx: &ShardCtx,
 ) {
-    ctx.note_activated();
-    match batcher.submit(QueuedRequest {
-        prompt: req.prompt,
-        max_new: req.max_new,
-        tag: req.tag,
-    }) {
-        Ok(()) => replies.push(ReplySlot {
-            tag: req.tag,
-            reserved_bytes: req.reserved_bytes,
-            reply: req.reply,
-        }),
+    match batcher.submit(QueuedRequest { request: req.request, tag: req.tag }) {
+        Ok(()) => {
+            replies.insert(req.tag, ReplySlot {
+                reserved_bytes: req.reserved_bytes,
+                reply: req.reply,
+            });
+        }
         Err(_) => {
-            // Unreachable by construction (pulls are slot-gated), but do
-            // not let an accounting bug hang the client.
-            let _ = req
-                .reply
-                .send(Err(anyhow::anyhow!("internal: shard batcher rejected")));
+            // Unreachable by construction (staging depth is unbounded),
+            // but do not let an accounting bug hang the client.
+            let _ = req.reply.send(ResponseEvent::Done(Err(anyhow::anyhow!(
+                "internal: shard batcher rejected"
+            ))));
+            ctx.note_activated(1);
             ctx.note_done(req.reserved_bytes);
+        }
+    }
+}
+
+/// Forward the batcher's freshly emitted `(tag, token)` stream to the
+/// matching reply channels (best-effort: a dropped handle just stops
+/// listening).
+fn stream_tokens(batcher: &mut ContinuousBatcher,
+                 replies: &HashMap<u64, ReplySlot>) {
+    for (tag, tok) in batcher.drain_emitted() {
+        if let Some(r) = replies.get(&tag) {
+            let _ = r.reply.send(ResponseEvent::Token(tok));
         }
     }
 }
@@ -352,7 +512,7 @@ fn admit(
 /// guaranteed to see its own request in the next snapshot.
 fn deliver(
     batcher: &mut ContinuousBatcher,
-    replies: &mut Vec<ReplySlot>,
+    replies: &mut HashMap<u64, ReplySlot>,
     ctx: &ShardCtx,
     engine: &Engine,
     slot: &Mutex<EngineMetrics>,
@@ -365,12 +525,14 @@ fn deliver(
     for outcome in outcomes {
         // Release accounting (load + byte reservation) *before* the
         // reply goes out, like the metrics publish above: a client whose
-        // `wait()` has returned must observe its reservation gone.
-        match replies.iter().position(|r| r.tag == outcome.tag) {
-            Some(idx) => {
-                let r = replies.swap_remove(idx);
+        // `wait()` has returned must observe its reservation gone —
+        // including cancelled and deadline-shed requests, whose release
+        // therefore happens the same iteration the cancel/shed is
+        // observed, not at natural completion (DESIGN.md §11).
+        match replies.remove(&outcome.tag) {
+            Some(r) => {
                 ctx.note_done(r.reserved_bytes);
-                let _ = r.reply.send(Ok(outcome.output));
+                let _ = r.reply.send(ResponseEvent::Done(Ok(outcome)));
             }
             None => ctx.note_done(0),
         }

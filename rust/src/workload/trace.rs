@@ -5,10 +5,17 @@
 //! trace with exponential inter-arrival times to exercise the continuous
 //! batcher under load.
 
+use std::time::Duration;
+
+use crate::coordinator::request::{GenerationRequest, Priority};
+
 use super::rng::SplitMix64;
 use super::tasks::{Sample, Task, TaskGen};
 
-/// One request in a trace.
+/// One request in a trace, carrying the per-request options of the typed
+/// serving API (DESIGN.md §11).  The plain constructors
+/// ([`RequestTrace::batch`], [`RequestTrace::poisson`]) leave every
+/// option at its default, reproducing the legacy positional path.
 #[derive(Debug, Clone)]
 pub struct TraceEntry {
     /// Arrival offset from trace start, in milliseconds.
@@ -17,6 +24,45 @@ pub struct TraceEntry {
     pub sample: Sample,
     /// Decode budget (max new tokens).
     pub max_new_tokens: usize,
+    /// Urgency class for the submitted request.
+    pub priority: Priority,
+    /// Deadline relative to submission; `Some(0.0)` is already expired
+    /// at pop time, so the request is deterministically shed.
+    pub deadline_ms: Option<f64>,
+    /// Submit the request with its cancellation token already fired —
+    /// the deterministic way to exercise the cancellation path in a
+    /// replay (the request retires with `FinishReason::Cancelled` at pop,
+    /// never holding a slot).
+    pub cancelled: bool,
+}
+
+impl TraceEntry {
+    fn defaults(arrival_ms: f64, sample: Sample, max_new_tokens: usize) -> Self {
+        TraceEntry {
+            arrival_ms,
+            sample,
+            max_new_tokens,
+            priority: Priority::default(),
+            deadline_ms: None,
+            cancelled: false,
+        }
+    }
+
+    /// Build the typed request this entry describes (prompt cloned; the
+    /// trace stays replayable).  The deadline clock starts at call time,
+    /// so build immediately before submitting.
+    pub fn request(&self) -> GenerationRequest {
+        let mut req =
+            GenerationRequest::new(self.sample.prompt().to_vec(), self.max_new_tokens)
+                .priority(self.priority);
+        if let Some(ms) = self.deadline_ms {
+            req = req.deadline_in(Duration::from_micros((ms * 1000.0) as u64));
+        }
+        if self.cancelled {
+            req.cancel.cancel();
+        }
+        req
+    }
 }
 
 /// A replayable request trace.
@@ -34,7 +80,7 @@ impl RequestTrace {
         let entries = gen
             .batch(seed, n)
             .into_iter()
-            .map(|sample| TraceEntry { arrival_ms: 0.0, sample, max_new_tokens })
+            .map(|sample| TraceEntry::defaults(0.0, sample, max_new_tokens))
             .collect();
         RequestTrace { entries }
     }
@@ -52,7 +98,7 @@ impl RequestTrace {
                 let u = rng.unit_f64().max(1e-12);
                 t += -u.ln() / rate_per_s * 1000.0;
             }
-            entries.push(TraceEntry { arrival_ms: t, sample, max_new_tokens });
+            entries.push(TraceEntry::defaults(t, sample, max_new_tokens));
         }
         RequestTrace { entries }
     }
@@ -86,6 +132,32 @@ mod tests {
         // mean inter-arrival should be within 3x of 100ms for 32 samples
         let total = t.entries.last().unwrap().arrival_ms;
         assert!(total > 0.0 && total < 32.0 * 400.0);
+    }
+
+    #[test]
+    fn plain_traces_carry_default_options() {
+        let t = RequestTrace::batch(Task::Code, 128, 2, 4, 1);
+        for e in &t.entries {
+            assert_eq!(e.priority, Priority::Interactive);
+            assert!(e.deadline_ms.is_none() && !e.cancelled);
+            let r = e.request();
+            assert!(r.deadline.is_none() && !r.cancel.is_cancelled());
+            assert_eq!(r.prompt, e.sample.prompt());
+            assert_eq!(r.max_new, 4);
+        }
+    }
+
+    #[test]
+    fn entry_options_reach_the_request() {
+        let mut t = RequestTrace::batch(Task::Code, 128, 1, 4, 1);
+        let e = &mut t.entries[0];
+        e.priority = Priority::Background;
+        e.deadline_ms = Some(0.0);
+        e.cancelled = true;
+        let r = e.request();
+        assert_eq!(r.priority, Priority::Background);
+        assert!(r.expired(std::time::Instant::now()));
+        assert!(r.cancel.is_cancelled());
     }
 
     #[test]

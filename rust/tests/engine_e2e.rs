@@ -4,7 +4,7 @@
 
 use zipcache::config::{EngineConfig, PolicyKind};
 use zipcache::coordinator::batcher::{ContinuousBatcher, QueuedRequest};
-use zipcache::coordinator::Engine;
+use zipcache::coordinator::{Engine, GenerationRequest};
 use zipcache::server::Server;
 use zipcache::workload::{Task, TaskGen};
 
@@ -96,8 +96,7 @@ fn batcher_interleaves_and_completes() {
     let mut b = ContinuousBatcher::new(2, 8);
     for tag in 0..5u64 {
         b.submit(QueuedRequest {
-            prompt: gen.sample(tag).prompt().to_vec(),
-            max_new: 3,
+            request: GenerationRequest::new(gen.sample(tag).prompt().to_vec(), 3),
             tag,
         }).unwrap();
     }
@@ -105,7 +104,7 @@ fn batcher_interleaves_and_completes() {
     assert_eq!(outcomes.len(), 5);
     let tags: Vec<u64> = outcomes.iter().map(|o| o.tag).collect();
     assert_eq!(tags, vec![0, 1, 2, 3, 4]);
-    assert!(outcomes.iter().all(|o| !o.output.tokens.is_empty()));
+    assert!(outcomes.iter().all(|o| !o.tokens.is_empty()));
     assert_eq!(engine.metrics.requests_completed, 5);
 }
 
@@ -135,7 +134,9 @@ fn streaming_recompression_triggers() {
     let mut engine = Engine::new(cfg).unwrap();
     let info = engine.runtime().model_info().clone();
     let s = TaskGen::new(Task::Code, info.max_seq / 2).sample(3);
-    let mut sess = engine.start_session(s.prompt().to_vec(), 16).unwrap();
+    let mut sess = engine
+        .start_session(GenerationRequest::new(s.prompt().to_vec(), 16))
+        .unwrap();
     while !sess.is_done() {
         engine.decode_step(&mut sess).unwrap();
     }
@@ -149,6 +150,10 @@ fn window_overflow_rejected() {
     let mut engine = Engine::new(cfg).unwrap();
     let info = engine.runtime().model_info().clone();
     let prompt = vec![1u16; info.max_seq];
-    assert!(engine.start_session(prompt, 4).is_err());
-    assert!(engine.start_session(vec![], 4).is_err());
+    assert!(engine
+        .start_session(GenerationRequest::new(prompt, 4))
+        .is_err());
+    assert!(engine
+        .start_session(GenerationRequest::new(vec![], 4))
+        .is_err());
 }

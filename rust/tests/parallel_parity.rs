@@ -8,7 +8,7 @@
 
 use zipcache::config::{EngineConfig, PolicyKind};
 use zipcache::coordinator::batcher::{ContinuousBatcher, QueuedRequest};
-use zipcache::coordinator::Engine;
+use zipcache::coordinator::{Engine, GenerationRequest};
 use zipcache::kvcache::{CacheLayout, CompressedKV, PrecisionClass, QuantSpec};
 use zipcache::quant::Granularity;
 use zipcache::util::pool::WorkerPool;
@@ -133,8 +133,8 @@ fn batcher_outputs_stable_under_pool() {
         let mut b = ContinuousBatcher::new(2, 8);
         for tag in 0..5u64 {
             b.submit(QueuedRequest {
-                prompt: gen.sample(tag).prompt().to_vec(),
-                max_new: 3,
+                request: GenerationRequest::new(gen.sample(tag).prompt().to_vec(),
+                                                3),
                 tag,
             })
             .unwrap();
@@ -142,7 +142,7 @@ fn batcher_outputs_stable_under_pool() {
         b.run_to_completion(&mut engine)
             .unwrap()
             .into_iter()
-            .map(|o| (o.tag, o.output.tokens, o.output.compression_ratio))
+            .map(|o| (o.tag, o.tokens, o.compression_ratio))
             .collect()
     };
     let seq = run(cfg1);

@@ -15,7 +15,7 @@
 
 use zipcache::config::EngineConfig;
 use zipcache::coordinator::batcher::{ContinuousBatcher, LruByLastStep, QueuedRequest};
-use zipcache::coordinator::Engine;
+use zipcache::coordinator::{CancelToken, Engine, FinishReason, GenerationRequest};
 use zipcache::kvcache::worst_case_resident_bytes;
 use zipcache::server::{loadgen, Server};
 use zipcache::workload::{Task, TaskGen};
@@ -49,15 +49,17 @@ fn run_batched(slots: usize, lru: bool) -> (Vec<Outcome>, u64, usize) {
         ContinuousBatcher::new(MAX_BATCH, 16)
     };
     for (tag, p) in prompts(8).into_iter().enumerate() {
-        b.submit(QueuedRequest { prompt: p, max_new: MAX_NEW, tag: tag as u64 })
-            .unwrap();
+        b.submit(QueuedRequest {
+            request: GenerationRequest::new(p, MAX_NEW),
+            tag: tag as u64,
+        })
+        .unwrap();
     }
     let outcomes = b
         .run_to_completion(&mut engine)
         .unwrap()
         .into_iter()
-        .map(|o| (o.tag, o.output.tokens, o.output.cache_bytes,
-                  o.output.compression_ratio))
+        .map(|o| (o.tag, o.tokens, o.cache_bytes, o.compression_ratio))
         .collect();
     (outcomes, b.preempted(), engine.slot_pool().peak_in_use())
 }
@@ -104,8 +106,12 @@ fn park_unpark_roundtrip_is_bitwise() {
     let p = prompts(1).remove(0);
     // Two sessions with identical content follow identical trajectories
     // (content-derived seeds); `b` is the never-parked control.
-    let mut a = engine.start_session(p.clone(), 12).unwrap();
-    let mut b = engine.start_session(p, 12).unwrap();
+    let mut a = engine
+        .start_session(GenerationRequest::new(p.clone(), 12))
+        .unwrap();
+    let mut b = engine
+        .start_session(GenerationRequest::new(p, 12))
+        .unwrap();
     for _ in 0..5 {
         engine.decode_step(&mut a).unwrap();
         engine.decode_step(&mut b).unwrap();
@@ -158,12 +164,18 @@ fn slot_pool_exhaustion_is_an_error_not_a_hang() {
     cfg.scheduler.max_batch = 2;
     let mut engine = Engine::new(cfg).unwrap();
     let mut ps = prompts(2);
-    let s = engine.start_session(ps.remove(0), 4).unwrap();
-    let err = engine.start_session(ps.remove(0), 4).unwrap_err();
+    let s = engine
+        .start_session(GenerationRequest::new(ps.remove(0), 4))
+        .unwrap();
+    let err = engine
+        .start_session(GenerationRequest::new(ps.remove(0), 4))
+        .unwrap_err();
     assert!(err.to_string().contains("materialization slot"), "{err}");
     engine.finish(s);
     // Slot released: a new session starts cleanly.
-    let s = engine.start_session(prompts(1).remove(0), 4).unwrap();
+    let s = engine
+        .start_session(GenerationRequest::new(prompts(1).remove(0), 4))
+        .unwrap();
     engine.finish(s);
 }
 
@@ -268,5 +280,228 @@ fn memory_pressure_trace_exercises_the_rejection_path() {
     }
     let snap = server.handle.metrics();
     assert!(snap.total.peak_resident_bytes > 0);
+    server.shutdown().unwrap();
+}
+
+// ---- cancellation / deadline lifecycle (DESIGN.md §11) --------------------
+
+#[test]
+fn cancel_mid_decode_releases_slot_and_counts() {
+    // Deterministic (single-threaded) mid-decode cancellation through
+    // the batcher: after a few iterations, fire one active session's
+    // token — the batcher must retire it with FinishReason::Cancelled at
+    // the next step, its DenseSlot must return to the pool, and the
+    // tokens generated before the cancel must be kept.  This is the leak
+    // class PR-4's Drop-based slot release was built to prevent, now on
+    // the explicit cancellation path.
+    let mut engine = Engine::new(sim_config(0)).unwrap();
+    let free0 = engine.free_slots();
+    let mut b = ContinuousBatcher::new(MAX_BATCH, 16);
+    let cancel = CancelToken::new();
+    let mut ps = prompts(2);
+    b.submit(QueuedRequest {
+        request: GenerationRequest::new(ps.remove(0), MAX_NEW)
+            .cancel_token(cancel.clone()),
+        tag: 0,
+    })
+    .unwrap();
+    b.submit(QueuedRequest {
+        request: GenerationRequest::new(ps.remove(0), MAX_NEW),
+        tag: 1,
+    })
+    .unwrap();
+    for _ in 0..3 {
+        b.step(&mut engine).unwrap();
+    }
+    assert_eq!(b.active(), 2, "both sessions should still be decoding");
+    cancel.cancel();
+    b.step(&mut engine).unwrap();
+    let cancelled: Vec<_> = b.take_outcomes();
+    assert_eq!(cancelled.len(), 1, "cancel must retire exactly one session");
+    assert_eq!(cancelled[0].tag, 0);
+    assert_eq!(cancelled[0].finish, FinishReason::Cancelled);
+    assert!(!cancelled[0].tokens.is_empty(),
+            "tokens generated before the cancel are kept");
+    assert_eq!(engine.free_slots(), free0 - 1,
+               "cancelled session's slot must be back (only tag 1 holds one)");
+    assert_eq!(engine.metrics.cancelled, 1);
+    // The survivor completes untouched.
+    let rest = b.run_to_completion(&mut engine).unwrap();
+    assert_eq!(rest.len(), 1);
+    assert_eq!(rest[0].tag, 1);
+    assert_eq!(engine.free_slots(), free0, "all slots returned");
+}
+
+#[test]
+fn cancel_while_waiting_never_takes_a_slot() {
+    // A pre-cancelled request retires at pop time with no session: slot
+    // pool untouched, counted in metrics.cancelled, empty tokens.
+    let mut engine = Engine::new(sim_config(0)).unwrap();
+    let free0 = engine.free_slots();
+    let mut b = ContinuousBatcher::new(MAX_BATCH, 16);
+    let req = GenerationRequest::new(prompts(1).remove(0), MAX_NEW);
+    req.cancel.cancel();
+    b.submit(QueuedRequest { request: req, tag: 9 }).unwrap();
+    let report = b.step(&mut engine).unwrap();
+    assert_eq!(report.activated, 1, "pop-time retirement counts as leaving \
+                                     the staging queue");
+    assert_eq!(b.take_departed(), 0,
+               "a successful step reports all departures itself");
+    let out = b.take_outcomes();
+    assert_eq!(out.len(), 1);
+    assert_eq!((out[0].tag, out[0].finish), (9, FinishReason::Cancelled));
+    assert!(out[0].tokens.is_empty());
+    assert_eq!(engine.free_slots(), free0, "no slot may be consumed");
+    assert_eq!(engine.metrics.cancelled, 1);
+    assert_eq!(engine.metrics.admitted_by_priority, [0, 0, 0]);
+}
+
+#[test]
+fn expired_deadline_sheds_at_pop_without_a_slot() {
+    let mut engine = Engine::new(sim_config(0)).unwrap();
+    let free0 = engine.free_slots();
+    let mut b = ContinuousBatcher::new(MAX_BATCH, 16);
+    let mut ps = prompts(2);
+    b.submit(QueuedRequest {
+        request: GenerationRequest::new(ps.remove(0), MAX_NEW)
+            .deadline_in(std::time::Duration::ZERO),
+        tag: 0,
+    })
+    .unwrap();
+    b.submit(QueuedRequest {
+        request: GenerationRequest::new(ps.remove(0), MAX_NEW),
+        tag: 1,
+    })
+    .unwrap();
+    let outcomes = b.run_to_completion(&mut engine).unwrap();
+    assert_eq!(outcomes.len(), 2);
+    assert_eq!(outcomes[0].finish, FinishReason::DeadlineExpired);
+    assert!(outcomes[0].tokens.is_empty());
+    assert!(matches!(outcomes[1].finish,
+                     FinishReason::Eos | FinishReason::MaxTokens));
+    assert!(!outcomes[1].tokens.is_empty());
+    assert_eq!(engine.free_slots(), free0);
+    assert_eq!(engine.metrics.shed_by_priority, [1, 0, 0]);
+    assert_eq!(engine.metrics.cancelled, 0);
+}
+
+#[test]
+fn server_cancellation_releases_reservation_immediately() {
+    // The server-level leak pin: with a byte budget configured, a
+    // cancelled request's worst-case reservation and slot must be gone by
+    // the time its final response is observable — pre-submit values
+    // restored — and the freed budget must admit a follow-up request.
+    let mut cfg = sim_config(0);
+    let layout = zipcache::runtime::load_model_info("sim", "micro")
+        .unwrap()
+        .cache_layout();
+    let wc = worst_case_resident_bytes(layout, layout.seq,
+                                       cfg.quant.recompress_every);
+    cfg.memory.budget_bytes = wc; // exactly one worst-case request fits
+    let server = Server::start(cfg).unwrap();
+    assert_eq!(server.handle.shard_reserved_bytes(), vec![0]);
+
+    // Mid-decode cancel, synchronized through the token stream: after
+    // the first streamed token the session provably holds a slot.
+    // (No mid-flight reserved>0 assert here: the shard thread runs
+    // concurrently and could complete the whole request first — the
+    // reservation-while-in-flight boundary is pinned race-free by the
+    // dispatcher unit tests and budget_rejects_at_submit_time.)
+    let mut h = server
+        .handle
+        .submit_request(GenerationRequest::new(prompts(1).remove(0), MAX_NEW))
+        .unwrap();
+    let first = h.next_token();
+    assert!(first.is_some(), "no streamed token before completion");
+    h.cancel();
+    let out = h.wait().unwrap();
+    // The reservation is released before the reply is delivered
+    // (DESIGN.md §11): observable as already-zero here.
+    assert_eq!(server.handle.shard_reserved_bytes(), vec![0],
+               "reservation must be released at cancellation, not later");
+    assert_eq!(out.tokens.first().copied(), first,
+               "stream prefix must match the final tokens");
+    // Race-free assertions only: the session may have finished naturally
+    // just before the cancel landed; either way nothing may leak.
+    assert!(matches!(out.finish, FinishReason::Cancelled
+                     | FinishReason::Eos | FinishReason::MaxTokens));
+
+    // Deterministic cancelled-reason path: a pre-cancelled token.
+    let cancel = CancelToken::new();
+    cancel.cancel();
+    let out = server
+        .handle
+        .submit_request(
+            GenerationRequest::new(prompts(1).remove(0), MAX_NEW)
+                .cancel_token(cancel),
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(out.finish, FinishReason::Cancelled);
+    assert!(out.tokens.is_empty());
+    assert_eq!(server.handle.shard_reserved_bytes(), vec![0]);
+
+    // The freed budget admits a fresh worst-case request end to end.
+    let out = server
+        .handle
+        .generate(prompts(1).remove(0), MAX_NEW)
+        .unwrap();
+    assert!(!out.tokens.is_empty());
+    let snap = server.handle.metrics();
+    assert!(snap.total.cancelled >= 1);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn priority_mix_trace_exercises_cancel_and_shed_counters() {
+    // The CI smoke scenario (DESIGN.md §11): a mixed-priority trace with
+    // one pre-cancelled and one deadline-shed request.  Replay must
+    // resolve every submission, and the per-priority / finish-reason
+    // counters in MetricsSnapshot must record the mix.
+    let mut cfg = sim_config(0);
+    cfg.scheduler.shards = 2;
+    let layout = zipcache::runtime::load_model_info("sim", "micro")
+        .unwrap()
+        .cache_layout();
+    let server = Server::start(cfg).unwrap();
+    let n = 8;
+    let trace = loadgen::priority_mix_trace(layout.seq, n, 4, 11);
+    let report = loadgen::replay(&server.handle, &trace).unwrap();
+    assert_eq!(report.completed + report.rejected + report.cancelled
+                   + report.shed,
+               n);
+    assert_eq!(report.rejected, 0, "default queue depth must admit all");
+    assert_eq!(report.cancelled, 1, "exactly one pre-cancelled entry");
+    assert_eq!(report.shed, 1, "exactly one expired-deadline entry");
+    assert_eq!(report.failed, 0);
+    for (i, out) in &report.outputs {
+        match out.finish {
+            FinishReason::Cancelled => assert!(trace.entries[*i].cancelled),
+            FinishReason::DeadlineExpired => {
+                assert_eq!(trace.entries[*i].deadline_ms, Some(0.0))
+            }
+            _ => assert!(!out.tokens.is_empty()),
+        }
+    }
+    let snap = server.handle.metrics();
+    assert_eq!(snap.total.cancelled, 1);
+    assert_eq!(snap.total.shed_by_priority.iter().sum::<u64>(), 1);
+    assert_eq!(snap.total.completed_by_priority.iter().sum::<u64>(),
+               report.completed as u64);
+    // All three classes saw admissions (n = 8 cycles interactive, batch,
+    // background; the two special entries are the last two tags).
+    assert_eq!(snap.total.admitted_by_priority.iter().sum::<u64>(),
+               report.completed as u64);
+    assert!(snap.total.admitted_by_priority.iter().all(|&c| c >= 1),
+            "every priority class must see traffic: {:?}",
+            snap.total.admitted_by_priority);
+    // Per-shard counters sum to the totals (aggregation contract).
+    let by_shard: u64 = snap
+        .per_shard
+        .iter()
+        .map(|m| m.completed_by_priority.iter().sum::<u64>())
+        .sum();
+    assert_eq!(by_shard, report.completed as u64);
     server.shutdown().unwrap();
 }

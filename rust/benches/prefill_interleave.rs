@@ -1,0 +1,247 @@
+//! Chunked-prefill interleave sweep (DESIGN.md §12 and
+//! EXPERIMENTS.md §Prefill): the long-prompt-burst scenario — three
+//! Interactive decode streams plus one Background near-window prefill
+//! — driven through
+//! `ContinuousBatcher::step` at each `scheduler.prefill_chunk` setting,
+//! priced on the `simcost` roofline virtual clock.
+//!
+//! The sweep exposes the latency trade the knob buys: tighter chunks
+//! shrink the interactive token-gap p99 (the long prefill yields to
+//! decode every chunk) while stretching the background request's TTFT
+//! (its prompt crosses more scheduler iterations); `chunk = 0` is the
+//! monolithic extreme — best TTFT, worst gap.  Per-tag outputs must stay
+//! bit-identical at every point (the parity contract pinned by
+//! `tests/prefill_parity.rs`).  Emits `BENCH_prefill.json` (uploaded by
+//! the CI `prefill-interleave` job).
+//!
+//! Run: `cargo bench --bench prefill_interleave` (append `-- --smoke`
+//! for the short CI variant).  Times are virtual nanoseconds (vns) from
+//! the deterministic cost model, not wall time — identical on every
+//! host.
+
+use std::time::Instant;
+
+use zipcache::config::EngineConfig;
+use zipcache::coordinator::batcher::{ContinuousBatcher, QueuedRequest};
+use zipcache::coordinator::{Engine, GenerationRequest, Priority};
+use zipcache::simcost::{decode_cost_per_token, prefill_cost, AttnKind,
+                        AttnShape, Hardware};
+use zipcache::util::bench::Table;
+use zipcache::workload::{Task, TaskGen};
+
+const N_INTERACTIVE: usize = 3;
+const INTERACTIVE_MAX_NEW: usize = 24;
+const BG_MAX_NEW: usize = 2;
+const BG_TAG: u64 = 100;
+const SEED: u64 = 7;
+
+struct RunStats {
+    steps: usize,
+    chunks_run: u64,
+    long_len: usize,
+    gap_p99_vns: f64,
+    ttft_vns: f64,
+    vt_total_vns: f64,
+    wall_ms: f64,
+    outputs: Vec<(u64, Vec<u16>)>,
+}
+
+fn p99(mut xs: Vec<f64>) -> f64 {
+    assert!(!xs.is_empty());
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[((xs.len() - 1) as f64 * 0.99).round() as usize]
+}
+
+/// One sweep point: warm three Interactive streams up, submit the
+/// Background near-window prompt, and run to idle on the virtual clock.
+fn run_cfg(chunk: usize) -> RunStats {
+    let mut cfg = EngineConfig::load_default("sim", "micro").expect("sim config");
+    cfg.scheduler.max_batch = 8;
+    cfg.scheduler.prefill_chunk = chunk;
+    cfg.parallelism = 1;
+    cfg.seed = SEED;
+    let mut engine = Engine::new(cfg).expect("engine");
+    let lay = engine.layout();
+    let shape = AttnShape {
+        batch: 1,
+        heads: lay.heads,
+        seq: lay.seq,
+        d_head: lay.d_head,
+        elem: 2.0,
+    };
+    let hw = Hardware::a100();
+    let per_tok_prefill =
+        prefill_cost(hw, shape, AttnKind::FlashWithProbes { probe_pct: 10 })
+            / lay.seq as f64;
+    let decode = decode_cost_per_token(hw, shape, 2.8, AttnKind::Flash);
+
+    let mut b = ContinuousBatcher::new(8, 16);
+    let short = TaskGen::new(Task::Lines(3), lay.seq - INTERACTIVE_MAX_NEW);
+    for tag in 0..N_INTERACTIVE as u64 {
+        b.submit(QueuedRequest {
+            request: GenerationRequest::new(
+                short.sample(SEED + tag).prompt().to_vec(),
+                INTERACTIVE_MAX_NEW,
+            )
+            .priority(Priority::Interactive),
+            tag,
+        })
+        .expect("queue sized to the scenario");
+    }
+
+    // Virtual clock (same pricing as tests/serving_pool.rs): every
+    // iteration costs its decode-artifact executions plus the prompt
+    // tokens its prefill chunks covered; tokens emitted in an iteration
+    // are stamped with the end-of-step time.
+    let t0 = Instant::now();
+    let mut vt = 0.0f64;
+    let mut steps = 0usize;
+    let mut stamps: Vec<Vec<f64>> = vec![Vec::new(); N_INTERACTIVE];
+    let mut ttft: Option<f64> = None;
+    let mut step = |b: &mut ContinuousBatcher, engine: &mut Engine,
+                    vt: &mut f64, stamps: &mut Vec<Vec<f64>>,
+                    ttft: &mut Option<f64>, vt_submit: f64| {
+        let r = b.step(engine).expect("step");
+        *vt += r.decoded as f64 * decode
+            + r.prefill_tokens as f64 * per_tok_prefill;
+        for (tag, _tok) in b.drain_emitted() {
+            if (tag as usize) < N_INTERACTIVE {
+                stamps[tag as usize].push(*vt);
+            } else if tag == BG_TAG && ttft.is_none() {
+                *ttft = Some(*vt - vt_submit);
+            }
+        }
+    };
+
+    // Warm up until every Interactive session is streaming tokens.
+    let mut guard = 0;
+    while stamps.iter().any(|s| s.is_empty()) {
+        step(&mut b, &mut engine, &mut vt, &mut stamps, &mut ttft, 0.0);
+        steps += 1;
+        guard += 1;
+        assert!(guard < 256, "interactive sessions never started decoding");
+    }
+
+    // The burst: one Background near-window prompt, sized like
+    // `loadgen::long_prompt_burst_trace` (the sim-window analogue of an
+    // 8k-token production prefill).
+    let long_lines = (lay.seq.saturating_sub(BG_MAX_NEW + 5) / 6).clamp(1, 100);
+    let long: Vec<u16> = TaskGen::new(Task::Lines(long_lines), lay.seq - BG_MAX_NEW)
+        .sample(SEED ^ 0xB00)
+        .prompt()
+        .to_vec();
+    let long_len = long.len();
+    let vt_submit = vt;
+    b.submit(QueuedRequest {
+        request: GenerationRequest::new(long, BG_MAX_NEW)
+            .priority(Priority::Background),
+        tag: BG_TAG,
+    })
+    .expect("background submit");
+    while !b.idle() {
+        step(&mut b, &mut engine, &mut vt, &mut stamps, &mut ttft, vt_submit);
+        steps += 1;
+    }
+    let wall = t0.elapsed();
+    let outs = b.take_outcomes();
+    assert_eq!(outs.len(), N_INTERACTIVE + 1, "requests dropped");
+    assert!(outs.iter().all(|o| o.finish.is_natural()));
+    let mut outputs: Vec<(u64, Vec<u16>)> =
+        outs.into_iter().map(|o| (o.tag, o.tokens)).collect();
+    outputs.sort_by_key(|(tag, _)| *tag);
+
+    let gaps: Vec<f64> = stamps
+        .iter()
+        .flat_map(|s| s.windows(2).map(|w| w[1] - w[0]))
+        .collect();
+    RunStats {
+        steps,
+        chunks_run: engine.metrics.prefill_chunks,
+        long_len,
+        gap_p99_vns: p99(gaps) * 1e9,
+        ttft_vns: ttft.expect("background request emitted no token") * 1e9,
+        vt_total_vns: vt * 1e9,
+        wall_ms: wall.as_secs_f64() * 1000.0,
+        outputs,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let chunks: &[usize] = if smoke { &[0, 4] } else { &[0, 1, 2, 4, 8, 16] };
+
+    let mut table = Table::new(&[
+        "chunk", "steps", "chunks run", "gap p99 vns", "bg TTFT vns",
+        "vt total vns", "wall ms",
+    ]);
+    let mut rows = Vec::new();
+    let mut mono: Option<RunStats> = None;
+
+    for &chunk in chunks {
+        let st = run_cfg(chunk);
+        match &mono {
+            None => {
+                assert_eq!(chunk, 0, "sweep must lead with the monolithic point");
+                assert_eq!(st.chunks_run, 0, "chunk=0 ran chunked entries");
+            }
+            Some(base) => {
+                // The parity contract rides along: chunking is invisible
+                // to generation.
+                assert_eq!(
+                    base.outputs, st.outputs,
+                    "chunk={chunk} changed per-tag outputs vs monolithic"
+                );
+                // And the trade is directional on the deterministic
+                // clock: chunking tightens the interactive gap and pays
+                // for it in background TTFT.
+                assert!(
+                    st.gap_p99_vns < base.gap_p99_vns,
+                    "chunk={chunk}: gap p99 {:.3} vns not below monolithic {:.3}",
+                    st.gap_p99_vns, base.gap_p99_vns
+                );
+                assert!(
+                    st.ttft_vns >= base.ttft_vns,
+                    "chunk={chunk}: TTFT {:.3} vns below monolithic {:.3}",
+                    st.ttft_vns, base.ttft_vns
+                );
+            }
+        }
+        table.row(&[
+            chunk.to_string(),
+            st.steps.to_string(),
+            st.chunks_run.to_string(),
+            format!("{:.3}", st.gap_p99_vns),
+            format!("{:.3}", st.ttft_vns),
+            format!("{:.3}", st.vt_total_vns),
+            format!("{:.2}", st.wall_ms),
+        ]);
+        rows.push(format!(
+            "    {{\"prefill_chunk\": {chunk}, \"steps\": {}, \
+             \"prefill_chunks_run\": {}, \"long_prompt_tokens\": {}, \
+             \"interactive_gap_p99_vns\": {:.3}, \"bg_ttft_vns\": {:.3}, \
+             \"vt_total_vns\": {:.3}, \"wall_ms\": {:.2}}}",
+            st.steps, st.chunks_run, st.long_len, st.gap_p99_vns,
+            st.ttft_vns, st.vt_total_vns, st.wall_ms,
+        ));
+        if mono.is_none() {
+            mono = Some(st);
+        }
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"prefill_interleave\",\n  \"model\": \"micro\",\n  \
+         \"smoke\": {smoke},\n  \"n_interactive\": {N_INTERACTIVE},\n  \
+         \"interactive_max_new\": {INTERACTIVE_MAX_NEW},\n  \
+         \"rows\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_prefill.json", &json).unwrap();
+
+    println!("== chunked prefill interleave (sim backend, micro, virtual clock) ==");
+    table.print();
+    print!("{json}");
+    println!(
+        "\nOK: outputs bit-identical across chunk sizes; tighter chunks \
+         shrink interactive gap p99 and stretch background TTFT"
+    );
+}

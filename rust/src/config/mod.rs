@@ -100,11 +100,18 @@ pub struct SchedulerConfig {
     /// compression worker pool, and a continuous batcher (DESIGN.md §8).
     /// `0` = one shard per available core.
     pub shards: usize,
+    /// Prefill chunk size in prompt tokens (DESIGN.md §12): the batcher
+    /// interleaves chunks of this size with decode iterations instead of
+    /// running the whole prompt at admission.  `0` = monolithic prefill
+    /// (today's behaviour bit-for-bit; also the forced mode on backends
+    /// without the chunked entries).
+    pub prefill_chunk: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { max_batch: 8, queue_depth: 256, shards: 1 }
+        SchedulerConfig { max_batch: 8, queue_depth: 256, shards: 1,
+                          prefill_chunk: 0 }
     }
 }
 
@@ -180,6 +187,7 @@ impl EngineConfig {
                 max_batch: c.get_usize("scheduler.max_batch", 8)?,
                 queue_depth: c.get_usize("scheduler.queue_depth", 256)?,
                 shards: c.get_usize("scheduler.shards", 1)?,
+                prefill_chunk: c.get_usize("scheduler.prefill_chunk", 0)?,
             },
             memory: MemoryConfig {
                 slots: c.get_usize("memory.slots", 0)?,
@@ -283,6 +291,17 @@ max_batch = 4
         assert_eq!(c.scheduler.shards, 4);
         let d = EngineConfig::load_default("sim", "micro").unwrap();
         assert_eq!(d.scheduler.shards, 1);
+    }
+
+    #[test]
+    fn prefill_chunk_from_file_and_default() {
+        let text = "model = \"tiny\"\n[scheduler]\nprefill_chunk = 16\n";
+        let path = std::env::temp_dir().join("zipcache_cfg_chunk_test.conf");
+        std::fs::write(&path, text).unwrap();
+        let c = EngineConfig::from_file(&path).unwrap();
+        assert_eq!(c.scheduler.prefill_chunk, 16);
+        let d = EngineConfig::load_default("sim", "micro").unwrap();
+        assert_eq!(d.scheduler.prefill_chunk, 0); // 0 = monolithic
     }
 
     #[test]

@@ -66,6 +66,16 @@ pub struct QueuedRequest {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StepReport {
     pub activated: usize,
+    /// Decode-artifact executions this iteration (one per scheduled
+    /// decode-phase session, whether or not a token was emitted).
+    pub decoded: usize,
+    /// Prefill chunks run this iteration (a monolithic prefill at
+    /// admission counts as one).  Together with `prefill_tokens` and
+    /// `decoded` this lets a deterministic virtual clock price the
+    /// iteration from `simcost` instead of wall time (DESIGN.md §12).
+    pub prefill_chunks: usize,
+    /// Prompt tokens covered by those chunks.
+    pub prefill_tokens: usize,
 }
 
 /// Scheduling view of one active session, handed to the [`ParkPolicy`].
@@ -239,9 +249,20 @@ pub struct ContinuousBatcher {
     departed: usize,
     /// Sessions parked to free a slot (admission or schedule-in).
     preempted: u64,
+    /// Test/bench hook (DESIGN.md §12): run every remaining prefill
+    /// chunk of a scheduled Prefilling session in one iteration,
+    /// ignoring scheduled decode traffic — the starvation mode the
+    /// fairness tests assert the default policy avoids.
+    greedy_prefill: bool,
     // Reusable scheduling scratch.
     sched: Vec<usize>,
     metas: Vec<SessionMeta>,
+    /// Active-list index behind each entry of `metas` (Prefilling
+    /// sessions are excluded from the policy's view, so meta index !=
+    /// active index under chunked prefill).
+    meta_idx: Vec<usize>,
+    /// Policy output scratch (indices into `metas`).
+    picked: Vec<usize>,
 }
 
 impl ContinuousBatcher {
@@ -264,9 +285,22 @@ impl ContinuousBatcher {
             step_counter: 0,
             departed: 0,
             preempted: 0,
+            greedy_prefill: false,
             sched: Vec::new(),
             metas: Vec::new(),
+            meta_idx: Vec::new(),
+            picked: Vec::new(),
         }
+    }
+
+    /// Force a scheduled Prefilling session to take *all* its remaining
+    /// chunks in one iteration (DESIGN.md §12).  Default off: a
+    /// Prefilling session yields after one chunk whenever a decode-phase
+    /// session of equal or higher urgency is scheduled.  The fairness
+    /// tests flip this on to demonstrate the latency bound trips when
+    /// prefill is allowed to starve decode.
+    pub fn force_greedy_prefill(&mut self, on: bool) {
+        self.greedy_prefill = on;
     }
 
     /// Admit a request; `Err` = backpressure (queue full).
@@ -383,10 +417,16 @@ impl ContinuousBatcher {
         }
 
         // Admission, in priority order: pop the lowest
-        // `(Priority::rank, tag)` while decode slots remain (prefill
-        // happens at start_session, parking a victim when the pool is
-        // exhausted).  A cancel firing between the sweep above and the
-        // pop is caught by the next iteration's active-session sweep.
+        // `(Priority::rank, tag)` while decode slots remain, parking a
+        // victim when the pool is exhausted.  With chunked prefill the
+        // admitted session enters the Prefilling phase and its prompt is
+        // processed by the chunk loop below, interleaved with decode;
+        // with `prefill_chunk = 0` the whole prefill runs here, exactly
+        // as before (DESIGN.md §12).  A cancel firing between the sweep
+        // above and the pop is caught by the next iteration's
+        // active-session sweep.
+        let mut prefill_chunks = 0usize;
+        let mut prefill_tokens = 0usize;
         while self.active.len() < self.max_batch {
             let Some(best) = self.best_waiting() else { break };
             if engine.free_slots() == 0 && !self.park_one(engine) {
@@ -395,8 +435,14 @@ impl ContinuousBatcher {
             let q = self.queue.swap_remove(best).req;
             let tag = q.tag;
             self.departed += 1;
-            let mut sess = engine.start_session(q.request)?;
+            let mut sess = engine.begin_session(q.request)?;
             sess.tag = tag;
+            if !sess.is_prefilling() {
+                // Monolithic prefill just ran: one all-covering "chunk"
+                // in the report's work accounting.
+                prefill_chunks += 1;
+                prefill_tokens += sess.prompt.len();
+            }
             self.active.push(Active { sess, last_step: self.step_counter });
         }
 
@@ -417,19 +463,41 @@ impl ContinuousBatcher {
                 engine.unpark(&mut self.active[i].sess)?;
             }
         } else {
+            // Prefilling sessions pin their dense slots (no compressed
+            // snapshot to park to — DESIGN.md §12): they are always
+            // scheduled, and the park policy decides over the remaining
+            // sessions and slots only.
             self.metas.clear();
-            self.metas.extend(self.active.iter().map(|a| SessionMeta {
-                session_id: a.sess.id,
-                last_step: a.last_step,
-                resident: !a.sess.is_parked(),
-                priority: a.sess.priority,
-            }));
-            self.policy.schedule(&self.metas, n_run, &mut self.sched);
+            self.meta_idx.clear();
+            for (i, a) in self.active.iter().enumerate() {
+                if a.sess.is_prefilling() {
+                    self.sched.push(i);
+                } else {
+                    self.meta_idx.push(i);
+                    self.metas.push(SessionMeta {
+                        session_id: a.sess.id,
+                        last_step: a.last_step,
+                        resident: !a.sess.is_parked(),
+                        priority: a.sess.priority,
+                    });
+                }
+            }
+            let n_decode_run = engine
+                .slot_capacity()
+                .saturating_sub(self.sched.len())
+                .min(self.metas.len());
+            self.picked.clear();
+            self.policy.schedule(&self.metas, n_decode_run, &mut self.picked);
+            for k in 0..self.picked.len() {
+                self.sched.push(self.meta_idx[self.picked[k]]);
+            }
             // Decode in active order regardless of policy order (outputs
             // are interleaving-independent; this keeps traces readable).
             self.sched.sort_unstable();
             // Park every resident session not scheduled in — exactly the
             // slots the scheduled parked sessions are about to take.
+            // (Prefilling sessions are all in `sched`, so they are never
+            // selected as victims here.)
             for i in 0..self.active.len() {
                 if self.sched.binary_search(&i).is_err()
                     && !self.active[i].sess.is_parked()
@@ -443,20 +511,73 @@ impl ContinuousBatcher {
             }
         }
 
+        // Chunked prefill (DESIGN.md §12): every scheduled Prefilling
+        // session advances at least one chunk per iteration (so prefill
+        // can never be starved), and yields after that one chunk
+        // whenever a decode-phase session of equal or higher urgency is
+        // scheduled — Background prefill yields to Interactive decode.
+        // With no such traffic (or under the greedy test hook) it bursts
+        // every remaining chunk now; a session finishing its last chunk
+        // falls through to the decode loop in this same iteration, which
+        // keeps `prefill_chunk >= prompt_len` step-aligned with the
+        // monolithic path.
+        for k in 0..self.sched.len() {
+            let i = self.sched[k];
+            if !self.active[i].sess.is_prefilling() {
+                continue;
+            }
+            let my_rank = self.active[i].sess.priority.rank();
+            let yields = !self.greedy_prefill
+                && self.sched.iter().any(|&j| {
+                    let a = &self.active[j];
+                    j != i
+                        && !a.sess.is_prefilling()
+                        && !a.sess.is_done()
+                        && a.sess.priority.rank() <= my_rank
+                });
+            loop {
+                let n = self.active[i].sess.prompt.len();
+                let covered = {
+                    let p = self.active[i].sess.prefill.as_ref()
+                        .expect("prefilling checked above");
+                    (n - p.next_chunk * p.chunk).min(p.chunk)
+                };
+                let finished = engine.prefill_chunk(&mut self.active[i].sess)?;
+                prefill_chunks += 1;
+                prefill_tokens += covered;
+                if finished || yields {
+                    break;
+                }
+            }
+            self.active[i].last_step = self.step_counter;
+        }
+
         // Iteration-level decode across the scheduled set; every emitted
         // token is streamed (tag-keyed) for incremental delivery.
+        // Sessions still Prefilling after their chunk allowance skip
+        // decode this iteration.
+        let mut decoded = 0usize;
         for &i in &self.sched {
             let a = &mut self.active[i];
+            if a.sess.is_prefilling() {
+                continue;
+            }
             if let Some(tok) = engine.decode_step(&mut a.sess)? {
                 self.emitted.push((a.sess.tag, tok));
             }
+            decoded += 1;
             a.last_step = self.step_counter;
         }
 
         // Retire finished sessions.
         self.retire_finished(engine);
         engine.metrics.note_resident(self.active_bytes());
-        Ok(StepReport { activated: std::mem::take(&mut self.departed) })
+        Ok(StepReport {
+            activated: std::mem::take(&mut self.departed),
+            decoded,
+            prefill_chunks,
+            prefill_tokens,
+        })
     }
 
     /// Departures (queue exits) not yet reported through a
@@ -483,10 +604,15 @@ impl ContinuousBatcher {
 
     /// Park one resident session (the policy's last pick survives
     /// longest: we keep the `residents - 1` sessions it would schedule
-    /// and park the leftover).  Returns false when nothing is parkable.
+    /// and park the leftover).  Returns false when nothing is parkable
+    /// — including when every resident is mid-prefill (a Prefilling
+    /// session pins its slot; DESIGN.md §12).
     fn park_one(&mut self, engine: &mut Engine) -> bool {
         let residents: Vec<usize> = (0..self.active.len())
-            .filter(|&i| !self.active[i].sess.is_parked())
+            .filter(|&i| {
+                !self.active[i].sess.is_parked()
+                    && !self.active[i].sess.is_prefilling()
+            })
             .collect();
         if residents.is_empty() {
             return false;

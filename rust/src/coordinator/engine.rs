@@ -20,8 +20,10 @@ use crate::saliency::{select_probes, ProbeStrategy};
 use crate::util::pool::WorkerPool;
 use crate::Result;
 
+use crate::runtime::ExecScratch;
+
 use super::request::{FinishReason, GenerationRequest, GenerationResponse};
-use super::session::{PolicyOverride, Residency, Session};
+use super::session::{PolicyOverride, PrefillProgress, Residency, Session};
 
 /// The serving engine for one model config + one compression policy.
 pub struct Engine {
@@ -157,13 +159,279 @@ impl Engine {
         }
     }
 
+    /// Effective prefill chunk size (DESIGN.md §12): the
+    /// `scheduler.prefill_chunk` knob when the backend provides the
+    /// chunked entries, else 0 — monolithic prefill, today's behavior
+    /// bit-for-bit.
+    pub fn prefill_chunk_size(&self) -> usize {
+        if self.rt.supports_chunked_prefill() {
+            self.cfg.scheduler.prefill_chunk
+        } else {
+            0
+        }
+    }
+
     /// Alg. 2: prefill, saliency, compression; returns a live session
     /// holding a dense slot checked out of the pool (DESIGN.md §10).
     /// Fails when the pool is exhausted — schedulers park a session
     /// first ([`Engine::park`]).  Request validation goes through the
     /// shared [`GenerationRequest::validate`] contract (DESIGN.md §11),
     /// the same check `ServerHandle` applies at submit time.
+    ///
+    /// With chunked prefill enabled this runs every chunk back-to-back —
+    /// the same work as [`Engine::begin_session`] +
+    /// [`Engine::prefill_chunk`] to completion, for callers that do not
+    /// interleave (bare-engine loops, benches).  An error mid-prefill
+    /// drops the session; its dense slot returns to the pool via the
+    /// [`DenseSlot`](crate::kvcache::DenseSlot) drop path.
     pub fn start_session(&mut self, req: GenerationRequest) -> Result<Session> {
+        let mut s = self.begin_session(req)?;
+        while s.is_prefilling() {
+            self.prefill_chunk(&mut s)?;
+        }
+        Ok(s)
+    }
+
+    /// Admit a session without necessarily finishing its prefill
+    /// (DESIGN.md §12).  With `prefill_chunk = 0` (or a backend without
+    /// the chunked entries) this completes the monolithic prefill and
+    /// returns a decode-ready session — exactly the historical
+    /// `start_session` body.  Otherwise it acquires the dense slot,
+    /// stages the chunked-prefill state, and returns a session in the
+    /// *Prefilling* phase; the scheduler then drives
+    /// [`Engine::prefill_chunk`] between decode iterations.
+    pub fn begin_session(&mut self, req: GenerationRequest) -> Result<Session> {
+        let chunk = self.prefill_chunk_size();
+        if chunk == 0 {
+            return self.start_session_monolithic(req);
+        }
+        let info = self.rt.model_info().clone();
+        let layout = info.cache_layout();
+        req.validate(info.max_seq)?;
+        let (prompt, max_new) = (&req.prompt, req.max_new);
+
+        let id = self.next_session_id;
+        self.next_session_id += 1;
+        // Same content-derived seed as the monolithic path (DESIGN.md §8).
+        let seed = request_seed(req.seed.unwrap_or(self.cfg.seed), prompt, max_new);
+
+        let n = prompt.len();
+        let smax = info.max_seq;
+        let mut tokens = vec![0i32; smax];
+        for (i, &t) in prompt.iter().enumerate() {
+            tokens[i] = t as i32;
+        }
+        let full_scores = self.policy.requires_full_scores();
+        let probes = if full_scores {
+            Vec::new()
+        } else {
+            // Probe selection is over the *full* prompt before any chunk
+            // runs — identical draws to the monolithic path, padded and
+            // sorted the same way.
+            let probes = select_probes(ProbeStrategy::RandomRecent, n,
+                                       self.cfg.quant.probe_ratio, None, seed);
+            let pc = info.probe_count;
+            let mut pidx: Vec<i32> = probes.iter().map(|&i| i as i32).collect();
+            while pidx.len() < pc {
+                pidx.push((n - 1) as i32); // repeat last token (harmless dup)
+            }
+            pidx.truncate(pc);
+            pidx.sort_unstable();
+            pidx
+        };
+
+        // The slot is acquired up front: chunk rows scatter straight into
+        // it (an abandoned session's slot returns to the pool on drop).
+        let slot = self.slots.acquire().ok_or_else(|| {
+            anyhow::anyhow!(
+                "no free materialization slot ({} in use; park a session first)",
+                self.slots.capacity()
+            )
+        })?;
+        let mut s = Session::new(id, req, layout,
+                                 self.cfg.quant.recompress_every, seed, slot);
+        s.prefill = Some(Box::new(PrefillProgress {
+            next_chunk: 0,
+            chunk,
+            n_chunks: (n + chunk - 1) / chunk,
+            tokens,
+            valid: vec![0f32; smax],
+            probes,
+            full_scores,
+            sal: vec![0f32; info.n_layers * smax],
+            us: 0,
+            exec: ExecScratch::default(),
+        }));
+        if let Some(q) = &s.quant {
+            let mut quant = self.cfg.quant.clone();
+            quant.bits_high = q.bits_high;
+            quant.bits_low = q.bits_low;
+            quant.saliency_ratio = q.saliency_ratio;
+            s.policy_override =
+                Some(PolicyOverride(build_policy(self.cfg.policy, &quant)));
+        }
+        self.metrics.admitted_by_priority[s.priority.rank()] += 1;
+        Ok(s)
+    }
+
+    /// Run the next prefill chunk of a Prefilling session (DESIGN.md
+    /// §12): KV rows for `[start, end)` scatter into the pinned dense
+    /// slot, the saliency accumulator advances through the runtime's
+    /// running-accumulator chunk entry (preserving the monolithic f32
+    /// addition order), and the *final* chunk finalizes saliency, runs
+    /// the one prefill compression pass, and moves the session to the
+    /// decode phase — bit-identically to the monolithic epilogue.
+    /// Returns `true` when the session left the Prefilling phase.
+    pub fn prefill_chunk(&mut self, s: &mut Session) -> Result<bool> {
+        let mut p = s.prefill.take().ok_or_else(|| {
+            anyhow::anyhow!("prefill_chunk on session {} not in the \
+                             Prefilling phase", s.id)
+        })?;
+        let (smax, n_layers) = {
+            let info = self.rt.model_info();
+            (info.max_seq, info.n_layers)
+        };
+        let layout = self.layout();
+        let n = s.prompt.len();
+        let t0 = Instant::now();
+
+        let start = p.next_chunk * p.chunk;
+        let end = (start + p.chunk).min(n);
+        debug_assert!(start < n, "prefill_chunk past the prompt");
+        // Switch this chunk's rows live *before* the call: an attention
+        // row for query q < end reads valid columns <= q only, so the
+        // prefix mask yields rows bit-identical to the monolithic pass.
+        for v in p.valid[start..end].iter_mut() {
+            *v = 1.0;
+        }
+
+        let entry = self.rt.entry(if p.full_scores {
+            "prefill_chunk_full"
+        } else {
+            "prefill_chunk_flash"
+        });
+        let start_in = [start as i32];
+        let end_in = [end as i32];
+        let win_dims = [smax];
+        let sal_dims = [n_layers, smax];
+        let probe_dims = [p.probes.len()];
+        {
+            let PrefillProgress { tokens, valid, probes, sal, exec,
+                                  full_scores, .. } = &mut *p;
+            let mut inputs = vec![
+                TensorView::i32(tokens, &win_dims),
+                TensorView::f32(valid, &win_dims),
+                TensorView::scalar_i32(&start_in),
+                TensorView::scalar_i32(&end_in),
+            ];
+            if !*full_scores {
+                inputs.push(TensorView::i32(probes, &probe_dims));
+            }
+            inputs.push(TensorView::f32(sal, &sal_dims));
+            self.rt.execute_into(&entry, &inputs, exec)?;
+        }
+
+        // outputs: k/v chunk rows [L, H, end-start, dh] + updated
+        // accumulator.  Scatter the rows into the pinned slot (per-plane
+        // contiguous) and advance the accumulator.
+        let clen = end - start;
+        {
+            let slot = s.slot_mut();
+            let (dh, heads, layers) = (layout.d_head, layout.heads, layout.layers);
+            let kc = p.exec.out_f32(0);
+            let vc = p.exec.out_f32(1);
+            for hi in 0..layers * heads {
+                let src = hi * clen * dh;
+                let dst = hi * smax * dh + start * dh;
+                slot.kbuf[dst..dst + clen * dh]
+                    .copy_from_slice(&kc[src..src + clen * dh]);
+                slot.vbuf[dst..dst + clen * dh]
+                    .copy_from_slice(&vc[src..src + clen * dh]);
+            }
+        }
+        p.sal.copy_from_slice(p.exec.out_f32(2));
+        p.next_chunk += 1;
+
+        let finished = end >= n;
+        if !finished {
+            let us = t0.elapsed().as_micros() as u64;
+            p.us += us;
+            self.metrics.prefill_chunk.record_us(us);
+            self.metrics.prefill_chunks += 1;
+            s.prefill = Some(p);
+            return Ok(false);
+        }
+
+        // Final chunk: normalize the completed accumulator through the
+        // finalize entry (the exact division loop the monolithic entries
+        // run), then the single prefill compression pass over the exact
+        // dense rows — per-chunk compression would quantize early chunks
+        // against partial-prefix saliency and re-quantize already
+        // dequantized rows, breaking the §9 parity argument
+        // (DESIGN.md §12).
+        let fin = self.rt.entry(if p.full_scores {
+            "prefill_fin_full"
+        } else {
+            "prefill_fin_flash"
+        });
+        let n_in = [n as i32];
+        {
+            let PrefillProgress { probes, sal, exec, full_scores, .. } = &mut *p;
+            let inputs = if *full_scores {
+                vec![TensorView::f32(sal, &sal_dims),
+                     TensorView::scalar_i32(&n_in)]
+            } else {
+                vec![TensorView::f32(sal, &sal_dims),
+                     TensorView::i32(probes, &probe_dims)]
+            };
+            self.rt.execute_into(&fin, &inputs, exec)?;
+        }
+        let mut nrm = Vec::new();
+        layer_mean_into(p.exec.out_f32(0), n_layers, smax, &mut nrm);
+        s.norm_saliency = nrm;
+        s.acc_saliency = if p.full_scores {
+            let mut acc = Vec::new();
+            layer_mean_into(&p.sal, n_layers, smax, &mut acc);
+            acc
+        } else {
+            Vec::new()
+        };
+
+        // Identical epilogue to the monolithic path: compress rows
+        // [0, n-1) (the prompt tail is withheld so the first generated
+        // token reads quantized state), zero the dead tail, and re-feed
+        // the final prompt token through the decode artifact.
+        self.compress_session(s, n - 1);
+        let (dh, heads) = (layout.d_head, layout.heads);
+        let tail = (smax - (n - 1)) * dh;
+        {
+            let slot = s.slot_mut();
+            for hi in 0..layout.layers * heads {
+                let o = hi * smax * dh + (n - 1) * dh;
+                slot.kbuf[o..o + tail].fill(0.0);
+                slot.vbuf[o..o + tail].fill(0.0);
+            }
+        }
+        s.pos = n - 1;
+        s.next_token = s.prompt[n - 1];
+        s.prompt_tail_pending = true;
+        let us = t0.elapsed().as_micros() as u64;
+        self.metrics.prefill_chunk.record_us(us);
+        self.metrics.prefill_chunks += 1;
+        // Session-level total = sum of *active* chunk spans, excluding
+        // inter-chunk scheduling gaps — comparable to the monolithic
+        // histogram entry (both are pure prefill work).
+        s.prefill_us = p.us + us;
+        self.metrics.prefill.record_us(s.prefill_us);
+        Ok(true)
+    }
+
+    /// The historical monolithic prefill: one runtime call covers the
+    /// whole prompt.  This is the `prefill_chunk = 0` path and the only
+    /// path on backends without the chunked entries; it must stay
+    /// bit-for-bit identical to the pre-chunking behavior.
+    fn start_session_monolithic(&mut self, req: GenerationRequest)
+                                -> Result<Session> {
         let info = self.rt.model_info().clone();
         let layout = info.cache_layout();
         req.validate(info.max_seq)?;
@@ -313,6 +581,9 @@ impl Engine {
         }
         anyhow::ensure!(!s.is_parked(),
                         "decode_step on a parked session (unpark first)");
+        anyhow::ensure!(!s.is_prefilling(),
+                        "decode_step on a prefilling session (run \
+                         prefill_chunk to completion first)");
         // Copy the scalar hyper-parameters out instead of cloning
         // ModelInfo (its `trained` field owns a heap string).
         let (layout, smax, n_layers) = {
@@ -489,6 +760,12 @@ impl Engine {
         if s.is_parked() {
             return;
         }
+        // A Prefilling session pins its slot: its compressed snapshot
+        // does not exist yet and its dense rows are the only copy of the
+        // chunks already run, so parking it would have to discard work.
+        // Schedulers exclude Prefilling sessions from victim selection
+        // (DESIGN.md §12).
+        assert!(!s.is_prefilling(), "cannot park a prefilling session");
         // The snapshot always exists after start_session; a session that
         // somehow never compressed falls back to a fresh compression
         // through the existing scratch path.

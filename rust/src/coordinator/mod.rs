@@ -25,4 +25,4 @@ pub use batcher::{ContinuousBatcher, LruByLastStep, ParkPolicy, PriorityPark,
 pub use engine::{merge_streaming_saliency, request_seed, Engine};
 pub use request::{CancelToken, FinishReason, GenerationOutput, GenerationRequest,
                   GenerationResponse, Priority, QuantOverride};
-pub use session::{Residency, Session, SessionScratch};
+pub use session::{PrefillProgress, Residency, Session, SessionScratch};

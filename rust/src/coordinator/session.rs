@@ -49,6 +49,44 @@ pub struct SessionScratch {
     pub tail_spare: (Vec<f32>, Vec<f32>),
 }
 
+/// In-flight chunked-prefill state (DESIGN.md §12): everything
+/// `Engine::prefill_chunk` needs to run the next chunk through the
+/// runtime's `prefill_chunk_*` entries.  Exists only between
+/// `Engine::begin_session` and the final chunk; a `Session` holding one
+/// is in the *Prefilling* phase — it pins its dense slot (the chunk rows
+/// scatter straight into it) but cannot decode, park, or compress until
+/// the phase ends.  Boxed in the session so the steady-state decode
+/// struct stays small.
+#[derive(Debug)]
+pub struct PrefillProgress {
+    /// Index of the next chunk to run (0-based).
+    pub next_chunk: usize,
+    /// Chunk size in prompt tokens (>= 1).
+    pub chunk: usize,
+    /// Total chunks = ceil(prompt_len / chunk).
+    pub n_chunks: usize,
+    /// Prompt tokens padded to the window, as the runtime consumes them.
+    pub tokens: Vec<i32>,
+    /// Validity mask, switched on prefix-by-prefix as chunks complete.
+    pub valid: Vec<f32>,
+    /// Sorted, padded probe indices (flash path; empty on the full path).
+    pub probes: Vec<i32>,
+    /// True when the saliency source is the full query sweep
+    /// (`policy.requires_full_scores()`), false for the probe
+    /// approximation.
+    pub full_scores: bool,
+    /// Running saliency accumulator `[layers, smax]`, threaded through
+    /// the chunk entries so the f32 addition order matches the monolithic
+    /// pass (DESIGN.md §12).
+    pub sal: Vec<f32>,
+    /// Active prefill time accumulated across completed chunks (µs) —
+    /// the session-level `prefill` total excludes inter-chunk queueing.
+    pub us: u64,
+    /// Chunk-entry execution scratch (reused across this session's
+    /// chunks; dropped with the phase).
+    pub exec: ExecScratch,
+}
+
 /// Where a session's dense working set currently lives (DESIGN.md §10).
 #[derive(Debug)]
 pub enum Residency {
@@ -99,6 +137,10 @@ pub struct Session {
     pub layout: CacheLayout,
     /// Dense slot or parked tail (DESIGN.md §10).
     pub residency: Residency,
+    /// Chunked-prefill phase state: `Some` from `Engine::begin_session`
+    /// until the final chunk completes (DESIGN.md §12).  Monolithic
+    /// prefill (`scheduler.prefill_chunk = 0`) never sets it.
+    pub prefill: Option<Box<PrefillProgress>>,
     /// Latest compressed snapshot — the session's resident cache form,
     /// retained from the last compression point (prefill or streaming
     /// recompression) instead of being rebuilt and discarded.
@@ -154,6 +196,7 @@ impl Session {
             max_new,
             layout,
             residency: Residency::Dense(slot),
+            prefill: None,
             compressed: None,
             classes: Vec::new(),
             norm_saliency: Vec::new(),
@@ -183,6 +226,13 @@ impl Session {
     /// Parked out of its materialization slot?
     pub fn is_parked(&self) -> bool {
         matches!(self.residency, Residency::Parked { .. })
+    }
+
+    /// Still in the chunked-prefill phase (DESIGN.md §12)?  Prefilling
+    /// sessions pin their dense slot and are excluded from decode
+    /// scheduling and park-victim selection until the last chunk lands.
+    pub fn is_prefilling(&self) -> bool {
+        self.prefill.is_some()
     }
 
     /// The checked-out dense slot; panics when the session is parked

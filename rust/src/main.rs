@@ -38,13 +38,16 @@ fn main() -> Result<()> {
           "dense materialization slots per shard (0 = max_batch)")
     .flag("memory-budget", "0",
           "per-shard worst-case byte budget for admission (0 = unlimited)")
+    .flag("prefill-chunk", "0",
+          "prefill chunk size in tokens (0 = monolithic single pass)")
     .flag("config", "", "optional key=value config file (overrides flags)")
     .flag("task", "gsm", "gsm | code | linesN (e.g. lines20)")
     .flag("samples", "50", "eval: number of samples")
     .flag("max-new", "4", "decode budget per request")
     .flag("requests", "16", "serve: number of requests")
     .flag("rate", "8.0", "serve: arrival rate (req/s)")
-    .flag("trace", "poisson", "serve: poisson | memory-pressure | priority-mix")
+    .flag("trace", "poisson",
+          "serve: poisson | memory-pressure | priority-mix | long-prompt-burst")
     .flag("seed", "0", "base seed")
     .parse()?;
 
@@ -87,6 +90,7 @@ fn build_config(args: &Args) -> Result<EngineConfig> {
     cfg.scheduler.shards = args.get_usize("shards")?;
     cfg.memory.slots = args.get_usize("memory-slots")?;
     cfg.memory.budget_bytes = args.get_usize("memory-budget")?;
+    cfg.scheduler.prefill_chunk = args.get_usize("prefill-chunk")?;
     cfg.seed = args.get_u64("seed")?;
     cfg.validate()?;
     Ok(cfg)
@@ -178,8 +182,11 @@ fn serve(cfg: EngineConfig, task: Task, requests: usize, rate: f64, max_new: usi
                                                             cfg.seed),
         "priority-mix" => loadgen::priority_mix_trace(info.max_seq, requests,
                                                       max_new, cfg.seed),
+        "long-prompt-burst" => loadgen::long_prompt_burst_trace(
+            info.max_seq, requests, max_new, cfg.seed),
         other => anyhow::bail!(
-            "unknown trace '{other}' (poisson|memory-pressure|priority-mix)"
+            "unknown trace '{other}' \
+             (poisson|memory-pressure|priority-mix|long-prompt-burst)"
         ),
     };
     let report = loadgen::replay(&server.handle, &trace)?;
@@ -218,6 +225,14 @@ fn serve(cfg: EngineConfig, task: Task, requests: usize, rate: f64, max_new: usi
         snap.total.compress.p50_ms(),
         snap.total.compress.count(),
     );
+    if snap.total.prefill_chunks > 0 {
+        println!(
+            "chunked prefill: {} chunk(s), per-chunk p50={:.3}ms p99={:.3}ms",
+            snap.total.prefill_chunks,
+            snap.total.prefill_chunk.p50_ms(),
+            snap.total.prefill_chunk.p99_ms(),
+        );
+    }
     println!(
         "memory: peak resident {:.1} KiB across shards, {} park cycle(s)",
         snap.total.peak_resident_bytes as f64 / 1024.0,

@@ -117,7 +117,17 @@ impl CompressStageStats {
 /// Aggregated engine metrics for one run.
 #[derive(Debug, Clone, Default)]
 pub struct EngineMetrics {
+    /// Session-level prefill total: one sample per session, covering the
+    /// whole prompt pass.  Under chunked prefill (DESIGN.md §12) this is
+    /// the *sum of active chunk spans* — inter-chunk queueing time while
+    /// the batcher runs decode is excluded, mirroring how `decode`
+    /// excludes recompression spans.
     pub prefill: LatencyStats,
+    /// Per-chunk prefill latency: one sample per `prefill_chunk` call
+    /// (monolithic prefill records nothing here).
+    pub prefill_chunk: LatencyStats,
+    /// Prefill chunks executed (0 when running monolithic).
+    pub prefill_chunks: u64,
     pub decode: LatencyStats,
     pub compress: LatencyStats,
     /// Stage-level breakdown of every compression pass (DESIGN.md §5).
@@ -192,6 +202,8 @@ impl EngineMetrics {
     /// mark, not an additive quantity).
     pub fn merge(&mut self, other: &EngineMetrics) {
         self.prefill.merge(&other.prefill);
+        self.prefill_chunk.merge(&other.prefill_chunk);
+        self.prefill_chunks += other.prefill_chunks;
         self.decode.merge(&other.decode);
         self.compress.merge(&other.compress);
         self.compress_stages.merge(&other.compress_stages);
@@ -326,6 +338,24 @@ mod tests {
         assert_eq!(a.completed_by_priority, [3, 1, 3]);
         assert_eq!(a.shed_by_priority, [1, 0, 2]);
         assert_eq!(a.cancelled, 3);
+    }
+
+    #[test]
+    fn prefill_chunk_stats_merge_across_shards() {
+        let mut a = EngineMetrics::default();
+        a.prefill.record_us(9_000);
+        a.prefill_chunk.record_us(4_000);
+        a.prefill_chunk.record_us(5_000);
+        a.prefill_chunks = 2;
+        let mut b = EngineMetrics::default();
+        b.prefill_chunk.record_us(6_000);
+        b.prefill_chunks = 1;
+        a.merge(&b);
+        // Session total stays one-sample-per-session; chunks pool.
+        assert_eq!(a.prefill.count(), 1);
+        assert_eq!(a.prefill_chunk.count(), 3);
+        assert_eq!(a.prefill_chunks, 3);
+        assert!((a.prefill_chunk.p50_ms() - 5.0).abs() < 1e-9);
     }
 
     #[test]

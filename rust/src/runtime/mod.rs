@@ -118,6 +118,15 @@ impl Runtime {
         matches!(self.backend, Backend::Sim(_))
     }
 
+    /// True when the backend provides the chunked prefill entries
+    /// (`prefill_chunk_*` / `prefill_fin_*`) — currently the sim backend
+    /// only.  The AOT manifests predate chunking, so PJRT runtimes fall
+    /// back to the monolithic pass regardless of
+    /// `scheduler.prefill_chunk` (DESIGN.md §12).
+    pub fn supports_chunked_prefill(&self) -> bool {
+        self.is_sim()
+    }
+
     /// Names of the executable entries.
     pub fn entries(&self) -> Vec<String> {
         match &self.backend {

@@ -97,10 +97,18 @@ impl SimModel {
 
     /// Entry names, matching the manifest convention (`decode_micro`, ...).
     pub fn entries(&self) -> Vec<String> {
-        ["prefill_full", "prefill_flash", "decode"]
-            .iter()
-            .map(|k| format!("{k}_{}", self.model))
-            .collect()
+        [
+            "prefill_full",
+            "prefill_flash",
+            "prefill_chunk_full",
+            "prefill_chunk_flash",
+            "prefill_fin_full",
+            "prefill_fin_flash",
+            "decode",
+        ]
+        .iter()
+        .map(|k| format!("{k}_{}", self.model))
+        .collect()
     }
 
     /// One pseudo K/V cache element for (k-or-v, layer, head, pos, chan)
@@ -210,6 +218,10 @@ impl SimModel {
         match kind {
             "prefill_full" => self.prefill(inputs, true, scr),
             "prefill_flash" => self.prefill(inputs, false, scr),
+            "prefill_chunk_full" => self.prefill_chunk(inputs, true, scr),
+            "prefill_chunk_flash" => self.prefill_chunk(inputs, false, scr),
+            "prefill_fin_full" => self.prefill_fin(inputs, true, scr),
+            "prefill_fin_flash" => self.prefill_fin(inputs, false, scr),
             "decode" => self.decode(inputs, scr),
             other => anyhow::bail!("sim: unknown entry kind '{other}'"),
         }
@@ -308,6 +320,153 @@ impl SimModel {
             scr.outs.push(Tensor::f32(acc, &[layers, smax]));
         }
         scr.outs.push(Tensor::f32(nrm, &[layers, smax]));
+        Ok(())
+    }
+
+    /// One prefill chunk (DESIGN.md §12): KV rows plus the saliency
+    /// contributions of prompt positions `[start, end)`, threading a
+    /// running saliency accumulator through so the element-wise f32
+    /// addition sequence — and therefore every rounding step — is the one
+    /// the monolithic pass executes for the same queries.  Inputs:
+    /// tokens `[smax]`, valid `[smax]` (prefix switched on through `end`),
+    /// start, end (scalars), probe idx `[pc]` on the flash path, sal_in
+    /// `[layers, smax]`.  Outputs: k/v chunk rows
+    /// `[layers, heads, end-start, dh]` and the updated accumulator
+    /// `[layers, smax]`.
+    fn prefill_chunk(&self, inputs: &[TensorView<'_>], full: bool,
+                     scr: &mut ExecScratch) -> Result<()> {
+        let info = &self.info;
+        let (smax, layers, heads, dh) =
+            (info.max_seq, info.n_layers, info.n_heads, info.d_head);
+        let n_in = if full { 5 } else { 6 };
+        anyhow::ensure!(inputs.len() == n_in,
+                        "sim prefill_chunk: need tokens,valid,start,end{}sal_in",
+                        if full { "," } else { ",pidx," });
+        let tokens: Vec<u16> = match &inputs[0] {
+            TensorView::I32 { data, .. } => data.iter().map(|&t| t as u16).collect(),
+            _ => anyhow::bail!("sim prefill_chunk: tokens must be i32"),
+        };
+        let valid = inputs[1].as_f32();
+        let start = match &inputs[2] {
+            TensorView::I32 { data, .. } => data[0] as usize,
+            _ => anyhow::bail!("sim prefill_chunk: start must be i32"),
+        };
+        let end = match &inputs[3] {
+            TensorView::I32 { data, .. } => data[0] as usize,
+            _ => anyhow::bail!("sim prefill_chunk: end must be i32"),
+        };
+        let sal_in = inputs[n_in - 1].as_f32();
+        anyhow::ensure!(tokens.len() == smax && valid.len() == smax,
+                        "sim prefill_chunk: window mismatch");
+        anyhow::ensure!(start < end && end <= smax,
+                        "sim prefill_chunk: bad range [{start}, {end})");
+        anyhow::ensure!(sal_in.len() == layers * smax,
+                        "sim prefill_chunk: accumulator mismatch");
+        let clen = end - start;
+
+        scr.ensure_outs(3);
+        let ExecScratch { outs, row, .. } = scr;
+
+        // KV rows for the chunk — `kv_elem` is per-position pure, so these
+        // are bit-identical to the rows the monolithic pass writes at
+        // [start, end).
+        let k = outs[0].reset_f32(&[layers, heads, clen, dh]);
+        let v = outs[1].reset_f32(&[layers, heads, clen, dh]);
+        for l in 0..layers {
+            for h in 0..heads {
+                for (i, pos) in (start..end).enumerate() {
+                    let off = ((l * heads + h) * clen + i) * dh;
+                    for c in 0..dh {
+                        k[off + c] = self.kv_elem(0, l, h, pos, c, tokens[pos]);
+                        v[off + c] = self.kv_elem(1, l, h, pos, c, tokens[pos]);
+                    }
+                }
+            }
+        }
+
+        // Saliency: copy the accumulator, then add this chunk's rows in
+        // ascending position order — the same `acc += row` sequence,
+        // element by element, that the monolithic query sweep executes.
+        // An attention row for query q reads valid columns <= q < end
+        // only, so the prefix-switched `valid` yields identical rows.
+        let sal = outs[2].reset_f32(&[layers, smax]);
+        sal.copy_from_slice(sal_in);
+        row.resize(smax, 0.0);
+        if full {
+            for l in 0..layers {
+                for q in start..end {
+                    self.attn_row_into(l, tokens[q], q, valid, row);
+                    for i in 0..smax {
+                        sal[l * smax + i] += row[i];
+                    }
+                }
+            }
+        } else {
+            let pidx: Vec<usize> = match &inputs[4] {
+                TensorView::I32 { data, .. } => {
+                    data.iter().map(|&i| (i.max(0) as usize).min(smax - 1)).collect()
+                }
+                _ => anyhow::bail!("sim prefill_chunk: probe idx must be i32"),
+            };
+            // The engine passes the full sorted probe list every chunk;
+            // the probes owned by this chunk are the contiguous run in
+            // [start, end), visited in the monolithic order.
+            for l in 0..layers {
+                let base = l * smax;
+                for &p in pidx.iter().filter(|&&p| p >= start && p < end) {
+                    self.attn_row_into(l, tokens[p], p, valid, row);
+                    for i in 0..smax {
+                        sal[base + i] += row[i];
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Finalize chunked prefill saliency (DESIGN.md §12): divide the
+    /// completed accumulator by per-column coverage — the exact division
+    /// loop the monolithic entries run after their query sweep, so the
+    /// normalized output is bit-identical.  Full path inputs: acc
+    /// `[layers, smax]`, n (scalar i32); flash path inputs: acc, probe idx
+    /// `[pc]`.  Output: nrm `[layers, smax]`.
+    fn prefill_fin(&self, inputs: &[TensorView<'_>], full: bool,
+                   scr: &mut ExecScratch) -> Result<()> {
+        let info = &self.info;
+        let (smax, layers) = (info.max_seq, info.n_layers);
+        anyhow::ensure!(inputs.len() == 2, "sim prefill_fin: need acc + n/pidx");
+        let acc = inputs[0].as_f32();
+        anyhow::ensure!(acc.len() == layers * smax, "sim prefill_fin: acc mismatch");
+        scr.ensure_outs(1);
+        let nrm = scr.outs[0].reset_f32(&[layers, smax]);
+        if full {
+            let n = match &inputs[1] {
+                TensorView::I32 { data, .. } => data[0] as usize,
+                _ => anyhow::bail!("sim prefill_fin: n must be i32"),
+            };
+            anyhow::ensure!(n <= smax, "sim prefill_fin: n outside window");
+            for l in 0..layers {
+                for i in 0..n {
+                    // column i is visible to queries q >= i
+                    nrm[l * smax + i] = acc[l * smax + i] / (n - i).max(1) as f32;
+                }
+            }
+        } else {
+            let pidx: Vec<usize> = match &inputs[1] {
+                TensorView::I32 { data, .. } => {
+                    data.iter().map(|&i| (i.max(0) as usize).min(smax - 1)).collect()
+                }
+                _ => anyhow::bail!("sim prefill_fin: probe idx must be i32"),
+            };
+            for l in 0..layers {
+                let base = l * smax;
+                for i in 0..smax {
+                    // coverage: probes at position >= i see column i
+                    let cover = pidx.iter().filter(|&&p| p >= i).count();
+                    nrm[base + i] = acc[base + i] / cover.max(1) as f32;
+                }
+            }
+        }
         Ok(())
     }
 
@@ -470,6 +629,110 @@ mod tests {
     fn entry_names_follow_manifest_convention() {
         let m = model();
         assert!(m.entries().contains(&"decode_micro".to_string()));
+        assert!(m.entries().contains(&"prefill_chunk_full_micro".to_string()));
+        assert!(m.entries().contains(&"prefill_fin_flash_micro".to_string()));
         assert!(m.execute("decode_tiny", &[]).is_err());
+    }
+
+    /// Chunked prefill replayed at the runtime boundary must reproduce the
+    /// monolithic entries bit-for-bit: KV rows, the saliency accumulator,
+    /// and the finalized normalization (DESIGN.md §12).
+    #[test]
+    fn chunked_prefill_matches_monolithic_bitwise() {
+        let m = model();
+        let info = m.info().clone();
+        let (smax, layers, heads, dh) =
+            (info.max_seq, info.n_layers, info.n_heads, info.d_head);
+        let n = 11usize;
+        let mut tokens = vec![0i32; smax];
+        let mut valid = vec![0f32; smax];
+        for i in 0..n {
+            tokens[i] = (i as i32 * 7 + 3) % 256;
+            valid[i] = 1.0;
+        }
+        // Sorted probe list with a duplicate tail, as the engine pads it.
+        let pidx = vec![0i32, 2, 5, 10, 10, 10];
+
+        for &full in &[true, false] {
+            let mono_entry =
+                if full { "prefill_full_micro" } else { "prefill_flash_micro" };
+            let mut ins = vec![
+                Tensor::i32(tokens.clone(), &[smax]),
+                Tensor::f32(valid.clone(), &[smax]),
+            ];
+            if !full {
+                ins.push(Tensor::i32(pidx.clone(), &[pidx.len()]));
+            }
+            let mono = m.execute(mono_entry, &ins).unwrap();
+            let (mono_k, mono_v) = (mono[1].as_f32(), mono[2].as_f32());
+            let mono_acc = if full { Some(mono[3].as_f32()) } else { None };
+            let mono_nrm = mono.last().unwrap().as_f32();
+
+            for &chunk in &[1usize, 3, 4, n] {
+                let mut k = vec![0f32; layers * heads * smax * dh];
+                let mut v = vec![0f32; layers * heads * smax * dh];
+                let mut sal = vec![0f32; layers * smax];
+                let mut start = 0usize;
+                while start < n {
+                    let end = (start + chunk).min(n);
+                    // Chunked callers switch `valid` on prefix-by-prefix.
+                    let mut cvalid = vec![0f32; smax];
+                    for x in cvalid.iter_mut().take(end) {
+                        *x = 1.0;
+                    }
+                    let mut ins = vec![
+                        Tensor::i32(tokens.clone(), &[smax]),
+                        Tensor::f32(cvalid, &[smax]),
+                        Tensor::scalar_i32(start as i32),
+                        Tensor::scalar_i32(end as i32),
+                    ];
+                    if !full {
+                        ins.push(Tensor::i32(pidx.clone(), &[pidx.len()]));
+                    }
+                    ins.push(Tensor::f32(sal.clone(), &[layers, smax]));
+                    let entry = if full {
+                        "prefill_chunk_full_micro"
+                    } else {
+                        "prefill_chunk_flash_micro"
+                    };
+                    let out = m.execute(entry, &ins).unwrap();
+                    let (ck, cv) = (out[0].as_f32(), out[1].as_f32());
+                    let clen = end - start;
+                    for l in 0..layers {
+                        for h in 0..heads {
+                            for i in 0..clen {
+                                let src = ((l * heads + h) * clen + i) * dh;
+                                let dst = ((l * heads + h) * smax + start + i) * dh;
+                                k[dst..dst + dh].copy_from_slice(&ck[src..src + dh]);
+                                v[dst..dst + dh].copy_from_slice(&cv[src..src + dh]);
+                            }
+                        }
+                    }
+                    sal.copy_from_slice(out[2].as_f32());
+                    start = end;
+                }
+                assert_eq!(&k[..], mono_k, "k mismatch (full={full}, chunk={chunk})");
+                assert_eq!(&v[..], mono_v, "v mismatch (full={full}, chunk={chunk})");
+                if let Some(acc) = mono_acc {
+                    assert_eq!(&sal[..], acc,
+                               "acc mismatch (chunk={chunk})");
+                }
+                let fin_ins = if full {
+                    vec![Tensor::f32(sal.clone(), &[layers, smax]),
+                         Tensor::scalar_i32(n as i32)]
+                } else {
+                    vec![Tensor::f32(sal.clone(), &[layers, smax]),
+                         Tensor::i32(pidx.clone(), &[pidx.len()])]
+                };
+                let fin_entry = if full {
+                    "prefill_fin_full_micro"
+                } else {
+                    "prefill_fin_flash_micro"
+                };
+                let fin = m.execute(fin_entry, &fin_ins).unwrap();
+                assert_eq!(fin[0].as_f32(), mono_nrm,
+                           "nrm mismatch (full={full}, chunk={chunk})");
+            }
+        }
     }
 }

@@ -71,6 +71,33 @@ pub fn priority_mix_trace(max_seq: usize, n: usize, max_new: usize,
     trace
 }
 
+/// Long-prompt-burst scenario (DESIGN.md §12): one `Background`
+/// near-window long-prompt request — the sim-window analogue of an
+/// 8k-token production prefill, scaled with the same line-retrieval
+/// sizing (and 100-line ceiling) as [`memory_pressure_trace`] — plus
+/// `n - 1` `Interactive` short-prompt requests, all arriving at t=0 with
+/// the long request first in trace order.  Replayed against a server
+/// with `scheduler.prefill_chunk > 0`, the background prefill must be
+/// chunked and interleaved so interactive decode keeps streaming; with
+/// monolithic prefill (or a greedy chunk schedule) the long pass blocks
+/// the whole step and interactive token gaps balloon — the property the
+/// fairness tests in `tests/serving_pool.rs` pin down.
+pub fn long_prompt_burst_trace(max_seq: usize, n: usize, max_new: usize,
+                               seed: u64) -> RequestTrace {
+    let max_new = max_new.clamp(1, max_seq.saturating_sub(1).max(1));
+    let long_lines = (max_seq.saturating_sub(max_new + 5) / 6).clamp(1, 100);
+    let mut trace = RequestTrace::batch(Task::Lines(long_lines), max_seq - max_new,
+                                        1, max_new, seed);
+    trace.entries[0].priority = Priority::Background;
+    let short = RequestTrace::batch(Task::Lines(3), max_seq - max_new,
+                                    n.saturating_sub(1), max_new, seed ^ 0xB00);
+    for mut e in short.entries {
+        e.priority = Priority::Interactive;
+        trace.entries.push(e);
+    }
+    trace
+}
+
 /// Outcome of one trace replay.
 #[derive(Debug, Default)]
 pub struct LoadReport {

@@ -1,0 +1,188 @@
+//! Chunked-prefill parity contracts (DESIGN.md §12), all runnable with
+//! no artifacts on the sim backend:
+//!
+//! * **Chunk-size sweep** — for every `prefill_chunk` in
+//!   {1, 3, 7, 16, prompt_len} and ragged prompt lengths (including a
+//!   prompt shorter than one chunk), generated tokens and the retained
+//!   snapshot's `content_digest` are bit-identical to the monolithic
+//!   pass (`prefill_chunk = 0`), on both saliency paths (probe/flash
+//!   and full-scores).
+//! * **Slot-count sweep** — chunked prefill interleaved through the
+//!   batcher under bounded residency (slots ∈ {1, 2, max_batch})
+//!   changes no per-tag output.
+//! * **Shard-count sweep** — the sharded server with chunking enabled
+//!   matches the monolithic single-shard ground truth per tag.
+//! * **Phase discipline** — a Prefilling session cannot decode, and
+//!   `begin_session`/`prefill_chunk` advance exactly `ceil(n / chunk)`
+//!   times.
+
+use zipcache::config::{EngineConfig, PolicyKind};
+use zipcache::coordinator::batcher::{ContinuousBatcher, QueuedRequest};
+use zipcache::coordinator::{Engine, GenerationRequest};
+use zipcache::server::Server;
+use zipcache::workload::{Task, TaskGen};
+
+const MAX_NEW: usize = 8;
+
+fn sim_config(chunk: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::load_default("sim", "micro").unwrap();
+    cfg.scheduler.prefill_chunk = chunk;
+    cfg.quant.recompress_every = 4; // several streaming cycles per request
+    cfg.parallelism = 1;
+    cfg
+}
+
+/// Ragged prompt set: a 2-token prompt (shorter than every non-unit
+/// chunk), a couple of mid-length code prompts, and a near-window
+/// line-retrieval prompt (micro window = 64, decode headroom kept).
+fn ragged_prompts() -> Vec<Vec<u16>> {
+    let mut ps = vec![vec![7u16, 19]];
+    let gen = TaskGen::new(Task::Code, 40);
+    ps.push(gen.sample(1).prompt().to_vec());
+    ps.push(gen.sample(2).prompt().to_vec());
+    ps.push(TaskGen::new(Task::Lines(8), 56).sample(3).prompt().to_vec());
+    ps
+}
+
+/// Run one prompt to completion at a given chunk size; returns the
+/// generated tokens and the final retained snapshot's content digest.
+fn run_one(cfg: &EngineConfig, p: &[u16]) -> (Vec<u16>, u64) {
+    let mut engine = Engine::new(cfg.clone()).unwrap();
+    let mut s = engine
+        .start_session(GenerationRequest::new(p.to_vec(), MAX_NEW))
+        .unwrap();
+    while !s.is_done() {
+        engine.decode_step(&mut s).unwrap();
+    }
+    let digest = s.compressed.as_ref().unwrap().content_digest();
+    (s.generated.clone(), digest)
+}
+
+#[test]
+fn chunk_size_sweep_matches_monolithic_bitwise() {
+    for policy in [PolicyKind::Zipcache, PolicyKind::H2o] {
+        for p in ragged_prompts() {
+            let mut mono_cfg = sim_config(0);
+            mono_cfg.policy = policy;
+            let mono = run_one(&mono_cfg, &p);
+            assert!(!mono.0.is_empty());
+            for chunk in [1usize, 3, 7, 16, p.len()] {
+                let mut cfg = sim_config(chunk);
+                cfg.policy = policy;
+                let out = run_one(&cfg, &p);
+                assert_eq!(
+                    out, mono,
+                    "policy={policy:?} chunk={chunk} n={} diverged from \
+                     monolithic (tokens or snapshot digest)",
+                    p.len()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chunk_zero_is_the_monolithic_path() {
+    // `prefill_chunk = 0` must not even enter the Prefilling phase: the
+    // session comes out of begin_session decode-ready, and no per-chunk
+    // histogram samples are recorded.
+    let mut engine = Engine::new(sim_config(0)).unwrap();
+    let p = ragged_prompts().remove(1);
+    let s = engine
+        .begin_session(GenerationRequest::new(p, MAX_NEW))
+        .unwrap();
+    assert!(!s.is_prefilling());
+    assert_eq!(engine.metrics.prefill_chunks, 0);
+    assert_eq!(engine.metrics.prefill_chunk.count(), 0);
+    assert_eq!(engine.metrics.prefill.count(), 1);
+}
+
+#[test]
+fn prefill_phase_runs_ceil_n_over_chunk_times_and_blocks_decode() {
+    let chunk = 5usize;
+    let mut engine = Engine::new(sim_config(chunk)).unwrap();
+    let p = ragged_prompts().remove(3); // the near-window prompt
+    let n = p.len();
+    assert!(n > chunk, "prompt must span several chunks");
+    let mut s = engine
+        .begin_session(GenerationRequest::new(p, MAX_NEW))
+        .unwrap();
+    assert!(s.is_prefilling());
+    assert!(engine.decode_step(&mut s).is_err(),
+            "decoding a Prefilling session must fail loudly");
+    let mut steps = 0;
+    while s.is_prefilling() {
+        let finished = engine.prefill_chunk(&mut s).unwrap();
+        steps += 1;
+        assert_eq!(finished, !s.is_prefilling());
+    }
+    assert_eq!(steps, (n + chunk - 1) / chunk);
+    assert_eq!(engine.metrics.prefill_chunks as usize, steps);
+    assert_eq!(engine.metrics.prefill_chunk.count(), steps);
+    assert_eq!(engine.metrics.prefill.count(), 1,
+               "session-level total is one sample per session");
+    // The now decode-ready session generates to completion normally.
+    while !s.is_done() {
+        engine.decode_step(&mut s).unwrap();
+    }
+    assert!(!s.generated.is_empty());
+}
+
+#[test]
+fn batcher_slot_sweep_preserves_outputs_under_chunking() {
+    // Chunked prefill interleaved through the batcher under bounded
+    // residency: per-tag outputs must match the monolithic bare-engine
+    // ground truth at every (chunk, slots) point — park/unpark pressure
+    // and chunk interleaving are both invisible to generation.
+    let ps = ragged_prompts();
+    let mono: Vec<(Vec<u16>, u64)> =
+        ps.iter().map(|p| run_one(&sim_config(0), p)).collect();
+    for chunk in [1usize, 3, 16] {
+        for slots in [1usize, 2, 0] {
+            let mut cfg = sim_config(chunk);
+            cfg.scheduler.max_batch = 4;
+            cfg.memory.slots = slots;
+            let mut engine = Engine::new(cfg).unwrap();
+            let mut b = ContinuousBatcher::new(4, 16);
+            for (tag, p) in ps.iter().enumerate() {
+                b.submit(QueuedRequest {
+                    request: GenerationRequest::new(p.clone(), MAX_NEW),
+                    tag: tag as u64,
+                })
+                .unwrap();
+            }
+            let outs = b.run_to_completion(&mut engine).unwrap();
+            assert_eq!(outs.len(), ps.len());
+            for o in outs {
+                assert_eq!(o.tokens, mono[o.tag as usize].0,
+                           "chunk={chunk} slots={slots} tag={} diverged",
+                           o.tag);
+            }
+        }
+    }
+}
+
+#[test]
+fn server_shard_sweep_preserves_outputs_under_chunking() {
+    let ps = ragged_prompts();
+    let mono: Vec<(Vec<u16>, u64)> =
+        ps.iter().map(|p| run_one(&sim_config(0), p)).collect();
+    for shards in [1usize, 2] {
+        let mut cfg = sim_config(3);
+        cfg.scheduler.shards = shards;
+        let server = Server::start(cfg).unwrap();
+        let handles: Vec<_> = ps
+            .iter()
+            .map(|p| server.handle.submit(p.clone(), MAX_NEW).unwrap())
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let out = h.wait().unwrap();
+            assert_eq!(out.tokens, mono[i].0,
+                       "shards={shards} request {i} diverged under chunking");
+        }
+        let snap = server.handle.metrics();
+        assert!(snap.total.prefill_chunks > 0,
+                "chunked entries never ran under the server");
+        server.shutdown().unwrap();
+    }
+}

@@ -13,9 +13,12 @@
 
 use zipcache::config::EngineConfig;
 use zipcache::coordinator::batcher::{ContinuousBatcher, QueuedRequest};
-use zipcache::coordinator::{Engine, FinishReason, GenerationRequest, Priority,
-                            QuantOverride};
-use zipcache::server::Server;
+use zipcache::coordinator::{CancelToken, Engine, FinishReason,
+                            GenerationRequest, Priority, QuantOverride};
+use zipcache::kvcache::worst_case_resident_bytes;
+use zipcache::server::{loadgen, Server};
+use zipcache::simcost::{decode_cost_per_token, prefill_cost, AttnKind,
+                        AttnShape, Hardware};
 use zipcache::workload::{Task, TaskGen};
 
 fn sim_config(shards: usize) -> EngineConfig {
@@ -427,5 +430,278 @@ fn shared_validation_rejects_identically_at_both_layers() {
         let e2 = server.handle.submit_request(req).unwrap_err().to_string();
         assert_eq!(e1, e2, "validation drifted between engine and server");
     }
+    server.shutdown().unwrap();
+}
+
+// ---- chunked prefill interleaved with decode (DESIGN.md §12) --------------
+
+/// Virtual per-unit costs from the `simcost` roofline at the engine's
+/// model shape: (prefill seconds per prompt token, decode seconds per
+/// step).  The fairness assertions below price scheduler iterations with
+/// these — a deterministic clock, so the token-gap bound can never flake
+/// on a loaded CI host the way wall time would.
+fn virtual_costs(engine: &Engine) -> (f64, f64) {
+    let lay = engine.layout();
+    let shape = AttnShape {
+        batch: 1,
+        heads: lay.heads,
+        seq: lay.seq,
+        d_head: lay.d_head,
+        elem: 2.0,
+    };
+    let hw = Hardware::a100();
+    let per_tok_prefill =
+        prefill_cost(hw, shape, AttnKind::FlashWithProbes { probe_pct: 10 })
+            / lay.seq as f64;
+    let decode = decode_cost_per_token(hw, shape, 2.8, AttnKind::Flash);
+    (per_tok_prefill, decode)
+}
+
+fn p99(mut xs: Vec<f64>) -> f64 {
+    assert!(!xs.is_empty());
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[((xs.len() - 1) as f64 * 0.99).round() as usize]
+}
+
+const BURST_CHUNK: usize = 4;
+const N_INTERACTIVE: usize = 3;
+
+/// Drive the long-prompt-burst scenario through `batcher.step` on a
+/// virtual clock: three Interactive sessions decode while one Background
+/// near-window prompt prefills.  Returns (p99 interactive token gap,
+/// long prompt length, per-token prefill cost, per-step decode cost),
+/// all in virtual seconds.
+fn run_long_prompt_burst(greedy: bool) -> (f64, usize, f64, f64) {
+    let mut cfg = sim_config(1);
+    cfg.scheduler.max_batch = 8;
+    cfg.scheduler.prefill_chunk = BURST_CHUNK;
+    let mut engine = Engine::new(cfg).unwrap();
+    let (per_tok_prefill, decode) = virtual_costs(&engine);
+    let mut b = ContinuousBatcher::new(8, 16);
+    b.force_greedy_prefill(greedy);
+
+    for tag in 0..N_INTERACTIVE as u64 {
+        let prompt: Vec<u16> = (0..9).map(|k| (10 * tag + k + 1) as u16).collect();
+        b.submit(QueuedRequest {
+            request: GenerationRequest::new(prompt, 24)
+                .priority(Priority::Interactive),
+            tag,
+        })
+        .unwrap();
+    }
+
+    // Virtual clock: every iteration costs its decode-artifact
+    // executions plus the prompt tokens its prefill chunks covered;
+    // tokens emitted in an iteration are stamped with the end-of-step
+    // time (DESIGN.md §12).
+    let mut vt = 0.0f64;
+    let mut stamps: Vec<Vec<f64>> = vec![Vec::new(); N_INTERACTIVE];
+    let mut step = |b: &mut ContinuousBatcher, engine: &mut Engine,
+                    vt: &mut f64, stamps: &mut Vec<Vec<f64>>| {
+        let report = b.step(engine).unwrap();
+        *vt += report.decoded as f64 * decode
+            + report.prefill_tokens as f64 * per_tok_prefill;
+        for (tag, _tok) in b.drain_emitted() {
+            if (tag as usize) < N_INTERACTIVE {
+                stamps[tag as usize].push(*vt);
+            }
+        }
+    };
+
+    // Warm up until every Interactive session is streaming tokens.
+    let mut guard = 0;
+    while stamps.iter().any(|s| s.is_empty()) {
+        step(&mut b, &mut engine, &mut vt, &mut stamps);
+        guard += 1;
+        assert!(guard < 64, "interactive sessions never started decoding");
+    }
+
+    // The burst: one Background near-window prompt (the sim-window
+    // analogue of an 8k-token prefill).
+    let long: Vec<u16> =
+        TaskGen::new(Task::Lines(8), 56).sample(99).prompt().to_vec();
+    let long_len = long.len();
+    assert!(long_len > 8 * BURST_CHUNK, "long prompt must span many chunks");
+    b.submit(QueuedRequest {
+        request: GenerationRequest::new(long, 2).priority(Priority::Background),
+        tag: 100,
+    })
+    .unwrap();
+    while !b.idle() {
+        step(&mut b, &mut engine, &mut vt, &mut stamps);
+    }
+    let outs = b.take_outcomes();
+    assert_eq!(outs.len(), N_INTERACTIVE + 1);
+    assert!(outs.iter().all(|o| o.finish.is_natural()));
+
+    let gaps: Vec<f64> = stamps
+        .iter()
+        .flat_map(|s| s.windows(2).map(|w| w[1] - w[0]))
+        .collect();
+    (p99(gaps), long_len, per_tok_prefill, decode)
+}
+
+#[test]
+fn long_prompt_burst_bounds_interactive_token_gaps() {
+    // The headline fairness property (DESIGN.md §12): with chunked
+    // prefill, a Background near-window prompt in flight never opens an
+    // interactive token gap wider than one fair iteration — all
+    // scheduled decodes plus *one* prefill chunk (plus the concurrent
+    // interactive prefill chunks of the warm-up phase).  The bound is
+    // placed at half the long prompt's prefill cost above the decode
+    // term: far above any fair iteration (chunk = 4 tokens), far below a
+    // monolithic/greedy one (the whole prompt in one step).
+    let (gap_fair, long_len, per_tok, decode) = run_long_prompt_burst(false);
+    let bound = (N_INTERACTIVE + 1) as f64 * decode
+        + (long_len as f64 / 2.0) * per_tok;
+    assert!(
+        gap_fair <= bound,
+        "fair schedule: interactive token-gap p99 {gap_fair:.3e}s exceeds \
+         the bound {bound:.3e}s (long prompt starved decode)"
+    );
+
+    // Acceptance pin: the bound must *trip* when the scheduler is forced
+    // to take every prefill chunk in one iteration — proving the
+    // assertion really measures starvation, not slack.
+    let (gap_greedy, _, _, _) = run_long_prompt_burst(true);
+    assert!(
+        gap_greedy > bound,
+        "greedy prefill did not trip the bound ({gap_greedy:.3e}s <= \
+         {bound:.3e}s) — the fairness test has no teeth"
+    );
+}
+
+#[test]
+fn long_prompt_burst_trace_completes_under_chunking() {
+    // End-to-end smoke for the trace constructor + the serve path: the
+    // long-prompt-burst trace replayed against a chunk-enabled sharded
+    // server completes every request, and the chunked entries really ran.
+    let mut cfg = sim_config(2);
+    cfg.scheduler.prefill_chunk = 3;
+    let server = Server::start(cfg).unwrap();
+    let trace = loadgen::long_prompt_burst_trace(64, 5, 3, 0);
+    assert_eq!(trace.len(), 5);
+    assert_eq!(trace.entries[0].priority, Priority::Background);
+    assert!(trace.entries[1..]
+        .iter()
+        .all(|e| e.priority == Priority::Interactive));
+    assert!(trace.entries[0].sample.prompt().len()
+        > trace.entries[1].sample.prompt().len());
+    let report = loadgen::replay(&server.handle, &trace).unwrap();
+    assert_eq!(report.completed, 5);
+    let snap = server.handle.metrics();
+    assert!(snap.total.prefill_chunks > 0, "no chunked prefill ran");
+    assert_eq!(snap.total.prefill.count(), 5,
+               "session-level prefill total: one sample per request");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn cancel_mid_prefill_releases_slot_and_partial_state() {
+    // The PR-5 cancellation-leak pin, extended to the Prefilling phase:
+    // a Background session cancelled between chunks must retire with
+    // `Cancelled`, empty tokens, its pinned dense slot (and the boxed
+    // PrefillProgress with it) released — and the survivor completes.
+    let mut cfg = sim_config(1);
+    cfg.scheduler.prefill_chunk = 2;
+    let mut engine = Engine::new(cfg).unwrap();
+    let free0 = engine.free_slots();
+    let mut b = ContinuousBatcher::new(4, 16);
+
+    // An Interactive decode session first: its presence makes the
+    // Background prefill yield after one chunk per iteration, so the
+    // cancel deterministically lands mid-prefill.
+    b.submit(QueuedRequest {
+        request: GenerationRequest::new(vec![3, 5, 7, 11], 20)
+            .priority(Priority::Interactive),
+        tag: 1,
+    })
+    .unwrap();
+    let mut covered = 0usize;
+    for _ in 0..4 {
+        covered += b.step(&mut engine).unwrap().prefill_tokens;
+    }
+    assert_eq!(covered, 4, "interactive prompt fully prefilled");
+
+    let long: Vec<u16> =
+        TaskGen::new(Task::Lines(8), 56).sample(42).prompt().to_vec();
+    let long_len = long.len();
+    let cancel = CancelToken::new();
+    b.submit(QueuedRequest {
+        request: GenerationRequest::new(long, 2)
+            .priority(Priority::Background)
+            .cancel_token(cancel.clone()),
+        tag: 0,
+    })
+    .unwrap();
+    let mut bg_covered = 0usize;
+    for _ in 0..3 {
+        bg_covered += b.step(&mut engine).unwrap().prefill_tokens;
+    }
+    assert!(bg_covered > 0 && bg_covered < long_len,
+            "cancel point must be mid-prefill ({bg_covered}/{long_len})");
+    assert_eq!(engine.free_slots(), free0 - 2,
+               "a Prefilling session pins a dense slot");
+
+    cancel.cancel();
+    let report = b.step(&mut engine).unwrap();
+    assert_eq!(report.prefill_tokens, 0,
+               "no further chunk may run after the cancel sweep");
+    let outs = b.take_outcomes();
+    assert_eq!(outs.len(), 1);
+    assert_eq!((outs[0].tag, outs[0].finish), (0, FinishReason::Cancelled));
+    assert!(outs[0].tokens.is_empty(),
+            "a mid-prefill session has generated nothing");
+    assert_eq!(engine.free_slots(), free0 - 1,
+               "the cancelled session's pinned slot must be back");
+    assert_eq!(engine.metrics.cancelled, 1);
+
+    let rest = b.run_to_completion(&mut engine).unwrap();
+    assert_eq!(rest.len(), 1);
+    assert_eq!(rest[0].tag, 1);
+    assert!(rest[0].finish.is_natural());
+    assert_eq!(engine.free_slots(), free0, "all slots returned");
+}
+
+#[test]
+fn server_cancel_during_chunked_prefill_releases_reservation() {
+    // Server-level leak pin under chunking: with a one-request byte
+    // budget and a tight chunk, cancelling a long-prompt request drains
+    // its worst-case reservation whether the cancel lands while waiting,
+    // mid-prefill, or mid-decode — and the freed budget admits a
+    // follow-up request.  (The deterministic mid-prefill point is pinned
+    // race-free by `cancel_mid_prefill_releases_slot_and_partial_state`;
+    // here the shard thread runs concurrently.)
+    let mut cfg = sim_config(1);
+    cfg.scheduler.prefill_chunk = 1;
+    let layout = zipcache::runtime::load_model_info("sim", "micro")
+        .unwrap()
+        .cache_layout();
+    cfg.memory.budget_bytes =
+        worst_case_resident_bytes(layout, layout.seq, cfg.quant.recompress_every);
+    let server = Server::start(cfg).unwrap();
+    assert_eq!(server.handle.shard_reserved_bytes(), vec![0]);
+
+    let long: Vec<u16> =
+        TaskGen::new(Task::Lines(8), 56).sample(7).prompt().to_vec();
+    let h = server
+        .handle
+        .submit_request(
+            GenerationRequest::new(long.clone(), 4)
+                .priority(Priority::Background),
+        )
+        .unwrap();
+    h.cancel();
+    let out = h.wait().unwrap();
+    assert!(matches!(out.finish,
+                     FinishReason::Cancelled | FinishReason::Eos
+                     | FinishReason::MaxTokens));
+    assert_eq!(server.handle.shard_reserved_bytes(), vec![0],
+               "reservation must drain with the cancelled request");
+
+    // The freed budget admits (and completes) a follow-up request.
+    let out = server.handle.generate(long, 2).unwrap();
+    assert!(!out.tokens.is_empty());
+    assert_eq!(server.handle.shard_reserved_bytes(), vec![0]);
     server.shutdown().unwrap();
 }

@@ -364,6 +364,10 @@ impl ContinuousBatcher {
     /// priority order — shedding cancelled/expired requests at pop time
     /// without a slot — schedule up to `slots` sessions dense, advance
     /// each of them by one token, and retire the finished ones.
+    // lint: cold-path — scheduling layer; the §9 zero-alloc contract
+    // covers `Engine::decode_step`, not batch bookkeeping.  Also stops
+    // the name-level resolution of `StreamingProbe::step` calls from
+    // descending here (DESIGN.md §13).
     pub fn step(&mut self, engine: &mut Engine) -> Result<StepReport> {
         self.step_counter += 1;
         // The token stream covers one iteration: callers that want it

@@ -282,6 +282,8 @@ impl Engine {
     /// the one prefill compression pass, and moves the session to the
     /// decode phase — bit-identically to the monolithic epilogue.
     /// Returns `true` when the session left the Prefilling phase.
+    // lint: cold-path — prefill phase, outside the §9 steady-decode
+    // contract (DESIGN.md §13).
     pub fn prefill_chunk(&mut self, s: &mut Session) -> Result<bool> {
         let mut p = s.prefill.take().ok_or_else(|| {
             anyhow::anyhow!("prefill_chunk on session {} not in the \
@@ -575,6 +577,7 @@ impl Engine {
     /// reusable scratch slots, and in the non-recompression case the
     /// steady-state step performs no heap allocation at all (pinned by
     /// `benches/decode_steady.rs`).
+    // lint: hot-path — zero-alloc steady decode root (DESIGN.md §13).
     pub fn decode_step(&mut self, s: &mut Session) -> Result<Option<u16>> {
         if s.is_done() {
             return Ok(None);
@@ -710,6 +713,9 @@ impl Engine {
     /// reused across cycles and sessions (DESIGN.md §9).  The compressed
     /// store is *retained* on the session as its resident cache form
     /// (DESIGN.md §10) — parking drops the dense slot and keeps it.
+    // lint: cold-path — the recompression branch is outside the §9
+    // zero-alloc contract (the dynamic bench asserts non-recompression
+    // steps only); scratch reuse here is best-effort (DESIGN.md §13).
     fn compress_session(&mut self, s: &mut Session, n_live: usize) {
         let layout = self.layout();
         let input = PolicyInput {

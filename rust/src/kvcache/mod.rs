@@ -1,6 +1,7 @@
 //! Mixed-precision KV cache management (the paper's storage contribution).
 //!
-//! The cache for one sequence is held *physically compressed*: per
+//! The cache for one sequence is held *physically compressed*
+//! (DESIGN.md §4): per
 //! (layer, head) plane, token rows are partitioned by [`PrecisionClass`]
 //! (salient → high bits, regular → low bits, plus `Fp16` for KIVI-style
 //! windows and `Evicted` for H2O-style dropping), each partition quantized

@@ -50,6 +50,8 @@ impl SlotBufs {
 #[derive(Debug)]
 struct PoolShared {
     free: Mutex<Vec<SlotBufs>>,
+    // lint: gauge — checked-out slot count; inc at `acquire`, dec in
+    // `DenseSlot::drop`.
     in_use: AtomicUsize,
     peak_in_use: AtomicUsize,
 }

@@ -3,10 +3,10 @@
 //! Rust/JAX/Pallas reproduction of *"ZipCache: Accurate and Efficient KV
 //! Cache Quantization with Salient Token Identification"* (NeurIPS 2024).
 //!
-//! Three-layer architecture (see `DESIGN.md`):
+//! Three-layer architecture (DESIGN.md §1):
 //!
-//! * **L1** — Pallas kernels (`python/compile/kernels/`): CSTQuant,
-//!   FlashAttention, probe-token saliency.  Build-time only.
+//! * **L1** — Pallas kernels (`python/compile/kernels/`, DESIGN.md §3):
+//!   CSTQuant, FlashAttention, probe-token saliency.  Build-time only.
 //! * **L2** — JAX model (`python/compile/model.py`): a GPT-style decoder
 //!   AOT-lowered to HLO text artifacts.
 //! * **L3** — this crate: the serving coordinator.  Loads the artifacts via

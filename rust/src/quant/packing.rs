@@ -72,6 +72,7 @@ impl PackedCodes {
     /// scheme; on the 1M-code recompression workload this is ~3x faster,
     /// which matters because unpack feeds every cache materialization
     /// (one per decode recompression cycle, Alg. 3).
+    // lint: hot-path — fused-unpack entry (DESIGN.md §13).
     pub fn unpack_into(&self, out: &mut [u8]) {
         assert_eq!(out.len(), self.len);
         if self.bits == 8 {
@@ -85,6 +86,7 @@ impl PackedCodes {
     /// buffer — the fused unpack half of the unpack–dequant kernels
     /// (EXPERIMENTS.md §Perf).  Whole bytes are decoded in unrolled lane
     /// order; the ragged tail falls back to shifted extraction.
+    // lint: hot-path — fused unpack–dequant inner loop (DESIGN.md §13).
     #[inline]
     pub fn for_each<F: FnMut(usize, u8)>(&self, mut f: F) {
         match self.bits {
@@ -131,6 +133,7 @@ impl PackedCodes {
     }
 
     /// Random access to one code (used by sparse dequant paths).
+    // lint: hot-path — sparse-path code access (DESIGN.md §13).
     #[inline]
     pub fn get(&self, i: usize) -> u8 {
         debug_assert!(i < self.len);
@@ -189,6 +192,9 @@ impl PackWriter {
 
     /// Append one code (`< 2^bits`), low lanes first — the exact lane
     /// order of [`PackedCodes::pack`].
+    // lint: hot-path — quantize-as-pack writer (DESIGN.md §13); the
+    // amortized `Vec::push` growth is the dynamic bench's concern, not
+    // this rule's (see the known-limits list there).
     #[inline]
     pub fn push(&mut self, code: u8) {
         if self.bits == 8 {
@@ -216,6 +222,7 @@ impl PackWriter {
     }
 
     /// Flush the partial tail byte and seal the packed stream.
+    // lint: hot-path — seals the recompression write (DESIGN.md §13).
     pub fn finish(mut self) -> PackedCodes {
         if self.shift > 0 {
             self.data.push(self.cur);

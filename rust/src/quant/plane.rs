@@ -192,6 +192,7 @@ impl QuantizedPlane {
     /// materialization.  Bit-identical to the two-pass reference (same
     /// `QuantParams::decode` on the same codes in the same order; pinned
     /// by the `fused_dequant_matches_reference` property test).
+    // lint: hot-path — steady materialization kernel (DESIGN.md §13).
     pub fn dequantize_into(&self, out: &mut [f32]) {
         assert_eq!(out.len(), self.rows * self.cols);
         let cols = self.cols;
@@ -302,6 +303,7 @@ impl QuantizedPlane {
     }
 
     /// Dequantize a single row into `out` (`cols` long).
+    // lint: hot-path — sparse row materialization (DESIGN.md §13).
     pub fn dequantize_row(&self, r: usize, out: &mut [f32]) {
         assert!(r < self.rows && out.len() == self.cols);
         match self.granularity {

@@ -60,6 +60,8 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    // lint: cold-path — startup; name-collides with atomic `load` calls
+    // under the lint's name-level resolution (DESIGN.md §13).
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref();
         let text = std::fs::read_to_string(path)

@@ -62,6 +62,8 @@ impl Runtime {
     /// Load a runtime for `model` from `dir`.  The sentinel directory
     /// `"sim"` selects the artifact-free simulated backend; anything else
     /// loads `manifest.json` and compiles all the model's entries.
+    // lint: cold-path — startup; name-collides with atomic `load` calls
+    // under the lint's name-level resolution (DESIGN.md §13).
     pub fn load(dir: impl AsRef<Path>, model: &str) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         if dir.as_os_str() == SIM_ARTIFACTS_DIR {
@@ -179,6 +181,9 @@ impl Runtime {
         let lits: Vec<xla::Literal> = inputs
             .iter()
             .map(tensor::view_to_literal)
+            // lint-allow(hot-path-alloc): PJRT device path; the §9
+            // zero-alloc contract covers the sim/steady path, and the
+            // device transfer dominates here
             .collect::<Result<_>>()?;
         let result = exe
             .execute::<xla::Literal>(&lits)

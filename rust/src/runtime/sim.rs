@@ -233,6 +233,8 @@ impl SimModel {
     /// from the probe rows only (Alg. 2).  Cold path (once per session):
     /// internal buffers are allocated per call and moved into the output
     /// slots.
+    // lint: cold-path — prefill runs once per session, outside the §9
+    // steady-decode contract (DESIGN.md §13).
     fn prefill(&self, inputs: &[TensorView<'_>], full: bool,
                scr: &mut ExecScratch) -> Result<()> {
         let info = &self.info;
@@ -333,6 +335,8 @@ impl SimModel {
     /// `[layers, smax]`.  Outputs: k/v chunk rows
     /// `[layers, heads, end-start, dh]` and the updated accumulator
     /// `[layers, smax]`.
+    // lint: cold-path — chunked prefill entry, outside the §9
+    // steady-decode contract (DESIGN.md §12, §13).
     fn prefill_chunk(&self, inputs: &[TensorView<'_>], full: bool,
                      scr: &mut ExecScratch) -> Result<()> {
         let info = &self.info;
@@ -430,6 +434,8 @@ impl SimModel {
     /// normalized output is bit-identical.  Full path inputs: acc
     /// `[layers, smax]`, n (scalar i32); flash path inputs: acc, probe idx
     /// `[pc]`.  Output: nrm `[layers, smax]`.
+    // lint: cold-path — once per chunked prefill, outside the §9
+    // steady-decode contract (DESIGN.md §13).
     fn prefill_fin(&self, inputs: &[TensorView<'_>], full: bool,
                    scr: &mut ExecScratch) -> Result<()> {
         let info = &self.info;

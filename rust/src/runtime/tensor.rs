@@ -141,6 +141,7 @@ impl Tensor {
 
     /// An empty f32 tensor — the initial state of a reusable output slot.
     pub fn empty() -> Self {
+        // lint-allow(hot-path-alloc): capacity-0 Vec::new is heap-free
         Tensor::F32 { data: Vec::new(), dims: Vec::new() }
     }
 
@@ -221,6 +222,9 @@ pub fn view_to_literal(t: &TensorView<'_>) -> Result<xla::Literal> {
 }
 
 /// xla literal -> Tensor (f32 or i32 by element type).
+// lint: cold-path — PJRT device fetch; the zero-alloc contract covers
+// the sim/steady path, and the device transfer dominates here anyway
+// (DESIGN.md §9, §13).
 pub fn from_literal(lit: xla::Literal) -> Result<Tensor> {
     let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("{e:?}"))?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();

@@ -57,6 +57,7 @@ impl StreamingProbe {
 
     /// Should the caller record this step's attention row?  (Alg. 3's
     /// `i > 95 or randint(0,100) < 5` condition, generalized.)
+    // lint: hot-path — per-step probe decision (DESIGN.md §13).
     pub fn should_probe(&mut self) -> bool {
         let recent_from =
             self.recompress_every - (self.recompress_every as f64 * self.recent_ratio) as usize;
@@ -69,6 +70,7 @@ impl StreamingProbe {
     /// Record one probe attention row (`a_row` over the cache columns) for
     /// the query at absolute position `pos`.  Reuses a retired buffer
     /// when one is available.
+    // lint: hot-path — steady probe recording (DESIGN.md §13).
     pub fn record(&mut self, a_row: &[f32], pos: usize) {
         let mut buf = self.free.pop().unwrap_or_default();
         buf.clear();
@@ -78,6 +80,7 @@ impl StreamingProbe {
     }
 
     /// Advance one decode step; returns `true` when a recompression is due.
+    // lint: hot-path — per-step cycle advance (DESIGN.md §13).
     pub fn step(&mut self) -> bool {
         self.step_in_cycle += 1;
         self.step_in_cycle >= self.recompress_every
@@ -90,6 +93,8 @@ impl StreamingProbe {
 
     /// Approximate normalized saliency over `cols` cache positions from the
     /// accumulated rows, then reset the cycle (Alg. 3's `A_probe = None`).
+    // lint: cold-path — runs once per recompression cycle, outside the
+    // §9 steady-step contract (DESIGN.md §13).
     pub fn take_saliency(&mut self, cols: usize) -> Option<Vec<f32>> {
         if self.rows.is_empty() {
             self.reset();

@@ -83,7 +83,11 @@ pub(crate) struct ShardRequest {
 /// engine error) so routing skips the dead shard from then on.
 struct ShardLink {
     tx: Mutex<Sender<ShardRequest>>,
+    // lint: gauge — requests in flight on this shard; inc at route,
+    // dec at `note_done`.
     load: Arc<AtomicUsize>,
+    // lint: gauge — worst-case resident bytes; CAS-reserved at
+    // admission (`try_reserve`), released at `note_done`.
     reserved: Arc<AtomicUsize>,
     resident: Arc<AtomicUsize>,
     alive: AtomicBool,
@@ -92,6 +96,9 @@ struct ShardLink {
 /// Submit-side state shared by every [`super::ServerHandle`] clone.
 pub(crate) struct Dispatcher {
     shards: Vec<ShardLink>,
+    // lint: gauge — global admitted-not-yet-activated count
+    // (`queue_depth` backpressure); CAS-inc at `try_admit`, dec at
+    // `note_activated` / failed-send rollback.
     queued: Arc<AtomicUsize>,
     queue_depth: usize,
     /// Per-shard worst-case byte budget; 0 = unlimited.

@@ -120,6 +120,8 @@ impl Args {
 
     // -- typed getters -------------------------------------------------------
 
+    // lint: cold-path — CLI parsing; name-collides with slice/map `get`
+    // calls under the lint's name-level resolution (DESIGN.md §13).
     pub fn get(&self, name: &str) -> String {
         if let Some(v) = self.values.get(name) {
             return v.clone();

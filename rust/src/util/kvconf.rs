@@ -44,6 +44,9 @@ impl KvConf {
         Ok(KvConf { map })
     }
 
+    // lint: cold-path — config parsing; name-collides with atomic
+    // `load` calls under the lint's name-level resolution (DESIGN.md
+    // §13).
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         Self::parse(&std::fs::read_to_string(path)?)
     }

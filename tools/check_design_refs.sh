@@ -1,54 +1,7 @@
 #!/usr/bin/env sh
-# Verify that every `DESIGN.md §N` citation in the source tree resolves to
-# a real `## §N` section heading in DESIGN.md, and that every named
-# EXPERIMENTS.md section citation resolves to a `## §<section>` heading
-# in EXPERIMENTS.md.  Run from the repo root.
+# Design-doc citation checking now lives in the `design-ref` rule of
+# `tools/zipcache-lint` (DESIGN.md §13); this wrapper is kept so existing
+# invocations (and muscle memory) keep working.  Run from the repo root.
 set -eu
-
-fail=0
-
-design="DESIGN.md"
-if [ ! -f "$design" ]; then
-    echo "FAIL: $design missing" >&2
-    exit 1
-fi
-
-# Collect cited section numbers, e.g. `DESIGN.md §5` -> 5.
-refs=$(grep -rhoE 'DESIGN\.md §[0-9]+' rust python examples tools Cargo.toml vendor 2>/dev/null \
-    | sed 's/.*§//' | sort -un)
-
-if [ -z "$refs" ]; then
-    echo "FAIL: no DESIGN.md § references found (checker misconfigured?)" >&2
-    exit 1
-fi
-
-for n in $refs; do
-    if grep -qE "^## §$n " "$design"; then
-        echo "ok: DESIGN.md §$n"
-    else
-        echo "FAIL: DESIGN.md §$n is cited but has no '## §$n' section" >&2
-        fail=1
-    fi
-done
-
-experiments="EXPERIMENTS.md"
-# Named sections, e.g. `EXPERIMENTS.md §Perf` -> Perf.
-erefs=$(grep -rhoE 'EXPERIMENTS\.md §[A-Za-z][A-Za-z0-9_-]*' rust python examples tools Cargo.toml vendor 2>/dev/null \
-    | sed 's/.*§//' | sort -u)
-
-if [ -n "$erefs" ]; then
-    if [ ! -f "$experiments" ]; then
-        echo "FAIL: EXPERIMENTS.md is cited but missing" >&2
-        exit 1
-    fi
-    for name in $erefs; do
-        if grep -qE "^## §$name( |$)" "$experiments"; then
-            echo "ok: EXPERIMENTS.md §$name"
-        else
-            echo "FAIL: EXPERIMENTS.md §$name is cited but has no '## §$name' section" >&2
-            fail=1
-        fi
-    done
-fi
-
-exit $fail
+exec cargo run -q -p zipcache-lint -- --rule design-ref \
+    rust python examples tools Cargo.toml vendor

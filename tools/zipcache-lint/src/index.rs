@@ -1,0 +1,489 @@
+//! Item indexer: lint directives, function items, impl owners, call
+//! sites, gauge registrations, and `#[cfg(test)]` regions (DESIGN.md
+//! §13).
+//!
+//! Runs on the cleaned code/comment channels produced by
+//! [`crate::lexer`].  The structural pass is brace-depth tracking over
+//! code tokens — deliberately an approximation, not a parser: it
+//! recognizes `impl` headers (for method ownership), `fn` items (name,
+//! body line range), and `#[cfg(test)]`-gated blocks, which is exactly
+//! what the rules need.  Known limits are documented in DESIGN.md §13.
+
+use crate::lexer::{self, Line};
+
+/// One code token: an identifier/number word or a single punctuation
+/// character.  Whitespace is dropped.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Word(String),
+    P(char),
+}
+
+impl Tok {
+    fn word(&self) -> Option<&str> {
+        match self {
+            Tok::Word(w) => Some(w.as_str()),
+            Tok::P(_) => None,
+        }
+    }
+}
+
+/// Tokenize one cleaned code line.
+pub fn tokenize(code: &str) -> Vec<Tok> {
+    let chars: Vec<char> = code.chars().collect();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c.is_alphanumeric() || c == '_' {
+            let mut w = String::new();
+            while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                w.push(chars[i]);
+                i += 1;
+            }
+            toks.push(Tok::Word(w));
+            continue;
+        }
+        toks.push(Tok::P(c));
+        i += 1;
+    }
+    toks
+}
+
+/// A call site observed inside a function body.
+#[derive(Debug, Clone)]
+pub struct Call {
+    pub name: String,
+    /// `Foo::bar(…)` records `Some("Foo")`; `Self` is resolved to the
+    /// enclosing impl owner at extraction time.
+    pub qualifier: Option<String>,
+    /// `.bar(…)` — a method call on some receiver.
+    pub method: bool,
+    /// `bar::<T>(…)` — turbofish; flagged for allocation matching but
+    /// never resolved for call-graph descent (DESIGN.md §13).
+    pub turbofish: bool,
+    /// `bar!(…)` — macro invocation.
+    pub is_macro: bool,
+    /// 1-based source line.
+    pub line: usize,
+}
+
+/// A function item (or bodyless trait signature).
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    pub name: String,
+    /// Enclosing `impl` type, when any.
+    pub owner: Option<String>,
+    /// 1-based line of the `fn` keyword.
+    pub line: usize,
+    /// 1-based inclusive body line range; `None` for bodyless sigs.
+    pub body: Option<(usize, usize)>,
+    /// Marked `// lint: hot-path` — a traversal root.
+    pub hot: bool,
+    /// Marked `// lint: cold-path` — traversal stops here.
+    pub cold: bool,
+    /// Inside a `#[cfg(test)]` region (or itself `#[cfg(test)]`).
+    pub in_test: bool,
+    pub calls: Vec<Call>,
+}
+
+/// A `// lint: gauge` registration attached to an atomic field/static.
+#[derive(Debug, Clone)]
+pub struct Gauge {
+    pub name: String,
+    pub line: usize,
+}
+
+/// A parsed `lint-allow(rule): reason` suppression.
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    pub rule: String,
+    pub reason: String,
+    /// 1-based code line the suppression applies to.
+    pub line: usize,
+    /// 1-based line the directive itself was written on.
+    pub at: usize,
+}
+
+/// Everything the rules need to know about one Rust source file.
+#[derive(Debug)]
+pub struct FileIndex {
+    pub lines: Vec<Line>,
+    pub fns: Vec<FnItem>,
+    pub gauges: Vec<Gauge>,
+    pub suppressions: Vec<Suppression>,
+    /// Per line (0-based): inside a `#[cfg(test)]` region.
+    pub test_lines: Vec<bool>,
+}
+
+impl FileIndex {
+    /// The suppression covering `line` for `rule`, if any.
+    pub fn allow_for(&self, line: usize, rule: &str) -> Option<&Suppression> {
+        self.suppressions.iter().find(|s| s.line == line && s.rule == rule)
+    }
+}
+
+const KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "return", "loop", "in", "as", "let", "mut", "ref", "pub",
+    "use", "mod", "impl", "struct", "enum", "trait", "type", "where", "const", "static", "dyn",
+    "break", "continue", "else", "fn", "unsafe", "move", "crate", "self", "super", "true",
+    "false", "await", "async",
+];
+
+/// Build the full index for one source file.
+pub fn index_file(src: &str) -> FileIndex {
+    let lines = lexer::lex(src);
+    let nlines = lines.len();
+
+    // --- directive pass (comments) -----------------------------------
+    let mut suppressions = Vec::new();
+    let mut hot_marks = Vec::new();
+    let mut cold_marks = Vec::new();
+    let mut gauge_marks = Vec::new();
+    for (l0, line) in lines.iter().enumerate() {
+        let at = l0 + 1;
+        let target = directive_target(&lines, l0);
+        let mut rest = line.comment.as_str();
+        while let Some(p) = rest.find("lint-allow(") {
+            rest = &rest[p + "lint-allow(".len()..];
+            if let Some(close) = rest.find(')') {
+                let rule = rest[..close].trim().to_string();
+                rest = &rest[close + 1..];
+                let mut reason = rest;
+                if let Some(colon) = reason.find(':') {
+                    reason = &reason[colon + 1..];
+                }
+                if let Some(next) = reason.find("lint-allow(") {
+                    reason = &reason[..next];
+                }
+                suppressions.push(Suppression {
+                    rule,
+                    reason: reason.trim().to_string(),
+                    line: target,
+                    at,
+                });
+            } else {
+                break;
+            }
+        }
+        // Anchors must *start* the comment, so prose that merely
+        // mentions `lint: hot-path` (this crate's own docs) is inert.
+        let ct = line.comment.trim_start();
+        if ct.starts_with("lint: hot-path") {
+            hot_marks.push(target);
+        }
+        if ct.starts_with("lint: cold-path") {
+            cold_marks.push(target);
+        }
+        if ct.starts_with("lint: gauge") {
+            gauge_marks.push(target);
+        }
+    }
+
+    // --- gauge registrations -----------------------------------------
+    let mut gauges = Vec::new();
+    for &line in &gauge_marks {
+        if let Some(name) = field_name(&lines[line - 1].code) {
+            gauges.push(Gauge { name, line });
+        }
+    }
+
+    // --- structural pass ---------------------------------------------
+    let mut fns: Vec<FnItem> = Vec::new();
+    let mut test_lines = vec![false; nlines];
+
+    let mut depth: i32 = 0;
+    let mut paren: i32 = 0;
+    // (owner name, depth inside the impl block)
+    let mut impl_stack: Vec<(String, i32)> = Vec::new();
+    // Header tokens collected between `impl` and its `{`.
+    let mut impl_collect: Option<Vec<Tok>> = None;
+    // `fn` seen; waiting for the name, then for `{` or `;`.
+    let mut pending_fn: Option<(Option<String>, usize)> = None;
+    // `#[cfg(test)]` seen; next block at item level opens a test region.
+    let mut pending_test = false;
+    let mut pending_test_fn = false;
+    // Depths (inside the block) of open test regions.
+    let mut test_stack: Vec<i32> = Vec::new();
+    // Open fn bodies: (index into fns, depth inside the body).
+    let mut open_fns: Vec<(usize, i32)> = Vec::new();
+
+    for l0 in 0..nlines {
+        let lineno = l0 + 1;
+        if !test_stack.is_empty() {
+            test_lines[l0] = true;
+        }
+        let code = &lines[l0].code;
+        if code.contains("#[cfg(test)]") {
+            pending_test = true;
+        }
+        let toks = tokenize(code);
+        let mut k = 0usize;
+        while k < toks.len() {
+            match &toks[k] {
+                Tok::Word(w) => {
+                    // `fn` directly followed by `(` is a pointer type
+                    // (`fn(usize) -> u8`), not an item.
+                    let fn_item = w == "fn" && toks.get(k + 1).map_or(true, |t| matches!(t, Tok::Word(_)));
+                    if fn_item && pending_fn.is_none() {
+                        pending_fn = Some((None, lineno));
+                        if pending_test {
+                            // `#[cfg(test)] fn …`: the fn itself is the
+                            // gated item.
+                            pending_test_fn = true;
+                        }
+                    } else if let Some((name @ None, _)) = &mut pending_fn {
+                        if w != "fn" {
+                            *name = Some(w.clone());
+                        }
+                    } else if w == "impl" && pending_fn.is_none() && impl_collect.is_none() {
+                        impl_collect = Some(Vec::new());
+                    } else if let Some(c) = &mut impl_collect {
+                        c.push(toks[k].clone());
+                    }
+                }
+                Tok::P('(') => paren += 1,
+                Tok::P(')') => paren -= 1,
+                Tok::P('{') => {
+                    depth += 1;
+                    if impl_collect.is_some() && pending_fn.is_none() {
+                        let header = impl_collect.take().unwrap();
+                        impl_stack.push((impl_owner_name(&header), depth));
+                    } else if let Some((name, fnline)) = pending_fn.take() {
+                        let name = name.unwrap_or_default();
+                        let in_test = !test_stack.is_empty() || pending_test_fn;
+                        fns.push(FnItem {
+                            name,
+                            owner: impl_stack.last().map(|(n, _)| n.clone()),
+                            line: fnline,
+                            body: Some((lineno, lineno)),
+                            hot: hot_marks.contains(&fnline),
+                            cold: cold_marks.contains(&fnline),
+                            in_test,
+                            calls: Vec::new(),
+                        });
+                        open_fns.push((fns.len() - 1, depth));
+                        if pending_test_fn {
+                            test_stack.push(depth);
+                            pending_test_fn = false;
+                            pending_test = false;
+                            test_lines[l0] = true;
+                        }
+                    }
+                    if pending_test {
+                        test_stack.push(depth);
+                        pending_test = false;
+                        test_lines[l0] = true;
+                    }
+                    if let Some(c) = &mut impl_collect {
+                        // `{` inside an impl header can only come from a
+                        // const-generic default — treat as opaque.
+                        c.push(Tok::P('{'));
+                    }
+                }
+                Tok::P('}') => {
+                    depth -= 1;
+                    while test_stack.last().is_some_and(|&d| depth < d) {
+                        test_stack.pop();
+                    }
+                    while open_fns.last().is_some_and(|&(_, d)| depth < d) {
+                        let (fi, _) = open_fns.pop().unwrap();
+                        if let Some((_, end)) = &mut fns[fi].body {
+                            *end = lineno;
+                        }
+                    }
+                    while impl_stack.last().is_some_and(|&(_, d)| depth < d) {
+                        impl_stack.pop();
+                    }
+                }
+                Tok::P(';') => {
+                    if paren == 0 {
+                        if let Some((Some(name), fnline)) = pending_fn.take() {
+                            // Bodyless trait signature.
+                            fns.push(FnItem {
+                                name,
+                                owner: impl_stack.last().map(|(n, _)| n.clone()),
+                                line: fnline,
+                                body: None,
+                                hot: false,
+                                cold: false,
+                                in_test: !test_stack.is_empty(),
+                                calls: Vec::new(),
+                            });
+                        }
+                        pending_test = false;
+                        pending_test_fn = false;
+                        if open_fns.is_empty() {
+                            // `impl Trait for X;` cannot occur; a `;` at
+                            // item level abandons any stale header.
+                            impl_collect = None;
+                        }
+                    }
+                }
+                Tok::P(p) => {
+                    if let Some(c) = &mut impl_collect {
+                        c.push(Tok::P(*p));
+                    }
+                }
+            }
+            k += 1;
+        }
+    }
+    // Close anything left open at EOF (unbalanced input).
+    while let Some((fi, _)) = open_fns.pop() {
+        if let Some((_, end)) = &mut fns[fi].body {
+            *end = nlines;
+        }
+    }
+
+    // --- call extraction ---------------------------------------------
+    for f in &mut fns {
+        if let Some((start, end)) = f.body {
+            let owner = f.owner.clone();
+            for lineno in start..=end {
+                let toks = tokenize(&lines[lineno - 1].code);
+                extract_calls(&toks, lineno, owner.as_deref(), &mut f.calls);
+            }
+        }
+    }
+
+    FileIndex { lines, fns, gauges, suppressions, test_lines }
+}
+
+/// The 1-based code line a comment directive on (0-based) line `l0`
+/// applies to: the line itself when it carries code, else the next line
+/// that does — skipping attribute lines (`#[inline]`, `#[derive(…)]`)
+/// so an anchor above an attributed fn still lands on the `fn` line.
+fn directive_target(lines: &[Line], l0: usize) -> usize {
+    let ct = lines[l0].code.trim();
+    if !ct.is_empty() && !ct.starts_with("#[") {
+        return l0 + 1;
+    }
+    let mut j = l0 + 1;
+    while j < lines.len() {
+        let ct = lines[j].code.trim();
+        if !ct.is_empty() && !ct.starts_with("#[") {
+            return j + 1;
+        }
+        j += 1;
+    }
+    l0 + 1
+}
+
+/// Parse the field/static name out of a declaration line like
+/// `pub(crate) queued: AtomicUsize,` or `static NEXT: AtomicU64 = …;`.
+fn field_name(code: &str) -> Option<String> {
+    let toks = tokenize(code);
+    let mut k = 0usize;
+    while k < toks.len() {
+        match &toks[k] {
+            Tok::Word(w) if w == "pub" => {
+                k += 1;
+                if toks.get(k) == Some(&Tok::P('(')) {
+                    while k < toks.len() && toks[k] != Tok::P(')') {
+                        k += 1;
+                    }
+                    k += 1;
+                }
+            }
+            Tok::Word(w) if w == "static" || w == "let" || w == "mut" || w == "const" => k += 1,
+            Tok::Word(w) => return Some(w.clone()),
+            _ => return None,
+        }
+    }
+    None
+}
+
+/// Extract the owner type name from the tokens of an `impl` header
+/// (everything between `impl` and `{`): skips leading generics, honours
+/// `Trait for Type`, and keeps the last path segment.
+fn impl_owner_name(toks: &[Tok]) -> String {
+    let mut i = 0usize;
+    if toks.first() == Some(&Tok::P('<')) {
+        let mut d = 0i32;
+        while i < toks.len() {
+            match toks[i] {
+                Tok::P('<') => d += 1,
+                Tok::P('>') => d -= 1,
+                _ => {}
+            }
+            i += 1;
+            if d == 0 {
+                break;
+            }
+        }
+    }
+    let mut start = i;
+    let mut d = 0i32;
+    for (j, t) in toks.iter().enumerate().skip(i) {
+        match t {
+            Tok::P('<') => d += 1,
+            Tok::P('>') => d -= 1,
+            Tok::Word(w) if w == "for" && d == 0 => start = j + 1,
+            _ => {}
+        }
+    }
+    let mut name = String::new();
+    let mut k = start;
+    while k < toks.len() {
+        match &toks[k] {
+            Tok::Word(w) if w == "dyn" || w == "mut" => k += 1,
+            Tok::Word(w) => {
+                name = w.clone();
+                k += 1;
+            }
+            Tok::P(':') | Tok::P('&') => k += 1,
+            _ => break,
+        }
+    }
+    name
+}
+
+/// Scan one token line for call sites and append them to `out`.
+fn extract_calls(toks: &[Tok], line: usize, owner: Option<&str>, out: &mut Vec<Call>) {
+    for k in 0..toks.len() {
+        let name = match toks[k].word() {
+            Some(w) => w,
+            None => continue,
+        };
+        if name.starts_with(|c: char| c.is_ascii_digit()) || KEYWORDS.contains(&name) {
+            continue;
+        }
+        if k > 0 && toks[k - 1].word() == Some("fn") {
+            continue;
+        }
+        let next = toks.get(k + 1);
+        // A macro call needs a delimiter after the `!`, so that `a != b`
+        // is not read as macro `a`.
+        let is_macro = next == Some(&Tok::P('!'))
+            && matches!(toks.get(k + 2), Some(Tok::P('(')) | Some(Tok::P('[')) | Some(Tok::P('{')));
+        let direct_call = next == Some(&Tok::P('('));
+        let turbofish = !direct_call
+            && next == Some(&Tok::P(':'))
+            && toks.get(k + 2) == Some(&Tok::P(':'))
+            && toks.get(k + 3) == Some(&Tok::P('<'));
+        if !is_macro && !direct_call && !turbofish {
+            continue;
+        }
+        let method = k > 0 && toks[k - 1] == Tok::P('.');
+        let mut qualifier = None;
+        if !method && k >= 3 && toks[k - 1] == Tok::P(':') && toks[k - 2] == Tok::P(':') {
+            if let Some(q) = toks[k - 3].word() {
+                let q = if q == "Self" { owner.unwrap_or(q) } else { q };
+                qualifier = Some(q.to_string());
+            }
+        }
+        out.push(Call {
+            name: name.to_string(),
+            qualifier,
+            method,
+            turbofish,
+            is_macro,
+            line,
+        });
+    }
+}

@@ -1,0 +1,244 @@
+//! Comment/string-aware line lexer (DESIGN.md §13).
+//!
+//! Splits Rust source into per-line `code` / `comment` channels so every
+//! downstream pass can pattern-match on code without being fooled by
+//! tokens inside comments or string literals, and can read lint
+//! directives (`lint: hot-path`, `lint-allow(rule): reason`, `SAFETY:`)
+//! out of comments without seeing code.
+//!
+//! The lexer is a character state machine that understands:
+//!   - line comments (`//`, `///`, `//!`) — text goes to the comment
+//!     channel, a single space is pushed to the code channel so the
+//!     comment still separates code tokens;
+//!   - nested block comments (`/* /* */ */`), possibly spanning lines;
+//!   - string literals with escapes, byte strings, and raw strings
+//!     (`r"…"`, `r#"…"#`, `br#"…"#`) — contents are elided from the code
+//!     channel (a bare `"` delimiter is kept as a token separator);
+//!   - char literals vs. lifetimes (`'a'` / `b'x'` vs. `'a`, `'static`).
+//!
+//! It does not tokenize beyond that; see [`crate::index`] for the token
+//! pass that runs on the cleaned code channel.
+
+/// One source line split into its code and comment parts.
+#[derive(Debug, Clone, Default)]
+pub struct Line {
+    /// The line with comments removed and string/char-literal contents
+    /// elided (delimiters kept so literals still separate tokens).
+    pub code: String,
+    /// The concatenated text of every comment overlapping the line.
+    pub comment: String,
+}
+
+/// Lexer mode carried across lines: block comments and string literals
+/// may span line boundaries.
+#[derive(Clone, Copy)]
+enum Mode {
+    Code,
+    /// Inside a block comment; payload is the nesting depth.
+    Block(u32),
+    /// Inside a normal (escapable) string literal.
+    Str,
+    /// Inside a raw string literal; payload is the `#` count.
+    RawStr(u32),
+}
+
+/// Lex `src` into per-line code/comment channels.  Every source line
+/// (including blank ones) produces exactly one [`Line`], so indices into
+/// the result are `line_number - 1`.
+pub fn lex(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(Line { code: std::mem::take(&mut code), comment: std::mem::take(&mut comment) });
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+                    // Line comment.  Strip the slashes (and doc-comment
+                    // `!`) so directives parse the same under `//` and
+                    // `///`; push a space so the comment still separates
+                    // code tokens.
+                    code.push(' ');
+                    i += 2;
+                    while i < n && (chars[i] == '/' || chars[i] == '!') {
+                        i += 1;
+                    }
+                    while i < n && chars[i] != '\n' {
+                        comment.push(chars[i]);
+                        i += 1;
+                    }
+                    continue;
+                }
+                if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    mode = Mode::Block(1);
+                    code.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    mode = Mode::Str;
+                    code.push('"');
+                    i += 1;
+                    continue;
+                }
+                if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                    // Raw / byte string prefixes, only when the letter
+                    // is not the tail of a longer identifier.
+                    if let Some((hashes, skip)) = raw_str_open(&chars, i) {
+                        mode = Mode::RawStr(hashes);
+                        code.push('"');
+                        i += skip;
+                        continue;
+                    }
+                    if c == 'b' && i + 1 < n && chars[i + 1] == '"' {
+                        mode = Mode::Str;
+                        code.push('"');
+                        i += 2;
+                        continue;
+                    }
+                    if c == 'b' && i + 1 < n && chars[i + 1] == '\'' {
+                        let len = char_literal_len(&chars, i + 1);
+                        if len > 0 {
+                            code.push_str("' '");
+                            i += 1 + len;
+                            continue;
+                        }
+                    }
+                }
+                if c == '\'' {
+                    let len = char_literal_len(&chars, i);
+                    if len > 0 {
+                        // Char literal: elide the content.
+                        code.push_str("' '");
+                        i += len;
+                    } else {
+                        // Lifetime tick.
+                        code.push('\'');
+                        i += 1;
+                    }
+                    continue;
+                }
+                code.push(c);
+                i += 1;
+            }
+            Mode::Block(d) => {
+                if c == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    mode = if d == 1 { Mode::Code } else { Mode::Block(d - 1) };
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    mode = Mode::Block(d + 1);
+                    i += 2;
+                    continue;
+                }
+                comment.push(c);
+                i += 1;
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // Skip the escaped character, but never swallow a
+                    // newline (a `\` line continuation must still end
+                    // the current Line).
+                    if i + 1 < n && chars[i + 1] != '\n' {
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                    continue;
+                }
+                if c == '"' {
+                    mode = Mode::Code;
+                    code.push('"');
+                }
+                i += 1;
+            }
+            Mode::RawStr(h) => {
+                if c == '"' && has_hashes(&chars, i + 1, h) {
+                    mode = Mode::Code;
+                    code.push('"');
+                    i += 1 + h as usize;
+                    continue;
+                }
+                i += 1;
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(Line { code, comment });
+    }
+    lines
+}
+
+/// True when the character before `i` can end an identifier, meaning a
+/// following `r`/`b` is part of that identifier rather than a raw/byte
+/// string prefix.
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// If a raw string opens at `i` (`r"`, `r#"`, `br##"` …), return the
+/// hash count and the number of characters in the opener.
+fn raw_str_open(chars: &[char], i: usize) -> Option<(u32, usize)> {
+    let n = chars.len();
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if j >= n || chars[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while j < n && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < n && chars[j] == '"' {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// True when `h` `#` characters follow position `from`.
+fn has_hashes(chars: &[char], from: usize, h: u32) -> bool {
+    let h = h as usize;
+    from + h <= chars.len() && chars[from..from + h].iter().all(|&c| c == '#')
+}
+
+/// With `chars[i] == '\''`: the total character length of the char
+/// literal starting at `i`, or 0 when the tick starts a lifetime.
+fn char_literal_len(chars: &[char], i: usize) -> usize {
+    let n = chars.len();
+    if i + 1 >= n {
+        return 0;
+    }
+    if chars[i + 1] == '\\' {
+        // Escaped char: scan to the closing quote on the same line
+        // (handles `'\n'`, `'\\'`, `'\u{1F600}'`).
+        let mut j = i + 3;
+        while j < n && chars[j] != '\'' && chars[j] != '\n' {
+            j += 1;
+        }
+        if j < n && chars[j] == '\'' {
+            return j - i + 1;
+        }
+        return 0;
+    }
+    // Unescaped: exactly one char then the closing quote, e.g. `'x'`.
+    // Anything else (`'a`, `'static`, `<'a>`) is a lifetime.
+    if i + 2 < n && chars[i + 1] != '\'' && chars[i + 2] == '\'' {
+        return 3;
+    }
+    0
+}

@@ -1,0 +1,187 @@
+//! zipcache-lint — repo-local static analysis for the ZipCache tree
+//! (DESIGN.md §13).
+//!
+//! A dependency-free lexer-level analyzer that machine-checks the
+//! invariants the dynamic gates only probe in one configuration:
+//!
+//! - `hot-path-alloc` — the zero-allocation steady decode contract
+//!   (DESIGN.md §9): from `// lint: hot-path` roots, transitively flag
+//!   allocation constructors.
+//! - `balanced-accounting` — every `// lint: gauge` atomic
+//!   (queue depth, byte reservations, slot counts) has both an
+//!   increment and a release in its module group (DESIGN.md §10).
+//! - `undocumented-unsafe` — every `unsafe` carries a `// SAFETY:`
+//!   comment.
+//! - `design-ref` — `DESIGN.md §<N>` / `EXPERIMENTS.md §<Name>`
+//!   citations and `INVARIANT(§<N>)` tags resolve, bidirectionally for
+//!   DESIGN.md.
+//!
+//! Pipeline: [`lexer`] (comment/string-aware line splitter) →
+//! [`index`] (items, calls, directives) → [`rules`] → [`report`].
+//! Suppressions are explicit and audited: `// lint-allow(rule): reason`
+//! on the offending line, counted in the report.
+
+pub mod index;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use report::{Finding, Report};
+
+/// Directory names never descended into: VCS state, build output,
+/// Python caches, and the lint's own known-bad test fixtures.
+const SKIP_DIRS: &[&str] = &[".git", "target", "fixtures", "__pycache__", "node_modules"];
+
+/// One scanned file.  Non-Rust files carry raw text only (scanned by
+/// `design-ref`); Rust files additionally carry the full index.
+pub struct SourceFile {
+    /// Path as reported in findings (scan-root-relative).
+    pub display: String,
+    /// Accounting module group: scan root plus first directory
+    /// component, so `rust/src/server/dispatch.rs` and
+    /// `rust/src/server/mod.rs` pair up (DESIGN.md §13).
+    pub group: String,
+    pub raw: String,
+    pub rust: Option<index::FileIndex>,
+}
+
+/// One lint invocation.
+pub struct Options {
+    /// Files or directories to scan (default: `rust/src`).
+    pub paths: Vec<PathBuf>,
+    /// Where DESIGN.md / EXPERIMENTS.md live (default: `.`).
+    pub docs_root: PathBuf,
+    /// Rule names to run; empty means all.
+    pub rules: Vec<String>,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options {
+            paths: vec![PathBuf::from("rust/src")],
+            docs_root: PathBuf::from("."),
+            rules: Vec::new(),
+        }
+    }
+}
+
+/// Run the configured rules over the scan roots and return the report.
+pub fn run(opts: &Options) -> io::Result<Report> {
+    let mut files = Vec::new();
+    for root in &opts.paths {
+        collect(root, root, &mut files)?;
+    }
+    // Deterministic order regardless of directory iteration order.
+    files.sort_by(|a, b| a.display.cmp(&b.display));
+
+    let rules_run: Vec<String> = if opts.rules.is_empty() {
+        rules::ALL_RULES.iter().map(|r| r.to_string()).collect()
+    } else {
+        opts.rules.clone()
+    };
+
+    let mut findings = Vec::new();
+    for rule in &rules_run {
+        match rule.as_str() {
+            rules::HOT_PATH_ALLOC => rules::hot_path_alloc(&files, &mut findings),
+            rules::BALANCED_ACCOUNTING => rules::balanced_accounting(&files, &mut findings),
+            rules::UNDOCUMENTED_UNSAFE => rules::undocumented_unsafe(&files, &mut findings),
+            rules::DESIGN_REF => {
+                let design = fs::read_to_string(opts.docs_root.join("DESIGN.md")).ok();
+                let experiments = fs::read_to_string(opts.docs_root.join("EXPERIMENTS.md")).ok();
+                rules::design_ref(
+                    &files,
+                    design.as_deref(),
+                    experiments.as_deref(),
+                    &mut findings,
+                );
+            }
+            other => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("unknown rule `{other}` (see --list-rules)"),
+                ));
+            }
+        }
+    }
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule))
+    });
+
+    let mut roots = Vec::new();
+    let mut gauges = Vec::new();
+    for file in &files {
+        if let Some(ix) = &file.rust {
+            for f in &ix.fns {
+                if f.hot && !f.in_test {
+                    match &f.owner {
+                        Some(o) => roots.push(format!("{o}::{}", f.name)),
+                        None => roots.push(f.name.clone()),
+                    }
+                }
+            }
+            for g in &ix.gauges {
+                gauges.push(g.name.clone());
+            }
+        }
+    }
+    roots.sort();
+    gauges.sort();
+
+    Ok(Report { findings, roots, gauges, files_scanned: files.len(), rules_run })
+}
+
+/// Recursively collect scannable files under `path` (itself a file or a
+/// directory), skipping [`SKIP_DIRS`] and hidden directories.
+fn collect(root: &Path, path: &Path, out: &mut Vec<SourceFile>) -> io::Result<()> {
+    let meta = fs::metadata(path).map_err(|e| {
+        io::Error::new(e.kind(), format!("cannot scan {}: {e}", path.display()))
+    })?;
+    if meta.is_file() {
+        let raw = match fs::read_to_string(path) {
+            Ok(raw) => raw,
+            // Binary or non-UTF-8 content is out of scope.
+            Err(_) => return Ok(()),
+        };
+        let display = path.to_string_lossy().replace('\\', "/");
+        let group = group_of(root, path);
+        let rust = if path.extension().is_some_and(|e| e == "rs") {
+            Some(index::index_file(&raw))
+        } else {
+            None
+        };
+        out.push(SourceFile { display, group, raw, rust });
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(path)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for entry in entries {
+        let name = entry.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if entry.is_dir() && (SKIP_DIRS.contains(&name) || name.starts_with('.')) {
+            continue;
+        }
+        collect(root, &entry, out)?;
+    }
+    Ok(())
+}
+
+/// The accounting module group: scan root plus the first directory
+/// component of the path below it.
+fn group_of(root: &Path, path: &Path) -> String {
+    let base = root.to_string_lossy().replace('\\', "/");
+    match path.strip_prefix(root) {
+        Ok(rel) => {
+            let rel = rel.to_string_lossy().replace('\\', "/");
+            match rel.split('/').next() {
+                Some(first) if rel.contains('/') => format!("{base}/{first}"),
+                _ => base,
+            }
+        }
+        Err(_) => base,
+    }
+}

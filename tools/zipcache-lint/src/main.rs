@@ -1,0 +1,93 @@
+//! zipcache-lint CLI (DESIGN.md §13).
+//!
+//! ```text
+//! cargo run -p zipcache-lint -- [PATH…] [--json FILE] [--rule NAME]…
+//!                               [--docs-root DIR] [--list-rules] [-q]
+//! ```
+//!
+//! Exit codes: 0 — no unsuppressed findings; 1 — unsuppressed findings;
+//! 2 — usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use zipcache_lint::{rules, Options};
+
+const USAGE: &str = "\
+zipcache-lint — static analysis for the ZipCache tree (DESIGN.md §13)
+
+usage: zipcache-lint [PATH…] [options]
+
+  PATH…             files or directories to scan (default: rust/src)
+  --rule NAME       run only this rule (repeatable; default: all)
+  --json FILE       also write machine-readable findings to FILE
+  --docs-root DIR   where DESIGN.md / EXPERIMENTS.md live (default: .)
+  --list-rules      print the rule names and exit
+  -q, --quiet       suppress the human table (exit code only)
+  -h, --help        this help
+";
+
+fn main() -> ExitCode {
+    let mut opts = Options { paths: Vec::new(), ..Options::default() };
+    let mut json_path: Option<PathBuf> = None;
+    let mut quiet = false;
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--json" | "--rule" | "--docs-root" => {
+                let Some(v) = args.next() else {
+                    eprintln!("zipcache-lint: {arg} needs a value\n\n{USAGE}");
+                    return ExitCode::from(2);
+                };
+                match arg.as_str() {
+                    "--json" => json_path = Some(PathBuf::from(v)),
+                    "--rule" => opts.rules.push(v),
+                    _ => opts.docs_root = PathBuf::from(v),
+                }
+            }
+            "--list-rules" => {
+                for r in rules::ALL_RULES {
+                    println!("{r}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "-q" | "--quiet" => quiet = true,
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            flag if flag.starts_with('-') => {
+                eprintln!("zipcache-lint: unknown option {flag}\n\n{USAGE}");
+                return ExitCode::from(2);
+            }
+            path => opts.paths.push(PathBuf::from(path)),
+        }
+    }
+    if opts.paths.is_empty() {
+        opts.paths.push(PathBuf::from("rust/src"));
+    }
+
+    let report = match zipcache_lint::run(&opts) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("zipcache-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if let Some(path) = &json_path {
+        if let Err(e) = std::fs::write(path, report.to_json()) {
+            eprintln!("zipcache-lint: cannot write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+    if !quiet {
+        print!("{}", report.render());
+    }
+    if report.unsuppressed() == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,126 @@
+//! Finding collection, the human table, and the machine-readable JSON
+//! findings file (DESIGN.md §13).  JSON is hand-rolled: the crate is
+//! dependency-free by design (offline build, DESIGN.md §6).
+
+/// One rule hit.  `suppressed` carries the `lint-allow` reason when the
+/// offending line opted out — suppressions are counted, not dropped.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: String,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    pub suppressed: Option<String>,
+}
+
+/// The full result of one lint run.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    /// `Owner::fn` labels of the hot-path roots that seeded traversal.
+    pub roots: Vec<String>,
+    /// Registered gauge names.
+    pub gauges: Vec<String>,
+    pub files_scanned: usize,
+    pub rules_run: Vec<String>,
+}
+
+impl Report {
+    pub fn unsuppressed(&self) -> usize {
+        self.findings.iter().filter(|f| f.suppressed.is_none()).count()
+    }
+
+    pub fn suppressed(&self) -> usize {
+        self.findings.iter().filter(|f| f.suppressed.is_some()).count()
+    }
+
+    /// The human-readable table: one line per finding, suppressions in
+    /// a trailing audit section, then the summary line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in self.findings.iter().filter(|f| f.suppressed.is_none()) {
+            out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+        }
+        let allowed: Vec<&Finding> =
+            self.findings.iter().filter(|f| f.suppressed.is_some()).collect();
+        if !allowed.is_empty() {
+            out.push_str("\nsuppressed (lint-allow):\n");
+            for f in allowed {
+                out.push_str(&format!(
+                    "  {}:{}: [{}] {} — allowed: {}\n",
+                    f.file,
+                    f.line,
+                    f.rule,
+                    f.message,
+                    f.suppressed.as_deref().unwrap_or("")
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "\nzipcache-lint: {} file(s), rules [{}], {} root(s), {} gauge(s): {} finding(s), {} suppressed\n",
+            self.files_scanned,
+            self.rules_run.join(", "),
+            self.roots.len(),
+            self.gauges.len(),
+            self.unsuppressed(),
+            self.suppressed(),
+        ));
+        out
+    }
+
+    /// The machine-readable findings file uploaded as a CI artifact.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n    {");
+            out.push_str(&format!("\"rule\": \"{}\", ", esc(&f.rule)));
+            out.push_str(&format!("\"file\": \"{}\", ", esc(&f.file)));
+            out.push_str(&format!("\"line\": {}, ", f.line));
+            out.push_str(&format!("\"message\": \"{}\", ", esc(&f.message)));
+            match &f.suppressed {
+                Some(r) => out.push_str(&format!("\"suppressed\": \"{}\"", esc(r))),
+                None => out.push_str("\"suppressed\": null"),
+            }
+            out.push('}');
+        }
+        if !self.findings.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("],\n");
+        out.push_str(&format!(
+            "  \"summary\": {{\"files_scanned\": {}, \"rules\": [{}], \"roots\": [{}], \"gauges\": [{}], \"unsuppressed\": {}, \"suppressed\": {}}}\n",
+            self.files_scanned,
+            join_json(&self.rules_run),
+            join_json(&self.roots),
+            join_json(&self.gauges),
+            self.unsuppressed(),
+            self.suppressed(),
+        ));
+        out.push_str("}\n");
+        out
+    }
+}
+
+fn join_json(items: &[String]) -> String {
+    items.iter().map(|s| format!("\"{}\"", esc(s))).collect::<Vec<_>>().join(", ")
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}

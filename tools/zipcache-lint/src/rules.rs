@@ -1,0 +1,536 @@
+//! The rule engine: four named, suppressible rules over the indexed
+//! tree (DESIGN.md §13).
+//!
+//! Every rule pushes [`Finding`]s; suppression (`lint-allow(rule):
+//! reason` on the offending line) is resolved here so the report can
+//! count allows explicitly instead of silently dropping them.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use crate::index::{Tok, tokenize};
+use crate::report::Finding;
+use crate::SourceFile;
+
+pub const HOT_PATH_ALLOC: &str = "hot-path-alloc";
+pub const BALANCED_ACCOUNTING: &str = "balanced-accounting";
+pub const UNDOCUMENTED_UNSAFE: &str = "undocumented-unsafe";
+pub const DESIGN_REF: &str = "design-ref";
+
+pub const ALL_RULES: &[&str] =
+    &[HOT_PATH_ALLOC, BALANCED_ACCOUNTING, UNDOCUMENTED_UNSAFE, DESIGN_REF];
+
+/// Attach the suppression state for (`file`, `line`, `rule`) to a
+/// finding under construction.
+fn finish(file: &SourceFile, rule: &str, line: usize, message: String) -> Finding {
+    let allow = file
+        .rust
+        .as_ref()
+        .and_then(|ix| ix.allow_for(line, rule))
+        .map(|s| s.reason.clone())
+        .or_else(|| raw_allow(file, line, rule));
+    Finding {
+        rule: rule.to_string(),
+        file: file.display.clone(),
+        line,
+        message,
+        suppressed: allow,
+    }
+}
+
+/// Raw-text suppression lookup for non-Rust files (and markdown/HTML
+/// comments): `lint-allow(rule): reason` anywhere on the line.
+fn raw_allow(file: &SourceFile, line: usize, rule: &str) -> Option<String> {
+    let text = file.raw.lines().nth(line.checked_sub(1)?)?;
+    let needle = format!("lint-allow({rule})");
+    let p = text.find(&needle)?;
+    let mut reason = &text[p + needle.len()..];
+    if let Some(colon) = reason.find(':') {
+        reason = &reason[colon + 1..];
+    }
+    Some(reason.trim().trim_end_matches("-->").trim().to_string())
+}
+
+// ---------------------------------------------------------------------
+// Rule: hot-path-alloc
+// ---------------------------------------------------------------------
+
+/// Allocation constructors matched as `Qualifier::name(` calls.
+const ALLOC_QUALIFIED: &[(&str, &str)] = &[
+    ("Vec", "new"),
+    ("Vec", "with_capacity"),
+    ("Vec", "from"),
+    ("Box", "new"),
+    ("String", "new"),
+    ("String", "from"),
+    ("String", "with_capacity"),
+    ("Arc", "new"),
+    ("Rc", "new"),
+    ("VecDeque", "new"),
+    ("VecDeque", "with_capacity"),
+    ("HashMap", "new"),
+    ("HashSet", "new"),
+    ("BTreeMap", "new"),
+    ("PathBuf", "from"),
+];
+
+/// Allocating calls matched by bare name (method or free position),
+/// turbofish included (`collect::<Vec<_>>()`).
+const ALLOC_NAMES: &[&str] = &["to_vec", "to_owned", "to_string", "collect", "clone", "cloned"];
+
+/// Allocating macros.  Diverging/error macros (`panic!`, `assert!`,
+/// `bail!`, `ensure!`, …) are deliberately absent: they allocate only on
+/// the failure path, which is never the steady state.
+const ALLOC_MACROS: &[&str] = &["vec", "format"];
+
+/// From every `// lint: hot-path` root, walk the intra-crate call graph
+/// (qualified, free, and method calls resolved by name against the
+/// index; `// lint: cold-path` stops traversal) and flag allocation
+/// constructors with the call chain that reaches them.
+pub fn hot_path_alloc(files: &[SourceFile], out: &mut Vec<Finding>) {
+    // Global fn name index: name -> [(file idx, fn idx)].
+    let mut by_name: HashMap<&str, Vec<(usize, usize)>> = HashMap::new();
+    for (fi, file) in files.iter().enumerate() {
+        if let Some(ix) = &file.rust {
+            for (gi, f) in ix.fns.iter().enumerate() {
+                if !f.in_test {
+                    by_name.entry(f.name.as_str()).or_default().push((fi, gi));
+                }
+            }
+        }
+    }
+
+    // BFS from the annotated roots; `chains` holds the reaching path for
+    // the finding message.
+    let mut queue: VecDeque<(usize, usize)> = VecDeque::new();
+    let mut chains: HashMap<(usize, usize), String> = HashMap::new();
+    for (fi, file) in files.iter().enumerate() {
+        if let Some(ix) = &file.rust {
+            for (gi, f) in ix.fns.iter().enumerate() {
+                if f.hot && !f.in_test {
+                    queue.push_back((fi, gi));
+                    chains.insert((fi, gi), qualified_name(files, fi, gi));
+                }
+            }
+        }
+    }
+
+    let mut flagged: HashSet<(usize, usize, String)> = HashSet::new();
+    while let Some((fi, gi)) = queue.pop_front() {
+        let chain = chains[&(fi, gi)].clone();
+        let file = &files[fi];
+        let ix = file.rust.as_ref().unwrap();
+        let f = &ix.fns[gi];
+        for call in &f.calls {
+            // -- allocation matching ----------------------------------
+            let mut hit: Option<String> = None;
+            if call.is_macro {
+                if ALLOC_MACROS.contains(&call.name.as_str()) {
+                    hit = Some(format!("`{}!`", call.name));
+                }
+            } else if let Some(q) = &call.qualifier {
+                if ALLOC_QUALIFIED.iter().any(|(qq, nn)| qq == q && *nn == call.name) {
+                    hit = Some(format!("`{}::{}`", q, call.name));
+                }
+            }
+            if hit.is_none() && !call.is_macro && ALLOC_NAMES.contains(&call.name.as_str()) {
+                hit = Some(format!("`{}()`", call.name));
+            }
+            if let Some(what) = hit {
+                if flagged.insert((fi, call.line, what.clone())) {
+                    out.push(finish(
+                        file,
+                        HOT_PATH_ALLOC,
+                        call.line,
+                        format!("allocation {what} reachable from hot path: {chain}"),
+                    ));
+                }
+                continue;
+            }
+            // -- call-graph descent -----------------------------------
+            if call.is_macro || call.turbofish {
+                continue;
+            }
+            for (tfi, tgi) in resolve(&by_name, call.qualifier.as_deref(), &call.name, files) {
+                let tf = &files[tfi].rust.as_ref().unwrap().fns[tgi];
+                if tf.cold || chains.contains_key(&(tfi, tgi)) {
+                    continue;
+                }
+                chains.insert((tfi, tgi), format!("{chain} -> {}", call.name));
+                queue.push_back((tfi, tgi));
+            }
+        }
+    }
+}
+
+/// `Owner::name` (or bare `name`) for root chain labels.
+fn qualified_name(files: &[SourceFile], fi: usize, gi: usize) -> String {
+    let f = &files[fi].rust.as_ref().unwrap().fns[gi];
+    match &f.owner {
+        Some(o) => format!("{o}::{}", f.name),
+        None => f.name.clone(),
+    }
+}
+
+/// Resolve a call to candidate fn items.  Qualified calls prefer
+/// methods of the named type, falling back to free fns of that name;
+/// method calls match any impl's method of that name; bare calls match
+/// free fns only.  Unresolvable calls (std, vendor crates) return empty
+/// — the traversal simply does not descend (DESIGN.md §13).
+fn resolve(
+    by_name: &HashMap<&str, Vec<(usize, usize)>>,
+    qualifier: Option<&str>,
+    name: &str,
+    files: &[SourceFile],
+) -> Vec<(usize, usize)> {
+    let cands = match by_name.get(name) {
+        Some(c) => c,
+        None => return Vec::new(),
+    };
+    let owner_of = |&(fi, gi): &(usize, usize)| -> Option<String> {
+        files[fi].rust.as_ref().unwrap().fns[gi].owner.clone()
+    };
+    if let Some(q) = qualifier {
+        let owned: Vec<_> =
+            cands.iter().filter(|c| owner_of(c).as_deref() == Some(q)).copied().collect();
+        if !owned.is_empty() {
+            return owned;
+        }
+        // `module::free_fn(…)` — the qualifier is a module path segment.
+        return cands.iter().filter(|c| owner_of(c).is_none()).copied().collect();
+    }
+    cands.to_vec()
+}
+
+// ---------------------------------------------------------------------
+// Rule: balanced-accounting
+// ---------------------------------------------------------------------
+
+const CAS_OPS: &[&str] = &["compare_exchange", "compare_exchange_weak", "fetch_update"];
+
+/// Every `// lint: gauge` atomic must have both an increment and a
+/// release reachable in its module group.  Direct `fetch_add` /
+/// `fetch_sub` / CAS sites count, and so do indirect sites where the
+/// gauge is passed by reference to an adjuster fn (a fn whose body runs
+/// one of those ops on a bare parameter); CAS and indirect sites count
+/// on both sides since the direction is not statically visible.
+pub fn balanced_accounting(files: &[SourceFile], out: &mut Vec<Finding>) {
+    // Adjuster fns: body applies an atomic RMW op to a bare identifier
+    // (a parameter), e.g. `fn try_reserve(a: &AtomicUsize, …)`.
+    let mut adjusters: HashSet<String> = HashSet::new();
+    for file in files {
+        let ix = match &file.rust {
+            Some(ix) => ix,
+            None => continue,
+        };
+        for f in &ix.fns {
+            if f.in_test {
+                continue;
+            }
+            let Some((start, end)) = f.body else { continue };
+            for lineno in start..=end {
+                let toks = tokenize(&ix.lines[lineno - 1].code);
+                for k in 2..toks.len() {
+                    let op = match toks[k].word() {
+                        Some(w) => w,
+                        None => continue,
+                    };
+                    let rmw = op == "fetch_add" || op == "fetch_sub" || CAS_OPS.contains(&op);
+                    if rmw
+                        && toks[k - 1] == Tok::P('.')
+                        && toks[k - 2].word().is_some()
+                        && (k < 3 || toks[k - 3] != Tok::P('.'))
+                    {
+                        adjusters.insert(f.name.clone());
+                    }
+                }
+            }
+        }
+    }
+
+    for (fi, file) in files.iter().enumerate() {
+        let ix = match &file.rust {
+            Some(ix) => ix,
+            None => continue,
+        };
+        for gauge in &ix.gauges {
+            let mut incs = 0usize;
+            let mut decs = 0usize;
+            let mut both = 0usize;
+            for peer in files.iter().filter(|p| p.group == files[fi].group) {
+                let pix = match &peer.rust {
+                    Some(pix) => pix,
+                    None => continue,
+                };
+                for (l0, line) in pix.lines.iter().enumerate() {
+                    if pix.test_lines[l0] {
+                        continue;
+                    }
+                    let toks = tokenize(&line.code);
+                    for k in 0..toks.len() {
+                        let w = match toks[k].word() {
+                            Some(w) => w,
+                            None => continue,
+                        };
+                        // Direct site: `<gauge>.fetch_add(…)` etc.
+                        if w == gauge.name && toks.get(k + 1) == Some(&Tok::P('.')) {
+                            if let Some(op) = toks.get(k + 2).and_then(|t| t.word()) {
+                                if op == "fetch_add" {
+                                    incs += 1;
+                                } else if op == "fetch_sub" {
+                                    decs += 1;
+                                } else if CAS_OPS.contains(&op) {
+                                    both += 1;
+                                }
+                            }
+                        }
+                        // Indirect site: gauge passed to an adjuster fn,
+                        // `try_reserve(&self.reserved, …)` — scan the
+                        // few lines the call's arguments may span.
+                        if adjusters.contains(w) && toks.get(k + 1) == Some(&Tok::P('(')) {
+                            let hit = (l0..(l0 + 3).min(pix.lines.len())).any(|a0| {
+                                let atoks = tokenize(&pix.lines[a0].code);
+                                atoks.iter().enumerate().any(|(j, t)| {
+                                    t.word() == Some(&gauge.name)
+                                        && j > 0
+                                        && matches!(atoks[j - 1], Tok::P('.') | Tok::P('&'))
+                                })
+                            });
+                            if hit {
+                                both += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            let inc_total = incs + both;
+            let dec_total = decs + both;
+            let msg = if inc_total == 0 && dec_total == 0 {
+                Some(format!(
+                    "gauge `{}` is registered but never adjusted in module group `{}`",
+                    gauge.name, file.group
+                ))
+            } else if dec_total == 0 {
+                Some(format!(
+                    "gauge `{}` is incremented ({inc_total} sites) but never released in module group `{}`",
+                    gauge.name, file.group
+                ))
+            } else if inc_total == 0 {
+                Some(format!(
+                    "gauge `{}` is released ({dec_total} sites) but never incremented in module group `{}`",
+                    gauge.name, file.group
+                ))
+            } else {
+                None
+            };
+            if let Some(m) = msg {
+                out.push(finish(file, BALANCED_ACCOUNTING, gauge.line, m));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule: undocumented-unsafe
+// ---------------------------------------------------------------------
+
+/// Every `unsafe` keyword in code must have a `SAFETY:` comment on the
+/// same line or in the contiguous comment/attribute block above it.
+pub fn undocumented_unsafe(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for file in files {
+        let ix = match &file.rust {
+            Some(ix) => ix,
+            None => continue,
+        };
+        let mut seen: HashSet<usize> = HashSet::new();
+        for (l0, line) in ix.lines.iter().enumerate() {
+            let has_unsafe = tokenize(&line.code).iter().any(|t| t.word() == Some("unsafe"));
+            if !has_unsafe || !seen.insert(l0) {
+                continue;
+            }
+            let mut documented = line.comment.contains("SAFETY:");
+            let mut j = l0;
+            while !documented && j > 0 {
+                j -= 1;
+                let prev = &ix.lines[j];
+                if prev.comment.contains("SAFETY:") {
+                    documented = true;
+                    break;
+                }
+                let ct = prev.code.trim();
+                if !(ct.is_empty() || ct.starts_with("#[")) {
+                    break;
+                }
+            }
+            if !documented {
+                out.push(finish(
+                    file,
+                    UNDOCUMENTED_UNSAFE,
+                    l0 + 1,
+                    "`unsafe` without a `// SAFETY:` comment".to_string(),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule: design-ref
+// ---------------------------------------------------------------------
+
+/// Design-doc citation checking, absorbed from
+/// `tools/check_design_refs.sh`: every `DESIGN.md §<N>` /
+/// `EXPERIMENTS.md §<Name>` citation and every `INVARIANT(§<N>)` tag in the
+/// scanned tree must resolve to a real `## §…` heading, and —
+/// bidirectionally — every DESIGN.md section must be cited (or tagged)
+/// somewhere in the scanned tree.
+pub fn design_ref(
+    files: &[SourceFile],
+    design: Option<&str>,
+    experiments: Option<&str>,
+    out: &mut Vec<Finding>,
+) {
+    let design_secs = design.map(headings_numeric);
+    let exp_secs = experiments.map(headings_named);
+
+    let mut cited: HashSet<String> = HashSet::new();
+    for file in files {
+        for (l0, text) in file.raw.lines().enumerate() {
+            let lineno = l0 + 1;
+            for num in scan_refs(text, "DESIGN.md §", false)
+                .into_iter()
+                .chain(scan_refs(text, "INVARIANT(§", false))
+            {
+                if file.display.ends_with("DESIGN.md") {
+                    continue;
+                }
+                cited.insert(num.clone());
+                match &design_secs {
+                    Some(secs) if secs.contains_key(&num) => {}
+                    Some(_) => out.push(finish(
+                        file,
+                        DESIGN_REF,
+                        lineno,
+                        format!("cites DESIGN.md §{num}, but DESIGN.md has no `## §{num}` heading"),
+                    )),
+                    None => out.push(finish(
+                        file,
+                        DESIGN_REF,
+                        lineno,
+                        format!("cites DESIGN.md §{num}, but DESIGN.md was not found"),
+                    )),
+                }
+            }
+            for name in scan_refs(text, "EXPERIMENTS.md §", true) {
+                if file.display.ends_with("EXPERIMENTS.md") {
+                    continue;
+                }
+                match &exp_secs {
+                    Some(secs) if secs.contains(&name) => {}
+                    Some(_) => out.push(finish(
+                        file,
+                        DESIGN_REF,
+                        lineno,
+                        format!(
+                            "cites EXPERIMENTS.md §{name}, but EXPERIMENTS.md has no `## §{name}` heading"
+                        ),
+                    )),
+                    None => out.push(finish(
+                        file,
+                        DESIGN_REF,
+                        lineno,
+                        format!("cites EXPERIMENTS.md §{name}, but EXPERIMENTS.md was not found"),
+                    )),
+                }
+            }
+        }
+    }
+
+    // Reverse direction: every DESIGN.md section is cited somewhere.
+    // (EXPERIMENTS.md sections are forward-only: benches cite them, but
+    // not every experiment section needs a code anchor.)
+    if let (Some(secs), Some(raw)) = (&design_secs, design) {
+        let mut nums: Vec<_> = secs.iter().collect();
+        nums.sort_by_key(|(n, _)| n.parse::<u64>().unwrap_or(u64::MAX));
+        for (num, &heading_line) in nums {
+            if cited.contains(num) {
+                continue;
+            }
+            let heading_text = raw.lines().nth(heading_line - 1).unwrap_or("");
+            let suppressed = heading_text
+                .find(&format!("lint-allow({DESIGN_REF})"))
+                .map(|p| {
+                    let mut reason = &heading_text[p + format!("lint-allow({DESIGN_REF})").len()..];
+                    if let Some(colon) = reason.find(':') {
+                        reason = &reason[colon + 1..];
+                    }
+                    reason.trim().trim_end_matches("-->").trim().to_string()
+                });
+            out.push(Finding {
+                rule: DESIGN_REF.to_string(),
+                file: "DESIGN.md".to_string(),
+                line: heading_line,
+                message: format!(
+                    "DESIGN.md §{num} is never cited (no `DESIGN.md §{num}` or `INVARIANT(§{num})` in the scanned tree)"
+                ),
+                suppressed,
+            });
+        }
+    }
+}
+
+/// `## §N · Title` headings of DESIGN.md: number -> 1-based line.
+fn headings_numeric(raw: &str) -> HashMap<String, usize> {
+    let mut secs = HashMap::new();
+    for (l0, line) in raw.lines().enumerate() {
+        if let Some(rest) = line.strip_prefix("## §") {
+            let num: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if !num.is_empty() {
+                secs.entry(num).or_insert(l0 + 1);
+            }
+        }
+    }
+    secs
+}
+
+/// `## §Name …` headings of EXPERIMENTS.md.
+fn headings_named(raw: &str) -> HashSet<String> {
+    let mut secs = HashSet::new();
+    for line in raw.lines() {
+        if let Some(rest) = line.strip_prefix("## §") {
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_' || *c == '-')
+                .collect();
+            if !name.is_empty() {
+                secs.insert(name);
+            }
+        }
+    }
+    secs
+}
+
+/// All `§…` references following `prefix` on one raw line.  `named`
+/// selects section-name tokens (`E2E`, `Perf`) over numeric ones.
+fn scan_refs(text: &str, prefix: &str, named: bool) -> Vec<String> {
+    let mut found = Vec::new();
+    let mut rest = text;
+    while let Some(p) = rest.find(prefix) {
+        rest = &rest[p + prefix.len()..];
+        let tok: String = if named {
+            rest.chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_' || *c == '-')
+                .collect()
+        } else {
+            rest.chars().take_while(|c| c.is_ascii_digit()).collect()
+        };
+        let valid = if named {
+            tok.chars().next().is_some_and(|c| c.is_ascii_alphabetic())
+        } else {
+            !tok.is_empty()
+        };
+        if valid {
+            found.push(tok);
+        }
+    }
+    found
+}

@@ -1,0 +1,22 @@
+//! Known-bad fixture: one gauge leaks (incremented, never released),
+//! one is registered but never adjusted at all.
+//! Never compiled — scanned by `tests/rules.rs` only.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub struct Shared {
+    // lint: gauge — admitted-but-never-released count
+    leaked: AtomicUsize,
+    // lint: gauge — registered but never adjusted
+    idle: AtomicUsize,
+}
+
+impl Shared {
+    pub fn admit(&self) {
+        self.leaked.fetch_add(1, Ordering::AcqRel);
+    }
+
+    pub fn snapshot(&self) -> usize {
+        self.idle.load(Ordering::Acquire)
+    }
+}

@@ -1,0 +1,45 @@
+//! Known-good fixture: balanced gauges — one via direct
+//! `fetch_add`/`fetch_sub`, one via a CAS adjuster fn whose call sites
+//! count on both sides.  Never compiled — scanned by `tests/rules.rs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub struct Shared {
+    // lint: gauge — active request count
+    active: AtomicUsize,
+    // lint: gauge — reserved byte budget
+    reserved: AtomicUsize,
+}
+
+impl Shared {
+    pub fn admit(&self) {
+        self.active.fetch_add(1, Ordering::AcqRel);
+    }
+
+    pub fn retire(&self) {
+        self.active.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    pub fn reserve(&self, n: usize, cap: usize) -> bool {
+        try_adjust(&self.reserved, n, cap)
+    }
+
+    pub fn release(&self, n: usize) {
+        self.reserved.fetch_sub(n, Ordering::AcqRel);
+    }
+}
+
+/// CAS loop on a bare parameter: makes this an adjuster fn, so call
+/// sites passing a gauge count as both increment and release.
+fn try_adjust(a: &AtomicUsize, n: usize, cap: usize) -> bool {
+    let mut cur = a.load(Ordering::Acquire);
+    loop {
+        if cur + n > cap {
+            return false;
+        }
+        match a.compare_exchange_weak(cur, cur + n, Ordering::AcqRel, Ordering::Acquire) {
+            Ok(_) => return true,
+            Err(v) => cur = v,
+        }
+    }
+}

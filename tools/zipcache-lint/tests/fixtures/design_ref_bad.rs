@@ -1,0 +1,13 @@
+//! Known-bad fixture: a stale section citation, a stale invariant tag,
+//! an unknown experiment section — and by citing only §1, it leaves the
+//! fixture doc's §2 uncited (reverse-direction finding).
+//! Never compiled — scanned by `tests/rules.rs` only.
+
+/// Cites DESIGN.md §1 (fine) and DESIGN.md §99 (stale).
+pub fn stale() {}
+
+/// INVARIANT(§98): no such section.
+pub fn tag() {}
+
+/// Results in EXPERIMENTS.md §Nope.
+pub fn exp() {}

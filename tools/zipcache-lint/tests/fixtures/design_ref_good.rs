@@ -1,0 +1,9 @@
+//! Known-good fixture: every citation resolves and both sections of
+//! the fixture design doc are anchored from code.
+//! Never compiled — scanned by `tests/rules.rs` only.
+
+/// Covered by DESIGN.md §1 and measured in EXPERIMENTS.md §Perf.
+pub fn anchored() {}
+
+/// INVARIANT(§2): the second section's contract.
+pub fn tagged() {}

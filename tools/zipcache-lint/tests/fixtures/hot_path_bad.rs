@@ -1,0 +1,16 @@
+//! Known-bad fixture: allocations reachable from a `lint: hot-path`
+//! root, directly (`to_vec`) and transitively (`vec!` two hops down).
+//! Never compiled — scanned by `tests/rules.rs` only.
+
+// lint: hot-path
+pub fn decode_step(out: &mut Vec<u32>, xs: &[u32]) -> usize {
+    let extra = xs.to_vec();
+    stage(out, &extra);
+    out.len()
+}
+
+fn stage(out: &mut Vec<u32>, xs: &[u32]) {
+    let tmp = vec![0u32; 4];
+    out.extend_from_slice(&tmp);
+    out.extend_from_slice(xs);
+}

@@ -1,0 +1,26 @@
+//! Known-good fixture: the hot root is allocation-free, a `lint:
+//! cold-path` anchor stops traversal into startup code, and the one
+//! intentional constructor carries an audited `lint-allow`.
+//! Never compiled — scanned by `tests/rules.rs` only.
+
+// lint: hot-path
+pub fn decode_step(out: &mut [u32], xs: &[u32]) -> usize {
+    let mut acc = 0usize;
+    for (dst, src) in out.iter_mut().zip(xs) {
+        *dst = *src;
+        acc += *src as usize;
+    }
+    acc + empty_scratch()
+}
+
+fn empty_scratch() -> usize {
+    // lint-allow(hot-path-alloc): capacity-0 Vec::new is heap-free
+    let v: Vec<u32> = Vec::new();
+    let _ = warm_tables();
+    v.capacity()
+}
+
+// lint: cold-path — startup table build, outside the steady contract
+fn warm_tables() -> Vec<u32> {
+    vec![0u32; 16]
+}

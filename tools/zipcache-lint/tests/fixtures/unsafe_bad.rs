@@ -1,0 +1,10 @@
+//! Known-bad fixture: `unsafe` without `// SAFETY:` documentation.
+//! Never compiled — scanned by `tests/rules.rs` only.
+
+pub fn first(xs: &[u8]) -> u8 {
+    unsafe { *xs.as_ptr() }
+}
+
+pub unsafe fn advance(p: *const u8, n: usize) -> *const u8 {
+    p.add(n)
+}

@@ -1,0 +1,15 @@
+//! Known-good fixture: every `unsafe` carries a `SAFETY:` comment —
+//! directly above, or above through an attribute line.
+//! Never compiled — scanned by `tests/rules.rs` only.
+
+pub fn first(xs: &[u8]) -> u8 {
+    debug_assert!(!xs.is_empty());
+    // SAFETY: asserted non-empty above; as_ptr is in-bounds for index 0.
+    unsafe { *xs.as_ptr() }
+}
+
+// SAFETY: caller must keep `p + n` within the same allocation.
+#[inline]
+pub unsafe fn advance(p: *const u8, n: usize) -> *const u8 {
+    p.add(n)
+}

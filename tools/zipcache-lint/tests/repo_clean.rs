@@ -1,0 +1,37 @@
+//! The real tree must stay lint-clean: zero unsuppressed findings over
+//! `rust/src` against the workspace DESIGN.md / EXPERIMENTS.md — the
+//! same invocation the CI `lint` job runs (DESIGN.md §13).
+
+use std::path::PathBuf;
+
+use zipcache_lint::{run, Options};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("..")
+}
+
+#[test]
+fn repo_tree_is_lint_clean() {
+    let root = repo_root();
+    let opts = Options {
+        paths: vec![root.join("rust").join("src")],
+        docs_root: root,
+        rules: Vec::new(),
+    };
+    let r = run(&opts).expect("lint run failed");
+    assert_eq!(
+        r.unsuppressed(),
+        0,
+        "unsuppressed lint findings in the repo tree:\n{}",
+        r.render()
+    );
+    // The anchors themselves are load-bearing: if the §9 hot roots or
+    // the §10 gauges disappear, the rules silently check nothing.
+    assert!(
+        r.roots.iter().any(|x| x == "Engine::decode_step"),
+        "hot-path roots lost: {:?}",
+        r.roots
+    );
+    assert!(r.gauges.iter().any(|g| g == "in_use"), "gauges lost: {:?}", r.gauges);
+    assert!(r.suppressed() >= 1, "the audited allows should be counted, not dropped");
+}

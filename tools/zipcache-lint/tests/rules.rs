@@ -1,0 +1,121 @@
+//! Per-rule fixture tests: each rule must fire on its known-bad
+//! fixture and stay silent on the known-good one (DESIGN.md §13).
+//!
+//! The fixtures live under `tests/fixtures/` — a directory name the
+//! walker never descends into, so scanning the real tree (or `tools/`)
+//! can never trip on the deliberately-bad files.  Here they are passed
+//! as explicit root paths, which bypasses the skip list.
+
+use std::path::PathBuf;
+
+use zipcache_lint::{run, Options, Report};
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures").join(name)
+}
+
+fn run_rule(rule: &str, file: &str) -> Report {
+    let opts = Options {
+        paths: vec![fixture(file)],
+        docs_root: fixture("docs"),
+        rules: vec![rule.to_string()],
+    };
+    run(&opts).expect("lint run failed")
+}
+
+#[test]
+fn hot_path_alloc_fires_on_bad() {
+    let r = run_rule("hot-path-alloc", "hot_path_bad.rs");
+    assert_eq!(r.unsuppressed(), 2, "{}", r.render());
+    let msgs: Vec<&str> = r.findings.iter().map(|f| f.message.as_str()).collect();
+    assert!(msgs.iter().any(|m| m.contains("`to_vec()`")), "{msgs:?}");
+    assert!(
+        msgs.iter().any(|m| m.contains("`vec!`") && m.contains("decode_step -> stage")),
+        "transitive chain missing: {msgs:?}"
+    );
+}
+
+#[test]
+fn hot_path_alloc_clean_on_good() {
+    let r = run_rule("hot-path-alloc", "hot_path_good.rs");
+    assert_eq!(r.unsuppressed(), 0, "{}", r.render());
+    assert_eq!(r.suppressed(), 1, "the audited allow must still be counted");
+    assert!(r.findings[0].message.contains("Vec::new"), "{}", r.findings[0].message);
+    assert_eq!(
+        r.findings[0].suppressed.as_deref(),
+        Some("capacity-0 Vec::new is heap-free")
+    );
+}
+
+#[test]
+fn balanced_accounting_fires_on_bad() {
+    let r = run_rule("balanced-accounting", "accounting_bad.rs");
+    assert_eq!(r.unsuppressed(), 2, "{}", r.render());
+    let msgs: Vec<&str> = r.findings.iter().map(|f| f.message.as_str()).collect();
+    assert!(
+        msgs.iter().any(|m| m.contains("`leaked`") && m.contains("never released")),
+        "{msgs:?}"
+    );
+    assert!(
+        msgs.iter().any(|m| m.contains("`idle`") && m.contains("never adjusted")),
+        "{msgs:?}"
+    );
+}
+
+#[test]
+fn balanced_accounting_clean_on_good() {
+    let r = run_rule("balanced-accounting", "accounting_good.rs");
+    assert_eq!(r.unsuppressed(), 0, "{}", r.render());
+    assert_eq!(r.gauges, vec!["active".to_string(), "reserved".to_string()]);
+}
+
+#[test]
+fn undocumented_unsafe_fires_on_bad() {
+    let r = run_rule("undocumented-unsafe", "unsafe_bad.rs");
+    assert_eq!(r.unsuppressed(), 2, "{}", r.render());
+}
+
+#[test]
+fn undocumented_unsafe_clean_on_good() {
+    let r = run_rule("undocumented-unsafe", "unsafe_good.rs");
+    assert_eq!(r.unsuppressed(), 0, "{}", r.render());
+}
+
+#[test]
+fn design_ref_fires_on_bad() {
+    let r = run_rule("design-ref", "design_ref_bad.rs");
+    assert_eq!(r.unsuppressed(), 4, "{}", r.render());
+    let msgs: Vec<&str> = r.findings.iter().map(|f| f.message.as_str()).collect();
+    assert!(msgs.iter().any(|m| m.contains("§99")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("§98")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("§Nope")), "{msgs:?}");
+    assert!(
+        msgs.iter().any(|m| m.contains("§2 is never cited")),
+        "reverse-direction finding missing: {msgs:?}"
+    );
+}
+
+#[test]
+fn design_ref_clean_on_good() {
+    let r = run_rule("design-ref", "design_ref_good.rs");
+    assert_eq!(r.unsuppressed(), 0, "{}", r.render());
+}
+
+#[test]
+fn unknown_rule_is_an_error() {
+    let opts = Options {
+        paths: vec![fixture("hot_path_good.rs")],
+        docs_root: fixture("docs"),
+        rules: vec!["bogus".to_string()],
+    };
+    assert!(run(&opts).is_err());
+}
+
+#[test]
+fn json_report_shape() {
+    let r = run_rule("hot-path-alloc", "hot_path_bad.rs");
+    let json = r.to_json();
+    assert!(json.contains("\"rule\": \"hot-path-alloc\""), "{json}");
+    assert!(json.contains("\"unsuppressed\": 2"), "{json}");
+    assert!(json.contains("\"suppressed\": null"), "{json}");
+}

@@ -133,6 +133,47 @@ pub struct MemoryConfig {
     pub budget_bytes: usize,
 }
 
+/// Fault-injection and shard-supervision knobs (DESIGN.md §14).  The
+/// default (empty plan) is the fault-free runtime bit-for-bit; the
+/// supervisor knobs always govern the sharded server's restart policy.
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// Fault plan (grammar in DESIGN.md §14 / [`crate::runtime::fault`]):
+    /// `;`-separated `shard<K>:<site>:<trigger>:<kind>` clauses, e.g.
+    /// `shard0:decode:3:panic;shard1:execute:p0.01:error`.  Empty = off.
+    pub plan: String,
+    /// Seed for probabilistic triggers (chaos runs are replayable).
+    pub seed: u64,
+    /// Supervisor poll cadence in ms: how often heartbeats are scanned
+    /// for stalled shards between failure events.
+    pub poll_ms: u64,
+    /// Consecutive unchanged-heartbeat polls (while the shard holds
+    /// work) before it is declared stalled and severed.  The default
+    /// (100 polls x 10 ms = ~1 s) stays far above a legitimately slow
+    /// engine step; chaos tests shrink it.
+    pub stall_ticks: u64,
+    /// Restart backoff: base delay in ms, doubled per consecutive
+    /// restart of the same shard, capped at `backoff_cap_ms`.
+    pub backoff_base_ms: u64,
+    pub backoff_cap_ms: u64,
+    /// Stop restarting a shard after this many attempts (0 = never stop).
+    pub max_restarts: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            plan: String::new(),
+            seed: 0,
+            poll_ms: 10,
+            stall_ticks: 100,
+            backoff_base_ms: 10,
+            backoff_cap_ms: 1000,
+            max_restarts: 0,
+        }
+    }
+}
+
 /// Full engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -150,6 +191,8 @@ pub struct EngineConfig {
     pub parallelism: usize,
     /// Request seed base (determinism).
     pub seed: u64,
+    /// Fault injection + shard supervision (DESIGN.md §14).
+    pub faults: FaultConfig,
 }
 
 impl EngineConfig {
@@ -164,6 +207,7 @@ impl EngineConfig {
             memory: MemoryConfig::default(),
             parallelism: 0,
             seed: 0,
+            faults: FaultConfig::default(),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -195,6 +239,15 @@ impl EngineConfig {
             },
             parallelism: c.get_usize("parallelism", 0)?,
             seed: c.get_u64("seed", 0)?,
+            faults: FaultConfig {
+                plan: c.get_or("faults.plan", ""),
+                seed: c.get_u64("faults.seed", 0)?,
+                poll_ms: c.get_u64("faults.poll_ms", 10)?,
+                stall_ticks: c.get_u64("faults.stall_ticks", 100)?,
+                backoff_base_ms: c.get_u64("faults.backoff_base_ms", 10)?,
+                backoff_cap_ms: c.get_u64("faults.backoff_cap_ms", 1000)?,
+                max_restarts: c.get_u64("faults.max_restarts", 0)?,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -220,6 +273,17 @@ impl EngineConfig {
             self.scheduler.max_batch
         );
         ensure!(!self.model.is_empty(), "model name required");
+        let f = &self.faults;
+        if !f.plan.is_empty() {
+            // Malformed plans die here, not mid-run inside a shard.
+            crate::runtime::fault::FaultPlan::parse(&f.plan)?;
+        }
+        ensure!(f.poll_ms >= 1, "faults.poll_ms >= 1");
+        ensure!(f.stall_ticks >= 1, "faults.stall_ticks >= 1");
+        ensure!(
+            f.backoff_base_ms <= f.backoff_cap_ms,
+            "faults.backoff_base_ms must be <= faults.backoff_cap_ms"
+        );
         Ok(())
     }
 }
@@ -325,6 +389,39 @@ max_batch = 4
         c.memory.slots = 4;
         assert!(c.validate().is_ok());
         c.memory.slots = 5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn faults_from_file_and_default() {
+        let text = "model = \"tiny\"\n[faults]\nplan = \"shard0:decode:2:panic\"\n\
+                    seed = 11\npoll_ms = 2\nstall_ticks = 3\n\
+                    backoff_base_ms = 0\nbackoff_cap_ms = 50\nmax_restarts = 4\n";
+        let path = std::env::temp_dir().join("zipcache_cfg_faults_test.conf");
+        std::fs::write(&path, text).unwrap();
+        let c = EngineConfig::from_file(&path).unwrap();
+        assert_eq!(c.faults.plan, "shard0:decode:2:panic");
+        assert_eq!(c.faults.seed, 11);
+        assert_eq!(c.faults.poll_ms, 2);
+        assert_eq!(c.faults.stall_ticks, 3);
+        assert_eq!(c.faults.backoff_base_ms, 0);
+        assert_eq!(c.faults.backoff_cap_ms, 50);
+        assert_eq!(c.faults.max_restarts, 4);
+        let d = EngineConfig::load_default("sim", "micro").unwrap();
+        assert!(d.faults.plan.is_empty()); // default: fault-free
+        assert_eq!(d.faults.stall_ticks, 100);
+    }
+
+    #[test]
+    fn malformed_fault_plan_rejected_at_validate() {
+        let mut c = EngineConfig::load_default("sim", "micro").unwrap();
+        c.faults.plan = "shard0:decode:2:panic".to_string();
+        assert!(c.validate().is_ok());
+        c.faults.plan = "shard0:warp:2:panic".to_string();
+        assert!(c.validate().is_err());
+        c.faults = FaultConfig::default();
+        c.faults.backoff_base_ms = 100;
+        c.faults.backoff_cap_ms = 50;
         assert!(c.validate().is_err());
     }
 

@@ -656,6 +656,25 @@ impl ContinuousBatcher {
         std::mem::take(&mut self.outcomes)
     }
 
+    /// Drain every *staged* (not yet activated) request, in storage
+    /// order.  Shard-fatal path only (DESIGN.md §14): these requests
+    /// never touched engine state, so the supervisor can redeliver them
+    /// to a live shard and their content-derived seeds reproduce the
+    /// fault-free output bit-for-bit.  Does not touch the departure
+    /// counter — redelivered requests keep their global waiting slot.
+    pub fn take_staged(&mut self) -> Vec<QueuedRequest> {
+        self.queue.drain(..).map(|s| s.req).collect()
+    }
+
+    /// Drain every *active* session.  Shard-fatal path only
+    /// (DESIGN.md §14): these sessions already streamed tokens, so they
+    /// cannot be redelivered without violating at-most-once streaming —
+    /// the caller answers each with `FinishReason::ShardFailed` and the
+    /// tokens generated so far.
+    pub fn take_active(&mut self) -> Vec<Session> {
+        self.active.drain(..).map(|a| a.sess).collect()
+    }
+
     /// Drain the `(tag, token)` stream emitted by the *latest*
     /// [`ContinuousBatcher::step`], in emission order (each step clears
     /// the previous iteration's stream, so undrained tokens do not

@@ -15,7 +15,7 @@ use crate::baselines::{
 use crate::config::{EngineConfig, PolicyKind, QuantConfig};
 use crate::kvcache::{CacheLayout, CompressScratch, CompressedKV, SlotPool};
 use crate::metrics::EngineMetrics;
-use crate::runtime::{Runtime, Tensor, TensorView};
+use crate::runtime::{FaultInjector, FaultPlan, FaultSite, Runtime, Tensor, TensorView};
 use crate::saliency::{select_probes, ProbeStrategy};
 use crate::util::pool::WorkerPool;
 use crate::Result;
@@ -103,6 +103,21 @@ impl Engine {
         &self.rt
     }
 
+    /// Arm fault injection (DESIGN.md §14) for the shard that owns this
+    /// engine: parses `cfg.faults.plan` (already checked by
+    /// `EngineConfig::validate`) and decorates the runtime with a
+    /// [`FaultInjector`].  No-op on an empty plan, so bare engines and
+    /// fault-free servers stay bit-identical.
+    pub fn arm_faults(&mut self, shard: usize) -> Result<()> {
+        if self.cfg.faults.plan.is_empty() {
+            return Ok(());
+        }
+        let plan = FaultPlan::parse(&self.cfg.faults.plan)?;
+        let seed = self.cfg.faults.seed;
+        self.rt.arm_faults(FaultInjector::new(&plan, shard, seed));
+        Ok(())
+    }
+
     /// Convenience: run one prompt to completion with a defaults-built
     /// request (the legacy positional signature, kept as a thin wrapper
     /// — DESIGN.md §11).
@@ -141,6 +156,13 @@ impl Engine {
             // are mutually exclusive, so this can never double-count.
             FinishReason::DeadlineExpired => {
                 self.metrics.shed_by_priority[s.priority.rank()] += 1;
+            }
+            FinishReason::ShardFailed => {
+                // Normally the server's fatal path answers failed
+                // sessions itself (the engine is gone with the shard —
+                // DESIGN.md §14); counted here defensively so a future
+                // in-engine path can never lose the failure.
+                self.metrics.failed_sessions += 1;
             }
             _ => unreachable!("is_natural covers Eos and MaxTokens"),
         }
@@ -403,6 +425,7 @@ impl Engine {
         // [0, n-1) (the prompt tail is withheld so the first generated
         // token reads quantized state), zero the dead tail, and re-feed
         // the final prompt token through the decode artifact.
+        self.rt.fault_point(FaultSite::Compress)?;
         self.compress_session(s, n - 1);
         let (dh, heads) = (layout.d_head, layout.heads);
         let tail = (smax - (n - 1)) * dh;
@@ -537,6 +560,7 @@ impl Engine {
         // the first generated token genuinely reads the *quantized* cache
         // (the paper's evaluation protocol: answers come from the compressed
         // state, not from uncompressed prefill activations).
+        self.rt.fault_point(FaultSite::Compress)?;
         self.compress_session(&mut s, n - 1);
         // Rows >= n-1 still hold whatever the prefill artifact emitted
         // there: the withheld prompt-tail row, plus — on a real PJRT
@@ -694,6 +718,7 @@ impl Engine {
             if let Some(stream_sal) = s.stream.take_saliency(smax) {
                 merge_streaming_saliency(&mut s.norm_saliency, &stream_sal);
             }
+            self.rt.fault_point(FaultSite::Compress)?;
             self.compress_session(s, n_live);
             compress_us = tc.elapsed().as_micros() as u64;
             self.metrics.compress.record_us(compress_us);

@@ -261,6 +261,14 @@ pub enum FinishReason {
     /// Shed at pop time: the deadline passed while the request waited
     /// for a decode slot (it never held one).
     DeadlineExpired,
+    /// The shard serving this request died (panic, engine error, or a
+    /// supervisor-severed stall — DESIGN.md §14) after the session was
+    /// already live.  Tokens streamed before the failure are kept and
+    /// are a prefix of the fault-free stream; the stream is never
+    /// resumed or replayed, so callers observe at-most-once delivery.
+    /// Requests still *waiting* on the dead shard are redelivered
+    /// instead and never see this reason.
+    ShardFailed,
 }
 
 impl FinishReason {
@@ -278,6 +286,7 @@ impl FinishReason {
             FinishReason::MaxTokens => "max_tokens",
             FinishReason::Cancelled => "cancelled",
             FinishReason::DeadlineExpired => "deadline_expired",
+            FinishReason::ShardFailed => "shard_failed",
         }
     }
 }
@@ -411,6 +420,8 @@ mod tests {
         assert!(FinishReason::MaxTokens.is_natural());
         assert!(!FinishReason::Cancelled.is_natural());
         assert!(!FinishReason::DeadlineExpired.is_natural());
+        assert!(!FinishReason::ShardFailed.is_natural());
+        assert_eq!(FinishReason::ShardFailed.as_str(), "shard_failed");
     }
 
     #[test]

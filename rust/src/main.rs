@@ -47,7 +47,11 @@ fn main() -> Result<()> {
     .flag("requests", "16", "serve: number of requests")
     .flag("rate", "8.0", "serve: arrival rate (req/s)")
     .flag("trace", "poisson",
-          "serve: poisson | memory-pressure | priority-mix | long-prompt-burst")
+          "serve: poisson | memory-pressure | priority-mix | long-prompt-burst \
+           | chaos")
+    .flag("fault-plan", "",
+          "serve: fault-injection plan, e.g. 'shard0:decode:2:panic' \
+           (DESIGN.md §14; empty = fault-free)")
     .flag("seed", "0", "base seed")
     .parse()?;
 
@@ -91,7 +95,9 @@ fn build_config(args: &Args) -> Result<EngineConfig> {
     cfg.memory.slots = args.get_usize("memory-slots")?;
     cfg.memory.budget_bytes = args.get_usize("memory-budget")?;
     cfg.scheduler.prefill_chunk = args.get_usize("prefill-chunk")?;
+    cfg.faults.plan = args.get("fault-plan");
     cfg.seed = args.get_u64("seed")?;
+    cfg.faults.seed = cfg.seed;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -184,9 +190,10 @@ fn serve(cfg: EngineConfig, task: Task, requests: usize, rate: f64, max_new: usi
                                                       max_new, cfg.seed),
         "long-prompt-burst" => loadgen::long_prompt_burst_trace(
             info.max_seq, requests, max_new, cfg.seed),
+        "chaos" => loadgen::chaos_trace(info.max_seq, requests, cfg.seed),
         other => anyhow::bail!(
             "unknown trace '{other}' \
-             (poisson|memory-pressure|priority-mix|long-prompt-burst)"
+             (poisson|memory-pressure|priority-mix|long-prompt-burst|chaos)"
         ),
     };
     let report = loadgen::replay(&server.handle, &trace)?;
@@ -202,7 +209,7 @@ fn serve(cfg: EngineConfig, task: Task, requests: usize, rate: f64, max_new: usi
     println!(
         "served {}/{requests} requests in {:.2}s across {} shard(s) — \
          {:.1} req/s, {:.1} tok/s, acc {:.1}% (rejected {}, failed {}, \
-         cancelled {}, shed {})",
+         cancelled {}, shed {}, shard-failed {})",
         report.completed,
         report.wall.as_secs_f64(),
         server.handle.shards(),
@@ -213,9 +220,21 @@ fn serve(cfg: EngineConfig, task: Task, requests: usize, rate: f64, max_new: usi
         report.failed,
         report.cancelled,
         report.shed,
+        report.shard_failed,
     );
     println!("request latency p50={:.0}ms p99={:.0}ms",
              report.latency.p50_ms(), report.latency.p99_ms());
+    // Let supervision settle before the snapshot (DESIGN.md §14): the
+    // replay can drain on the surviving shards while a killed shard is
+    // still inside its restart backoff, and the supervision counters
+    // below should reflect the completed recovery.  Bounded wait — a
+    // shard past `faults.max_restarts` stays dead forever.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+    while server.handle.shard_alive().iter().any(|a| !*a)
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::yield_now();
+    }
     let snap = server.handle.metrics();
     println!(
         "engine histograms: prefill p50={:.2}ms decode/step p50={:.3}ms \
@@ -252,6 +271,13 @@ fn serve(cfg: EngineConfig, task: Task, requests: usize, rate: f64, max_new: usi
         snap.total.completed_by_priority[2],
         snap.total.shed_by_priority[2],
         snap.total.cancelled,
+    );
+    println!(
+        "supervision (DESIGN.md §14): restarts {}, redelivered {}, \
+         failed sessions {}",
+        snap.total.shard_restarts,
+        snap.total.redelivered,
+        snap.total.failed_sessions,
     );
     for (i, m) in snap.per_shard.iter().enumerate() {
         println!("  shard {i}: {} req, {} tok", m.requests_completed,

@@ -161,6 +161,15 @@ pub struct EngineMetrics {
     /// (`Engine::park` calls; unparks mirror them 1:1 while a session
     /// is live).
     pub park_cycles: u64,
+    /// Times this shard was restarted by the supervisor after a panic,
+    /// engine error, or severed stall (DESIGN.md §14).
+    pub shard_restarts: u64,
+    /// Requests that were waiting on a failed shard and were resubmitted
+    /// to a live shard (their outputs stay bit-identical — §14).
+    pub redelivered: u64,
+    /// Live sessions lost to a shard failure: their callers saw
+    /// `FinishReason::ShardFailed` with the tokens streamed so far.
+    pub failed_sessions: u64,
 }
 
 impl EngineMetrics {
@@ -225,6 +234,9 @@ impl EngineMetrics {
         self.resident_bytes += other.resident_bytes;
         self.peak_resident_bytes += other.peak_resident_bytes;
         self.park_cycles += other.park_cycles;
+        self.shard_restarts += other.shard_restarts;
+        self.redelivered += other.redelivered;
+        self.failed_sessions += other.failed_sessions;
     }
 }
 
@@ -338,6 +350,22 @@ mod tests {
         assert_eq!(a.completed_by_priority, [3, 1, 3]);
         assert_eq!(a.shed_by_priority, [1, 0, 2]);
         assert_eq!(a.cancelled, 3);
+    }
+
+    #[test]
+    fn failure_counters_sum_across_shards() {
+        let mut a = EngineMetrics::default();
+        a.shard_restarts = 1;
+        a.redelivered = 3;
+        a.failed_sessions = 2;
+        let mut b = EngineMetrics::default();
+        b.shard_restarts = 2;
+        b.redelivered = 1;
+        let snap = MetricsSnapshot::aggregate(vec![a, b]);
+        assert_eq!(snap.total.shard_restarts, 3);
+        assert_eq!(snap.total.redelivered, 4);
+        assert_eq!(snap.total.failed_sessions, 2);
+        assert_eq!(snap.per_shard[0].redelivered, 3);
     }
 
     #[test]

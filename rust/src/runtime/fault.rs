@@ -1,0 +1,410 @@
+//! Deterministic fault injection over the model runtime (DESIGN.md §14).
+//!
+//! The sim backend never fails at steady state, so the failure paths of
+//! the sharded server — panic isolation, supervision, redelivery — were
+//! untestable until this module.  A [`FaultInjector`] decorates a
+//! [`Runtime`](super::Runtime): every `execute_into` call (and the
+//! engine's compression passes, via
+//! [`Runtime::fault_point`](super::Runtime::fault_point)) first consults
+//! the armed [`FaultPlan`], which can inject an error, a panic, or a
+//! stall at a plan-specified call site.
+//!
+//! Plans are *deterministic*: count-triggered clauses fire on the Nth
+//! hit of a site on a given shard (hit counters are per-injector, and a
+//! shard's call sequence is a pure function of the requests it serves),
+//! and probability-triggered clauses draw from a SplitMix64 stream
+//! seeded from `(faults.seed, clause index, shard)` — replaying the same
+//! plan over the same traffic reproduces the same faults bit-for-bit.
+//!
+//! Grammar (`faults.plan` config key / `--fault-plan` CLI flag):
+//!
+//! ```text
+//! plan    := clause (';' clause)*
+//! clause  := 'shard' INT ':' site ':' trigger ':' kind
+//! site    := 'execute' | 'prefill' | 'prefill_chunk' | 'decode' | 'compress'
+//! trigger := INT          fire on the Nth hit of the site (1-based)
+//!          | 'p' FLOAT    fire per hit with this probability (seeded)
+//! kind    := 'error' | 'panic' | 'stall'
+//! ```
+//!
+//! e.g. `shard0:decode:3:panic` — panic during shard 0's third decode
+//! call; `shard1:execute:p0.01:error` — each runtime call on shard 1
+//! errors with probability 1%.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use crate::Result;
+
+/// Call sites a fault clause can target.  `Execute` counts *every*
+/// runtime call; the entry-specific sites count only their entry kind;
+/// `Compress` is hit by the engine around each compression pass (which
+/// never crosses the runtime boundary).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Any `Runtime::execute_into` call, regardless of entry.
+    Execute,
+    /// Monolithic prefill entries (`prefill_full` / `prefill_flash`).
+    Prefill,
+    /// Chunked prefill entries (`prefill_chunk` / `prefill_fin`).
+    PrefillChunk,
+    /// The decode entry (the steady-state hot path).
+    Decode,
+    /// An engine compression pass (prefill compression or a streaming
+    /// recompression cycle).
+    Compress,
+}
+
+impl FaultSite {
+    pub const COUNT: usize = 5;
+
+    fn slot(self) -> usize {
+        match self {
+            FaultSite::Execute => 0,
+            FaultSite::Prefill => 1,
+            FaultSite::PrefillChunk => 2,
+            FaultSite::Decode => 3,
+            FaultSite::Compress => 4,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultSite::Execute => "execute",
+            FaultSite::Prefill => "prefill",
+            FaultSite::PrefillChunk => "prefill_chunk",
+            FaultSite::Decode => "decode",
+            FaultSite::Compress => "compress",
+        }
+    }
+
+    /// The entry-specific site of a runtime entry name
+    /// (`"decode_micro"` → `Decode`).  Allocation-free: the decode hot
+    /// path classifies its entry through here every step.
+    pub fn fault_site_of_entry(name: &str) -> FaultSite {
+        if name.starts_with("decode") {
+            FaultSite::Decode
+        } else if name.starts_with("prefill_chunk") || name.starts_with("prefill_fin") {
+            FaultSite::PrefillChunk
+        } else if name.starts_with("prefill") {
+            FaultSite::Prefill
+        } else {
+            FaultSite::Execute
+        }
+    }
+}
+
+impl std::str::FromStr for FaultSite {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "execute" => FaultSite::Execute,
+            "prefill" => FaultSite::Prefill,
+            "prefill_chunk" => FaultSite::PrefillChunk,
+            "decode" => FaultSite::Decode,
+            "compress" => FaultSite::Compress,
+            other => anyhow::bail!(
+                "unknown fault site '{other}' \
+                 (execute|prefill|prefill_chunk|decode|compress)"
+            ),
+        })
+    }
+}
+
+/// What an armed clause does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The call returns an engine error (the shard's fatal path runs).
+    Error,
+    /// The call panics (caught by the shard loop's `catch_unwind`).
+    Panic,
+    /// The call completes, then the shard wedges before its next
+    /// heartbeat: it stops processing until the supervisor severs its
+    /// channel (DESIGN.md §14).
+    Stall,
+}
+
+/// When a clause fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultTrigger {
+    /// On exactly the Nth hit of the site (1-based) — fires once.
+    Nth(u64),
+    /// Independently per hit with this probability, from the seeded
+    /// per-clause stream — replayable chaos.
+    Prob(f64),
+}
+
+/// One parsed plan clause.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub shard: usize,
+    pub site: FaultSite,
+    pub trigger: FaultTrigger,
+    pub kind: FaultKind,
+}
+
+/// A parsed fault plan: the clauses of a `faults.plan` string.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse the plan grammar (module docs); `Err` on any malformed
+    /// clause so bad plans die at config validation, not mid-run.
+    // lint: cold-path — config parsing; `parse` name-collides with hot
+    // code under the lint's name-level resolution (DESIGN.md §13).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut specs = Vec::new();
+        for clause in text.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let parts: Vec<&str> = clause.split(':').map(str::trim).collect();
+            anyhow::ensure!(
+                parts.len() == 4,
+                "fault clause '{clause}' must be shard<K>:<site>:<trigger>:<kind>"
+            );
+            let shard: usize = parts[0]
+                .strip_prefix("shard")
+                .ok_or_else(|| anyhow::anyhow!("fault clause '{clause}': expected shard<K>"))?
+                .parse()
+                .map_err(|e| anyhow::anyhow!("fault clause '{clause}': bad shard index ({e})"))?;
+            let site: FaultSite = parts[1].parse()?;
+            let trigger = if let Some(p) = parts[2].strip_prefix('p') {
+                let p: f64 = p
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("fault clause '{clause}': bad probability ({e})"))?;
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&p),
+                    "fault clause '{clause}': probability must be in [0,1]"
+                );
+                FaultTrigger::Prob(p)
+            } else {
+                let n: u64 = parts[2]
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("fault clause '{clause}': bad trigger ({e})"))?;
+                anyhow::ensure!(n >= 1, "fault clause '{clause}': Nth trigger is 1-based");
+                FaultTrigger::Nth(n)
+            };
+            let kind = match parts[3] {
+                "error" => FaultKind::Error,
+                "panic" => FaultKind::Panic,
+                "stall" => FaultKind::Stall,
+                other => anyhow::bail!(
+                    "unknown fault kind '{other}' (error|panic|stall)"
+                ),
+            };
+            specs.push(FaultSpec { shard, site, trigger, kind });
+        }
+        Ok(FaultPlan { specs })
+    }
+}
+
+const SPLITMIX_GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+fn splitmix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Armed fault state for one shard's runtime: the plan's clauses plus
+/// per-site hit counters and per-clause RNG streams.  Interior-mutable
+/// (`Runtime::execute_into` takes `&self`), allocation-free on the hit
+/// path (DESIGN.md §9/§14) — only a *firing* clause constructs anything.
+#[derive(Debug)]
+pub struct FaultInjector {
+    shard: usize,
+    specs: Vec<FaultSpec>,
+    hits: [AtomicU64; FaultSite::COUNT],
+    /// SplitMix64 counters for `Prob` clauses (index-aligned to `specs`).
+    streams: Vec<AtomicU64>,
+    stall: AtomicBool,
+}
+
+impl FaultInjector {
+    // lint: cold-path — armed once per shard start; `new` name-collides
+    // with hot constructors under name-level resolution (DESIGN.md §13).
+    pub fn new(plan: &FaultPlan, shard: usize, seed: u64) -> Self {
+        let streams = (0..plan.specs.len())
+            .map(|i| {
+                AtomicU64::new(splitmix(
+                    seed ^ (i as u64).wrapping_mul(SPLITMIX_GAMMA) ^ ((shard as u64) << 32),
+                ))
+            })
+            .collect();
+        FaultInjector {
+            shard,
+            specs: plan.specs.clone(),
+            hits: Default::default(),
+            streams,
+            stall: AtomicBool::new(false),
+        }
+    }
+
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Count one hit at `site` and fire any matching clause: `Err` for
+    /// an injected error, unwind for an injected panic; an injected
+    /// stall sets the wedge flag (read by the shard loop via
+    /// [`FaultInjector::stall_pending`]) and lets the call proceed.
+    pub fn fault_hit(&self, site: FaultSite) -> Result<()> {
+        let n = self.hits[site.slot()].fetch_add(1, Ordering::Relaxed) + 1;
+        for (i, spec) in self.specs.iter().enumerate() {
+            if spec.shard != self.shard || spec.site != site {
+                continue;
+            }
+            let fire = match spec.trigger {
+                FaultTrigger::Nth(k) => n == k,
+                FaultTrigger::Prob(p) => self.fault_draw(i) < p,
+            };
+            if !fire {
+                continue;
+            }
+            match spec.kind {
+                FaultKind::Error => anyhow::bail!(
+                    "injected fault: {} hit #{n} on shard {} (DESIGN.md §14)",
+                    site.as_str(),
+                    self.shard
+                ),
+                FaultKind::Panic => panic!(
+                    "injected panic: {} hit #{n} on shard {} (DESIGN.md §14)",
+                    site.as_str(),
+                    self.shard
+                ),
+                FaultKind::Stall => self.stall.store(true, Ordering::SeqCst),
+            }
+        }
+        Ok(())
+    }
+
+    /// Uniform draw in [0,1) from clause `i`'s seeded stream.
+    fn fault_draw(&self, i: usize) -> f64 {
+        let s = self.streams[i]
+            .fetch_add(SPLITMIX_GAMMA, Ordering::Relaxed)
+            .wrapping_add(SPLITMIX_GAMMA);
+        (splitmix(s) >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Has a stall clause fired?  Sticky: the shard stays wedged until
+    /// the supervisor severs and restarts it (DESIGN.md §14).
+    pub fn stall_pending(&self) -> bool {
+        self.stall.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_grammar_round_trips() {
+        let p = FaultPlan::parse(
+            "shard0:decode:3:panic; shard1:prefill_chunk:1:error;\
+             shard0:execute:p0.25:stall",
+        )
+        .unwrap();
+        assert_eq!(p.specs.len(), 3);
+        assert_eq!(
+            p.specs[0],
+            FaultSpec {
+                shard: 0,
+                site: FaultSite::Decode,
+                trigger: FaultTrigger::Nth(3),
+                kind: FaultKind::Panic,
+            }
+        );
+        assert_eq!(p.specs[1].site, FaultSite::PrefillChunk);
+        assert_eq!(p.specs[1].kind, FaultKind::Error);
+        assert_eq!(p.specs[2].trigger, FaultTrigger::Prob(0.25));
+        assert!(FaultPlan::parse("").unwrap().specs.is_empty());
+    }
+
+    #[test]
+    fn plan_rejects_malformed_clauses() {
+        for bad in [
+            "decode:3:panic",                 // missing shard
+            "shard0:decode:3",                // missing kind
+            "shardx:decode:3:panic",          // bad shard index
+            "shard0:warp:3:panic",            // unknown site
+            "shard0:decode:0:panic",          // Nth is 1-based
+            "shard0:decode:p1.5:error",       // probability out of range
+            "shard0:decode:3:explode",        // unknown kind
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn nth_trigger_fires_exactly_once_on_the_right_shard() {
+        let plan = FaultPlan::parse("shard1:decode:3:error").unwrap();
+        let inj = FaultInjector::new(&plan, 1, 0);
+        assert!(inj.fault_hit(FaultSite::Decode).is_ok());
+        assert!(inj.fault_hit(FaultSite::Prefill).is_ok()); // other site
+        assert!(inj.fault_hit(FaultSite::Decode).is_ok());
+        assert!(inj.fault_hit(FaultSite::Decode).is_err()); // 3rd decode
+        assert!(inj.fault_hit(FaultSite::Decode).is_ok()); // once only
+        // Same plan armed on another shard never fires.
+        let other = FaultInjector::new(&plan, 0, 0);
+        for _ in 0..8 {
+            assert!(other.fault_hit(FaultSite::Decode).is_ok());
+        }
+    }
+
+    #[test]
+    fn stall_is_sticky_and_call_proceeds() {
+        let plan = FaultPlan::parse("shard0:decode:2:stall").unwrap();
+        let inj = FaultInjector::new(&plan, 0, 0);
+        assert!(inj.fault_hit(FaultSite::Decode).is_ok());
+        assert!(!inj.stall_pending());
+        assert!(inj.fault_hit(FaultSite::Decode).is_ok()); // stall ≠ error
+        assert!(inj.stall_pending());
+        assert!(inj.fault_hit(FaultSite::Decode).is_ok());
+        assert!(inj.stall_pending(), "wedge flag must be sticky");
+    }
+
+    #[test]
+    #[should_panic(expected = "injected panic")]
+    fn panic_kind_panics() {
+        let plan = FaultPlan::parse("shard0:compress:1:panic").unwrap();
+        let inj = FaultInjector::new(&plan, 0, 0);
+        let _ = inj.fault_hit(FaultSite::Compress);
+    }
+
+    #[test]
+    fn probability_stream_is_seed_replayable() {
+        let plan = FaultPlan::parse("shard0:decode:p0.5:error").unwrap();
+        let pattern = |seed: u64| -> Vec<bool> {
+            let inj = FaultInjector::new(&plan, 0, seed);
+            (0..64).map(|_| inj.fault_hit(FaultSite::Decode).is_err()).collect()
+        };
+        let a = pattern(7);
+        assert_eq!(a, pattern(7), "same seed must replay the same faults");
+        assert_ne!(a, pattern(8), "different seed must draw differently");
+        let fired = a.iter().filter(|&&f| f).count();
+        assert!((8..=56).contains(&fired), "p=0.5 over 64 draws: {fired}");
+    }
+
+    #[test]
+    fn entry_names_classify_to_sites() {
+        assert_eq!(
+            FaultSite::fault_site_of_entry("decode_micro"),
+            FaultSite::Decode
+        );
+        assert_eq!(
+            FaultSite::fault_site_of_entry("prefill_chunk_micro"),
+            FaultSite::PrefillChunk
+        );
+        assert_eq!(
+            FaultSite::fault_site_of_entry("prefill_fin_micro"),
+            FaultSite::PrefillChunk
+        );
+        assert_eq!(
+            FaultSite::fault_site_of_entry("prefill_flash_tiny"),
+            FaultSite::Prefill
+        );
+        assert_eq!(
+            FaultSite::fault_site_of_entry("prefill_full_tiny"),
+            FaultSite::Prefill
+        );
+    }
+}

@@ -9,10 +9,12 @@
 //! serialized protos that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids and round-trips cleanly.
 
+pub mod fault;
 pub mod manifest;
 pub mod sim;
 pub mod tensor;
 
+pub use fault::{FaultInjector, FaultKind, FaultPlan, FaultSite, FaultSpec, FaultTrigger};
 pub use manifest::{EntryInfo, Manifest, ModelInfo};
 pub use sim::{sim_model_info, SimModel, SIM_ARTIFACTS_DIR};
 pub use tensor::{ExecScratch, Tensor, TensorView};
@@ -56,6 +58,9 @@ enum Backend {
 pub struct Runtime {
     backend: Backend,
     model: String,
+    /// Armed fault plan (DESIGN.md §14): `None` (the default) is the
+    /// fault-free runtime, bit-for-bit.
+    faults: Option<FaultInjector>,
 }
 
 impl Runtime {
@@ -70,6 +75,7 @@ impl Runtime {
             return Ok(Runtime {
                 backend: Backend::Sim(SimModel::new(model)?),
                 model: model.to_string(),
+                faults: None,
             });
         }
         Self::load_pjrt(dir, model)
@@ -100,7 +106,34 @@ impl Runtime {
         Ok(Runtime {
             backend: Backend::Pjrt { client, exes, info },
             model: model.to_string(),
+            faults: None,
         })
+    }
+
+    /// Arm deterministic fault injection over this runtime
+    /// (DESIGN.md §14).  Every subsequent [`Runtime::execute_into`] call
+    /// consults the injector; the engine additionally hits the
+    /// `Compress` site around compression passes via
+    /// [`Runtime::fault_point`].
+    pub fn arm_faults(&mut self, inj: FaultInjector) {
+        self.faults = Some(inj);
+    }
+
+    /// Count one hit at `site` against the armed plan (no-op without
+    /// one): `Err` for an injected error, unwind for an injected panic,
+    /// wedge flag for an injected stall.
+    pub fn fault_point(&self, site: FaultSite) -> Result<()> {
+        match &self.faults {
+            Some(inj) => inj.fault_hit(site),
+            None => Ok(()),
+        }
+    }
+
+    /// Has an injected stall wedged this runtime's shard?  Read by the
+    /// shard loop between iterations; sticky until the shard is severed
+    /// and restarted (DESIGN.md §14).
+    pub fn fault_stalled(&self) -> bool {
+        self.faults.as_ref().is_some_and(FaultInjector::stall_pending)
     }
 
     /// Model hyper-parameters (from the manifest, or the sim registry).
@@ -171,6 +204,13 @@ impl Runtime {
         inputs: &[TensorView<'_>],
         scr: &mut ExecScratch,
     ) -> Result<()> {
+        if let Some(inj) = &self.faults {
+            // Fault decoration (DESIGN.md §14): the generic site counts
+            // every call, then the entry-specific site.  Allocation-free
+            // unless a clause fires (§9 holds on the steady path).
+            inj.fault_hit(FaultSite::Execute)?;
+            inj.fault_hit(FaultSite::fault_site_of_entry(name))?;
+        }
         let exes = match &self.backend {
             Backend::Sim(m) => return m.execute_into(name, inputs, scr),
             Backend::Pjrt { exes, .. } => exes,

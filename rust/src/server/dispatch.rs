@@ -90,7 +90,14 @@ struct ShardLink {
     // admission (`try_reserve`), released at `note_done`.
     reserved: Arc<AtomicUsize>,
     resident: Arc<AtomicUsize>,
-    alive: AtomicBool,
+    /// Shared with the shard's own fatal path and the supervisor
+    /// (DESIGN.md §14): false while the shard is dead or restarting,
+    /// true again once the supervisor's replacement thread is ready.
+    alive: Arc<AtomicBool>,
+    /// Monotonic iteration counter ticked by the serving loop — *not* a
+    /// gauge (it only grows).  The supervisor reads it to tell a busy
+    /// shard from a wedged one (DESIGN.md §14).
+    heartbeat: Arc<AtomicU64>,
 }
 
 /// Submit-side state shared by every [`super::ServerHandle`] clone.
@@ -113,6 +120,8 @@ pub(crate) struct ShardCtx {
     load: Arc<AtomicUsize>,
     reserved: Arc<AtomicUsize>,
     resident: Arc<AtomicUsize>,
+    alive: Arc<AtomicBool>,
+    heartbeat: Arc<AtomicU64>,
 }
 
 impl ShardCtx {
@@ -133,6 +142,20 @@ impl ShardCtx {
     pub fn publish_resident(&self, bytes: usize) {
         self.resident.store(bytes, Ordering::SeqCst);
     }
+
+    /// Tick the shard's liveness counter; called once per serving-loop
+    /// iteration so the supervisor can tell progress from a wedge
+    /// (DESIGN.md §14).
+    pub fn tick_heartbeat(&self) {
+        self.heartbeat.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// The shard's fatal path calls this first (DESIGN.md §14): routing
+    /// stops considering the shard before its reply slots are drained,
+    /// so no new request can race into the dying channel.
+    pub fn mark_dead(&self) {
+        self.alive.store(false, Ordering::SeqCst);
+    }
 }
 
 /// Build a dispatcher and its `n_shards` shard endpoints.
@@ -151,14 +174,25 @@ pub(crate) fn build(
         let load = Arc::new(AtomicUsize::new(0));
         let reserved = Arc::new(AtomicUsize::new(0));
         let resident = Arc::new(AtomicUsize::new(0));
+        let alive = Arc::new(AtomicBool::new(true));
+        let heartbeat = Arc::new(AtomicU64::new(0));
         shards.push(ShardLink {
             tx: Mutex::new(tx),
             load: load.clone(),
             reserved: reserved.clone(),
             resident: resident.clone(),
-            alive: AtomicBool::new(true),
+            alive: alive.clone(),
+            heartbeat: heartbeat.clone(),
         });
-        ctxs.push(ShardCtx { rx, queued: queued.clone(), load, reserved, resident });
+        ctxs.push(ShardCtx {
+            rx,
+            queued: queued.clone(),
+            load,
+            reserved,
+            resident,
+            alive,
+            heartbeat,
+        });
     }
     let dispatcher = Dispatcher {
         shards,
@@ -215,6 +249,125 @@ impl Dispatcher {
             .iter()
             .map(|s| s.resident.load(Ordering::SeqCst))
             .collect()
+    }
+
+    /// Per-shard liveness flags (supervisor + tests, DESIGN.md §14).
+    pub fn alive_flags(&self) -> Vec<bool> {
+        self.shards.iter().map(|s| s.alive.load(Ordering::SeqCst)).collect()
+    }
+
+    /// Per-shard monotonic iteration counters (stall detection, §14).
+    pub fn heartbeats(&self) -> Vec<u64> {
+        self.shards
+            .iter()
+            .map(|s| s.heartbeat.load(Ordering::SeqCst))
+            .collect()
+    }
+
+    /// Flip a shard's routing liveness; the supervisor sets `true` only
+    /// after the replacement thread has signalled ready (§14).
+    pub fn set_alive(&self, shard: usize, alive: bool) {
+        self.shards[shard].alive.store(alive, Ordering::SeqCst);
+    }
+
+    /// Release `n` global waiting slots without going through a shard.
+    /// Fatal-path only (§14): used when a request staged on a dead shard
+    /// cannot be redelivered anywhere, so its reply is answered directly
+    /// and its admission slot must still drain.
+    pub fn release_queued(&self, n: usize) {
+        self.queued.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    /// Cut a wedged shard off (DESIGN.md §14): mark it dead for routing
+    /// and replace its sender with one whose receiver is already gone.
+    /// Dropping the old sender disconnects the wedged thread's
+    /// `rx.recv()`, which it treats as fatal — so a stall drains through
+    /// the same fatal path as a panic.
+    pub fn sever(&self, shard: usize) {
+        let link = &self.shards[shard];
+        link.alive.store(false, Ordering::SeqCst);
+        let (dead_tx, _) = mpsc::channel();
+        *link.tx.lock().expect("dispatch sender poisoned") = dead_tx;
+    }
+
+    /// Wire a fresh channel for a restarted shard and hand back its new
+    /// [`ShardCtx`] (same accounting atomics — gauges survive restarts).
+    /// Does *not* flip `alive`: the supervisor does that only once the
+    /// replacement thread reports ready, so no request can race into a
+    /// channel whose engine is still loading (§14).
+    pub fn revive(&self, shard: usize) -> ShardCtx {
+        let link = &self.shards[shard];
+        let (tx, rx) = mpsc::channel();
+        *link.tx.lock().expect("dispatch sender poisoned") = tx;
+        ShardCtx {
+            rx,
+            queued: self.queued.clone(),
+            load: link.load.clone(),
+            reserved: link.reserved.clone(),
+            resident: link.resident.clone(),
+            alive: link.alive.clone(),
+            heartbeat: link.heartbeat.clone(),
+        }
+    }
+
+    /// Re-route a request that was waiting on a failed shard to a live
+    /// one (DESIGN.md §14).  Keeps the original tag and the already-held
+    /// global waiting slot (no queue-depth CAS, no re-validation — the
+    /// request was admitted once and stays admitted); re-reserves its
+    /// worst-case bytes on the target.  Content-derived seeds make the
+    /// redelivered output bit-identical to the fault-free run.  Fails
+    /// only when no live shard can hold the reservation; the caller then
+    /// answers the reply directly and releases the waiting slot.
+    pub fn redeliver(&self, shard_req: ShardRequest) -> Result<()> {
+        let ShardRequest { request, tag, reserved_bytes, reply } = shard_req;
+        let mut request = request;
+        let mut reply = reply;
+        loop {
+            let route_key = |i: usize| {
+                let s = &self.shards[i];
+                (s.load.load(Ordering::SeqCst),
+                 s.resident.load(Ordering::SeqCst), i)
+            };
+            let mut live = (0..self.shards.len())
+                .filter(|&i| self.shards[i].alive.load(Ordering::SeqCst))
+                .peekable();
+            if live.peek().is_none() {
+                anyhow::bail!("redelivery failed: no live shards");
+            }
+            let chosen = if self.budget_bytes == 0 {
+                live.min_by_key(|&i| route_key(i))
+            } else {
+                let mut order: Vec<usize> = live.collect();
+                order.sort_by_key(|&i| route_key(i));
+                order.into_iter().find(|&i| {
+                    try_reserve(&self.shards[i].reserved, reserved_bytes,
+                                self.budget_bytes)
+                })
+            };
+            let Some(idx) = chosen else {
+                anyhow::bail!(
+                    "redelivery failed: no live shard can hold the \
+                     {reserved_bytes} B reservation"
+                );
+            };
+            let link = &self.shards[idx];
+            link.load.fetch_add(1, Ordering::SeqCst);
+            let sent = link
+                .tx
+                .lock()
+                .expect("dispatch sender poisoned")
+                .send(ShardRequest { request, tag, reserved_bytes, reply });
+            match sent {
+                Ok(()) => return Ok(()),
+                Err(mpsc::SendError(req)) => {
+                    link.load.fetch_sub(1, Ordering::SeqCst);
+                    link.reserved.fetch_sub(reserved_bytes, Ordering::SeqCst);
+                    link.alive.store(false, Ordering::SeqCst);
+                    request = req.request;
+                    reply = req.reply;
+                }
+            }
+        }
     }
 
     /// Admit one request or reject with backpressure.  The
@@ -457,6 +610,58 @@ mod tests {
         assert_eq!(d.queued(), 0);
         assert_eq!(d.loads(), vec![0]);
         assert_eq!(d.reserved_bytes(), vec![0], "reservation leaked");
+    }
+
+    #[test]
+    fn heartbeat_is_monotonic_per_shard() {
+        let (d, ctxs) = build(2, 8, 0);
+        ctxs[1].tick_heartbeat();
+        ctxs[1].tick_heartbeat();
+        assert_eq!(d.heartbeats(), vec![0, 2]);
+    }
+
+    #[test]
+    fn sever_disconnects_then_revive_rewires() {
+        let (d, ctxs) = build(2, 8, 0);
+        d.sever(0);
+        assert_eq!(d.alive_flags(), vec![false, true]);
+        // the severed shard's receiver is already disconnected
+        assert!(ctxs[0].rx.recv().is_err());
+        let new_ctx = d.revive(0);
+        assert_eq!(d.alive_flags(), vec![false, true],
+                   "revive must not flip alive — only the supervisor does");
+        d.set_alive(0, true);
+        d.try_admit(packet(0)).unwrap();
+        // lowest-index tie-break lands on the revived shard's new channel
+        assert_eq!(new_ctx.rx.try_iter().count(), 1);
+    }
+
+    #[test]
+    fn redeliver_keeps_tag_and_waiting_slot() {
+        let (d, ctxs) = build(2, 8, 0);
+        let tag = d.try_admit(packet(0)).unwrap();
+        let req = ctxs[0].rx.try_recv().unwrap();
+        // shard 0 dies: fatal path releases its load, keeps `queued`
+        ctxs[0].mark_dead();
+        ctxs[0].note_done(req.reserved_bytes);
+        d.redeliver(req).unwrap();
+        assert_eq!(d.queued(), 1, "redelivery must keep the waiting slot");
+        let re = ctxs[1].rx.try_recv().unwrap();
+        assert_eq!(re.tag, tag, "redelivery must keep the original tag");
+        assert_eq!(d.loads(), vec![0, 1]);
+    }
+
+    #[test]
+    fn redeliver_fails_cleanly_with_no_live_shards() {
+        let (d, ctxs) = build(1, 8, 0);
+        d.try_admit(packet(0)).unwrap();
+        let req = ctxs[0].rx.try_recv().unwrap();
+        ctxs[0].mark_dead();
+        ctxs[0].note_done(req.reserved_bytes);
+        let err = d.redeliver(req).unwrap_err();
+        assert!(err.to_string().contains("no live shards"), "{err}");
+        d.release_queued(1);
+        assert_eq!(d.queued(), 0);
     }
 
     #[test]

@@ -98,6 +98,22 @@ pub fn long_prompt_burst_trace(max_seq: usize, n: usize, max_new: usize,
     trace
 }
 
+/// Chaos scenario (DESIGN.md §14, EXPERIMENTS.md §Chaos): `n` concurrent
+/// code-task requests with enough decode budget that sessions are still
+/// streaming when an armed fault plan fires mid-run.  Designed to pair
+/// with `faults.plan` (CLI `--fault-plan`): all arrivals at t=0, so on a
+/// multi-shard server the victim shard holds both live sessions (which
+/// finish `ShardFailed` with their streamed prefix) and staged requests
+/// (which the supervisor redelivers bit-identically).  Fault-free, it is
+/// just a plain concurrent batch — replaying it twice, with and without
+/// a plan, is how the chaos suite pins output parity.
+pub fn chaos_trace(max_seq: usize, n: usize, seed: u64) -> RequestTrace {
+    // A generous decode budget keeps sessions alive across many steps,
+    // widening the window in which an injected fault lands mid-stream.
+    let max_new = (max_seq / 2).clamp(1, 24);
+    RequestTrace::batch(Task::Code, max_seq - max_new, n, max_new, seed)
+}
+
 /// Outcome of one trace replay.
 #[derive(Debug, Default)]
 pub struct LoadReport {
@@ -113,6 +129,12 @@ pub struct LoadReport {
     pub cancelled: usize,
     /// Requests shed with `FinishReason::DeadlineExpired`.
     pub shed: usize,
+    /// Requests finishing with `FinishReason::ShardFailed`: their shard
+    /// died mid-session, so they keep the tokens streamed before the
+    /// failure (a prefix of the fault-free output) but never resume
+    /// (DESIGN.md §14).  Requests a failed shard was still *waiting* on
+    /// are redelivered instead and land in `completed`.
+    pub shard_failed: usize,
     /// Wall-clock of the whole replay (first submit to last completion).
     pub wall: Duration,
     /// Submit-to-completion latency of naturally completed requests.
@@ -184,6 +206,7 @@ pub fn replay(handle: &ServerHandle, trace: &RequestTrace) -> Result<LoadReport>
                     }
                     FinishReason::Cancelled => report.cancelled += 1,
                     FinishReason::DeadlineExpired => report.shed += 1,
+                    FinishReason::ShardFailed => report.shard_failed += 1,
                     f => unreachable!("is_natural covers {f}"),
                 }
                 report.outputs.push((i, response));

@@ -29,6 +29,20 @@
 //! [`GenerationResponse`] carrying a
 //! [`FinishReason`](crate::coordinator::FinishReason).
 //!
+//! **Failure model (DESIGN.md §14).**  A shard that panics, returns an
+//! engine error, or wedges on an injected stall dies *cleanly*: its
+//! fatal path releases every global waiting slot, per-shard load count,
+//! and byte reservation it held, answers its live sessions with
+//! [`FinishReason::ShardFailed`](crate::coordinator::FinishReason)
+//! (carrying the tokens streamed so far — at-most-once streams, never
+//! resumed), and hands its still-waiting requests to the supervisor.
+//! The supervisor redelivers those to live shards — content-derived
+//! seeds make the redelivered outputs bit-identical to the fault-free
+//! run — and restarts the dead shard with a fresh engine on capped
+//! exponential backoff.  Stalls are detected by a per-shard heartbeat
+//! the supervisor polls; a frozen heartbeat with in-flight load gets the
+//! shard severed, which drains it through the same fatal path.
+//!
 //! Offline-build note: the environment ships no async runtime, so this is
 //! a blocking-channel design (std::sync::mpsc) rather than tokio; the
 //! public shape — submit returns a streamable handle, requests interleave
@@ -38,13 +52,15 @@ mod dispatch;
 pub mod loadgen;
 
 use std::collections::HashMap;
-use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex, MutexGuard, Weak};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::config::EngineConfig;
 use crate::coordinator::batcher::{ContinuousBatcher, PriorityPark, QueuedRequest};
-use crate::coordinator::request::{CancelToken, GenerationRequest,
+use crate::coordinator::request::{CancelToken, FinishReason, GenerationRequest,
                                   GenerationResponse};
 use crate::coordinator::Engine;
 use crate::kvcache::{worst_case_resident_bytes, CacheLayout};
@@ -55,7 +71,10 @@ use dispatch::{AdmitRequest, Dispatcher, ShardCtx, ShardRequest};
 
 /// One streamed event on a request's reply channel: an incremental token
 /// or the final response.  Tokens always precede their `Done`, and their
-/// concatenation equals `GenerationResponse::tokens` exactly.
+/// concatenation equals `GenerationResponse::tokens` exactly — except
+/// for [`FinishReason::ShardFailed`], where the streamed tokens are a
+/// *prefix* of the final `tokens` (a token decoded in the iteration the
+/// shard died may reach the final response without having streamed).
 pub(crate) enum ResponseEvent {
     Token(u16),
     Done(Result<GenerationResponse>),
@@ -210,6 +229,12 @@ impl ServerHandle {
         self.dispatcher.reserved_bytes()
     }
 
+    /// Per-shard liveness (DESIGN.md §14): `false` while a shard is dead
+    /// or restarting, `true` once it serves again.
+    pub fn shard_alive(&self) -> Vec<bool> {
+        self.dispatcher.alive_flags()
+    }
+
     /// A coherent metrics read: per-shard engine metrics (as last
     /// published by each shard) plus their aggregate.  Lock-cheap: one
     /// uncontended per-shard mutex clone each, no stop-the-world.
@@ -217,15 +242,26 @@ impl ServerHandle {
         let per_shard: Vec<EngineMetrics> = self
             .metrics
             .iter()
-            .map(|slot| slot.lock().expect("metrics slot poisoned").clone())
+            .map(|slot| lock_metrics(slot).clone())
             .collect();
         MetricsSnapshot::aggregate(per_shard)
     }
 }
 
-/// A running server: shard threads + dispatch state.
+/// Lock a metrics slot, recovering from poisoning (DESIGN.md §14): a
+/// shard that panicked while publishing must not take the whole metrics
+/// surface down with it.  The inner value is a plain counter struct that
+/// is coherent at every assignment, so the poisoned guard is safe to
+/// adopt.
+fn lock_metrics(slot: &Mutex<EngineMetrics>) -> MutexGuard<'_, EngineMetrics> {
+    slot.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A running server: shard threads + supervisor + dispatch state.
 pub struct Server {
     pub handle: ServerHandle,
+    /// The supervisor's join handle; the supervisor itself owns (and
+    /// joins) every shard thread (DESIGN.md §14).
     joins: Vec<JoinHandle<Result<()>>>,
 }
 
@@ -248,20 +284,26 @@ impl Server {
         };
         let (dispatcher, ctxs) = dispatch::build(n_shards, cfg.scheduler.queue_depth,
                                                  cfg.memory.budget_bytes);
+        let dispatcher = Arc::new(dispatcher);
         let metrics: Arc<Vec<Mutex<EngineMetrics>>> = Arc::new(
             (0..n_shards).map(|_| Mutex::new(EngineMetrics::default())).collect(),
         );
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let (event_tx, event_rx) = mpsc::channel::<ShardFatal>();
 
         let mut joins = Vec::with_capacity(n_shards);
         for (i, ctx) in ctxs.into_iter().enumerate() {
             let cfg = cfg.clone();
             let ready = ready_tx.clone();
             let slot = metrics.clone();
+            let events = event_tx.clone();
             joins.push(
                 std::thread::Builder::new()
                     .name(format!("zipcache-shard-{i}"))
-                    .spawn(move || shard_loop(i, cfg, ctx, slot, ready))?,
+                    .spawn(move || {
+                        shard_loop(i, 0, cfg, ctx, slot,
+                                   EngineMetrics::default(), ready, events)
+                    })?,
             );
         }
         drop(ready_tx);
@@ -288,21 +330,44 @@ impl Server {
             return Err(e);
         }
 
+        // The supervisor (DESIGN.md §14) owns the shard join handles: it
+        // joins the dead on fatal events, respawns them after backoff,
+        // and joins everything at shutdown.  It holds the dispatcher
+        // weakly, so dropping the last handle still closes every shard
+        // channel — a failed upgrade *is* the shutdown signal.
+        let supervisor = Supervisor {
+            cfg: cfg.clone(),
+            dispatcher: Arc::downgrade(&dispatcher),
+            metrics: metrics.clone(),
+            events: event_rx,
+            event_tx,
+            joins: joins.into_iter().map(Some).collect(),
+            generations: vec![0; n_shards],
+            attempts: vec![0; n_shards],
+            hb_last: vec![0; n_shards],
+            hb_frozen: vec![0; n_shards],
+            pending: Vec::new(),
+        };
+        let sup = std::thread::Builder::new()
+            .name("zipcache-supervisor".into())
+            .spawn(move || supervisor.run())?;
+
         Ok(Server {
             handle: ServerHandle {
-                dispatcher: Arc::new(dispatcher),
+                dispatcher,
                 metrics,
                 layout,
                 recompress_every: cfg.quant.recompress_every,
             },
-            joins,
+            joins: vec![sup],
         })
     }
 
-    /// Graceful shutdown: close the admission side and join every shard
-    /// (in-flight requests complete first).  Any outstanding
-    /// [`ServerHandle`] clones must be dropped by their owners for the
-    /// shards to observe disconnection.
+    /// Graceful shutdown: close the admission side, let the supervisor
+    /// observe it (weak-upgrade failure) and join every shard (in-flight
+    /// requests complete first), then join the supervisor.  Any
+    /// outstanding [`ServerHandle`] clones must be dropped by their
+    /// owners for the shards to observe disconnection.
     pub fn shutdown(self) -> Result<()> {
         drop(self.handle);
         let mut result = Ok(());
@@ -310,10 +375,268 @@ impl Server {
             match j.join() {
                 Ok(Ok(())) => {}
                 Ok(Err(e)) => result = Err(e),
-                Err(_) => result = Err(anyhow::anyhow!("shard thread panicked")),
+                Err(_) => result = Err(anyhow::anyhow!("server thread panicked")),
             }
         }
         result
+    }
+}
+
+/// Death notice from a shard's fatal path to the supervisor
+/// (DESIGN.md §14).
+struct ShardFatal {
+    shard: usize,
+    /// Incarnation counter, so a stale notice from a previous thread of
+    /// the same shard index can never double-restart it.
+    generation: u64,
+    error: String,
+    /// Requests that were still *waiting* on the dead shard (staged or
+    /// in its channel backlog): no tokens streamed, so the supervisor
+    /// resubmits them and their content-derived seeds reproduce the
+    /// fault-free outputs bit-for-bit.
+    redeliver: Vec<ShardRequest>,
+    /// Live sessions answered with `ShardFailed` by the fatal path.
+    failed_sessions: u64,
+}
+
+/// Restart ticket: a dead shard waiting out its backoff.
+struct PendingRestart {
+    shard: usize,
+    due: Instant,
+}
+
+/// The shard supervisor (DESIGN.md §14): consumes [`ShardFatal`] events,
+/// redelivers the dead shard's waiting requests, restarts shards with
+/// capped exponential backoff, and severs shards whose heartbeat froze
+/// with load still in flight (injected stalls, runaway steps).
+struct Supervisor {
+    cfg: EngineConfig,
+    dispatcher: Weak<Dispatcher>,
+    metrics: Arc<Vec<Mutex<EngineMetrics>>>,
+    events: Receiver<ShardFatal>,
+    /// Template sender cloned into every respawned shard.
+    event_tx: Sender<ShardFatal>,
+    joins: Vec<Option<JoinHandle<Result<()>>>>,
+    generations: Vec<u64>,
+    /// Restart attempts per shard (drives the backoff exponent and the
+    /// `max_restarts` cap).
+    attempts: Vec<u64>,
+    hb_last: Vec<u64>,
+    /// Consecutive polls the shard's heartbeat stayed frozen with
+    /// in-flight load; reaching `faults.stall_ticks` severs it.
+    hb_frozen: Vec<u64>,
+    pending: Vec<PendingRestart>,
+}
+
+impl Supervisor {
+    fn run(mut self) -> Result<()> {
+        let poll = Duration::from_millis(self.cfg.faults.poll_ms.max(1));
+        loop {
+            match self.events.recv_timeout(poll) {
+                Ok(ev) => self.on_fatal(ev),
+                Err(RecvTimeoutError::Timeout) => {}
+                // Unreachable (we hold `event_tx`), but treat it as
+                // shutdown rather than spinning.
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+            let Some(d) = self.dispatcher.upgrade() else {
+                break; // every handle dropped: shutdown
+            };
+            self.scan_stalls(&d);
+            self.restart_due(&d);
+        }
+        // Shutdown: the shard channels are closed (the dispatcher is
+        // gone), so every live loop drains and exits on its own.
+        let mut result = Ok(());
+        for j in self.joins.iter_mut().filter_map(Option::take) {
+            match j.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => result = Err(e),
+                Err(_) => {
+                    result = Err(anyhow::anyhow!("shard thread panicked at shutdown"))
+                }
+            }
+        }
+        result
+    }
+
+    /// A shard died: join its thread, redeliver what it was holding, and
+    /// schedule its restart.  The fatal path already released all of the
+    /// shard's accounting and answered its live sessions; redelivered
+    /// requests keep their global waiting slot, so the queue-depth
+    /// boundary is unchanged throughout.
+    fn on_fatal(&mut self, ev: ShardFatal) {
+        let ShardFatal { shard, generation, error, redeliver, failed_sessions } = ev;
+        if generation != self.generations[shard] {
+            return; // stale notice from an already-replaced incarnation
+        }
+        if let Some(j) = self.joins[shard].take() {
+            // The thread's Err already drained through its fatal path;
+            // clients were answered there, nothing left to propagate.
+            let _ = j.join();
+        }
+        let Some(d) = self.dispatcher.upgrade() else {
+            // Shutting down: dropping the redelivery packets drops their
+            // reply senders, so waiting clients unblock with an error.
+            return;
+        };
+        let mut redelivered = 0u64;
+        let mut failed = failed_sessions;
+        for req in redeliver {
+            let tag = req.tag;
+            let reply = req.reply.clone();
+            match d.redeliver(req) {
+                Ok(()) => redelivered += 1,
+                Err(_) => {
+                    // No live shard can take it: answer the client
+                    // directly and drain its waiting slot here.
+                    failed += 1;
+                    d.release_queued(1);
+                    let _ = reply.send(ResponseEvent::Done(Ok(
+                        GenerationResponse::without_session(
+                            tag, FinishReason::ShardFailed),
+                    )));
+                }
+            }
+        }
+        {
+            let mut m = lock_metrics(&self.metrics[shard]);
+            m.redelivered += redelivered;
+            m.failed_sessions += failed;
+        }
+        eprintln!(
+            "zipcache-supervisor: shard {shard} failed ({error}); \
+             redelivered {redelivered}, failed sessions {failed}"
+        );
+        self.schedule_restart(shard);
+    }
+
+    fn schedule_restart(&mut self, shard: usize) {
+        let f = &self.cfg.faults;
+        let attempt = self.attempts[shard];
+        if f.max_restarts > 0 && attempt >= f.max_restarts {
+            eprintln!(
+                "zipcache-supervisor: shard {shard} hit max_restarts={}; \
+                 leaving it dead",
+                f.max_restarts
+            );
+            return;
+        }
+        // Capped exponential backoff: base * 2^attempt, clamped.
+        let backoff = f
+            .backoff_base_ms
+            .saturating_mul(1u64 << attempt.min(20))
+            .min(f.backoff_cap_ms);
+        self.pending.push(PendingRestart {
+            shard,
+            due: Instant::now() + Duration::from_millis(backoff),
+        });
+    }
+
+    /// Sever shards whose heartbeat froze with load in flight
+    /// (DESIGN.md §14).  Severing flips the shard's `alive` flag
+    /// proactively — routing stops *before* the wedged thread notices —
+    /// and swaps its channel sender for a disconnected one, so the
+    /// thread's blocking `recv` fails and it drains through the normal
+    /// fatal path (which raises the [`ShardFatal`] we then act on).
+    fn scan_stalls(&mut self, d: &Arc<Dispatcher>) {
+        let stall_ticks = self.cfg.faults.stall_ticks;
+        let hbs = d.heartbeats();
+        let loads = d.loads();
+        let alive = d.alive_flags();
+        for i in 0..hbs.len() {
+            if !alive[i] {
+                // Dead or restarting: not our patient.
+                self.hb_frozen[i] = 0;
+                self.hb_last[i] = hbs[i];
+                continue;
+            }
+            if hbs[i] == self.hb_last[i] && loads[i] > 0 {
+                self.hb_frozen[i] += 1;
+            } else {
+                self.hb_frozen[i] = 0;
+            }
+            self.hb_last[i] = hbs[i];
+            if self.hb_frozen[i] >= stall_ticks {
+                self.hb_frozen[i] = 0;
+                eprintln!(
+                    "zipcache-supervisor: shard {i} heartbeat frozen for \
+                     {stall_ticks} polls with load {}; severing",
+                    loads[i]
+                );
+                d.sever(i);
+            }
+        }
+    }
+
+    fn restart_due(&mut self, d: &Arc<Dispatcher>) {
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].due > now {
+                i += 1;
+                continue;
+            }
+            let shard = self.pending.swap_remove(i).shard;
+            self.respawn(d, shard);
+        }
+    }
+
+    /// Spawn a fresh engine thread for a dead shard.  The new thread
+    /// publishes `base` merged with its live engine metrics, so counters
+    /// survive the restart; `alive` flips back only after the thread's
+    /// ready barrier, so no request can race into a channel whose engine
+    /// is still constructing.
+    fn respawn(&mut self, d: &Arc<Dispatcher>, shard: usize) {
+        self.attempts[shard] += 1;
+        self.generations[shard] += 1;
+        let generation = self.generations[shard];
+        let ctx = d.revive(shard);
+        let base = {
+            let mut m = lock_metrics(&self.metrics[shard]);
+            m.shard_restarts += 1;
+            m.clone()
+        };
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let cfg = self.cfg.clone();
+        let slots = self.metrics.clone();
+        let events = self.event_tx.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("zipcache-shard-{shard}.{generation}"))
+            .spawn(move || {
+                shard_loop(shard, generation, cfg, ctx, slots, base,
+                           ready_tx, events)
+            });
+        let handle = match spawned {
+            Ok(h) => h,
+            Err(_) => {
+                self.schedule_restart(shard);
+                return;
+            }
+        };
+        match ready_rx.recv() {
+            Ok(Ok(())) => {
+                d.set_alive(shard, true);
+                self.hb_frozen[shard] = 0;
+                self.joins[shard] = Some(handle);
+                eprintln!(
+                    "zipcache-supervisor: shard {shard} restarted \
+                     (generation {generation})"
+                );
+            }
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                eprintln!(
+                    "zipcache-supervisor: shard {shard} restart failed \
+                     ({e:#}); backing off"
+                );
+                self.schedule_restart(shard);
+            }
+            Err(_) => {
+                let _ = handle.join();
+                self.schedule_restart(shard);
+            }
+        }
     }
 }
 
@@ -327,23 +650,41 @@ impl Server {
 /// [`StepReport::activated`](crate::coordinator::StepReport) as requests
 /// leave the staging queue.
 ///
-/// Error altitude: requests that could fail `Engine::start_session` are
-/// rejected at submit time (see `ServerHandle::submit_request`), so a `?`
-/// out of `batcher.step` here means the *engine itself* failed (PJRT
-/// execute error, artifact corruption) — that shard exits with the error
-/// and its in-flight clients see "server dropped request", while other
-/// shards keep serving.  The seed's single-engine-thread design lost the
-/// whole server in that case; per-request error outcomes through the
-/// batcher are a possible future refinement (DESIGN.md §8).
+/// Error altitude (DESIGN.md §14): requests that could fail
+/// `Engine::start_session` are rejected at submit time (see
+/// `ServerHandle::submit_request`), so a failure out of the serving loop
+/// means the *engine itself* failed — a PJRT execute error, artifact
+/// corruption, an injected fault, or a panic (caught here, never
+/// unwinding past the shard).  Either way the shard dies cleanly through
+/// [`fail_shard`] and the supervisor restarts it; the seed's
+/// single-engine-thread design lost the whole server in that case, and
+/// the pre-§14 pool leaked its waiting clients.
+#[allow(clippy::too_many_arguments)]
 fn shard_loop(
     shard_idx: usize,
+    generation: u64,
     cfg: EngineConfig,
     ctx: ShardCtx,
     slots: Arc<Vec<Mutex<EngineMetrics>>>,
+    base: EngineMetrics,
     ready: Sender<Result<()>>,
+    events: Sender<ShardFatal>,
 ) -> Result<()> {
     let max_batch = cfg.scheduler.max_batch;
-    let mut engine = match Engine::new(cfg) {
+    let armed = Engine::new(cfg).and_then(|mut e| {
+        // Fault decoration (DESIGN.md §14): a no-op unless `faults.plan`
+        // is set; each shard gets its own seeded injector.  Only the
+        // *first* incarnation arms — a fresh injector would reset the
+        // plan's hit counters and re-fire every Nth trigger, turning a
+        // "kill shard k once" plan into a crash loop.  A restarted shard
+        // is therefore fault-free, and a plan's restart count is exactly
+        // its kill count.
+        if generation == 0 {
+            e.arm_faults(shard_idx)?;
+        }
+        Ok(e)
+    });
+    let mut engine = match armed {
         Ok(e) => {
             let _ = ready.send(Ok(()));
             e
@@ -360,23 +701,45 @@ fn shard_loop(
     // and completion looks its slot up — O(1), not a linear scan.
     let mut replies: HashMap<u64, ReplySlot> = HashMap::new();
 
-    let result = serve_shard(shard_idx, &mut engine, &mut batcher, &mut replies,
-                             &ctx, &slots);
-    if result.is_err() {
-        // Fault isolation (DESIGN.md §8): this shard dies, the others
-        // keep serving — which requires releasing the *global* waiting
-        // slots of every request this shard still holds, or a dead
-        // shard permanently shrinks the `queue_depth` boundary for the
-        // healthy ones (the staging queue is unbounded here, so up to
-        // the whole depth could be pinned).  Clients see "server
-        // dropped request" when the reply senders drop.
-        fail_pending(&mut batcher, &mut replies, &ctx);
+    // Panic isolation (DESIGN.md §14): an unwind out of the serving loop
+    // (injected or real) is converted into the same fatal path as an
+    // engine error.  AssertUnwindSafe is justified because everything
+    // the closure touches is either dropped with this incarnation
+    // (engine) or only used through unwind-tolerant drains afterwards
+    // (batcher's take_*, the reply map).
+    let stepped = catch_unwind(AssertUnwindSafe(|| {
+        serve_shard(shard_idx, &mut engine, &mut batcher, &mut replies, &ctx,
+                    &slots, &base)
+    }));
+    let result = match stepped {
+        Ok(r) => r,
+        Err(payload) => Err(anyhow::anyhow!(
+            "shard {shard_idx} panicked: {}", panic_message(payload.as_ref()))),
+    };
+    match result {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            fail_shard(shard_idx, generation, &e, &mut batcher, &mut replies,
+                       &ctx, &engine, &slots[shard_idx], &base, &events);
+            Err(e)
+        }
     }
-    result
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
 }
 
 /// The shard's serving loop proper; an `Err` is an engine failure
-/// (`shard_loop` releases the shard's global accounting afterwards).
+/// (`shard_loop` drains the shard's accounting through `fail_shard`
+/// afterwards).
 fn serve_shard(
     shard_idx: usize,
     engine: &mut Engine,
@@ -384,8 +747,29 @@ fn serve_shard(
     replies: &mut HashMap<u64, ReplySlot>,
     ctx: &ShardCtx,
     slots: &[Mutex<EngineMetrics>],
+    base: &EngineMetrics,
 ) -> Result<()> {
     loop {
+        // Liveness heartbeat (DESIGN.md §14): one tick per iteration.
+        // The supervisor severs a shard whose heartbeat freezes with
+        // load in flight, so every stall funnel below — including the
+        // injected wedge — is eventually fatal, never silent.
+        ctx.tick_heartbeat();
+        if engine.runtime().fault_stalled() {
+            // Injected stall (§14): stop making progress — no steps, no
+            // heartbeat — but keep absorbing channel traffic so the
+            // fatal drain sees the complete picture.  The supervisor
+            // notices the frozen heartbeat, severs our channel, and the
+            // disconnect below is our fatal exit.
+            loop {
+                match ctx.rx.recv() {
+                    Ok(req) => stage(batcher, replies, req, ctx),
+                    Err(_) => anyhow::bail!(
+                        "shard {shard_idx} stalled (injected) and was severed"
+                    ),
+                }
+            }
+        }
         // Stage every waiting request into the priority queue (pop order
         // is decided there; the global `queued` gauge still counts them
         // until they activate or shed).
@@ -400,10 +784,10 @@ fn serve_shard(
                         ctx.note_activated(report.activated);
                         stream_tokens(batcher, replies);
                         deliver(batcher, replies, ctx, engine,
-                                &slots[shard_idx]);
+                                &slots[shard_idx], base);
                     }
                     ctx.publish_resident(0);
-                    publish(&slots[shard_idx], engine);
+                    publish(&slots[shard_idx], base, engine);
                     return Ok(());
                 }
             }
@@ -411,7 +795,7 @@ fn serve_shard(
         if batcher.idle() {
             // Idle: publish metrics, then block for the next request.
             ctx.publish_resident(0);
-            publish(&slots[shard_idx], engine);
+            publish(&slots[shard_idx], base, engine);
             match ctx.rx.recv() {
                 Ok(req) => {
                     stage(batcher, replies, req, ctx);
@@ -428,35 +812,127 @@ fn serve_shard(
         // Routing weight (DESIGN.md §10): the dispatcher breaks load
         // ties by these live resident bytes, so publish every iteration.
         ctx.publish_resident(batcher.active_bytes());
-        deliver(batcher, replies, ctx, engine, &slots[shard_idx]);
+        deliver(batcher, replies, ctx, engine, &slots[shard_idx], base);
     }
 }
 
-/// Release the global/per-shard accounting of everything a failed shard
-/// still holds: staged requests leave the global waiting gauge
-/// (`note_activated`), every reply slot's load + byte reservation is
-/// released, and the channel backlog (requests routed here before the
-/// dispatcher learns of the death via its first failed send) is drained
-/// the same way.  A request arriving in the instant between this drain
-/// and the receiver dropping still leaks its waiting slot — the same
-/// small race the pre-§11 design documented; everything a shard
-/// *observably* held is now rolled back.
-fn fail_pending(
+/// The shard-fatal path (DESIGN.md §14).  Runs after the serving loop
+/// died (panic, engine error, or severed stall) and leaves the shard
+/// *fully drained*: routing off, every gauge it held released, live
+/// sessions answered with `ShardFailed` (at-most-once: the streamed
+/// prefix is kept, never replayed), finished-but-undelivered outcomes
+/// delivered normally, and every still-waiting request packed into a
+/// [`ShardFatal`] for the supervisor to redeliver — those keep their
+/// global waiting slot, so the queue-depth boundary never shrinks.
+#[allow(clippy::too_many_arguments)]
+fn fail_shard(
+    shard_idx: usize,
+    generation: u64,
+    error: &anyhow::Error,
     batcher: &mut ContinuousBatcher,
     replies: &mut HashMap<u64, ReplySlot>,
     ctx: &ShardCtx,
+    engine: &Engine,
+    slot: &Mutex<EngineMetrics>,
+    base: &EngineMetrics,
+    events: &Sender<ShardFatal>,
 ) {
-    // Still-pending requests, plus departures inside the very step that
-    // errored (its StepReport was lost to the `?`): both classes leave
-    // the waiting gauge exactly once.
-    ctx.note_activated(batcher.take_departed() + batcher.pending());
-    for (_, r) in replies.drain() {
+    // Routing off first: after this store no new request can race into
+    // the dying channel through `try_admit` (stragglers already inside
+    // it drain into the redelivery list below).
+    ctx.mark_dead();
+
+    // Work that finished before the failure is real — deliver it.
+    for outcome in batcher.take_outcomes() {
+        match replies.remove(&outcome.tag) {
+            Some(r) => {
+                ctx.note_done(r.reserved_bytes);
+                let _ = r.reply.send(ResponseEvent::Done(Ok(outcome)));
+            }
+            None => ctx.note_done(0),
+        }
+    }
+
+    // Activations inside the step that died (its report was lost to the
+    // failure) still left the staging queue: drain their waiting slots.
+    ctx.note_activated(batcher.take_departed());
+
+    // Live sessions: their streams are at-most-once, so they finish
+    // `ShardFailed` carrying the tokens generated so far — a prefix of
+    // the fault-free stream (content-derived seeds) that is never
+    // resumed or replayed.
+    let mut failed = 0u64;
+    for sess in batcher.take_active() {
+        let Some(r) = replies.remove(&sess.tag) else {
+            ctx.note_done(0);
+            continue;
+        };
         ctx.note_done(r.reserved_bytes);
+        failed += 1;
+        let _ = r.reply.send(ResponseEvent::Done(Ok(GenerationResponse {
+            tag: sess.tag,
+            finish: FinishReason::ShardFailed,
+            tokens: sess.generated,
+            prefill_ms: sess.prefill_us as f64 / 1000.0,
+            decode_ms: sess.decode_us as f64 / 1000.0,
+            compression_ratio: sess.compression_ratio,
+            cache_bytes: sess.cache_bytes,
+        })));
+    }
+
+    // Still-waiting requests (staged + channel backlog): redeliverable.
+    // Their per-shard accounting is released here; their *global*
+    // waiting slot is kept — the supervisor's redelivery re-routes them
+    // without re-admission.
+    let mut redeliver = Vec::new();
+    for q in batcher.take_staged() {
+        let Some(r) = replies.remove(&q.tag) else { continue };
+        ctx.note_done(r.reserved_bytes);
+        if r.streamed {
+            // Unreachable by construction (staged requests never
+            // stream), but at-most-once is a contract, not an
+            // assumption: never redeliver a stream a client may have
+            // observed.
+            failed += 1;
+            ctx.note_activated(1);
+            let _ = r.reply.send(ResponseEvent::Done(Ok(
+                GenerationResponse::without_session(
+                    q.tag, FinishReason::ShardFailed),
+            )));
+            continue;
+        }
+        redeliver.push(ShardRequest {
+            request: q.request,
+            tag: q.tag,
+            reserved_bytes: r.reserved_bytes,
+            reply: r.reply,
+        });
     }
     while let Ok(req) = ctx.rx.try_recv() {
-        ctx.note_activated(1);
         ctx.note_done(req.reserved_bytes);
+        redeliver.push(req);
     }
+
+    // Anything left was consumed mid-activation by the dying step: the
+    // request is gone, so it cannot be redelivered — fail it cleanly
+    // (its waiting slot already drained via `take_departed` above).
+    for (tag, r) in replies.drain() {
+        ctx.note_done(r.reserved_bytes);
+        failed += 1;
+        let _ = r.reply.send(ResponseEvent::Done(Ok(
+            GenerationResponse::without_session(tag, FinishReason::ShardFailed),
+        )));
+    }
+
+    ctx.publish_resident(0);
+    publish(slot, base, engine);
+    let _ = events.send(ShardFatal {
+        shard: shard_idx,
+        generation,
+        error: format!("{error:#}"),
+        redeliver,
+        failed_sessions: failed,
+    });
 }
 
 /// One in-flight request's reply channel plus the worst-case byte
@@ -464,6 +940,10 @@ fn fail_pending(
 /// reply map).
 struct ReplySlot {
     reserved_bytes: usize,
+    /// True once any token streamed to the client: the at-most-once
+    /// guard — a request that streamed is never redelivered
+    /// (DESIGN.md §14).
+    streamed: bool,
     reply: Sender<ResponseEvent>,
 }
 
@@ -480,6 +960,7 @@ fn stage(
         Ok(()) => {
             replies.insert(req.tag, ReplySlot {
                 reserved_bytes: req.reserved_bytes,
+                streamed: false,
                 reply: req.reply,
             });
         }
@@ -499,9 +980,10 @@ fn stage(
 /// matching reply channels (best-effort: a dropped handle just stops
 /// listening).
 fn stream_tokens(batcher: &mut ContinuousBatcher,
-                 replies: &HashMap<u64, ReplySlot>) {
+                 replies: &mut HashMap<u64, ReplySlot>) {
     for (tag, tok) in batcher.drain_emitted() {
-        if let Some(r) = replies.get(&tag) {
+        if let Some(r) = replies.get_mut(&tag) {
+            r.streamed = true;
             let _ = r.reply.send(ResponseEvent::Token(tok));
         }
     }
@@ -516,12 +998,13 @@ fn deliver(
     ctx: &ShardCtx,
     engine: &Engine,
     slot: &Mutex<EngineMetrics>,
+    base: &EngineMetrics,
 ) {
     let outcomes = batcher.take_outcomes();
     if outcomes.is_empty() {
         return;
     }
-    publish(slot, engine);
+    publish(slot, base, engine);
     for outcome in outcomes {
         // Release accounting (load + byte reservation) *before* the
         // reply goes out, like the metrics publish above: a client whose
@@ -539,13 +1022,19 @@ fn deliver(
     }
 }
 
-/// Publish this shard's engine metrics into its shared snapshot slot.
+/// Publish this shard's engine metrics into its shared snapshot slot:
+/// `base` (the history inherited from this shard's previous incarnations
+/// plus the supervisor's failure counters, DESIGN.md §14 — zero for a
+/// first-generation shard) merged with the live engine counters, so a
+/// restart never zeroes the shard's column in the snapshot.
 ///
 /// This clones the full `EngineMetrics`, whose histograms keep every
 /// sample — per-delivery cost therefore grows with run length.  Fine at
 /// bench/test scale (exact percentiles are worth it); switching the
 /// recorders to fixed-bucket histograms is the knob to turn if serving
 /// runs ever get long enough for this clone to show up in a profile.
-fn publish(slot: &Mutex<EngineMetrics>, engine: &Engine) {
-    *slot.lock().expect("metrics slot poisoned") = engine.metrics.clone();
+fn publish(slot: &Mutex<EngineMetrics>, base: &EngineMetrics, engine: &Engine) {
+    let mut merged = base.clone();
+    merged.merge(&engine.metrics);
+    *lock_metrics(slot) = merged;
 }

@@ -1,0 +1,342 @@
+//! Chaos suite (DESIGN.md §14): fault-injected shard failures against
+//! the 2-shard serving pool, pinning the failure-model contract end to
+//! end.
+//!
+//! * **Parity pin** — with a plan that kills one shard mid-flight, every
+//!   accepted request either completes bit-identical to its fault-free
+//!   run (survivor or redelivered) or finishes `ShardFailed` carrying a
+//!   prefix of its fault-free token stream.  Never duplicates, never
+//!   divergent tokens.
+//! * **Recovery** — the supervisor restarts the dead shard (restart
+//!   counter exactly matches the plan's kill count: restarted shards are
+//!   fault-free), flips it alive, and it serves new requests
+//!   bit-identically.
+//! * **Accounting** — after recovery the queue/load/reserved/resident
+//!   gauges all drain to zero: a dead shard leaks nothing.
+//!
+//! Determinism: the sim runtime + seeded fault plans make outputs exact;
+//! the suite never sleeps — waits are yield-spins on supervisor-observable
+//! state (metrics counters, alive flags, gauge values) with a wall-clock
+//! deadline used only to fail fast on a hang.
+
+use std::time::{Duration, Instant};
+
+use zipcache::config::EngineConfig;
+use zipcache::coordinator::{Engine, FinishReason, GenerationResponse};
+use zipcache::server::{Server, ServerHandle};
+use zipcache::workload::{Task, TaskGen};
+
+fn chaos_config(shards: usize, plan: &str) -> EngineConfig {
+    let mut cfg = EngineConfig::load_default("sim", "micro").unwrap();
+    cfg.scheduler.shards = shards;
+    cfg.parallelism = 1;
+    cfg.faults.plan = plan.to_string();
+    // Tight supervision so recovery is near-immediate: stall detection in
+    // 3 consecutive 1 ms polls, restart with zero backoff.  Production
+    // defaults (1 s stall window, 10 ms base backoff) are for real loads.
+    cfg.faults.poll_ms = 1;
+    cfg.faults.stall_ticks = 3;
+    cfg.faults.backoff_base_ms = 0;
+    cfg.faults.backoff_cap_ms = 0;
+    cfg
+}
+
+fn prompts(n: usize) -> Vec<Vec<u16>> {
+    let gen = TaskGen::new(Task::Code, 60);
+    (0..n).map(|i| gen.sample(i as u64).prompt().to_vec()).collect()
+}
+
+/// Fault-free reference outputs for `ps` under the *same* engine config
+/// (quantization knobs change tokens, so the baseline must share them) —
+/// a bare 1-shard engine with the plan stripped.
+fn fault_free(cfg: &EngineConfig, ps: &[Vec<u16>], max_new: usize) -> Vec<Vec<u16>> {
+    let mut cfg = cfg.clone();
+    cfg.faults.plan = String::new();
+    cfg.scheduler.shards = 1;
+    let mut engine = Engine::new(cfg).unwrap();
+    ps.iter().map(|p| engine.generate(p, max_new).unwrap().tokens).collect()
+}
+
+/// Yield-spin until `cond` holds; no sleeps, wall deadline only to turn a
+/// supervision hang into a test failure instead of a CI timeout.
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::yield_now();
+    }
+}
+
+/// The §14 parity pin for one resolved request: bit-identical natural
+/// completion, or `ShardFailed` with a prefix of the fault-free stream.
+fn check_parity(out: &GenerationResponse, fault_free: &[u16]) {
+    if out.finish.is_natural() {
+        assert_eq!(out.tokens, fault_free,
+                   "survivor/redelivered output diverged from fault-free run");
+    } else {
+        assert_eq!(out.finish, FinishReason::ShardFailed,
+                   "unexpected finish reason under fault injection");
+        assert!(out.tokens.len() <= fault_free.len()
+                    && out.tokens[..] == fault_free[..out.tokens.len()],
+                "ShardFailed tokens {:?} are not a prefix of the fault-free stream {:?}",
+                out.tokens, fault_free);
+    }
+}
+
+fn gauges_drained(h: &ServerHandle) -> bool {
+    h.queued() == 0
+        && h.shard_loads().iter().all(|&l| l == 0)
+        && h.shard_reserved_bytes().iter().all(|&b| b == 0)
+        && h.shard_resident_bytes().iter().all(|&b| b == 0)
+}
+
+/// Submit every prompt, wait for all of them, and return the responses in
+/// prompt order.
+fn run_batch(h: &ServerHandle, ps: &[Vec<u16>], max_new: usize)
+             -> Vec<GenerationResponse> {
+    let handles: Vec<_> = ps.iter()
+        .map(|p| h.submit(p.clone(), max_new).unwrap())
+        .collect();
+    handles.into_iter().map(|h| h.wait().unwrap()).collect()
+}
+
+#[test]
+fn panic_mid_decode_isolates_restarts_and_preserves_parity() {
+    let ps = prompts(6);
+    let max_new = 8;
+    let cfg = chaos_config(2, "shard0:decode:2:panic");
+    let base = fault_free(&cfg, &ps, max_new);
+    // Min-load routing gives shard 0 half the batch, and every session
+    // contributes at least one decode-site hit (the prompt-tail re-feed),
+    // so the 2nd hit — and the panic — is guaranteed to fire.
+    assert!(base.iter().all(|t| !t.is_empty()), "baselines must decode");
+
+    let server = Server::start(cfg).unwrap();
+    let outs = run_batch(&server.handle, &ps, max_new);
+
+    let mut failed = 0u64;
+    for (o, b) in outs.iter().zip(&base) {
+        check_parity(o, b);
+        if o.finish == FinishReason::ShardFailed {
+            failed += 1;
+        }
+    }
+    assert!(failed >= 1, "the armed panic never hit a live session");
+
+    wait_until("shard restart after panic", || {
+        server.handle.metrics().total.shard_restarts >= 1
+            && server.handle.shard_alive().iter().all(|&a| a)
+    });
+    let snap = server.handle.metrics();
+    assert_eq!(snap.total.shard_restarts, 1,
+               "one kill clause fires once; restarted shards are fault-free");
+    assert_eq!(snap.total.failed_sessions, failed,
+               "every failed_session increment must surface as a ShardFailed response");
+
+    wait_until("gauges drained after recovery", || gauges_drained(&server.handle));
+
+    // The restarted shard serves again: with all loads at zero the next
+    // submit routes to shard 0 by the lowest-index tie-break, and every
+    // replayed prompt must come back bit-identical.
+    for (p, b) in ps.iter().zip(&base) {
+        let o = server.handle.submit(p.clone(), max_new).unwrap().wait().unwrap();
+        assert!(o.finish.is_natural(), "post-recovery request failed: {:?}", o.finish);
+        assert_eq!(&o.tokens, b, "post-recovery output diverged");
+    }
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn error_mid_prefill_chunk_redelivers_waiting_requests() {
+    let ps = prompts(6);
+    let max_new = 4;
+    let mut cfg = chaos_config(2, "shard0:prefill_chunk:1:error");
+    cfg.scheduler.prefill_chunk = 2;
+    // One activation at a time: min-load routing splits the batch 3/3, so
+    // the victim shard dies holding one active (zero-token) session and
+    // at least one *waiting* request — the redelivery path under test.
+    cfg.scheduler.max_batch = 1;
+    let base = fault_free(&cfg, &ps, max_new);
+
+    let server = Server::start(cfg).unwrap();
+    let outs = run_batch(&server.handle, &ps, max_new);
+
+    let mut failed = 0u64;
+    for (o, b) in outs.iter().zip(&base) {
+        check_parity(o, b);
+        if o.finish == FinishReason::ShardFailed {
+            failed += 1;
+            assert!(o.tokens.is_empty(),
+                    "a prefill-time victim never streamed, yet carries tokens {:?}",
+                    o.tokens);
+        }
+    }
+    assert!(failed >= 1, "the armed prefill-chunk error never hit an activation");
+
+    wait_until("shard restart after prefill error", || {
+        server.handle.metrics().total.shard_restarts >= 1
+            && server.handle.shard_alive().iter().all(|&a| a)
+    });
+    let snap = server.handle.metrics();
+    assert_eq!(snap.total.shard_restarts, 1);
+    assert!(snap.total.redelivered >= 1,
+            "waiting requests on the dead shard must be redelivered, not failed");
+    assert_eq!(snap.total.failed_sessions, failed);
+
+    wait_until("gauges drained after recovery", || gauges_drained(&server.handle));
+    let o = server.handle.submit(ps[0].clone(), max_new).unwrap().wait().unwrap();
+    assert!(o.finish.is_natural());
+    assert_eq!(o.tokens, base[0]);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn error_mid_recompression_fails_session_with_stream_prefix() {
+    let max_new = 8;
+    let ps = prompts(8);
+    // Compress hit 1 is the monolithic prefill compression; hit 2 is the
+    // first streaming recompression, which only happens after the session
+    // has decoded `recompress_every` tokens — a genuinely mid-stream kill.
+    let mut cfg = chaos_config(2, "shard0:compress:2:error");
+    cfg.scheduler.prefill_chunk = 0;
+    cfg.quant.recompress_every = 4;
+    let base = fault_free(&cfg, &ps, max_new);
+    // The victim must decode its full budget fault-free so the second
+    // compression is guaranteed to fire mid-stream.
+    let idx = base.iter().position(|t| t.len() == max_new)
+        .expect("no sim prompt decodes the full budget");
+    let other = (idx + 1) % ps.len();
+
+    let server = Server::start(cfg).unwrap();
+    // Victim routes to shard 0 (lowest-index tie-break on a fresh pool),
+    // the second request to shard 1 — it must survive untouched.
+    let vh = server.handle.submit(ps[idx].clone(), max_new).unwrap();
+    let oh = server.handle.submit(ps[other].clone(), max_new).unwrap();
+
+    let v = vh.wait().unwrap();
+    assert_eq!(v.finish, FinishReason::ShardFailed,
+               "recompression error must fail the session, got {:?}", v.finish);
+    assert!(!v.tokens.is_empty(),
+            "a recompression-time victim has streamed tokens before the kill");
+    assert!(v.tokens.len() < base[idx].len()
+                && v.tokens[..] == base[idx][..v.tokens.len()],
+            "ShardFailed tokens must be a strict prefix of the fault-free stream");
+
+    let o = oh.wait().unwrap();
+    assert!(o.finish.is_natural());
+    assert_eq!(o.tokens, base[other], "survivor on the healthy shard diverged");
+
+    wait_until("shard restart after compress error", || {
+        server.handle.metrics().total.shard_restarts >= 1
+            && server.handle.shard_alive().iter().all(|&a| a)
+    });
+    let snap = server.handle.metrics();
+    assert_eq!(snap.total.shard_restarts, 1);
+    assert_eq!(snap.total.failed_sessions, 1);
+    assert_eq!(snap.total.redelivered, 0, "nothing was waiting on the victim shard");
+
+    wait_until("gauges drained after recovery", || gauges_drained(&server.handle));
+    // The same request, replayed on the restarted shard, now completes
+    // bit-identically — the content-derived-seed exactness argument.
+    let o = server.handle.submit(ps[idx].clone(), max_new).unwrap().wait().unwrap();
+    assert!(o.finish.is_natural());
+    assert_eq!(o.tokens, base[idx]);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn stalled_shard_is_severed_requests_redelivered_bit_identical() {
+    let max_new = 8;
+    let ps = prompts(8);
+    let mut cfg = chaos_config(2, "shard0:decode:3:stall");
+    // Widen the sever window (50 polls x 1 ms): the test submits requests
+    // *at* the wedged shard below, and they must be routed before the
+    // supervisor flips it dead — µs of submits against a 50 ms window.
+    cfg.faults.stall_ticks = 50;
+    let base = fault_free(&cfg, &ps, max_new);
+    let idx = base.iter().position(|t| t.len() == max_new)
+        .expect("no sim prompt decodes the full budget");
+
+    let server = Server::start(cfg).unwrap();
+    // Victim routes to shard 0 (fresh pool, lowest-index tie-break).
+    // Decode-site hit accounting: hit 1 is the prompt-tail re-feed (emits
+    // nothing), and hit k happens inside the call that first emits token
+    // k-1 — so the 3rd hit sets the sticky stall flag in the same step
+    // that emits token 2, and observing two streamed tokens is the
+    // synchronization oracle: from then on shard 0 can never step again.
+    let mut vh = server.handle.submit(ps[idx].clone(), max_new).unwrap();
+    let streamed: Vec<u16> = (0..2)
+        .map(|_| vh.next_token().expect("victim stream ended before the stall"))
+        .collect();
+    assert_eq!(streamed.as_slice(), &base[idx][..2]);
+
+    // Three more submissions while shard 0 is frozen at load 1: min-load
+    // routing sends exactly one of them to the wedged shard (ties resolve
+    // either way, but loads can never diverge past one), and that request
+    // must be redelivered and still complete bit-identically.
+    let others: Vec<usize> = (0..ps.len()).filter(|&i| i != idx).take(3).collect();
+    let hs: Vec<_> = others.iter()
+        .map(|&i| server.handle.submit(ps[i].clone(), max_new).unwrap())
+        .collect();
+    for (&i, h) in others.iter().zip(hs) {
+        let o = h.wait().unwrap();
+        assert!(o.finish.is_natural(),
+                "redelivered/survivor request failed: {:?}", o.finish);
+        assert_eq!(o.tokens, base[i], "redelivery changed the output");
+    }
+
+    // The stalled session is severed with exactly its streamed prefix —
+    // the at-most-once contract: no token is ever re-streamed.
+    let v = vh.wait().unwrap();
+    assert_eq!(v.finish, FinishReason::ShardFailed);
+    assert_eq!(v.tokens, base[idx][..2].to_vec(),
+               "severed session must keep exactly the tokens it streamed");
+
+    wait_until("stalled shard severed and restarted", || {
+        server.handle.metrics().total.shard_restarts >= 1
+            && server.handle.shard_alive().iter().all(|&a| a)
+    });
+    let snap = server.handle.metrics();
+    assert_eq!(snap.total.shard_restarts, 1);
+    assert_eq!(snap.total.redelivered, 1,
+               "exactly one request was staged behind the wedge");
+    assert_eq!(snap.total.failed_sessions, 1);
+
+    wait_until("gauges drained after recovery", || gauges_drained(&server.handle));
+    let o = server.handle.submit(ps[idx].clone(), max_new).unwrap().wait().unwrap();
+    assert!(o.finish.is_natural());
+    assert_eq!(o.tokens, base[idx]);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn every_shard_killed_once_supervisor_restarts_each() {
+    let ps = prompts(6);
+    let max_new = 6;
+    let cfg = chaos_config(2, "shard0:decode:1:error;shard1:decode:2:error");
+    let base = fault_free(&cfg, &ps, max_new);
+
+    let server = Server::start(cfg).unwrap();
+    let outs = run_batch(&server.handle, &ps, max_new);
+    // Both shards die mid-batch; redelivery may itself hit a dying or
+    // not-yet-restarted shard, but the parity pin must hold for every
+    // single request regardless of how the failures interleave.
+    for (o, b) in outs.iter().zip(&base) {
+        check_parity(o, b);
+    }
+
+    wait_until("both shards restarted", || {
+        server.handle.metrics().total.shard_restarts >= 2
+            && server.handle.shard_alive().iter().all(|&a| a)
+    });
+    assert_eq!(server.handle.metrics().total.shard_restarts, 2,
+               "each kill clause fires exactly once");
+
+    wait_until("gauges drained after recovery", || gauges_drained(&server.handle));
+    for (p, b) in ps.iter().zip(&base) {
+        let o = server.handle.submit(p.clone(), max_new).unwrap().wait().unwrap();
+        assert!(o.finish.is_natural(), "post-recovery request failed: {:?}", o.finish);
+        assert_eq!(&o.tokens, b);
+    }
+    server.shutdown().unwrap();
+}

@@ -19,6 +19,9 @@ use std::time::Instant;
 
 use zipcache::config::EngineConfig;
 use zipcache::coordinator::{Engine, GenerationRequest};
+use zipcache::quant::kernel;
+use zipcache::quant::packing::PackedCodes;
+use zipcache::quant::{Granularity, QuantizedPlane};
 
 /// The system allocator wrapped with allocation-event counters.  Frees
 /// are not counted: the hot-path contract is about *new* heap traffic.
@@ -105,6 +108,23 @@ impl Bucket {
     }
 }
 
+/// Median wall time of `f` over a few samples (3 warm-ups, 9 measured)
+/// — enough resolution for the kernel speedup ratio columns.
+fn median_ns<F: FnMut()>(mut f: F) -> u64 {
+    for _ in 0..3 {
+        f();
+    }
+    let mut v: Vec<u64> = (0..9)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_nanos() as u64
+        })
+        .collect();
+    v.sort_unstable();
+    v[v.len() / 2]
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let target_steps: u64 = if smoke { 240 } else { 1200 };
@@ -183,6 +203,34 @@ fn main() {
         }
     }
 
+    // ---- per-kernel unpack/dequant ratio (DESIGN.md §15) -------------------
+    // Micro-measure the two decode-side kernels under the scalar tier vs
+    // the tier the engine actually ran with, and emit the speedup into
+    // the JSON so the perf trajectory tracks the SIMD win per release.
+    let active_kind = kernel::active();
+    let kcodes: Vec<u8> = (0..1 << 18).map(|i| (i % 4) as u8).collect();
+    let kpacked = PackedCodes::pack(&kcodes, 2);
+    let mut kunp = vec![0u8; kcodes.len()];
+    let kx: Vec<f32> = (0..256 * 128).map(|i| (i as f32 * 0.137).sin()).collect();
+    let kq = QuantizedPlane::quantize_with(kernel::Kind::Scalar, &kx, 256, 128, 4,
+                                           Granularity::ChannelSeparableToken);
+    let mut kdeq = vec![0f32; kx.len()];
+    let unpack_scalar = median_ns(|| {
+        kpacked.unpack_into_with(kernel::Kind::Scalar, std::hint::black_box(&mut kunp));
+    });
+    let unpack_active = median_ns(|| {
+        kpacked.unpack_into_with(active_kind, std::hint::black_box(&mut kunp));
+    });
+    let dequant_scalar = median_ns(|| {
+        kq.dequantize_into_with(kernel::Kind::Scalar, std::hint::black_box(&mut kdeq));
+    });
+    let dequant_active = median_ns(|| {
+        kq.dequantize_into_with(active_kind, std::hint::black_box(&mut kdeq));
+    });
+    let quant_kernel = active_kind.name();
+    let unpack_speedup = unpack_scalar as f64 / unpack_active.max(1) as f64;
+    let dequant_speedup = dequant_scalar as f64 / dequant_active.max(1) as f64;
+
     let steady_steps = steady.steps;
     let steady_p50 = steady.p50_us();
     let steady_mean = steady.mean_us();
@@ -205,7 +253,10 @@ fn main() {
          \"recompress_steps\": {cycle_steps},\n  \
          \"recompress_us_p50\": {cycle_p50:.3},\n  \
          \"recompress_us_mean\": {cycle_mean:.3},\n  \
-         \"recompress_allocs_per_step\": {cycle_allocs:.1}\n}}\n",
+         \"recompress_allocs_per_step\": {cycle_allocs:.1},\n  \
+         \"quant_kernel\": \"{quant_kernel}\",\n  \
+         \"kernel_unpack_speedup_vs_scalar\": {unpack_speedup:.2},\n  \
+         \"kernel_dequant_speedup_vs_scalar\": {dequant_speedup:.2}\n}}\n",
     );
     std::fs::write("BENCH_decode.json", &json).unwrap();
 
@@ -223,5 +274,6 @@ fn main() {
         cycle.steps > 0,
         "bench never exercised a recompression cycle — widen the window"
     );
-    println!("OK: {} steady steps, 0 allocations/step", steady.steps);
+    println!("OK: {} steady steps, 0 allocations/step (quant kernel: {quant_kernel})",
+             steady.steps);
 }

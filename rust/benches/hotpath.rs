@@ -6,6 +6,7 @@
 mod common;
 
 use zipcache::kvcache::{CacheLayout, CompressedKV, PrecisionClass, QuantSpec};
+use zipcache::quant::kernel;
 use zipcache::quant::packing::PackedCodes;
 use zipcache::quant::{Granularity, QuantizedPlane};
 use zipcache::saliency::metric::select_salient;
@@ -55,6 +56,41 @@ fn main() {
     });
     t.row(&["dequantize CST".into(), format!("{rows}x{cols} @4b"),
             format!("{:.3}", m.median_ms()), format!("{:.3}", m.mean_ms())]);
+
+    // ---- scalar vs SIMD kernel tiers (DESIGN.md §15) ------------------------
+    // Same inputs through every kernel kind the CPU supports; the scalar
+    // row is the speedup baseline.  Outputs are bit-identical across
+    // rows (the parity property tests pin that), so this is purely a
+    // wall-clock comparison.
+    let kinds: Vec<kernel::Kind> = kernel::compiled_kinds()
+        .iter()
+        .copied()
+        .filter(|&k| kernel::available(k))
+        .collect();
+    let mut kt = Table::new(&["op", "kernel", "median ms", "speedup vs scalar"]);
+    for op in ["pack 1M @2b", "unpack 1M @2b", "quantize token @4b",
+               "dequantize CST @4b"] {
+        let mut base = 0.0f64;
+        for &k in &kinds {
+            let m = b.measure(op, || match op {
+                "pack 1M @2b" => {
+                    black_box(PackedCodes::pack_with(k, &codes, 2));
+                }
+                "unpack 1M @2b" => packed.unpack_into_with(k, black_box(&mut out)),
+                "quantize token @4b" => {
+                    black_box(QuantizedPlane::quantize_with(k, &x, rows, cols, 4,
+                                                            Granularity::Token));
+                }
+                _ => q.dequantize_into_with(k, black_box(&mut deq)),
+            });
+            if k == kernel::Kind::Scalar {
+                base = m.median_ms();
+            }
+            kt.row(&[op.into(), k.name().into(),
+                     format!("{:.3}", m.median_ms()),
+                     format!("{:.2}x", base / m.median_ms().max(1e-9))]);
+        }
+    }
 
     // ---- full cache compress + materialize (recompression cycle cost) -------
     let lay = CacheLayout { layers: 4, heads: 8, seq: 1024, d_head: 64 };
@@ -123,4 +159,6 @@ fn main() {
     t.print();
     println!("\n== compression stage breakdown (Split -> Quant -> Concat) ==");
     stage_table.print();
+    println!("\n== quant kernel tiers (scalar baseline, DESIGN.md §15) ==");
+    kt.print();
 }

@@ -6,6 +6,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::ensure;
 
+use crate::quant::KernelChoice;
 use crate::util::kvconf::KvConf;
 use crate::Result;
 
@@ -72,6 +73,11 @@ pub struct QuantConfig {
     pub probe_ratio: f64,
     /// Recompress the cache every N generated tokens (Alg. 3).
     pub recompress_every: usize,
+    /// Quant/dequant kernel selection (DESIGN.md §15): `auto` picks the
+    /// widest SIMD implementation the CPU supports, `scalar` pins the
+    /// portable path, `simd` requires a SIMD kernel (startup error
+    /// otherwise).  `ZIPCACHE_FORCE_SCALAR=1` overrides all of them.
+    pub kernel: KernelChoice,
 }
 
 impl Default for QuantConfig {
@@ -82,6 +88,7 @@ impl Default for QuantConfig {
             bits_low: 2,
             probe_ratio: 0.10,
             recompress_every: 100,
+            kernel: KernelChoice::Auto,
         }
     }
 }
@@ -226,6 +233,7 @@ impl EngineConfig {
                 bits_low: c.get_u8("quant.bits_low", 2)?,
                 probe_ratio: c.get_f64("quant.probe_ratio", 0.10)?,
                 recompress_every: c.get_usize("quant.recompress_every", 100)?,
+                kernel: c.get_or("quant.kernel", "auto").parse()?,
             },
             scheduler: SchedulerConfig {
                 max_batch: c.get_usize("scheduler.max_batch", 8)?,
@@ -423,6 +431,20 @@ max_batch = 4
         c.faults.backoff_base_ms = 100;
         c.faults.backoff_cap_ms = 50;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn quant_kernel_from_file_and_default() {
+        let text = "model = \"tiny\"\n[quant]\nkernel = \"scalar\"\n";
+        let path = std::env::temp_dir().join("zipcache_cfg_kernel_test.conf");
+        std::fs::write(&path, text).unwrap();
+        let c = EngineConfig::from_file(&path).unwrap();
+        assert_eq!(c.quant.kernel, KernelChoice::Scalar);
+        let d = EngineConfig::load_default("sim", "micro").unwrap();
+        assert_eq!(d.quant.kernel, KernelChoice::Auto);
+        let bad = "model = \"tiny\"\n[quant]\nkernel = \"avx512\"\n";
+        std::fs::write(&path, bad).unwrap();
+        assert!(EngineConfig::from_file(&path).is_err());
     }
 
     #[test]

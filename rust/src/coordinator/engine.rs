@@ -50,6 +50,10 @@ pub struct Engine {
 impl Engine {
     pub fn new(cfg: EngineConfig) -> Result<Self> {
         cfg.validate()?;
+        // Resolve the quant kernel once, before any engine touches the
+        // hot path (DESIGN.md §15): a `simd` request on a scalar-only
+        // CPU dies here, not mid-decode.
+        crate::quant::kernel::apply_choice(cfg.quant.kernel)?;
         let rt = Runtime::load(&cfg.artifacts_dir, &cfg.model)?;
         let policy = make_policy(&cfg);
         let pool = WorkerPool::new(cfg.parallelism);

@@ -13,6 +13,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::kvcache::fp16::round_f16;
+use crate::quant::kernel;
 use crate::quant::{Granularity, QuantizedPlane};
 use crate::util::pool::WorkerPool;
 
@@ -239,6 +240,39 @@ impl CompressedKV {
         pool: &WorkerPool,
         scratch: &mut CompressScratch,
     ) -> (Self, CompressStats) {
+        Self::compress_kind_scratch(kcache, vcache, layout, classes, spec, pool,
+                                    scratch, kernel::active())
+    }
+
+    /// [`CompressedKV::compress`] pinned to an explicit quant kernel kind
+    /// (DESIGN.md §15): the cross-kind parity tests and benches compare
+    /// kernels without touching the process-wide selection.  Sequential;
+    /// the store (and its [`CompressedKV::content_digest`]) is
+    /// bit-identical across kinds.
+    pub fn compress_with_kind(
+        kcache: &[f32],
+        vcache: &[f32],
+        layout: CacheLayout,
+        classes: &[PrecisionClass],
+        spec: QuantSpec,
+        kind: kernel::Kind,
+    ) -> Self {
+        let mut scratch = CompressScratch::default();
+        Self::compress_kind_scratch(kcache, vcache, layout, classes, spec,
+                                    &WorkerPool::sequential(), &mut scratch, kind)
+            .0
+    }
+
+    fn compress_kind_scratch(
+        kcache: &[f32],
+        vcache: &[f32],
+        layout: CacheLayout,
+        classes: &[PrecisionClass],
+        spec: QuantSpec,
+        pool: &WorkerPool,
+        scratch: &mut CompressScratch,
+        kind: kernel::Kind,
+    ) -> (Self, CompressStats) {
         assert_eq!(kcache.len(), layout.cache_len());
         assert_eq!(vcache.len(), layout.cache_len());
         let n_tokens = classes.len();
@@ -280,7 +314,7 @@ impl CompressedKV {
             let mut ps = planes.checkout();
             let hs = compress_plane(&kcache[base..base + s * dh],
                                     &vcache[base..base + s * dh],
-                                    dh, groups, spec, &mut ps);
+                                    dh, groups, spec, kind, &mut ps);
             planes.restore(ps);
             quant_cpu.fetch_add(t_plane.elapsed().as_micros() as u64,
                                 Ordering::Relaxed);
@@ -551,6 +585,7 @@ fn compress_plane(
     dh: usize,
     groups: &[(PrecisionClass, Vec<u32>)],
     spec: QuantSpec,
+    kind: kernel::Kind,
     ps: &mut PlaneScratch,
 ) -> HeadStore {
     let mut hs = HeadStore::default();
@@ -580,13 +615,13 @@ fn compress_plane(
                 }
                 hs.k_sets.push(SubsetPlane {
                     rows: rows.clone(),
-                    plane: QuantizedPlane::quantize(
-                        kg, rows.len(), dh, *bits, spec.key_gran),
+                    plane: QuantizedPlane::quantize_with(
+                        kind, kg, rows.len(), dh, *bits, spec.key_gran),
                 });
                 hs.v_sets.push(SubsetPlane {
                     rows: rows.clone(),
-                    plane: QuantizedPlane::quantize(
-                        vg, rows.len(), dh, *bits, spec.value_gran),
+                    plane: QuantizedPlane::quantize_with(
+                        kind, vg, rows.len(), dh, *bits, spec.value_gran),
                 });
             }
             PrecisionClass::Evicted => unreachable!(),
@@ -889,6 +924,36 @@ mod tests {
         assert_eq!(vas, vaf);
         let dh = lay.d_head;
         assert!(ks[2 * dh..3 * dh].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn kernel_kinds_compress_digest_identical() {
+        // content_digest pin for DESIGN.md §15: every available kernel
+        // kind compresses a mixed-class store to byte-identical planes
+        // (packed codes, params, channel scales, fp16 rows).  d_head is
+        // deliberately not a multiple of the 8-wide f32 blocks so the
+        // SIMD rows exercise their scalar tails.
+        let lay = CacheLayout { layers: 2, heads: 2, seq: 33, d_head: 10 };
+        let (k, v) = caches(lay);
+        let classes: Vec<PrecisionClass> = (0..29)
+            .map(|t| match t % 5 {
+                0 => PrecisionClass::Bits(4),
+                1 => PrecisionClass::Fp16,
+                2 => PrecisionClass::Evicted,
+                3 => PrecisionClass::Bits(1),
+                _ => PrecisionClass::Bits(2),
+            })
+            .collect();
+        let base = CompressedKV::compress_with_kind(
+            &k, &v, lay, &classes, QuantSpec::default(), kernel::Kind::Scalar);
+        for &kind in kernel::compiled_kinds() {
+            if !kernel::available(kind) {
+                continue;
+            }
+            let c = CompressedKV::compress_with_kind(
+                &k, &v, lay, &classes, QuantSpec::default(), kind);
+            assert_eq!(c.content_digest(), base.content_digest(), "{kind:?}");
+        }
     }
 
     #[test]

@@ -6,6 +6,7 @@
 
 use zipcache::config::{EngineConfig, PolicyKind};
 use zipcache::coordinator::Engine;
+use zipcache::quant::KernelChoice;
 use zipcache::eval::{score_generation, AccuracyReport};
 use zipcache::kvcache::ratio::RatioShape;
 use zipcache::server::{loadgen, Server};
@@ -32,6 +33,9 @@ fn main() -> Result<()> {
     .flag("model", "tiny", "model config from the manifest")
     .flag("policy", "zipcache", "fp16|h2o|gear|kivi|mikv|zipcache")
     .flag("saliency-ratio", "0.6", "fraction of tokens at high precision")
+    .flag("quant-kernel", "auto",
+          "quant/dequant kernel: auto | scalar | simd \
+           (ZIPCACHE_FORCE_SCALAR=1 overrides)")
     .flag("parallelism", "0", "compression worker threads (0 = per-core)")
     .flag("shards", "1", "serve: engine shards (0 = per-core)")
     .flag("memory-slots", "0",
@@ -90,6 +94,7 @@ fn build_config(args: &Args) -> Result<EngineConfig> {
     let mut cfg = EngineConfig::load_default(args.get("artifacts"), &args.get("model"))?;
     cfg.policy = args.get("policy").parse::<PolicyKind>()?;
     cfg.quant.saliency_ratio = args.get_f64("saliency-ratio")?;
+    cfg.quant.kernel = args.get("quant-kernel").parse::<KernelChoice>()?;
     cfg.parallelism = args.get_usize("parallelism")?;
     cfg.scheduler.shards = args.get_usize("shards")?;
     cfg.memory.slots = args.get_usize("memory-slots")?;
@@ -181,6 +186,10 @@ fn serve(cfg: EngineConfig, task: Task, requests: usize, rate: f64, max_new: usi
                     "max-new must be in [1, {}) for model '{}'",
                     info.max_seq, cfg.model);
     let server = Server::start(cfg.clone())?;
+    // Logged once: the kind the engines resolved (after config/env
+    // overrides), vs. what the config requested (DESIGN.md §15).
+    println!("quant kernel : {} (requested {})",
+             zipcache::quant::kernel::active().name(), cfg.quant.kernel);
     let trace = match trace_kind {
         "poisson" => RequestTrace::poisson(task, info.max_seq - max_new, requests,
                                            rate, max_new, cfg.seed),

@@ -1,0 +1,1462 @@
+//! Runtime-dispatched SIMD kernels for the quant / saliency hot paths
+//! (DESIGN.md §15).
+//!
+//! A single process-wide kernel [`Kind`] is resolved once at startup —
+//! CPU feature detection via `is_x86_feature_detected!`, overridable by
+//! the `quant.kernel` config knob / `--quant-kernel` CLI flag /
+//! `ZIPCACHE_FORCE_SCALAR` environment variable — and then read with a
+//! relaxed atomic load at every hot-path entry: no per-call feature
+//! probing and no allocation, preserving the zero-allocation decode
+//! contract (DESIGN.md §9).
+//!
+//! Every vectorized path is pinned **bit-identical** to the scalar
+//! fallback: integer lane extraction follows the same little-endian
+//! low-lane-first order as `PackWriter::push`, and the f32 kernels
+//! apply the exact scalar expression per element in the same operation
+//! order (`_mm_round_ps` with the round-to-nearest-even control word
+//! matches `f32::round_ties_even`).  Range reductions — the min/max
+//! scans and the CST column max-abs — deliberately stay scalar in every
+//! kind: vector reassociation could flip the sign of a ±0.0 bound or
+//! reorder NaN propagation, which would leak into `QuantParams::zero`
+//! and the snapshot content digest.  The parity gates are the
+//! per-primitive tests below, the cross-kind property test in
+//! `quant/plane.rs`, and the `content_digest` pin in
+//! `kvcache/store.rs`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Tile width (in codes / elements) for the stack staging buffers used
+/// by the tiled kernels (`codes_to_f32`, the fused encode loops in
+/// `quant/plane.rs`).  A multiple of every lane group size (8 codes per
+/// byte at 1 bit, 16-code SIMD blocks), so whole tiles never split a
+/// packed byte.
+pub const TILE: usize = 256;
+
+/// A concrete kernel implementation tier.
+///
+/// Discriminants start at 1 so the zero-initialised [`ACTIVE`] atomic
+/// can use 0 as "not resolved yet".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Kind {
+    /// Portable scalar code — the reference semantics, always compiled.
+    Scalar = 1,
+    /// 128-bit x86 kernels (SSE2 integer/f32 lanes, SSE4.1 rounding).
+    Sse41 = 2,
+    /// 256-bit x86 f32 kernels; integer codecs stay 128-bit.
+    Avx2 = 3,
+}
+
+impl Kind {
+    /// Stable lowercase name for banners, benches, and JSON columns.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Scalar => "scalar",
+            Kind::Sse41 => "sse4.1",
+            Kind::Avx2 => "avx2",
+        }
+    }
+}
+
+/// The `quant.kernel` knob: how to pick the process-wide [`Kind`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelChoice {
+    /// Detect the widest available implementation (the default).
+    #[default]
+    Auto,
+    /// Pin the portable scalar path.
+    Scalar,
+    /// Require a SIMD tier; fails validation on CPUs without one.
+    Simd,
+}
+
+impl KernelChoice {
+    /// Canonical config-file spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelChoice::Auto => "auto",
+            KernelChoice::Scalar => "scalar",
+            KernelChoice::Simd => "simd",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for KernelChoice {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "auto" => KernelChoice::Auto,
+            "scalar" => KernelChoice::Scalar,
+            "simd" => KernelChoice::Simd,
+            other => anyhow::bail!("unknown quant kernel '{other}' (auto|scalar|simd)"),
+        })
+    }
+}
+
+/// The resolved process-wide kernel; 0 = not resolved yet.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+/// The process-wide kernel: one relaxed load on the hot path.  Falls
+/// back to a cold first-use resolution (env override, then feature
+/// detection) when `apply_choice` has not run — tests and standalone
+/// tools hit that path; the engine resolves explicitly at startup.
+// lint: hot-path
+#[inline]
+pub fn active() -> Kind {
+    match ACTIVE.load(Ordering::Relaxed) {
+        1 => Kind::Scalar,
+        2 => Kind::Sse41,
+        3 => Kind::Avx2,
+        _ => init_active(),
+    }
+}
+
+/// First-use resolution, kept out of line so `active()` stays a bare
+/// load-and-branch in steady state.
+// lint: cold-path
+#[cold]
+fn init_active() -> Kind {
+    let kind = if force_scalar_env() {
+        Kind::Scalar
+    } else {
+        detect_widest()
+    };
+    ACTIVE.store(kind as u8, Ordering::Relaxed);
+    kind
+}
+
+/// `ZIPCACHE_FORCE_SCALAR` pins the portable path regardless of the
+/// config knob ("" and "0" mean unset, anything else forces scalar).
+fn force_scalar_env() -> bool {
+    std::env::var_os("ZIPCACHE_FORCE_SCALAR").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Resolve and install the process-wide kernel from the config knob.
+/// Called once from `Engine::new` (idempotent across shards — every
+/// call installs the same answer for the same inputs).  The env
+/// override wins over the knob so deployments can pin the portable
+/// path without touching config.
+pub fn apply_choice(choice: KernelChoice) -> crate::Result<Kind> {
+    let kind = if force_scalar_env() {
+        Kind::Scalar
+    } else {
+        match choice {
+            KernelChoice::Auto => detect_widest(),
+            KernelChoice::Scalar => Kind::Scalar,
+            KernelChoice::Simd => {
+                let k = detect_widest();
+                anyhow::ensure!(
+                    k != Kind::Scalar,
+                    "quant.kernel = simd requested but no SIMD kernel is \
+                     available on this CPU/arch"
+                );
+                k
+            }
+        }
+    };
+    ACTIVE.store(kind as u8, Ordering::Relaxed);
+    Ok(kind)
+}
+
+/// Widest implementation the running CPU supports.
+fn detect_widest() -> Kind {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if available(Kind::Avx2) {
+            return Kind::Avx2;
+        }
+        if available(Kind::Sse41) {
+            return Kind::Sse41;
+        }
+    }
+    Kind::Scalar
+}
+
+/// Every kernel tier compiled into this binary (parity tests iterate
+/// this, filtered by [`available`]).
+pub fn compiled_kinds() -> &'static [Kind] {
+    #[cfg(target_arch = "x86_64")]
+    {
+        &[Kind::Scalar, Kind::Sse41, Kind::Avx2]
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        &[Kind::Scalar]
+    }
+}
+
+/// Whether `kind` can run on this CPU.  The Avx2 tier also requires
+/// SSE4.1 because its encode kernels share the 128-bit narrowing tail.
+pub fn available(kind: Kind) -> bool {
+    match kind {
+        Kind::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Kind::Sse41 => is_x86_feature_detected!("sse4.1"),
+        #[cfg(target_arch = "x86_64")]
+        Kind::Avx2 => is_x86_feature_detected!("avx2") && is_x86_feature_detected!("sse4.1"),
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => false,
+    }
+}
+
+// ---- const-eval lane-expansion tables (DESIGN.md §15) ---------------------
+//
+// One table per sub-byte width, indexed by the packed control byte and
+// yielding all its codes as a little-endian word — the `vbe_simd`
+// idiom.  Used for whole-byte remainders below a 16-byte SIMD block
+// (and as the entire 1-bit unpack fallback); built at compile time so
+// the hot path is a single indexed load per byte.
+
+const fn build_u4_lut() -> [u16; 256] {
+    let mut t = [0u16; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        t[b] = ((b & 0x0F) | ((b >> 4) << 8)) as u16;
+        b += 1;
+    }
+    t
+}
+
+const fn build_u2_lut() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut w = 0u32;
+        let mut k = 0;
+        while k < 4 {
+            w |= (((b >> (2 * k)) & 0x3) as u32) << (8 * k);
+            k += 1;
+        }
+        t[b] = w;
+        b += 1;
+    }
+    t
+}
+
+const fn build_u1_lut() -> [u64; 256] {
+    let mut t = [0u64; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut w = 0u64;
+        let mut i = 0;
+        while i < 8 {
+            w |= (((b >> i) & 1) as u64) << (8 * i);
+            i += 1;
+        }
+        t[b] = w;
+        b += 1;
+    }
+    t
+}
+
+static U4_LUT: [u16; 256] = build_u4_lut();
+static U2_LUT: [u32; 256] = build_u2_lut();
+static U1_LUT: [u64; 256] = build_u1_lut();
+
+// ---- public dispatchers ---------------------------------------------------
+//
+// Each dispatcher runs the widest compiled twin for `kind` over a
+// SIMD-width prefix (the twin returns how many elements it consumed),
+// then finishes with the scalar expression — which is also the entire
+// body when `kind == Kind::Scalar` (prefix 0).  The scalar tails below
+// ARE the reference semantics: byte-for-byte the same expressions as
+// the pre-dispatch code in `quant/packing.rs` / `quant/plane.rs`.
+
+/// Pack one-code-per-byte `codes` into `out` (lane k of each byte holds
+/// code k at shift `k * bits`, low lane first — `PackWriter::push`
+/// order).  Codes are masked to `bits`, so out-of-range inputs pack the
+/// same bytes on every kind.
+// lint: hot-path
+#[inline]
+pub fn pack_lanes(kind: Kind, bits: u8, codes: &[u8], out: &mut [u8]) {
+    if bits == 8 {
+        out.copy_from_slice(codes);
+        return;
+    }
+    let pb = (8 / bits) as usize;
+    debug_assert_eq!(out.len(), codes.len().div_ceil(pb));
+    let ci = simd_pack(kind, bits, codes, out);
+    let mask = (1u8 << bits) - 1;
+    for (k, chunk) in codes[ci..].chunks(pb).enumerate() {
+        let mut b = 0u8;
+        for (j, &c) in chunk.iter().enumerate() {
+            b |= (c & mask) << (j as u8 * bits);
+        }
+        out[ci / pb + k] = b;
+    }
+}
+
+/// Unpack `out.len()` codes from the packed bytes in `data` (inverse of
+/// [`pack_lanes`], same lane order).  Whole-byte remainders below a
+/// 16-byte SIMD block go through the const lane-expansion tables; the
+/// final partial byte uses the shifted-extraction scalar loop.
+// lint: hot-path
+#[inline]
+pub fn unpack_lanes(kind: Kind, bits: u8, data: &[u8], out: &mut [u8]) {
+    if bits == 8 {
+        out.copy_from_slice(&data[..out.len()]);
+        return;
+    }
+    let pb = (8 / bits) as usize;
+    let nb = out.len() / pb;
+    let bi = simd_unpack(kind, bits, &data[..nb], out);
+    match bits {
+        4 => {
+            for i in bi..nb {
+                let w = U4_LUT[data[i] as usize].to_le_bytes();
+                out[i * 2..i * 2 + 2].copy_from_slice(&w);
+            }
+        }
+        2 => {
+            for i in bi..nb {
+                let w = U2_LUT[data[i] as usize].to_le_bytes();
+                out[i * 4..i * 4 + 4].copy_from_slice(&w);
+            }
+        }
+        _ => {
+            for i in bi..nb {
+                let w = U1_LUT[data[i] as usize].to_le_bytes();
+                out[i * 8..i * 8 + 8].copy_from_slice(&w);
+            }
+        }
+    }
+    let done = nb * pb;
+    if done < out.len() {
+        let b = data[nb];
+        let mask = (1u8 << bits) - 1;
+        for k in 0..(out.len() - done) {
+            out[done + k] = (b >> (k as u8 * bits)) & mask;
+        }
+    }
+}
+
+/// Unpack + widen packed codes straight to f32 (`c as f32` is exact for
+/// u8), tiled through a fixed stack buffer — no allocation.
+// lint: hot-path
+#[inline]
+pub fn codes_to_f32(kind: Kind, bits: u8, data: &[u8], out: &mut [f32]) {
+    if bits == 8 {
+        u8_to_f32(kind, &data[..out.len()], out);
+        return;
+    }
+    let pb = (8 / bits) as usize;
+    let mut buf = [0u8; TILE];
+    let mut done = 0usize;
+    while done < out.len() {
+        // `done` stays a multiple of TILE (itself a multiple of every
+        // per-byte lane count), so `done / pb` is exact.
+        let n = TILE.min(out.len() - done);
+        unpack_lanes(kind, bits, &data[done / pb..], &mut buf[..n]);
+        u8_to_f32(kind, &buf[..n], &mut out[done..done + n]);
+        done += n;
+    }
+}
+
+/// Widen u8 codes to f32.
+// lint: hot-path
+#[inline]
+pub fn u8_to_f32(kind: Kind, src: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(src.len(), out.len());
+    let n = simd_u8_to_f32(kind, src, out);
+    for j in n..src.len() {
+        out[j] = src[j] as f32;
+    }
+}
+
+/// In-place affine: `x = (x - zero) * scale` — `QuantParams::decode`
+/// applied to pre-widened codes.
+// lint: hot-path
+#[inline]
+pub fn affine_inplace(kind: Kind, xs: &mut [f32], zero: f32, scale: f32) {
+    let n = simd_affine(kind, xs, zero, scale);
+    for x in &mut xs[n..] {
+        *x = (*x - zero) * scale;
+    }
+}
+
+/// In-place affine with a per-column factor:
+/// `x[j] = (x[j] - zero) * scale * chan[j]` — the CST decode row.
+// lint: hot-path
+#[inline]
+pub fn affine_mul_inplace(kind: Kind, xs: &mut [f32], zero: f32, scale: f32, chan: &[f32]) {
+    debug_assert_eq!(xs.len(), chan.len());
+    let n = simd_affine_mul(kind, xs, zero, scale, chan);
+    for j in n..xs.len() {
+        xs[j] = (xs[j] - zero) * scale * chan[j];
+    }
+}
+
+/// In-place affine with per-column params:
+/// `x[j] = (x[j] - zeros[j]) * scales[j]` — the Channel decode row.
+// lint: hot-path
+#[inline]
+pub fn affine_cols_inplace(kind: Kind, xs: &mut [f32], scales: &[f32], zeros: &[f32]) {
+    debug_assert_eq!(xs.len(), scales.len());
+    debug_assert_eq!(xs.len(), zeros.len());
+    let n = simd_affine_cols(kind, xs, scales, zeros);
+    for j in n..xs.len() {
+        xs[j] = (xs[j] - zeros[j]) * scales[j];
+    }
+}
+
+/// Fused encode with a hoisted reciprocal scale (the Token / CST row
+/// loop): `out[j] = ((src[j] * inv_s).round_ties_even() + zero)
+/// .clamp(0.0, qmax) as u8`.
+// lint: hot-path
+#[inline]
+pub fn encode_mul(kind: Kind, src: &[f32], inv_s: f32, zero: f32, qmax: f32, out: &mut [u8]) {
+    debug_assert_eq!(src.len(), out.len());
+    let n = simd_encode_mul(kind, src, inv_s, zero, qmax, out);
+    for j in n..src.len() {
+        out[j] = ((src[j] * inv_s).round_ties_even() + zero).clamp(0.0, qmax) as u8;
+    }
+}
+
+/// Fused encode dividing by the scale (`QuantParams::encode` order, the
+/// Group segment loop): `out[j] = ((src[j] / scale).round_ties_even()
+/// + zero).clamp(0.0, qmax) as u8`.
+// lint: hot-path
+#[inline]
+pub fn encode_div(kind: Kind, src: &[f32], scale: f32, zero: f32, qmax: f32, out: &mut [u8]) {
+    debug_assert_eq!(src.len(), out.len());
+    let n = simd_encode_div(kind, src, scale, zero, qmax, out);
+    for j in n..src.len() {
+        out[j] = ((src[j] / scale).round_ties_even() + zero).clamp(0.0, qmax) as u8;
+    }
+}
+
+/// Fused encode with per-column params (the Channel row loop):
+/// `out[j] = ((src[j] / scales[j]).round_ties_even() + zeros[j])
+/// .clamp(0.0, qmax) as u8`.
+// lint: hot-path
+#[inline]
+pub fn encode_cols(
+    kind: Kind,
+    src: &[f32],
+    scales: &[f32],
+    zeros: &[f32],
+    qmax: f32,
+    out: &mut [u8],
+) {
+    debug_assert_eq!(src.len(), out.len());
+    debug_assert_eq!(src.len(), scales.len());
+    debug_assert_eq!(src.len(), zeros.len());
+    let n = simd_encode_cols(kind, src, scales, zeros, qmax, out);
+    for j in n..src.len() {
+        out[j] = ((src[j] / scales[j]).round_ties_even() + zeros[j]).clamp(0.0, qmax) as u8;
+    }
+}
+
+/// Elementwise divide: `out[j] = num[j] / den[j]` — CST row
+/// normalization by the column scales.
+// lint: hot-path
+#[inline]
+pub fn div_slice(kind: Kind, num: &[f32], den: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(num.len(), den.len());
+    debug_assert_eq!(num.len(), out.len());
+    let n = simd_div(kind, num, den, out);
+    for j in n..num.len() {
+        out[j] = num[j] / den[j];
+    }
+}
+
+/// Elementwise accumulate: `acc[j] += row[j]` — the saliency probe row
+/// reduction.
+// lint: hot-path
+#[inline]
+pub fn add_assign(kind: Kind, acc: &mut [f32], row: &[f32]) {
+    debug_assert_eq!(acc.len(), row.len());
+    let n = simd_add(kind, acc, row);
+    for j in n..acc.len() {
+        acc[j] += row[j];
+    }
+}
+
+// ---- per-kind twins -------------------------------------------------------
+//
+// Each `simd_*` twin returns how many leading elements it handled (0
+// for the Scalar kind and on non-x86 targets, where the stub block at
+// the bottom compiles instead).  Integer codecs and the per-column f32
+// kernels run the 128-bit implementation under both SIMD kinds; the
+// uniform-affine / accumulate / encode_mul kernels step up to 256-bit
+// under Avx2.
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn simd_pack(kind: Kind, bits: u8, codes: &[u8], out: &mut [u8]) -> usize {
+    debug_assert!(available(kind));
+    if kind == Kind::Scalar {
+        return 0;
+    }
+    match bits {
+        4 => x86::pack4_sse2(codes, out),
+        2 => x86::pack2_sse2(codes, out),
+        1 => x86::pack1_sse2(codes, out),
+        _ => 0,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn simd_unpack(kind: Kind, bits: u8, data: &[u8], out: &mut [u8]) -> usize {
+    debug_assert!(available(kind));
+    if kind == Kind::Scalar {
+        return 0;
+    }
+    match bits {
+        4 => x86::unpack4_sse2(data, out),
+        2 => x86::unpack2_sse2(data, out),
+        // 1-bit expansion is fastest through the U1 table directly.
+        _ => 0,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn simd_u8_to_f32(kind: Kind, src: &[u8], out: &mut [f32]) -> usize {
+    debug_assert!(available(kind));
+    if kind == Kind::Scalar {
+        return 0;
+    }
+    x86::u8_to_f32_sse2(src, out)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn simd_affine(kind: Kind, xs: &mut [f32], zero: f32, scale: f32) -> usize {
+    debug_assert!(available(kind));
+    match kind {
+        Kind::Scalar => 0,
+        Kind::Sse41 => x86::affine_sse2(xs, zero, scale),
+        Kind::Avx2 => {
+            // SAFETY: Kind::Avx2 is only ever selected after `available`
+            // confirmed the avx2 CPU feature (detect_widest /
+            // apply_choice / the kind-filtered test harnesses).
+            unsafe { x86::affine_avx2(xs, zero, scale) }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn simd_affine_mul(kind: Kind, xs: &mut [f32], zero: f32, scale: f32, chan: &[f32]) -> usize {
+    debug_assert!(available(kind));
+    match kind {
+        Kind::Scalar => 0,
+        Kind::Sse41 => x86::affine_mul_sse2(xs, zero, scale, chan),
+        Kind::Avx2 => {
+            // SAFETY: Kind::Avx2 is only ever selected after `available`
+            // confirmed the avx2 CPU feature.
+            unsafe { x86::affine_mul_avx2(xs, zero, scale, chan) }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn simd_affine_cols(kind: Kind, xs: &mut [f32], scales: &[f32], zeros: &[f32]) -> usize {
+    debug_assert!(available(kind));
+    if kind == Kind::Scalar {
+        return 0;
+    }
+    x86::affine_cols_sse2(xs, scales, zeros)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn simd_encode_mul(
+    kind: Kind,
+    src: &[f32],
+    inv_s: f32,
+    zero: f32,
+    qmax: f32,
+    out: &mut [u8],
+) -> usize {
+    debug_assert!(available(kind));
+    match kind {
+        Kind::Scalar => 0,
+        Kind::Sse41 => {
+            // SAFETY: Kind::Sse41 is only ever selected after `available`
+            // confirmed the sse4.1 CPU feature.
+            unsafe { x86::encode_mul_sse41(src, inv_s, zero, qmax, out) }
+        }
+        Kind::Avx2 => {
+            // SAFETY: Kind::Avx2 is only ever selected after `available`
+            // confirmed the avx2 CPU feature.
+            unsafe { x86::encode_mul_avx2(src, inv_s, zero, qmax, out) }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn simd_encode_div(
+    kind: Kind,
+    src: &[f32],
+    scale: f32,
+    zero: f32,
+    qmax: f32,
+    out: &mut [u8],
+) -> usize {
+    debug_assert!(available(kind));
+    match kind {
+        Kind::Scalar => 0,
+        Kind::Sse41 | Kind::Avx2 => {
+            // SAFETY: both SIMD kinds are only ever selected after
+            // `available` confirmed the sse4.1 CPU feature (the Avx2
+            // tier requires it too, see `available`).
+            unsafe { x86::encode_div_sse41(src, scale, zero, qmax, out) }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn simd_encode_cols(
+    kind: Kind,
+    src: &[f32],
+    scales: &[f32],
+    zeros: &[f32],
+    qmax: f32,
+    out: &mut [u8],
+) -> usize {
+    debug_assert!(available(kind));
+    match kind {
+        Kind::Scalar => 0,
+        Kind::Sse41 | Kind::Avx2 => {
+            // SAFETY: both SIMD kinds are only ever selected after
+            // `available` confirmed the sse4.1 CPU feature (the Avx2
+            // tier requires it too, see `available`).
+            unsafe { x86::encode_cols_sse41(src, scales, zeros, qmax, out) }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn simd_div(kind: Kind, num: &[f32], den: &[f32], out: &mut [f32]) -> usize {
+    debug_assert!(available(kind));
+    if kind == Kind::Scalar {
+        return 0;
+    }
+    x86::div_sse2(num, den, out)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn simd_add(kind: Kind, acc: &mut [f32], row: &[f32]) -> usize {
+    debug_assert!(available(kind));
+    match kind {
+        Kind::Scalar => 0,
+        Kind::Sse41 => x86::add_sse2(acc, row),
+        Kind::Avx2 => {
+            // SAFETY: Kind::Avx2 is only ever selected after `available`
+            // confirmed the avx2 CPU feature.
+            unsafe { x86::add_avx2(acc, row) }
+        }
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+mod stubs {
+    //! Non-x86 targets compile only the Scalar kind; every twin handles
+    //! a zero-length prefix so the dispatcher tails do all the work.
+    use super::Kind;
+
+    #[inline]
+    pub(super) fn simd_pack(_k: Kind, _b: u8, _c: &[u8], _o: &mut [u8]) -> usize {
+        0
+    }
+    #[inline]
+    pub(super) fn simd_unpack(_k: Kind, _b: u8, _d: &[u8], _o: &mut [u8]) -> usize {
+        0
+    }
+    #[inline]
+    pub(super) fn simd_u8_to_f32(_k: Kind, _s: &[u8], _o: &mut [f32]) -> usize {
+        0
+    }
+    #[inline]
+    pub(super) fn simd_affine(_k: Kind, _x: &mut [f32], _z: f32, _s: f32) -> usize {
+        0
+    }
+    #[inline]
+    pub(super) fn simd_affine_mul(_k: Kind, _x: &mut [f32], _z: f32, _s: f32, _c: &[f32]) -> usize {
+        0
+    }
+    #[inline]
+    pub(super) fn simd_affine_cols(_k: Kind, _x: &mut [f32], _s: &[f32], _z: &[f32]) -> usize {
+        0
+    }
+    #[inline]
+    pub(super) fn simd_encode_mul(
+        _k: Kind,
+        _s: &[f32],
+        _i: f32,
+        _z: f32,
+        _q: f32,
+        _o: &mut [u8],
+    ) -> usize {
+        0
+    }
+    #[inline]
+    pub(super) fn simd_encode_div(
+        _k: Kind,
+        _s: &[f32],
+        _sc: f32,
+        _z: f32,
+        _q: f32,
+        _o: &mut [u8],
+    ) -> usize {
+        0
+    }
+    #[inline]
+    pub(super) fn simd_encode_cols(
+        _k: Kind,
+        _s: &[f32],
+        _sc: &[f32],
+        _z: &[f32],
+        _q: f32,
+        _o: &mut [u8],
+    ) -> usize {
+        0
+    }
+    #[inline]
+    pub(super) fn simd_div(_k: Kind, _n: &[f32], _d: &[f32], _o: &mut [f32]) -> usize {
+        0
+    }
+    #[inline]
+    pub(super) fn simd_add(_k: Kind, _a: &mut [f32], _r: &[f32]) -> usize {
+        0
+    }
+}
+#[cfg(not(target_arch = "x86_64"))]
+use stubs::*;
+
+// ---- x86 implementations --------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! 128/256-bit lane kernels.  The SSE2 subset needs no feature
+    //! gate — SSE2 is part of the x86_64 ABI baseline, so those
+    //! intrinsics are always valid; their only hazard is the raw
+    //! pointer loads/stores, covered by the in-bounds arguments on each
+    //! block.  SSE4.1 (`roundps`) and AVX2 kernels carry
+    //! `#[target_feature]` and a caller contract instead.
+
+    #[allow(clippy::wildcard_imports)]
+    use std::arch::x86_64::*;
+
+    /// `roundps` control: round-to-nearest-even, no exception signals —
+    /// the `f32::round_ties_even` semantics.
+    const RN: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
+
+    /// Unpack 16 packed bytes -> 32 4-bit codes per block (low nibble
+    /// first).  Returns the input bytes consumed.
+    pub(super) fn unpack4_sse2(data: &[u8], out: &mut [u8]) -> usize {
+        let blocks = data.len() / 16;
+        debug_assert!(out.len() >= blocks * 32);
+        // SAFETY: SSE2 intrinsics are always available on x86_64; block
+        // b reads data[b*16 .. b*16+16] (b < data.len()/16) and writes
+        // out[b*32 .. b*32+32] (bounds asserted above).
+        unsafe {
+            let mask = _mm_set1_epi8(0x0F);
+            for b in 0..blocks {
+                let v = _mm_loadu_si128(data.as_ptr().add(b * 16) as *const __m128i);
+                let lo = _mm_and_si128(v, mask);
+                let hi = _mm_and_si128(_mm_srli_epi16::<4>(v), mask);
+                let dst = out.as_mut_ptr().add(b * 32) as *mut __m128i;
+                _mm_storeu_si128(dst, _mm_unpacklo_epi8(lo, hi));
+                _mm_storeu_si128(dst.add(1), _mm_unpackhi_epi8(lo, hi));
+            }
+        }
+        blocks * 16
+    }
+
+    /// Unpack 16 packed bytes -> 64 2-bit codes per block (lane 0
+    /// first).  Returns the input bytes consumed.
+    pub(super) fn unpack2_sse2(data: &[u8], out: &mut [u8]) -> usize {
+        let blocks = data.len() / 16;
+        debug_assert!(out.len() >= blocks * 64);
+        // SAFETY: SSE2 intrinsics are always available on x86_64; block
+        // b reads data[b*16 .. b*16+16] (b < data.len()/16) and writes
+        // out[b*64 .. b*64+64] (bounds asserted above).
+        unsafe {
+            let mask = _mm_set1_epi8(0x03);
+            for b in 0..blocks {
+                let v = _mm_loadu_si128(data.as_ptr().add(b * 16) as *const __m128i);
+                let c0 = _mm_and_si128(v, mask);
+                let c1 = _mm_and_si128(_mm_srli_epi16::<2>(v), mask);
+                let c2 = _mm_and_si128(_mm_srli_epi16::<4>(v), mask);
+                let c3 = _mm_and_si128(_mm_srli_epi16::<6>(v), mask);
+                let p01l = _mm_unpacklo_epi8(c0, c1);
+                let p01h = _mm_unpackhi_epi8(c0, c1);
+                let p23l = _mm_unpacklo_epi8(c2, c3);
+                let p23h = _mm_unpackhi_epi8(c2, c3);
+                let dst = out.as_mut_ptr().add(b * 64) as *mut __m128i;
+                _mm_storeu_si128(dst, _mm_unpacklo_epi16(p01l, p23l));
+                _mm_storeu_si128(dst.add(1), _mm_unpackhi_epi16(p01l, p23l));
+                _mm_storeu_si128(dst.add(2), _mm_unpacklo_epi16(p01h, p23h));
+                _mm_storeu_si128(dst.add(3), _mm_unpackhi_epi16(p01h, p23h));
+            }
+        }
+        blocks * 16
+    }
+
+    /// Pack 16 4-bit codes -> 8 bytes per block, masking each code like
+    /// the scalar path.  Returns the codes consumed.
+    pub(super) fn pack4_sse2(codes: &[u8], out: &mut [u8]) -> usize {
+        let blocks = codes.len() / 16;
+        debug_assert!(out.len() >= blocks * 8);
+        // SAFETY: SSE2 intrinsics are always available on x86_64; block
+        // b reads codes[b*16 .. b*16+16] (b < codes.len()/16) and
+        // stores 8 bytes at out[b*8] (bounds asserted above).
+        unsafe {
+            let lo_m = _mm_set1_epi16(0x000F);
+            let hi_m = _mm_set1_epi16(0x00F0);
+            for b in 0..blocks {
+                // Each u16 lane holds (lo | hi << 8); fold to
+                // (lo & 0x0F) | ((hi & 0x0F) << 4) in the low byte.
+                let v = _mm_loadu_si128(codes.as_ptr().add(b * 16) as *const __m128i);
+                let lo = _mm_and_si128(v, lo_m);
+                let hi = _mm_and_si128(_mm_srli_epi16::<4>(v), hi_m);
+                let bytes16 = _mm_or_si128(lo, hi);
+                let packed = _mm_packus_epi16(bytes16, bytes16);
+                _mm_storel_epi64(out.as_mut_ptr().add(b * 8) as *mut __m128i, packed);
+            }
+        }
+        blocks * 16
+    }
+
+    /// Pack 16 2-bit codes -> 4 bytes per block, masking each code.
+    /// Returns the codes consumed.
+    pub(super) fn pack2_sse2(codes: &[u8], out: &mut [u8]) -> usize {
+        let blocks = codes.len() / 16;
+        debug_assert!(out.len() >= blocks * 4);
+        // SAFETY: SSE2 intrinsics are always available on x86_64; block
+        // b reads codes[b*16 .. b*16+16] (b < codes.len()/16); the
+        // 4-byte store goes through a safe copy_from_slice.
+        unsafe {
+            for b in 0..blocks {
+                // Each u32 lane holds (c0|c1<<8|c2<<16|c3<<24); fold
+                // lane k of the byte to bits 2k..2k+1.
+                let v = _mm_loadu_si128(codes.as_ptr().add(b * 16) as *const __m128i);
+                let b0 = _mm_and_si128(v, _mm_set1_epi32(0x03));
+                let b1 = _mm_and_si128(_mm_srli_epi32::<6>(v), _mm_set1_epi32(0x0C));
+                let b2 = _mm_and_si128(_mm_srli_epi32::<12>(v), _mm_set1_epi32(0x30));
+                let b3 = _mm_and_si128(_mm_srli_epi32::<18>(v), _mm_set1_epi32(0xC0));
+                let m = _mm_or_si128(_mm_or_si128(b0, b1), _mm_or_si128(b2, b3));
+                let w = _mm_packs_epi32(m, m);
+                let p = _mm_packus_epi16(w, w);
+                let four = (_mm_cvtsi128_si32(p) as u32).to_le_bytes();
+                out[b * 4..b * 4 + 4].copy_from_slice(&four);
+            }
+        }
+        blocks * 16
+    }
+
+    /// Pack 16 1-bit codes -> 2 bytes per block (bit k of each byte is
+    /// code k's low bit).  Returns the codes consumed.
+    pub(super) fn pack1_sse2(codes: &[u8], out: &mut [u8]) -> usize {
+        let blocks = codes.len() / 16;
+        debug_assert!(out.len() >= blocks * 2);
+        // SAFETY: SSE2 intrinsics are always available on x86_64; block
+        // b reads codes[b*16 .. b*16+16] (b < codes.len()/16); the
+        // 2-byte store goes through a safe copy_from_slice.
+        unsafe {
+            for b in 0..blocks {
+                // Shift bit 0 of every byte up to bit 7 and gather the
+                // sign bits: movemask bit k == code k & 1.
+                let v = _mm_loadu_si128(codes.as_ptr().add(b * 16) as *const __m128i);
+                let m = _mm_movemask_epi8(_mm_slli_epi16::<7>(v)) as u16;
+                out[b * 2..b * 2 + 2].copy_from_slice(&m.to_le_bytes());
+            }
+        }
+        blocks * 16
+    }
+
+    /// Widen 16 u8 codes -> 16 f32 per block (exact conversion).
+    /// Returns the elements consumed.
+    pub(super) fn u8_to_f32_sse2(src: &[u8], out: &mut [f32]) -> usize {
+        let blocks = src.len() / 16;
+        debug_assert!(out.len() >= blocks * 16);
+        // SAFETY: SSE2 intrinsics are always available on x86_64; block
+        // b reads src[b*16 .. b*16+16] (b < src.len()/16) and writes
+        // out[b*16 .. b*16+16] (bounds asserted above).
+        unsafe {
+            let z = _mm_setzero_si128();
+            for b in 0..blocks {
+                let v = _mm_loadu_si128(src.as_ptr().add(b * 16) as *const __m128i);
+                let w0 = _mm_unpacklo_epi8(v, z);
+                let w1 = _mm_unpackhi_epi8(v, z);
+                let dst = out.as_mut_ptr().add(b * 16);
+                _mm_storeu_ps(dst, _mm_cvtepi32_ps(_mm_unpacklo_epi16(w0, z)));
+                _mm_storeu_ps(dst.add(4), _mm_cvtepi32_ps(_mm_unpackhi_epi16(w0, z)));
+                _mm_storeu_ps(dst.add(8), _mm_cvtepi32_ps(_mm_unpacklo_epi16(w1, z)));
+                _mm_storeu_ps(dst.add(12), _mm_cvtepi32_ps(_mm_unpackhi_epi16(w1, z)));
+            }
+        }
+        blocks * 16
+    }
+
+    /// 4-wide `(x - zero) * scale` in place.  Returns the elements
+    /// consumed.
+    pub(super) fn affine_sse2(xs: &mut [f32], zero: f32, scale: f32) -> usize {
+        let n = xs.len() / 4 * 4;
+        // SAFETY: SSE2 intrinsics are always available on x86_64; every
+        // load/store touches xs[i .. i+4] with i + 4 <= n <= xs.len().
+        unsafe {
+            let z = _mm_set1_ps(zero);
+            let s = _mm_set1_ps(scale);
+            let mut i = 0;
+            while i < n {
+                let p = xs.as_mut_ptr().add(i);
+                let v = _mm_loadu_ps(p);
+                _mm_storeu_ps(p, _mm_mul_ps(_mm_sub_ps(v, z), s));
+                i += 4;
+            }
+        }
+        n
+    }
+
+    /// 4-wide `(x - zero) * scale * chan[j]` in place.  Returns the
+    /// elements consumed.
+    pub(super) fn affine_mul_sse2(xs: &mut [f32], zero: f32, scale: f32, chan: &[f32]) -> usize {
+        let n = xs.len() / 4 * 4;
+        debug_assert!(chan.len() >= n);
+        // SAFETY: SSE2 intrinsics are always available on x86_64; every
+        // load/store touches xs[i .. i+4] / chan[i .. i+4] with
+        // i + 4 <= n <= min(xs.len(), chan.len()).
+        unsafe {
+            let z = _mm_set1_ps(zero);
+            let s = _mm_set1_ps(scale);
+            let mut i = 0;
+            while i < n {
+                let p = xs.as_mut_ptr().add(i);
+                let v = _mm_loadu_ps(p);
+                let c = _mm_loadu_ps(chan.as_ptr().add(i));
+                _mm_storeu_ps(p, _mm_mul_ps(_mm_mul_ps(_mm_sub_ps(v, z), s), c));
+                i += 4;
+            }
+        }
+        n
+    }
+
+    /// 4-wide `(x - zeros[j]) * scales[j]` in place.  Returns the
+    /// elements consumed.
+    pub(super) fn affine_cols_sse2(xs: &mut [f32], scales: &[f32], zeros: &[f32]) -> usize {
+        let n = xs.len() / 4 * 4;
+        debug_assert!(scales.len() >= n && zeros.len() >= n);
+        // SAFETY: SSE2 intrinsics are always available on x86_64; every
+        // load/store touches index range [i, i+4) of xs/scales/zeros
+        // with i + 4 <= n <= the length of each slice.
+        unsafe {
+            let mut i = 0;
+            while i < n {
+                let p = xs.as_mut_ptr().add(i);
+                let v = _mm_loadu_ps(p);
+                let s = _mm_loadu_ps(scales.as_ptr().add(i));
+                let z = _mm_loadu_ps(zeros.as_ptr().add(i));
+                _mm_storeu_ps(p, _mm_mul_ps(_mm_sub_ps(v, z), s));
+                i += 4;
+            }
+        }
+        n
+    }
+
+    /// 4-wide `num[j] / den[j]`.  Returns the elements consumed.
+    pub(super) fn div_sse2(num: &[f32], den: &[f32], out: &mut [f32]) -> usize {
+        let n = num.len() / 4 * 4;
+        debug_assert!(den.len() >= n && out.len() >= n);
+        // SAFETY: SSE2 intrinsics are always available on x86_64; every
+        // load/store touches index range [i, i+4) of num/den/out with
+        // i + 4 <= n <= the length of each slice.
+        unsafe {
+            let mut i = 0;
+            while i < n {
+                let a = _mm_loadu_ps(num.as_ptr().add(i));
+                let b = _mm_loadu_ps(den.as_ptr().add(i));
+                _mm_storeu_ps(out.as_mut_ptr().add(i), _mm_div_ps(a, b));
+                i += 4;
+            }
+        }
+        n
+    }
+
+    /// 4-wide `acc[j] += row[j]`.  Returns the elements consumed.
+    pub(super) fn add_sse2(acc: &mut [f32], row: &[f32]) -> usize {
+        let n = acc.len() / 4 * 4;
+        debug_assert!(row.len() >= n);
+        // SAFETY: SSE2 intrinsics are always available on x86_64; every
+        // load/store touches acc[i .. i+4] / row[i .. i+4] with
+        // i + 4 <= n <= min(acc.len(), row.len()).
+        unsafe {
+            let mut i = 0;
+            while i < n {
+                let p = acc.as_mut_ptr().add(i);
+                let a = _mm_loadu_ps(p);
+                let r = _mm_loadu_ps(row.as_ptr().add(i));
+                _mm_storeu_ps(p, _mm_add_ps(a, r));
+                i += 4;
+            }
+        }
+        n
+    }
+    /// 8-wide fused encode with a hoisted reciprocal scale:
+    /// `((x * inv_s).round_ties_even() + zero).clamp(0.0, qmax) as u8`.
+    /// NaN lanes clamp to 0 exactly like the scalar saturating cast
+    /// (maxps/minps return the second operand on NaN).  Returns the
+    /// elements consumed.
+    ///
+    /// SAFETY: callers must guarantee the sse4.1 CPU feature (for
+    /// `roundps`) — upheld by dispatching only on kinds vetted by
+    /// `available`.
+    #[target_feature(enable = "sse4.1")]
+    pub(super) unsafe fn encode_mul_sse41(
+        src: &[f32],
+        inv_s: f32,
+        zero: f32,
+        qmax: f32,
+        out: &mut [u8],
+    ) -> usize {
+        let n = src.len() / 8 * 8;
+        debug_assert!(out.len() >= n);
+        let invs = _mm_set1_ps(inv_s);
+        let z = _mm_set1_ps(zero);
+        let lo = _mm_setzero_ps();
+        let hi = _mm_set1_ps(qmax);
+        let mut i = 0;
+        while i < n {
+            let v0 = _mm_loadu_ps(src.as_ptr().add(i));
+            let v1 = _mm_loadu_ps(src.as_ptr().add(i + 4));
+            let r0 = _mm_add_ps(_mm_round_ps::<RN>(_mm_mul_ps(v0, invs)), z);
+            let r1 = _mm_add_ps(_mm_round_ps::<RN>(_mm_mul_ps(v1, invs)), z);
+            let q0 = _mm_min_ps(_mm_max_ps(r0, lo), hi);
+            let q1 = _mm_min_ps(_mm_max_ps(r1, lo), hi);
+            let w = _mm_packs_epi32(_mm_cvtps_epi32(q0), _mm_cvtps_epi32(q1));
+            let p = _mm_packus_epi16(w, w);
+            _mm_storel_epi64(out.as_mut_ptr().add(i) as *mut __m128i, p);
+            i += 8;
+        }
+        n
+    }
+
+    /// 8-wide `QuantParams::encode`:
+    /// `((x / scale).round_ties_even() + zero).clamp(0.0, qmax) as u8`.
+    /// Returns the elements consumed.
+    ///
+    /// SAFETY: callers must guarantee the sse4.1 CPU feature — upheld
+    /// by dispatching only on kinds vetted by `available`.
+    #[target_feature(enable = "sse4.1")]
+    pub(super) unsafe fn encode_div_sse41(
+        src: &[f32],
+        scale: f32,
+        zero: f32,
+        qmax: f32,
+        out: &mut [u8],
+    ) -> usize {
+        let n = src.len() / 8 * 8;
+        debug_assert!(out.len() >= n);
+        let s = _mm_set1_ps(scale);
+        let z = _mm_set1_ps(zero);
+        let lo = _mm_setzero_ps();
+        let hi = _mm_set1_ps(qmax);
+        let mut i = 0;
+        while i < n {
+            let v0 = _mm_loadu_ps(src.as_ptr().add(i));
+            let v1 = _mm_loadu_ps(src.as_ptr().add(i + 4));
+            let r0 = _mm_add_ps(_mm_round_ps::<RN>(_mm_div_ps(v0, s)), z);
+            let r1 = _mm_add_ps(_mm_round_ps::<RN>(_mm_div_ps(v1, s)), z);
+            let q0 = _mm_min_ps(_mm_max_ps(r0, lo), hi);
+            let q1 = _mm_min_ps(_mm_max_ps(r1, lo), hi);
+            let w = _mm_packs_epi32(_mm_cvtps_epi32(q0), _mm_cvtps_epi32(q1));
+            let p = _mm_packus_epi16(w, w);
+            _mm_storel_epi64(out.as_mut_ptr().add(i) as *mut __m128i, p);
+            i += 8;
+        }
+        n
+    }
+
+    /// 8-wide per-column encode:
+    /// `((x / scales[j]).round_ties_even() + zeros[j]).clamp(..) as u8`.
+    /// Returns the elements consumed.
+    ///
+    /// SAFETY: callers must guarantee the sse4.1 CPU feature — upheld
+    /// by dispatching only on kinds vetted by `available`.
+    #[target_feature(enable = "sse4.1")]
+    pub(super) unsafe fn encode_cols_sse41(
+        src: &[f32],
+        scales: &[f32],
+        zeros: &[f32],
+        qmax: f32,
+        out: &mut [u8],
+    ) -> usize {
+        let n = src.len() / 8 * 8;
+        debug_assert!(scales.len() >= n && zeros.len() >= n && out.len() >= n);
+        let lo = _mm_setzero_ps();
+        let hi = _mm_set1_ps(qmax);
+        let mut i = 0;
+        while i < n {
+            let v0 = _mm_loadu_ps(src.as_ptr().add(i));
+            let v1 = _mm_loadu_ps(src.as_ptr().add(i + 4));
+            let s0 = _mm_loadu_ps(scales.as_ptr().add(i));
+            let s1 = _mm_loadu_ps(scales.as_ptr().add(i + 4));
+            let z0 = _mm_loadu_ps(zeros.as_ptr().add(i));
+            let z1 = _mm_loadu_ps(zeros.as_ptr().add(i + 4));
+            let r0 = _mm_add_ps(_mm_round_ps::<RN>(_mm_div_ps(v0, s0)), z0);
+            let r1 = _mm_add_ps(_mm_round_ps::<RN>(_mm_div_ps(v1, s1)), z1);
+            let q0 = _mm_min_ps(_mm_max_ps(r0, lo), hi);
+            let q1 = _mm_min_ps(_mm_max_ps(r1, lo), hi);
+            let w = _mm_packs_epi32(_mm_cvtps_epi32(q0), _mm_cvtps_epi32(q1));
+            let p = _mm_packus_epi16(w, w);
+            _mm_storel_epi64(out.as_mut_ptr().add(i) as *mut __m128i, p);
+            i += 8;
+        }
+        n
+    }
+
+    /// 8-wide AVX `(x - zero) * scale` in place.  Returns the elements
+    /// consumed.
+    ///
+    /// SAFETY: callers must guarantee the avx2 CPU feature — upheld by
+    /// dispatching only on kinds vetted by `available`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn affine_avx2(xs: &mut [f32], zero: f32, scale: f32) -> usize {
+        let n = xs.len() / 8 * 8;
+        let z = _mm256_set1_ps(zero);
+        let s = _mm256_set1_ps(scale);
+        let mut i = 0;
+        while i < n {
+            let p = xs.as_mut_ptr().add(i);
+            let v = _mm256_loadu_ps(p);
+            _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_sub_ps(v, z), s));
+            i += 8;
+        }
+        n
+    }
+
+    /// 8-wide AVX `(x - zero) * scale * chan[j]` in place.  Returns the
+    /// elements consumed.
+    ///
+    /// SAFETY: callers must guarantee the avx2 CPU feature — upheld by
+    /// dispatching only on kinds vetted by `available`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn affine_mul_avx2(
+        xs: &mut [f32],
+        zero: f32,
+        scale: f32,
+        chan: &[f32],
+    ) -> usize {
+        let n = xs.len() / 8 * 8;
+        debug_assert!(chan.len() >= n);
+        let z = _mm256_set1_ps(zero);
+        let s = _mm256_set1_ps(scale);
+        let mut i = 0;
+        while i < n {
+            let p = xs.as_mut_ptr().add(i);
+            let v = _mm256_loadu_ps(p);
+            let c = _mm256_loadu_ps(chan.as_ptr().add(i));
+            _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_mul_ps(_mm256_sub_ps(v, z), s), c));
+            i += 8;
+        }
+        n
+    }
+
+    /// 8-wide AVX `acc[j] += row[j]`.  Returns the elements consumed.
+    ///
+    /// SAFETY: callers must guarantee the avx2 CPU feature — upheld by
+    /// dispatching only on kinds vetted by `available`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn add_avx2(acc: &mut [f32], row: &[f32]) -> usize {
+        let n = acc.len() / 8 * 8;
+        debug_assert!(row.len() >= n);
+        let mut i = 0;
+        while i < n {
+            let p = acc.as_mut_ptr().add(i);
+            let a = _mm256_loadu_ps(p);
+            let r = _mm256_loadu_ps(row.as_ptr().add(i));
+            _mm256_storeu_ps(p, _mm256_add_ps(a, r));
+            i += 8;
+        }
+        n
+    }
+
+    /// 8-wide AVX2 fused encode (same expression as
+    /// [`encode_mul_sse41`], 256-bit arithmetic, 128-bit narrowing).
+    /// Returns the elements consumed.
+    ///
+    /// SAFETY: callers must guarantee the avx2 CPU feature — upheld by
+    /// dispatching only on kinds vetted by `available`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn encode_mul_avx2(
+        src: &[f32],
+        inv_s: f32,
+        zero: f32,
+        qmax: f32,
+        out: &mut [u8],
+    ) -> usize {
+        let n = src.len() / 8 * 8;
+        debug_assert!(out.len() >= n);
+        let invs = _mm256_set1_ps(inv_s);
+        let z = _mm256_set1_ps(zero);
+        let lo = _mm256_setzero_ps();
+        let hi = _mm256_set1_ps(qmax);
+        let mut i = 0;
+        while i < n {
+            let v = _mm256_loadu_ps(src.as_ptr().add(i));
+            let r = _mm256_add_ps(_mm256_round_ps::<RN>(_mm256_mul_ps(v, invs)), z);
+            let q = _mm256_min_ps(_mm256_max_ps(r, lo), hi);
+            let d = _mm256_cvtps_epi32(q);
+            let w = _mm_packs_epi32(_mm256_castsi256_si128(d), _mm256_extracti128_si256::<1>(d));
+            let p = _mm_packus_epi16(w, w);
+            _mm_storel_epi64(out.as_mut_ptr().add(i) as *mut __m128i, p);
+            i += 8;
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every compiled kind this machine can actually run.
+    fn kinds() -> Vec<Kind> {
+        compiled_kinds()
+            .iter()
+            .copied()
+            .filter(|&k| available(k))
+            .collect()
+    }
+
+    fn lcg_f32s(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed;
+        let mut v = Vec::with_capacity(n);
+        for i in 0..n {
+            s = s
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let u = ((s >> 33) as u32) as f32 / (1u64 << 31) as f32;
+            let mut x = (u - 0.5) * 12.0;
+            if i % 17 == 0 {
+                x = 0.0;
+            }
+            if i % 23 == 0 {
+                x = -0.0;
+            }
+            v.push(x);
+        }
+        v
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str, k: Kind) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "{what} kind={k:?} diverges at {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn choice_parsing_roundtrips() {
+        let table = [
+            ("auto", KernelChoice::Auto),
+            ("scalar", KernelChoice::Scalar),
+            ("simd", KernelChoice::Simd),
+        ];
+        for (s, c) in table {
+            assert_eq!(s.parse::<KernelChoice>().unwrap(), c);
+            assert_eq!(c.to_string(), s);
+        }
+        assert!("avx512".parse::<KernelChoice>().is_err());
+        assert_eq!(KernelChoice::default(), KernelChoice::Auto);
+    }
+
+    #[test]
+    fn detection_is_sane() {
+        let k = active();
+        assert!(available(k), "active kernel {k:?} must be available");
+        assert!(compiled_kinds().contains(&Kind::Scalar));
+        assert!(available(Kind::Scalar));
+    }
+
+    #[test]
+    fn pack_unpack_parity_all_kinds() {
+        let sizes = [0usize, 1, 3, 5, 7, 8, 15, 16, 17, 31, 33, 64, 100, 257];
+        for bits in [1u8, 2, 4, 8] {
+            let pb = (8 / bits) as usize;
+            for n in sizes {
+                let mut codes = vec![0u8; n];
+                for (i, c) in codes.iter_mut().enumerate() {
+                    *c = ((i * 7 + 3) % (1usize << bits)) as u8;
+                }
+                let nbytes = n.div_ceil(pb);
+                let mut base = vec![0u8; nbytes];
+                pack_lanes(Kind::Scalar, bits, &codes, &mut base);
+                for k in kinds() {
+                    let mut got = vec![0u8; nbytes];
+                    pack_lanes(k, bits, &codes, &mut got);
+                    assert_eq!(got, base, "pack bits={bits} n={n} kind={k:?}");
+                    let mut back = vec![0u8; n];
+                    unpack_lanes(k, bits, &got, &mut back);
+                    assert_eq!(back, codes, "unpack bits={bits} n={n} kind={k:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_codes_pack_masked_on_every_kind() {
+        // Codes above the lane range must be masked identically on all
+        // kinds (the scalar 4-bit path once ORed the high lane
+        // unmasked; this pins the fixed semantics).
+        for bits in [1u8, 2, 4] {
+            let mask = (1u8 << bits) - 1;
+            let n = 37usize;
+            let wild: Vec<u8> = (0..n).map(|i| (i * 29 + 201) as u8).collect();
+            let masked: Vec<u8> = wild.iter().map(|c| c & mask).collect();
+            let nbytes = n.div_ceil((8 / bits) as usize);
+            let mut want = vec![0u8; nbytes];
+            pack_lanes(Kind::Scalar, bits, &masked, &mut want);
+            for k in kinds() {
+                let mut got = vec![0u8; nbytes];
+                pack_lanes(k, bits, &wild, &mut got);
+                assert_eq!(got, want, "bits={bits} kind={k:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn codes_to_f32_matches_scalar_widening() {
+        for bits in [1u8, 2, 4, 8] {
+            let pb = (8 / bits) as usize;
+            for n in [0usize, 1, 9, 255, 256, 300, 517] {
+                let mut codes = vec![0u8; n];
+                for (i, c) in codes.iter_mut().enumerate() {
+                    *c = ((i * 5 + 1) % (1usize << bits)) as u8;
+                }
+                let mut data = vec![0u8; n.div_ceil(pb)];
+                pack_lanes(Kind::Scalar, bits, &codes, &mut data);
+                let want: Vec<f32> = codes.iter().map(|&c| c as f32).collect();
+                for k in kinds() {
+                    let mut out = vec![0f32; n];
+                    codes_to_f32(k, bits, &data, &mut out);
+                    assert_bits_eq(&want, &out, "codes_to_f32", k);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_primitives_match_scalar() {
+        for n in [1usize, 4, 7, 8, 13, 64, 100, 257] {
+            let src = lcg_f32s(n, 42);
+            let addend = lcg_f32s(n, 5);
+            let chan: Vec<f32> = lcg_f32s(n, 7).iter().map(|x| x.abs() + 0.5).collect();
+            let zeros = lcg_f32s(n, 9);
+            let scales: Vec<f32> = lcg_f32s(n, 11).iter().map(|x| x.abs() + 0.25).collect();
+            for k in kinds() {
+                let mut a = src.clone();
+                let mut b = src.clone();
+                affine_inplace(Kind::Scalar, &mut a, 3.5, 0.127);
+                affine_inplace(k, &mut b, 3.5, 0.127);
+                assert_bits_eq(&a, &b, "affine", k);
+
+                let mut a = src.clone();
+                let mut b = src.clone();
+                affine_mul_inplace(Kind::Scalar, &mut a, -1.25, 0.31, &chan);
+                affine_mul_inplace(k, &mut b, -1.25, 0.31, &chan);
+                assert_bits_eq(&a, &b, "affine_mul", k);
+
+                let mut a = src.clone();
+                let mut b = src.clone();
+                affine_cols_inplace(Kind::Scalar, &mut a, &scales, &zeros);
+                affine_cols_inplace(k, &mut b, &scales, &zeros);
+                assert_bits_eq(&a, &b, "affine_cols", k);
+
+                let mut a = vec![0f32; n];
+                let mut b = vec![0f32; n];
+                div_slice(Kind::Scalar, &src, &chan, &mut a);
+                div_slice(k, &src, &chan, &mut b);
+                assert_bits_eq(&a, &b, "div_slice", k);
+
+                let mut a = src.clone();
+                let mut b = src.clone();
+                add_assign(Kind::Scalar, &mut a, &addend);
+                add_assign(k, &mut b, &addend);
+                assert_bits_eq(&a, &b, "add_assign", k);
+
+                let mut ca = vec![0u8; n];
+                let mut cb = vec![0u8; n];
+                encode_mul(Kind::Scalar, &src, 2.5, 7.0, 15.0, &mut ca);
+                encode_mul(k, &src, 2.5, 7.0, 15.0, &mut cb);
+                assert_eq!(ca, cb, "encode_mul kind={k:?}");
+
+                encode_div(Kind::Scalar, &src, 0.4, 3.0, 255.0, &mut ca);
+                encode_div(k, &src, 0.4, 3.0, 255.0, &mut cb);
+                assert_eq!(ca, cb, "encode_div kind={k:?}");
+
+                let zoff: Vec<f32> = zeros.iter().map(|z| z.abs()).collect();
+                encode_cols(Kind::Scalar, &src, &scales, &zoff, 15.0, &mut ca);
+                encode_cols(k, &src, &scales, &zoff, 15.0, &mut cb);
+                assert_eq!(ca, cb, "encode_cols kind={k:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_corner_values_match_scalar() {
+        let src = [
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            -0.0,
+            0.0,
+            1e30,
+            -1e30,
+            1e-30,
+            0.5,
+            -0.5,
+            1.5,
+            2.5,
+            254.5,
+            255.5,
+            1000.0,
+            -7.25,
+            3.499_999_9,
+        ];
+        for k in kinds() {
+            let mut a = vec![0u8; src.len()];
+            let mut b = vec![0u8; src.len()];
+            encode_mul(Kind::Scalar, &src, 1.0, 0.0, 255.0, &mut a);
+            encode_mul(k, &src, 1.0, 0.0, 255.0, &mut b);
+            assert_eq!(a, b, "encode_mul corners kind={k:?}");
+
+            encode_div(Kind::Scalar, &src, 2.0, 1.0, 15.0, &mut a);
+            encode_div(k, &src, 2.0, 1.0, 15.0, &mut b);
+            assert_eq!(a, b, "encode_div corners kind={k:?}");
+        }
+    }
+
+    #[test]
+    fn lane_tables_match_shifted_extraction() {
+        for b in 0..256usize {
+            for k in 0..2 {
+                assert_eq!(U4_LUT[b].to_le_bytes()[k], ((b >> (4 * k)) & 0x0F) as u8);
+            }
+            for k in 0..4 {
+                assert_eq!(U2_LUT[b].to_le_bytes()[k], ((b >> (2 * k)) & 0x03) as u8);
+            }
+            for k in 0..8 {
+                assert_eq!(U1_LUT[b].to_le_bytes()[k], ((b >> k) & 1) as u8);
+            }
+        }
+    }
+}

@@ -8,9 +8,11 @@
 //! cross-layer tests in `rust/tests/` verify this against the AOT
 //! `quant_kv_*` HLO module.
 
+pub mod kernel;
 pub mod packing;
 pub mod plane;
 
+pub use kernel::{KernelChoice, Kind};
 pub use packing::PackedCodes;
 pub use plane::{Granularity, QuantizedPlane};
 

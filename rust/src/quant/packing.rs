@@ -4,6 +4,14 @@
 //! stream packs 4 codes per byte.  The pack/unpack loops are on the
 //! recompression hot path (every 100 generated tokens, Alg. 3), so the
 //! byte-aligned fast paths matter; see `benches/hotpath.rs`.
+//!
+//! Pack/unpack dispatch through the runtime-selected kernel
+//! (DESIGN.md §15): the scalar lane loops below are the reference
+//! semantics, and the SIMD kinds in `quant/kernel.rs` are pinned
+//! bit-identical to them by the parity tests here and in
+//! `quant/plane.rs`.
+
+use super::kernel;
 
 /// Densely packed integer codes with a fixed bit-width.
 #[derive(Debug, Clone, PartialEq)]
@@ -21,17 +29,28 @@ impl PackedCodes {
         8 / bits as usize
     }
 
-    /// Pack `codes` (each `< 2^bits`) into a dense buffer.
+    /// Pack `codes` (each `< 2^bits`) into a dense buffer with the
+    /// process-wide kernel.
     pub fn pack(codes: &[u8], bits: u8) -> Self {
+        Self::pack_with(kernel::active(), codes, bits)
+    }
+
+    /// Pack with an explicit kernel kind — the parity tests and benches
+    /// compare kinds without touching the global selection.
+    pub fn pack_with(kind: kernel::Kind, codes: &[u8], bits: u8) -> Self {
         let pb = Self::per_byte(bits);
         let mut data = vec![0u8; codes.len().div_ceil(pb)];
+        if kind != kernel::Kind::Scalar {
+            kernel::pack_lanes(kind, bits, codes, &mut data);
+            return PackedCodes { bits, len: codes.len(), data };
+        }
         match bits {
             8 => data.copy_from_slice(codes),
             4 => {
                 // 2 codes/byte: low nibble first.
                 for (i, chunk) in codes.chunks(2).enumerate() {
                     let hi = chunk.get(1).copied().unwrap_or(0);
-                    data[i] = (chunk[0] & 0x0F) | (hi << 4);
+                    data[i] = (chunk[0] & 0x0F) | ((hi & 0x0F) << 4);
                 }
             }
             2 => {
@@ -74,12 +93,23 @@ impl PackedCodes {
     /// (one per decode recompression cycle, Alg. 3).
     // lint: hot-path — fused-unpack entry (DESIGN.md §13).
     pub fn unpack_into(&self, out: &mut [u8]) {
+        self.unpack_into_with(kernel::active(), out);
+    }
+
+    /// [`PackedCodes::unpack_into`] with an explicit kernel kind (the
+    /// parity tests and benches compare kinds directly).
+    // lint: hot-path — fused-unpack entry, kind-dispatched (DESIGN.md §13).
+    pub fn unpack_into_with(&self, kind: kernel::Kind, out: &mut [u8]) {
         assert_eq!(out.len(), self.len);
         if self.bits == 8 {
             out.copy_from_slice(&self.data[..self.len]);
             return;
         }
-        self.for_each(|i, c| out[i] = c);
+        if kind == kernel::Kind::Scalar {
+            self.for_each(|i, c| out[i] = c);
+        } else {
+            kernel::unpack_lanes(kind, self.bits, &self.data, out);
+        }
     }
 
     /// Visit every code in index order without materializing the unpacked
@@ -212,6 +242,41 @@ impl PackWriter {
         self.len += 1;
     }
 
+    /// Append a run of codes, producing the exact byte stream of
+    /// repeated [`PackWriter::push`].  SIMD kinds pack the byte-aligned
+    /// bulk through the kernel layer; the unaligned head (a partially
+    /// filled tail byte from earlier pushes) and the ragged tail go
+    /// through `push` itself.
+    // lint: hot-path — bulk quantize-as-pack writer (DESIGN.md §13);
+    // the amortized growth note on `push` applies to `resize` here too.
+    #[inline]
+    pub fn push_slice(&mut self, kind: kernel::Kind, codes: &[u8]) {
+        if self.bits == 8 {
+            self.data.extend_from_slice(codes);
+            self.len += codes.len();
+            return;
+        }
+        let mut i = 0;
+        if kind != kernel::Kind::Scalar {
+            while self.shift != 0 && i < codes.len() {
+                self.push(codes[i]);
+                i += 1;
+            }
+            let pb = PackedCodes::per_byte(self.bits);
+            let bulk = (codes.len() - i) / pb * pb;
+            if bulk > 0 {
+                let old = self.data.len();
+                self.data.resize(old + bulk / pb, 0);
+                kernel::pack_lanes(kind, self.bits, &codes[i..i + bulk], &mut self.data[old..]);
+                self.len += bulk;
+                i += bulk;
+            }
+        }
+        for &c in &codes[i..] {
+            self.push(c);
+        }
+    }
+
     /// Codes pushed so far.
     pub fn len(&self) -> usize {
         self.len
@@ -296,6 +361,89 @@ mod tests {
                     seen.push(c);
                 });
                 assert_eq!(seen, codes, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    /// Kinds this machine can execute (always includes Scalar).
+    fn kinds() -> Vec<kernel::Kind> {
+        kernel::compiled_kinds()
+            .iter()
+            .copied()
+            .filter(|&k| kernel::available(k))
+            .collect()
+    }
+
+    // Regression: the 4-bit scalar path used to OR the high lane
+    // unmasked (`hi << 4`).  For u8 the shift discards the same bits
+    // the mask would, so the bug was latent — but the packed stream
+    // must stay pinned to the masked semantics of `PackWriter::push`
+    // (and of every SIMD kind) even for out-of-range codes, which is
+    // exactly the input an upstream bug would produce with
+    // debug_assertions off.
+    #[test]
+    fn out_of_range_codes_pack_like_masked_codes() {
+        for bits in [1u8, 2, 4] {
+            let mask = (1u8 << bits) - 1;
+            for n in [1usize, 2, 3, 16, 31, 257] {
+                let wild: Vec<u8> = (0..n).map(|i| (i * 37 + 171) as u8).collect();
+                let masked: Vec<u8> = wild.iter().map(|c| c & mask).collect();
+                let want = PackedCodes::pack_with(kernel::Kind::Scalar, &masked, bits);
+                let mut w = PackWriter::with_capacity(bits, n);
+                for &c in &wild {
+                    w.push(c);
+                }
+                assert_eq!(w.finish().as_bytes(), want.as_bytes(), "writer bits={bits} n={n}");
+                for k in kinds() {
+                    let got = PackedCodes::pack_with(k, &wild, bits);
+                    assert_eq!(got.as_bytes(), want.as_bytes(), "bits={bits} n={n} kind={k:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_parity_across_kinds() {
+        for bits in [1u8, 2, 4, 8] {
+            let max = 1u32 << bits;
+            for n in [0usize, 1, 5, 15, 16, 17, 33, 64, 100, 257, 1000] {
+                let codes: Vec<u8> = (0..n).map(|i| ((i * 7 + 3) as u32 % max) as u8).collect();
+                let base = PackedCodes::pack_with(kernel::Kind::Scalar, &codes, bits);
+                for k in kinds() {
+                    let p = PackedCodes::pack_with(k, &codes, bits);
+                    assert_eq!(p.as_bytes(), base.as_bytes(), "pack bits={bits} n={n} kind={k:?}");
+                    let mut out = vec![0u8; n];
+                    p.unpack_into_with(k, &mut out);
+                    assert_eq!(out, codes, "unpack bits={bits} n={n} kind={k:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn push_slice_matches_push_across_kinds() {
+        for bits in [1u8, 2, 4, 8] {
+            let max = 1u32 << bits;
+            for n in [0usize, 1, 7, 16, 33, 100, 257] {
+                // Start from an unaligned writer state: 3 pushed codes
+                // leave a partial byte for every sub-byte width.
+                let head: Vec<u8> = (0..3).map(|i| (i as u32 % max) as u8).collect();
+                let body: Vec<u8> = (0..n).map(|i| ((i * 11 + 5) as u32 % max) as u8).collect();
+                let mut want = PackWriter::with_capacity(bits, n + 3);
+                for &c in head.iter().chain(body.iter()) {
+                    want.push(c);
+                }
+                let want = want.finish();
+                for k in kinds() {
+                    let mut w = PackWriter::with_capacity(bits, n + 3);
+                    for &c in &head {
+                        w.push(c);
+                    }
+                    w.push_slice(k, &body);
+                    assert_eq!(w.len(), n + 3);
+                    let got = w.finish();
+                    assert_eq!(got, want, "bits={bits} n={n} kind={k:?}");
+                }
             }
         }
     }

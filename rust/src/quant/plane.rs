@@ -9,6 +9,7 @@
 //!   * `ChannelSeparableToken` — Alg. 1: per-channel `c = sqrt(max|col|)`
 //!     normalization, then `Token`, then rescale.
 
+use super::kernel;
 use super::packing::{PackWriter, PackedCodes};
 use super::{min_max, QuantParams};
 
@@ -57,14 +58,26 @@ pub struct QuantizedPlane {
 }
 
 impl QuantizedPlane {
-    /// Quantize `x` (`rows*cols`, row-major).
+    /// Quantize `x` (`rows*cols`, row-major) with the process-wide
+    /// kernel.
     pub fn quantize(x: &[f32], rows: usize, cols: usize, bits: u8,
                     granularity: Granularity) -> Self {
+        Self::quantize_with(kernel::active(), x, rows, cols, bits, granularity)
+    }
+
+    /// [`QuantizedPlane::quantize`] with an explicit kernel kind — the
+    /// cross-kind parity tests and benches compare kinds without
+    /// touching the process-wide selection.  Range reductions (the
+    /// min/max scans and the CST column max-abs below) stay scalar in
+    /// every kind; see `quant/kernel.rs` on why reassociating them
+    /// would break bit-identity.
+    pub fn quantize_with(kind: kernel::Kind, x: &[f32], rows: usize, cols: usize,
+                         bits: u8, granularity: Granularity) -> Self {
         assert_eq!(x.len(), rows * cols);
         match granularity {
-            Granularity::Token => Self::quant_token(x, rows, cols, bits, &[]),
-            Granularity::Channel => Self::quant_channel(x, rows, cols, bits),
-            Granularity::Group(n) => Self::quant_group(x, rows, cols, bits, n),
+            Granularity::Token => Self::quant_token(kind, x, rows, cols, bits, &[]),
+            Granularity::Channel => Self::quant_channel(kind, x, rows, cols, bits),
+            Granularity::Group(n) => Self::quant_group(kind, x, rows, cols, bits, n),
             Granularity::ChannelSeparableToken => {
                 // Eq. 6: c_i = sqrt(max|X_i|) per column, degenerate -> 1.
                 let mut c = vec![0f32; cols];
@@ -76,13 +89,13 @@ impl QuantizedPlane {
                 for cj in c.iter_mut() {
                     *cj = if *cj <= 0.0 { 1.0 } else { cj.sqrt() };
                 }
-                Self::quant_token(x, rows, cols, bits, &c)
+                Self::quant_token(kind, x, rows, cols, bits, &c)
             }
         }
     }
 
-    fn quant_token(x: &[f32], rows: usize, cols: usize, bits: u8,
-                   chan_scale: &[f32]) -> Self {
+    fn quant_token(kind: kernel::Kind, x: &[f32], rows: usize, cols: usize,
+                   bits: u8, chan_scale: &[f32]) -> Self {
         let cst = !chan_scale.is_empty();
         let mut w = PackWriter::with_capacity(bits, rows * cols);
         let mut params = Vec::with_capacity(rows);
@@ -95,12 +108,12 @@ impl QuantizedPlane {
         // ties; the cross-layer contract is an error-bound (not bit)
         // match, verified in rust/tests.
         let qmax = ((1u32 << bits) - 1) as f32;
+        let mut cbuf = [0u8; kernel::TILE];
         for r in 0..rows {
             let row = &x[r * cols..(r + 1) * cols];
             let src: &[f32] = if cst {
-                for j in 0..cols {
-                    normed[j] = row[j] / chan_scale[j];
-                }
+                // Elementwise IEEE division — identical lanes per kind.
+                kernel::div_slice(kind, row, chan_scale, &mut normed);
                 &normed
             } else {
                 row
@@ -108,8 +121,16 @@ impl QuantizedPlane {
             let (mn, mx) = min_max(src);
             let p = QuantParams::from_min_max(mn, mx, bits);
             let inv_s = 1.0 / p.scale;
-            for &v in src {
-                w.push(((v * inv_s).round_ties_even() + p.zero).clamp(0.0, qmax) as u8);
+            if kind == kernel::Kind::Scalar {
+                for &v in src {
+                    w.push(((v * inv_s).round_ties_even() + p.zero).clamp(0.0, qmax) as u8);
+                }
+            } else {
+                for chunk in src.chunks(kernel::TILE) {
+                    let m = chunk.len();
+                    kernel::encode_mul(kind, chunk, inv_s, p.zero, qmax, &mut cbuf[..m]);
+                    w.push_slice(kind, &cbuf[..m]);
+                }
             }
             params.push(p);
         }
@@ -124,7 +145,8 @@ impl QuantizedPlane {
         }
     }
 
-    fn quant_channel(x: &[f32], rows: usize, cols: usize, bits: u8) -> Self {
+    fn quant_channel(kind: kernel::Kind, x: &[f32], rows: usize, cols: usize,
+                     bits: u8) -> Self {
         let mut mn = vec![f32::INFINITY; cols];
         let mut mx = vec![f32::NEG_INFINITY; cols];
         for r in 0..rows {
@@ -138,9 +160,27 @@ impl QuantizedPlane {
             .map(|j| QuantParams::from_min_max(mn[j], mx[j], bits))
             .collect();
         let mut w = PackWriter::with_capacity(bits, rows * cols);
-        for r in 0..rows {
+        if kind != kernel::Kind::Scalar && cols <= kernel::TILE {
+            // Stage (s, z) column vectors once, then encode whole rows.
+            let qmax = ((1u32 << bits) - 1) as f32;
+            let mut sbuf = [0f32; kernel::TILE];
+            let mut zbuf = [0f32; kernel::TILE];
+            let mut cbuf = [0u8; kernel::TILE];
             for (j, p) in params.iter().enumerate() {
-                w.push(p.encode(x[r * cols + j], bits));
+                sbuf[j] = p.scale;
+                zbuf[j] = p.zero;
+            }
+            for r in 0..rows {
+                let row = &x[r * cols..(r + 1) * cols];
+                kernel::encode_cols(kind, row, &sbuf[..cols], &zbuf[..cols],
+                                    qmax, &mut cbuf[..cols]);
+                w.push_slice(kind, &cbuf[..cols]);
+            }
+        } else {
+            for r in 0..rows {
+                for (j, p) in params.iter().enumerate() {
+                    w.push(p.encode(x[r * cols + j], bits));
+                }
             }
         }
         QuantizedPlane {
@@ -154,11 +194,14 @@ impl QuantizedPlane {
         }
     }
 
-    fn quant_group(x: &[f32], rows: usize, cols: usize, bits: u8, n: usize) -> Self {
+    fn quant_group(kind: kernel::Kind, x: &[f32], rows: usize, cols: usize,
+                   bits: u8, n: usize) -> Self {
         assert!(n > 0);
         let groups = cols.div_ceil(n);
         let mut params = Vec::with_capacity(rows * groups);
         let mut w = PackWriter::with_capacity(bits, rows * cols);
+        let qmax = ((1u32 << bits) - 1) as f32;
+        let mut cbuf = [0u8; kernel::TILE];
         for r in 0..rows {
             for g in 0..groups {
                 let j0 = g * n;
@@ -166,8 +209,16 @@ impl QuantizedPlane {
                 let seg = &x[r * cols + j0..r * cols + j1];
                 let (mn, mx) = min_max(seg);
                 let p = QuantParams::from_min_max(mn, mx, bits);
-                for &v in seg {
-                    w.push(p.encode(v, bits));
+                if kind == kernel::Kind::Scalar {
+                    for &v in seg {
+                        w.push(p.encode(v, bits));
+                    }
+                } else {
+                    for chunk in seg.chunks(kernel::TILE) {
+                        let m = chunk.len();
+                        kernel::encode_div(kind, chunk, p.scale, p.zero, qmax, &mut cbuf[..m]);
+                        w.push_slice(kind, &cbuf[..m]);
+                    }
                 }
                 params.push(p);
             }
@@ -183,18 +234,88 @@ impl QuantizedPlane {
         }
     }
 
-    /// Dequantize the whole plane into `out` (`rows*cols`, row-major).
-    ///
-    /// Fused unpack–dequant (EXPERIMENTS.md §Perf): 1/2/4/8-bit lanes are
-    /// decoded straight from the packed bytes via
-    /// [`PackedCodes::for_each`], eliminating the `rows*cols` intermediate
-    /// byte buffer the old two-pass kernel allocated on every
-    /// materialization.  Bit-identical to the two-pass reference (same
-    /// `QuantParams::decode` on the same codes in the same order; pinned
-    /// by the `fused_dequant_matches_reference` property test).
+    /// Dequantize the whole plane into `out` (`rows*cols`, row-major)
+    /// with the process-wide kernel.
     // lint: hot-path — steady materialization kernel (DESIGN.md §13).
+    #[inline]
     pub fn dequantize_into(&self, out: &mut [f32]) {
+        self.dequantize_into_with(kernel::active(), out);
+    }
+
+    /// [`QuantizedPlane::dequantize_into`] with an explicit kernel kind
+    /// (DESIGN.md §15).
+    ///
+    /// The scalar kind runs the fused unpack–decode loop
+    /// ([`Self::dequantize_scalar`] below); the SIMD kinds widen the
+    /// packed codes to f32 in fixed stack tiles and then apply the
+    /// per-granularity affine pass segment by segment.  Both orders run
+    /// the exact `QuantParams::decode` arithmetic over the same code
+    /// sequence, so the planes are bit-identical — pinned by the
+    /// `kernels_bit_identical_across_kinds` property test.
+    // lint: hot-path — steady materialization kernel (DESIGN.md §13, §15).
+    pub fn dequantize_into_with(&self, kind: kernel::Kind, out: &mut [f32]) {
         assert_eq!(out.len(), self.rows * self.cols);
+        let cols = self.cols;
+        // Channel planes wider than one tile would overflow the staged
+        // (s, z) column buffers; `cols` is `d_head` (<= TILE) everywhere
+        // in practice, so that corner just takes the fused fallback.
+        let wide_channel =
+            self.granularity == Granularity::Channel && cols > kernel::TILE;
+        if kind == kernel::Kind::Scalar || wide_channel {
+            self.dequantize_scalar(out);
+            return;
+        }
+        kernel::codes_to_f32(kind, self.bits, self.codes.as_bytes(), out);
+        match self.granularity {
+            Granularity::Token => {
+                for (r, p) in self.params.iter().enumerate() {
+                    let row = &mut out[r * cols..(r + 1) * cols];
+                    kernel::affine_inplace(kind, row, p.zero, p.scale);
+                }
+            }
+            Granularity::ChannelSeparableToken => {
+                for (r, p) in self.params.iter().enumerate() {
+                    let row = &mut out[r * cols..(r + 1) * cols];
+                    kernel::affine_mul_inplace(kind, row, p.zero, p.scale,
+                                               &self.chan_scale);
+                }
+            }
+            Granularity::Channel => {
+                let mut sbuf = [0f32; kernel::TILE];
+                let mut zbuf = [0f32; kernel::TILE];
+                for (j, p) in self.params.iter().enumerate() {
+                    sbuf[j] = p.scale;
+                    zbuf[j] = p.zero;
+                }
+                for r in 0..self.rows {
+                    let row = &mut out[r * cols..(r + 1) * cols];
+                    kernel::affine_cols_inplace(kind, row, &sbuf[..cols], &zbuf[..cols]);
+                }
+            }
+            Granularity::Group(n) => {
+                let groups = cols.div_ceil(n);
+                for r in 0..self.rows {
+                    for g in 0..groups {
+                        let j0 = g * n;
+                        let j1 = (j0 + n).min(cols);
+                        let p = self.params[r * groups + g];
+                        let seg = &mut out[r * cols + j0..r * cols + j1];
+                        kernel::affine_inplace(kind, seg, p.zero, p.scale);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fused unpack–dequant, the portable scalar kernel (EXPERIMENTS.md
+    /// §Perf): 1/2/4/8-bit lanes are decoded straight from the packed
+    /// bytes via [`PackedCodes::for_each`], eliminating the `rows*cols`
+    /// intermediate byte buffer the old two-pass kernel allocated on
+    /// every materialization.  Bit-identical to the two-pass reference
+    /// (same `QuantParams::decode` on the same codes in the same order;
+    /// pinned by the `fused_dequant_matches_reference` property test).
+    // lint: hot-path — steady materialization kernel (DESIGN.md §13).
+    fn dequantize_scalar(&self, out: &mut [f32]) {
         let cols = self.cols;
         match self.granularity {
             Granularity::Token => {
@@ -453,6 +574,82 @@ mod tests {
                         "{gran:?} {rows}x{cols}@{bits}b: element {i} \
                          fused {a} != reference {b}"
                     ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kernels_bit_identical_across_kinds() {
+        // Scalar-vs-SIMD parity gate (DESIGN.md §15): every compiled-in
+        // kernel kind available on this CPU must produce byte-identical
+        // packed codes, bit-identical (s, z) params / channel scales and
+        // bit-identical dequantized planes, across every bit width ×
+        // granularity × ragged shape.
+        use crate::quant::kernel::Kind;
+        use crate::util::prop::check;
+        let kinds: Vec<Kind> = kernel::compiled_kinds()
+            .iter()
+            .copied()
+            .filter(|&k| kernel::available(k))
+            .collect();
+        check("scalar == simd quant/dequant", 120, |g| {
+            let rows = g.usize_in(1, 33);
+            let cols = g.usize_in(1, 40);
+            let bits = *g.choice(&[1u8, 2, 4, 8]);
+            let group_n = g.usize_in(1, cols + 3);
+            let gran = *g.choice(&[
+                Granularity::Token,
+                Granularity::Channel,
+                Granularity::Group(group_n),
+                Granularity::ChannelSeparableToken,
+            ]);
+            let x = g.vec_f32(rows * cols, -6.0, 6.0);
+            let base = QuantizedPlane::quantize_with(Kind::Scalar, &x, rows, cols, bits, gran);
+            let mut want = vec![0f32; rows * cols];
+            base.dequantize_into_with(Kind::Scalar, &mut want);
+            for &k in &kinds {
+                let q = QuantizedPlane::quantize_with(k, &x, rows, cols, bits, gran);
+                if q.codes.as_bytes() != base.codes.as_bytes() {
+                    return Err(format!(
+                        "{gran:?} {rows}x{cols}@{bits}b: {k:?} packed bytes differ"
+                    ));
+                }
+                for (p, bp) in q.params.iter().zip(&base.params) {
+                    if p.scale.to_bits() != bp.scale.to_bits()
+                        || p.zero.to_bits() != bp.zero.to_bits()
+                    {
+                        return Err(format!("{gran:?}: {k:?} params differ"));
+                    }
+                }
+                for (a, b) in q.chan_scale.iter().zip(&base.chan_scale) {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("{gran:?}: {k:?} chan_scale differs"));
+                    }
+                }
+                // Cross-materialization: the SIMD dequant must also
+                // bit-match on the scalar-packed plane (and vice versa
+                // the codes were pinned byte-identical above).
+                let mut got = vec![0f32; rows * cols];
+                q.dequantize_into_with(k, &mut got);
+                let mut cross = vec![0f32; rows * cols];
+                base.dequantize_into_with(k, &mut cross);
+                for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!(
+                            "{gran:?} {rows}x{cols}@{bits}b: element {i} \
+                             {k:?} {a} != scalar {b}"
+                        ));
+                    }
+                }
+                for (i, (a, b)) in cross.iter().zip(&want).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!(
+                            "{gran:?} {rows}x{cols}@{bits}b: element {i} \
+                             {k:?}-on-scalar-codes {a} != scalar {b}"
+                        ));
+                    }
                 }
             }
             Ok(())

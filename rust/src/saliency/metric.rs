@@ -6,6 +6,8 @@
 //! run on accumulated scores from the full-attention artifact), the
 //! streaming decode path, and the Fig. 3 demo.
 
+use crate::quant::kernel;
+
 /// Which metric a compression policy ranks tokens by.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SaliencyMetric {
@@ -19,12 +21,13 @@ pub enum SaliencyMetric {
 /// row-major): `p_i = sum_k A[k, i]`.
 pub fn accumulated_saliency(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
     assert_eq!(a.len(), rows * cols);
+    // Row-major accumulation order is fixed, so the vectorized add is
+    // elementwise per column — bit-identical to the scalar loop
+    // (DESIGN.md §15).  Dispatch resolves once, outside the row loop.
+    let kind = kernel::active();
     let mut p = vec![0f32; cols];
     for r in 0..rows {
-        let row = &a[r * cols..(r + 1) * cols];
-        for (pi, &v) in p.iter_mut().zip(row) {
-            *pi += v;
-        }
+        kernel::add_assign(kind, &mut p, &a[r * cols..(r + 1) * cols]);
     }
     p
 }
@@ -54,19 +57,43 @@ pub fn probe_normalized_saliency(
 ) -> Vec<f32> {
     let p = probe_idx.len();
     assert_eq!(a_probe.len(), p * cols);
+    let kind = kernel::active();
     let mut sums = vec![0f32; cols];
     for r in 0..p {
-        let row = &a_probe[r * cols..(r + 1) * cols];
-        for (s, &v) in sums.iter_mut().zip(row) {
-            *s += v;
-        }
+        kernel::add_assign(kind, &mut sums, &a_probe[r * cols..(r + 1) * cols]);
     }
+    divide_by_coverage(&mut sums, probe_idx);
+    sums
+}
+
+/// [`probe_normalized_saliency`] over the streaming accumulator's
+/// per-probe row buffers directly — same Eq. 8 approximation, same
+/// accumulation order, without first flattening the rows into a staging
+/// buffer (DESIGN.md §15 removed that copy from the recompression
+/// boundary).
+pub fn probe_normalized_saliency_rows(
+    rows: &[Vec<f32>],
+    probe_idx: &[usize],
+    cols: usize,
+) -> Vec<f32> {
+    assert_eq!(rows.len(), probe_idx.len());
+    let kind = kernel::active();
+    let mut sums = vec![0f32; cols];
+    for row in rows {
+        assert_eq!(row.len(), cols, "probe row width mismatch");
+        kernel::add_assign(kind, &mut sums, row);
+    }
+    divide_by_coverage(&mut sums, probe_idx);
+    sums
+}
+
+/// Divide column sums by probe coverage: probes are sorted ascending,
+/// so coverage of column i is the count of probe positions >= i.
+fn divide_by_coverage(sums: &mut [f32], probe_idx: &[usize]) {
     for (i, s) in sums.iter_mut().enumerate() {
-        // probes are sorted ascending: coverage = count of idx >= i
         let cover = probe_idx.len() - probe_idx.partition_point(|&x| x < i);
         *s /= cover.max(1) as f32;
     }
-    sums
 }
 
 /// Rank tokens by `saliency` and mark the top `ratio` fraction (of the
@@ -184,6 +211,26 @@ mod tests {
         // uniform case: both should be nearly flat over covered columns
         for i in 0..l - 4 {
             assert!((approx[i] - exact[i]).abs() < 0.05, "{i}");
+        }
+    }
+
+    #[test]
+    fn rows_variant_matches_flat_probe_saliency() {
+        // The no-flatten rows entry point must be bit-identical to the
+        // flat-buffer one: same rows, same order, same coverage divide.
+        let l = 24;
+        let a = uniform_causal(l);
+        let idx: Vec<usize> = (0..l).step_by(3).collect();
+        let mut flat = Vec::new();
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for &r in &idx {
+            flat.extend_from_slice(&a[r * l..(r + 1) * l]);
+            rows.push(a[r * l..(r + 1) * l].to_vec());
+        }
+        let from_flat = probe_normalized_saliency(&flat, &idx, l);
+        let from_rows = probe_normalized_saliency_rows(&rows, &idx, l);
+        for (i, (x, y)) in from_rows.iter().zip(&from_flat).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "col {i}: {x} vs {y}");
         }
     }
 

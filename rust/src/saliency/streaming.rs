@@ -7,7 +7,7 @@
 //! generated tokens, the accumulated rows approximate Eq. 8 for the whole
 //! prefix and the cache is recompressed; the accumulator then resets.
 
-use crate::saliency::metric::probe_normalized_saliency;
+use crate::saliency::metric::probe_normalized_saliency_rows;
 use crate::workload::rng::SplitMix64;
 
 /// Decision + storage for streaming decode-time probes.
@@ -100,12 +100,9 @@ impl StreamingProbe {
             self.reset();
             return None;
         }
-        let mut flat = Vec::with_capacity(self.rows.len() * cols);
-        for r in &self.rows {
-            assert_eq!(r.len(), cols, "probe row width mismatch");
-            flat.extend_from_slice(r);
-        }
-        let sal = probe_normalized_saliency(&flat, &self.row_positions, cols);
+        // Reduces the recorded rows in place — no flattening copy; the
+        // width assert lives inside the rows entry point.
+        let sal = probe_normalized_saliency_rows(&self.rows, &self.row_positions, cols);
         self.reset();
         Some(sal)
     }

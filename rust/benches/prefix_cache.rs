@@ -1,0 +1,201 @@
+//! Shared-prefix segment store sweep (DESIGN.md §16 and
+//! EXPERIMENTS.md §Prefix): cold vs warm admission-to-first-token over a
+//! hit-ratio sweep, priced on the `simcost` roofline virtual clock.
+//!
+//! Each point replays the same request set against a cold engine (store
+//! disabled) and a warm engine (store primed with the shared system
+//! prompt): `hit_pct` percent of the requests fork from the interned
+//! prefix and prefill only their private tail, the rest carry distinct
+//! cold prompts.  TTFT is virtual — tokens actually prefilled times the
+//! per-token prefill cost plus one decode step — so the speedup is
+//! exactly the skipped-prefill fraction, identical on every host.
+//! Outputs and snapshot digests must stay bit-identical between the two
+//! engines at every point (the contract pinned by
+//! `tests/prefix_parity.rs`).  Emits `BENCH_prefix.json` (uploaded by
+//! the CI `prefix-cache` job).
+//!
+//! Run: `cargo bench --bench prefix_cache` (append `-- --smoke` for the
+//! short CI variant).
+
+use std::time::Instant;
+
+use zipcache::config::EngineConfig;
+use zipcache::coordinator::{Engine, GenerationRequest};
+use zipcache::server::loadgen;
+use zipcache::simcost::{decode_cost_per_token, prefill_cost, AttnKind,
+                        AttnShape, Hardware};
+use zipcache::util::bench::Table;
+use zipcache::workload::tasks::FIL0;
+use zipcache::workload::{Task, TaskGen};
+
+const MAX_NEW: usize = 4;
+const CHUNK: usize = 3;
+const N_REQUESTS: usize = 8;
+const SEED: u64 = 13;
+
+fn sim_cfg(prefix: bool) -> EngineConfig {
+    let mut cfg = EngineConfig::load_default("sim", "micro").expect("sim config");
+    cfg.scheduler.prefill_chunk = CHUNK;
+    cfg.quant.recompress_every = 4;
+    cfg.parallelism = 1;
+    cfg.seed = SEED;
+    cfg.prefix.enable = prefix;
+    cfg
+}
+
+/// Run one prompt to completion; returns (tokens, digest, virtual TTFT,
+/// prompt tokens actually prefilled).  TTFT = prefilled tokens priced at
+/// the per-token prefill cost + one decode step.
+fn run_one(engine: &mut Engine, p: &[u16], per_tok: f64, decode: f64)
+           -> (Vec<u16>, u64, f64, usize) {
+    let skipped0 = engine.metrics.prefill_tokens_skipped;
+    let mut s = engine
+        .start_session(GenerationRequest::new(p.to_vec(), MAX_NEW))
+        .expect("session");
+    while !s.is_done() {
+        engine.decode_step(&mut s).expect("decode");
+    }
+    let skipped = (engine.metrics.prefill_tokens_skipped - skipped0) as usize;
+    let prefilled = p.len() - skipped;
+    let digest = s.compressed.as_ref().expect("snapshot").content_digest();
+    (s.generated.clone(), digest, prefilled as f64 * per_tok + decode, prefilled)
+}
+
+struct Point {
+    hit_pct: usize,
+    hits: u64,
+    tokens_skipped: u64,
+    cold_ttft_vns: f64,
+    warm_ttft_vns: f64,
+    wall_ms: f64,
+}
+
+fn run_point(hit_pct: usize) -> Point {
+    let t0 = Instant::now();
+    let k = N_REQUESTS * hit_pct / 100;
+    // k requests fork from one shared system prompt (distinct tails);
+    // the rest are distinct near-window cold prompts.
+    let shared = loadgen::shared_prefix_trace(64, k + 1, 0, SEED);
+    let prime = shared.entries[0].sample.prompt().to_vec();
+    let mut prompts: Vec<Vec<u16>> = shared.entries[1..1 + k]
+        .iter()
+        .map(|e| e.sample.prompt().to_vec())
+        .collect();
+    let cold_gen = TaskGen::new(Task::Lines(8), 56);
+    for i in 0..N_REQUESTS - k {
+        let mut p = cold_gen.sample(SEED ^ (0x51 + i as u64)).prompt().to_vec();
+        // A unique filler token right after BOS keeps every cold
+        // prompt's first granule distinct (two line-retrieval samples
+        // can share a leading digit token, which would register as an
+        // accidental store hit and skew the hit accounting).
+        p[1] = FIL0 + i as u16;
+        prompts.push(p);
+    }
+
+    let lay = {
+        let e = Engine::new(sim_cfg(false)).expect("engine");
+        e.layout()
+    };
+    let shape = AttnShape {
+        batch: 1,
+        heads: lay.heads,
+        seq: lay.seq,
+        d_head: lay.d_head,
+        elem: 2.0,
+    };
+    let hw = Hardware::a100();
+    let per_tok =
+        prefill_cost(hw, shape, AttnKind::FlashWithProbes { probe_pct: 10 })
+            / lay.seq as f64;
+    let decode = decode_cost_per_token(hw, shape, 2.8, AttnKind::Flash);
+
+    let mut cold_engine = Engine::new(sim_cfg(false)).expect("cold engine");
+    let mut warm_engine = Engine::new(sim_cfg(true)).expect("warm engine");
+    // Prime the store: one full cold pass over the system prompt (its
+    // prefill epilogue interns the shared segments).  Not measured.
+    let _ = run_one(&mut warm_engine, &prime, per_tok, decode);
+
+    let (mut cold_vns, mut warm_vns) = (0.0f64, 0.0f64);
+    for (i, p) in prompts.iter().enumerate() {
+        let cold = run_one(&mut cold_engine, p, per_tok, decode);
+        let warm = run_one(&mut warm_engine, p, per_tok, decode);
+        // The headline contract: forking from the store is invisible to
+        // generation and to the retained snapshot.
+        assert_eq!((&cold.0, cold.1), (&warm.0, warm.1),
+                   "hit_pct={hit_pct} request {i}: warm diverged from cold");
+        assert_eq!(cold.3, p.len(), "cold engine must prefill everything");
+        cold_vns += cold.2;
+        warm_vns += warm.2;
+    }
+    Point {
+        hit_pct,
+        hits: warm_engine.metrics.prefix_hits,
+        tokens_skipped: warm_engine.metrics.prefill_tokens_skipped,
+        cold_ttft_vns: cold_vns / prompts.len() as f64 * 1e9,
+        warm_ttft_vns: warm_vns / prompts.len() as f64 * 1e9,
+        wall_ms: t0.elapsed().as_secs_f64() * 1000.0,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let pcts: &[usize] = if smoke { &[0, 100] } else { &[0, 25, 50, 75, 100] };
+
+    let mut table = Table::new(&[
+        "hit %", "hits", "tokens skipped", "cold TTFT vns", "warm TTFT vns",
+        "speedup", "wall ms",
+    ]);
+    let mut rows = Vec::new();
+    let mut prev_warm = f64::INFINITY;
+    for &pct in pcts {
+        let st = run_point(pct);
+        let expect_hits = (N_REQUESTS * pct / 100) as u64;
+        assert_eq!(st.hits, expect_hits, "hit_pct={pct}: hit accounting");
+        if pct == 0 {
+            assert_eq!(st.tokens_skipped, 0);
+            assert!((st.warm_ttft_vns - st.cold_ttft_vns).abs() < 1e-9,
+                    "an idle store must cost nothing on the virtual clock");
+        } else {
+            assert!(st.tokens_skipped > 0);
+            assert!(st.warm_ttft_vns < st.cold_ttft_vns,
+                    "hit_pct={pct}: warm TTFT must beat cold");
+        }
+        assert!(st.warm_ttft_vns <= prev_warm + 1e-9,
+                "warm TTFT must be non-increasing in the hit ratio");
+        prev_warm = st.warm_ttft_vns;
+        let speedup = st.cold_ttft_vns / st.warm_ttft_vns;
+        table.row(&[
+            pct.to_string(),
+            st.hits.to_string(),
+            st.tokens_skipped.to_string(),
+            format!("{:.3}", st.cold_ttft_vns),
+            format!("{:.3}", st.warm_ttft_vns),
+            format!("{speedup:.2}x"),
+            format!("{:.2}", st.wall_ms),
+        ]);
+        rows.push(format!(
+            "    {{\"hit_pct\": {pct}, \"requests\": {N_REQUESTS}, \
+             \"prefix_hits\": {}, \"prefill_tokens_skipped\": {}, \
+             \"cold_ttft_vns_mean\": {:.3}, \"warm_ttft_vns_mean\": {:.3}, \
+             \"ttft_speedup\": {speedup:.4}, \"wall_ms\": {:.2}}}",
+            st.hits, st.tokens_skipped, st.cold_ttft_vns, st.warm_ttft_vns,
+            st.wall_ms,
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"prefix_cache\",\n  \"model\": \"micro\",\n  \
+         \"smoke\": {smoke},\n  \"prefill_chunk\": {CHUNK},\n  \
+         \"max_new\": {MAX_NEW},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_prefix.json", &json).unwrap();
+
+    println!("== shared-prefix cache sweep (sim backend, micro, virtual clock) ==");
+    table.print();
+    print!("{json}");
+    println!(
+        "\nOK: warm forks bit-identical to cold starts; TTFT falls \
+         monotonically with the hit ratio"
+    );
+}

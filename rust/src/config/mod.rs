@@ -10,8 +10,9 @@ use crate::quant::KernelChoice;
 use crate::util::kvconf::KvConf;
 use crate::Result;
 
-/// Which compression policy the engine runs.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Which compression policy the engine runs.  `Hash` because the kind
+/// is a coordinate of the prefix store's `SegmentKey` (DESIGN.md §16).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PolicyKind {
     Fp16,
     H2o,
@@ -140,6 +141,23 @@ pub struct MemoryConfig {
     pub budget_bytes: usize,
 }
 
+/// Shared-prefix segment store knobs (DESIGN.md §16).  Off by default:
+/// the cold path is bit-for-bit the pre-store behaviour, and the warm
+/// path is pinned bit-identical to it anyway (`prefix_parity.rs`).
+#[derive(Debug, Clone, Default)]
+pub struct PrefixConfig {
+    /// Enable the per-shard content-addressed prefix store: prompts
+    /// sharing an interned prefix skip prefill for the covered span.
+    /// Only effective on backends with the chunked-prefill/saliency
+    /// catch-up entries (the sim backend); ignored elsewhere.
+    pub enable: bool,
+    /// Byte cap on live interned segment payload per shard (LRU
+    /// eviction above it).  `0` = unlimited; must be non-zero and below
+    /// `memory.budget_bytes` when both the store and the byte budget
+    /// are on, because the store is budgeted *inside* the shard budget.
+    pub max_bytes: usize,
+}
+
 /// Fault-injection and shard-supervision knobs (DESIGN.md §14).  The
 /// default (empty plan) is the fault-free runtime bit-for-bit; the
 /// supervisor knobs always govern the sharded server's restart policy.
@@ -200,6 +218,8 @@ pub struct EngineConfig {
     pub seed: u64,
     /// Fault injection + shard supervision (DESIGN.md §14).
     pub faults: FaultConfig,
+    /// Shared-prefix segment store (DESIGN.md §16).
+    pub prefix: PrefixConfig,
 }
 
 impl EngineConfig {
@@ -215,6 +235,7 @@ impl EngineConfig {
             parallelism: 0,
             seed: 0,
             faults: FaultConfig::default(),
+            prefix: PrefixConfig::default(),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -256,6 +277,10 @@ impl EngineConfig {
                 backoff_cap_ms: c.get_u64("faults.backoff_cap_ms", 1000)?,
                 max_restarts: c.get_u64("faults.max_restarts", 0)?,
             },
+            prefix: PrefixConfig {
+                enable: c.get_bool("prefix.enable", false)?,
+                max_bytes: c.get_usize("prefix.max_bytes", 0)?,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -292,6 +317,19 @@ impl EngineConfig {
             f.backoff_base_ms <= f.backoff_cap_ms,
             "faults.backoff_base_ms must be <= faults.backoff_cap_ms"
         );
+        if self.prefix.enable && self.memory.budget_bytes > 0 {
+            // The store lives inside the shard budget: the dispatcher
+            // subtracts live `shared_bytes` from the admittable budget,
+            // so an uncapped (or budget-sized) store could starve
+            // admission entirely (DESIGN.md §16).
+            ensure!(
+                self.prefix.max_bytes > 0
+                    && self.prefix.max_bytes < self.memory.budget_bytes,
+                "prefix.max_bytes must be in (0, memory.budget_bytes) when \
+                 both the prefix store and the byte budget are enabled \
+                 (the store is budgeted inside memory.budget_bytes)"
+            );
+        }
         Ok(())
     }
 }
@@ -431,6 +469,36 @@ max_batch = 4
         c.faults.backoff_base_ms = 100;
         c.faults.backoff_cap_ms = 50;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn prefix_from_file_and_default() {
+        let text = "model = \"tiny\"\n[prefix]\nenable = true\n\
+                    max_bytes = 4096\n";
+        let path = std::env::temp_dir().join("zipcache_cfg_prefix_test.conf");
+        std::fs::write(&path, text).unwrap();
+        let c = EngineConfig::from_file(&path).unwrap();
+        assert!(c.prefix.enable);
+        assert_eq!(c.prefix.max_bytes, 4096);
+        let d = EngineConfig::load_default("sim", "micro").unwrap();
+        assert!(!d.prefix.enable); // default: off, pre-store behaviour
+        assert_eq!(d.prefix.max_bytes, 0);
+    }
+
+    #[test]
+    fn prefix_store_must_fit_inside_byte_budget() {
+        let mut c = EngineConfig::load_default("sim", "micro").unwrap();
+        c.prefix.enable = true;
+        assert!(c.validate().is_ok(), "no byte budget: any store cap is fine");
+        c.memory.budget_bytes = 100_000;
+        assert!(c.validate().is_err(), "uncapped store inside a budget");
+        c.prefix.max_bytes = 100_000;
+        assert!(c.validate().is_err(), "store as large as the budget");
+        c.prefix.max_bytes = 50_000;
+        assert!(c.validate().is_ok());
+        c.prefix.enable = false;
+        c.prefix.max_bytes = 0;
+        assert!(c.validate().is_ok(), "disabled store is never checked");
     }
 
     #[test]

@@ -544,7 +544,7 @@ impl ContinuousBatcher {
                 let covered = {
                     let p = self.active[i].sess.prefill.as_ref()
                         .expect("prefilling checked above");
-                    (n - p.next_chunk * p.chunk).min(p.chunk)
+                    (n - p.done).min(p.chunk)
                 };
                 let finished = engine.prefill_chunk(&mut self.active[i].sess)?;
                 prefill_chunks += 1;

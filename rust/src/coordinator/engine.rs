@@ -6,6 +6,7 @@
 //! across the engine's [`WorkerPool`] (`cfg.parallelism`, DESIGN.md §5)
 //! and record per-stage timing in `EngineMetrics::compress_stages`.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::baselines::{
@@ -13,7 +14,9 @@ use crate::baselines::{
     PolicyInput, ZipCachePolicy,
 };
 use crate::config::{EngineConfig, PolicyKind, QuantConfig};
-use crate::kvcache::{CacheLayout, CompressScratch, CompressedKV, SlotPool};
+use crate::kvcache::prefix_store::DEFAULT_GRANULE;
+use crate::kvcache::{CacheLayout, CompressScratch, CompressedKV, PrefixHit,
+                     PrefixStore, SlotPool};
 use crate::metrics::EngineMetrics;
 use crate::runtime::{FaultInjector, FaultPlan, FaultSite, Runtime, Tensor, TensorView};
 use crate::saliency::{select_probes, ProbeStrategy};
@@ -43,6 +46,13 @@ pub struct Engine {
     /// Precomputed `decode_<model>` entry name — the decode hot path must
     /// not rebuild this string every step.
     decode_entry: String,
+    /// Content-addressed shared-prefix segment store (DESIGN.md §16).
+    /// `None` when `prefix.enable` is off or the backend lacks the
+    /// chunked entries (the saliency catch-up entry rides the same
+    /// capability).  Bare engines own theirs; under a server the shard
+    /// loop installs the dispatcher-shared store so it survives shard
+    /// respawns ([`Engine::set_prefix_store`]).
+    prefix_store: Option<Arc<PrefixStore>>,
     pub metrics: EngineMetrics,
     next_session_id: u64,
 }
@@ -64,8 +74,24 @@ impl Engine {
             cfg.memory.slots
         };
         let slots = SlotPool::new(slot_cap.max(1), rt.model_info().cache_layout());
+        // Segment hash boundaries follow the prefill chunking so a warm
+        // session resumes exactly at a cold chunk boundary; with
+        // monolithic prefill the DEFAULT_GRANULE keeps segments
+        // shareable at a fixed stride (DESIGN.md §16).
+        let prefix_store = if cfg.prefix.enable && rt.supports_chunked_prefill() {
+            let granule = if cfg.scheduler.prefill_chunk > 0 {
+                cfg.scheduler.prefill_chunk
+            } else {
+                DEFAULT_GRANULE
+            };
+            Some(PrefixStore::new(&cfg.model, cfg.policy, granule,
+                                  cfg.prefix.max_bytes))
+        } else {
+            None
+        };
         Ok(Engine { cfg, rt, policy, pool, scratch: CompressScratch::default(),
-                    slots, decode_entry, metrics: EngineMetrics::default(),
+                    slots, decode_entry, prefix_store,
+                    metrics: EngineMetrics::default(),
                     next_session_id: 0 })
     }
 
@@ -87,6 +113,19 @@ impl Engine {
     /// Slots acquirable right now (schedulers park a session when 0).
     pub fn free_slots(&self) -> usize {
         self.slots.available()
+    }
+
+    /// Install a dispatcher-shared prefix store (DESIGN.md §16).  The
+    /// server calls this from the shard loop so the store outlives any
+    /// one engine incarnation: a respawned shard re-attaches to the
+    /// same interned segments instead of starting cold.
+    pub fn set_prefix_store(&mut self, store: Arc<PrefixStore>) {
+        self.prefix_store = Some(store);
+    }
+
+    /// The shared-prefix segment store, when enabled (DESIGN.md §16).
+    pub fn prefix_store(&self) -> Option<&Arc<PrefixStore>> {
+        self.prefix_store.as_ref()
     }
 
     /// Swap the compression policy (bench harnesses sweep these).
@@ -218,6 +257,50 @@ impl Engine {
         Ok(s)
     }
 
+    /// Resolve the shared-prefix hit for an incoming request
+    /// (DESIGN.md §16).  A dispatcher-attached hit (admission-time
+    /// affinity) wins; a bare engine consults its own store.  Backends
+    /// without the chunked entries cannot run the saliency catch-up, so
+    /// any hit is dropped there — cold-start semantics, bit-identical
+    /// to prefix-disabled.
+    // lint: cold-path — once per admission (DESIGN.md §13).
+    fn resolve_prefix(&mut self, req: &mut GenerationRequest) -> Option<PrefixHit> {
+        let attached = req.prefix.take();
+        if !self.rt.supports_chunked_prefill() {
+            return None;
+        }
+        let hit = match attached {
+            Some(h) if h.covered > 0 && h.covered < req.prompt.len() => Some(h),
+            _ => self.prefix_store.as_ref().and_then(|st| st.lookup(&req.prompt)),
+        };
+        if self.prefix_store.is_some() || hit.is_some() {
+            match &hit {
+                Some(h) => {
+                    self.metrics.prefix_hits += 1;
+                    self.metrics.prefill_tokens_skipped += h.covered as u64;
+                }
+                None => self.metrics.prefix_misses += 1,
+            }
+        }
+        hit
+    }
+
+    /// Publish the session's exact fp32 prefix rows into the shared
+    /// store (DESIGN.md §16).  Must run *before* `compress_session`
+    /// dequantizes the slot in place — the store only ever sees
+    /// bit-exact prefill output.  A warm session re-interns the same
+    /// bytes (an LRU touch for existing links, fresh links past its
+    /// covered span), so hit and cold admissions stay symmetric.
+    // lint: cold-path — once per prefill (DESIGN.md §13).
+    fn intern_prefix(&mut self, s: &Session, layout: CacheLayout) {
+        let Some(store) = &self.prefix_store else { return };
+        let Residency::Dense(slot) = &s.residency else { return };
+        store.intern(&s.prompt, &slot.kbuf, &slot.vbuf, &layout);
+        // Store-derived gauges refresh at the only point they can move.
+        self.metrics.prefix_evictions = store.evictions();
+        self.metrics.shared_segment_bytes = store.shared_bytes() as u64;
+    }
+
     /// Admit a session without necessarily finishing its prefill
     /// (DESIGN.md §12).  With `prefill_chunk = 0` (or a backend without
     /// the chunked entries) this completes the monolithic prefill and
@@ -226,9 +309,14 @@ impl Engine {
     /// stages the chunked-prefill state, and returns a session in the
     /// *Prefilling* phase; the scheduler then drives
     /// [`Engine::prefill_chunk`] between decode iterations.
-    pub fn begin_session(&mut self, req: GenerationRequest) -> Result<Session> {
+    pub fn begin_session(&mut self, mut req: GenerationRequest) -> Result<Session> {
         let chunk = self.prefill_chunk_size();
-        if chunk == 0 {
+        // Resolve any shared-prefix hit first (DESIGN.md §16): a hit
+        // reroutes even the `prefill_chunk = 0` config through the
+        // chunked machinery (one suffix chunk), because the saliency
+        // catch-up entry is what lets prefill skip the covered span.
+        let hit = self.resolve_prefix(&mut req);
+        if chunk == 0 && hit.is_none() {
             return self.start_session_monolithic(req);
         }
         let info = self.rt.model_info().clone();
@@ -242,6 +330,12 @@ impl Engine {
         let seed = request_seed(req.seed.unwrap_or(self.cfg.seed), prompt, max_new);
 
         let n = prompt.len();
+        let covered = hit.as_ref().map_or(0, |h| h.covered);
+        debug_assert!(covered < n, "prefix hit may never cover the last token");
+        // A warm hit under monolithic config prefills the whole
+        // uncovered suffix as one chunk; the `start_session` drive loop
+        // then completes it in a single `prefill_chunk` call.
+        let eff_chunk = if chunk == 0 { n - covered } else { chunk };
         let smax = info.max_seq;
         let mut tokens = vec![0i32; smax];
         for (i, &t) in prompt.iter().enumerate() {
@@ -253,7 +347,9 @@ impl Engine {
         } else {
             // Probe selection is over the *full* prompt before any chunk
             // runs — identical draws to the monolithic path, padded and
-            // sorted the same way.
+            // sorted the same way.  A warm hit changes nothing here: the
+            // draws depend only on request content (DESIGN.md §8), which
+            // is what makes fork-from-prefix bit-identical to cold start.
             let probes = select_probes(ProbeStrategy::RandomRecent, n,
                                        self.cfg.quant.probe_ratio, None, seed);
             let pc = info.probe_count;
@@ -268,26 +364,82 @@ impl Engine {
 
         // The slot is acquired up front: chunk rows scatter straight into
         // it (an abandoned session's slot returns to the pool on drop).
-        let slot = self.slots.acquire().ok_or_else(|| {
+        let mut slot = self.slots.acquire().ok_or_else(|| {
             anyhow::anyhow!(
                 "no free materialization slot ({} in use; park a session first)",
                 self.slots.capacity()
             )
         })?;
-        let mut s = Session::new(id, req, layout,
-                                 self.cfg.quant.recompress_every, seed, slot);
-        s.prefill = Some(Box::new(PrefillProgress {
-            next_chunk: 0,
-            chunk,
-            n_chunks: (n + chunk - 1) / chunk,
+        // Seed the slot from the shared segments: rows [0, covered) land
+        // exactly as the cold prefill would have written them (segments
+        // hold exact fp32 prefill rows — DESIGN.md §16), so every chunk
+        // that follows reads a bit-identical prefix.
+        if let Some(h) = &hit {
+            for r in &h.segs {
+                r.segment().materialize_into(&mut slot.kbuf, &mut slot.vbuf,
+                                             &layout);
+            }
+        }
+        let mut valid = vec![0f32; smax];
+        for v in valid[..covered].iter_mut() {
+            *v = 1.0;
+        }
+        let mut p = Box::new(PrefillProgress {
+            done: covered,
+            chunk: eff_chunk,
             tokens,
-            valid: vec![0f32; smax],
+            valid,
             probes,
             full_scores,
             sal: vec![0f32; info.n_layers * smax],
             us: 0,
             exec: ExecScratch::default(),
-        }));
+        });
+        // Saliency catch-up over the covered span (DESIGN.md §16): the
+        // dedicated `prefill_sal_*` entry replays exactly the
+        // accumulator additions the skipped chunks would have performed
+        // — same f32 order — so the accumulator state entering the first
+        // live chunk matches a cold run bitwise.
+        if covered > 0 {
+            let tc = Instant::now();
+            let entry = self.rt.entry(if full_scores {
+                "prefill_sal_full"
+            } else {
+                "prefill_sal_flash"
+            });
+            let start_in = [0i32];
+            let end_in = [covered as i32];
+            let win_dims = [smax];
+            let sal_dims = [info.n_layers, smax];
+            {
+                let PrefillProgress { tokens, valid, probes, sal, exec,
+                                      full_scores, .. } = &mut *p;
+                let probe_dims = [probes.len()];
+                let mut inputs = vec![
+                    TensorView::i32(tokens, &win_dims),
+                    TensorView::f32(valid, &win_dims),
+                    TensorView::scalar_i32(&start_in),
+                    TensorView::scalar_i32(&end_in),
+                ];
+                if !*full_scores {
+                    inputs.push(TensorView::i32(probes, &probe_dims));
+                }
+                inputs.push(TensorView::f32(sal, &sal_dims));
+                self.rt.execute_into(&entry, &inputs, exec)?;
+            }
+            p.sal.copy_from_slice(p.exec.out_f32(0));
+            p.us += tc.elapsed().as_micros() as u64;
+        }
+        let mut s = Session::new(id, req, layout,
+                                 self.cfg.quant.recompress_every, seed, slot);
+        s.prefill = Some(p);
+        // CoW fork point: the session holds pins on the shared segments
+        // for its lifetime, while all of its own writes (suffix chunks,
+        // decode rows, every recompression) go to session-private state.
+        if let Some(h) = hit {
+            s.covered = h.covered;
+            s.shared = h.segs;
+        }
         if let Some(q) = &s.quant {
             let mut quant = self.cfg.quant.clone();
             quant.bits_high = q.bits_high;
@@ -323,7 +475,7 @@ impl Engine {
         let n = s.prompt.len();
         let t0 = Instant::now();
 
-        let start = p.next_chunk * p.chunk;
+        let start = p.done;
         let end = (start + p.chunk).min(n);
         debug_assert!(start < n, "prefill_chunk past the prompt");
         // Switch this chunk's rows live *before* the call: an attention
@@ -378,7 +530,7 @@ impl Engine {
             }
         }
         p.sal.copy_from_slice(p.exec.out_f32(2));
-        p.next_chunk += 1;
+        p.done = end;
 
         let finished = end >= n;
         if !finished {
@@ -429,6 +581,7 @@ impl Engine {
         // [0, n-1) (the prompt tail is withheld so the first generated
         // token reads quantized state), zero the dead tail, and re-feed
         // the final prompt token through the decode artifact.
+        self.intern_prefix(s, layout);
         self.rt.fault_point(FaultSite::Compress)?;
         self.compress_session(s, n - 1);
         let (dh, heads) = (layout.d_head, layout.heads);
@@ -564,6 +717,7 @@ impl Engine {
         // the first generated token genuinely reads the *quantized* cache
         // (the paper's evaluation protocol: answers come from the compressed
         // state, not from uncompressed prefill activations).
+        self.intern_prefix(&s, layout);
         self.rt.fault_point(FaultSite::Compress)?;
         self.compress_session(&mut s, n - 1);
         // Rows >= n-1 still hold whatever the prefill artifact emitted

@@ -26,6 +26,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::kvcache::PrefixHit;
 use crate::workload::tasks::EOS;
 use crate::Result;
 
@@ -161,6 +162,16 @@ pub struct GenerationRequest {
     pub stop_tokens: Vec<u16>,
     /// Cancellation flag shared with the request's `ResponseHandle`.
     pub cancel: CancelToken,
+    /// Shared-prefix hit pinned at admission (DESIGN.md §16): the
+    /// dispatcher resolves the prompt against the chosen shard's prefix
+    /// store and attaches the pinned segment chain here; bare-engine
+    /// callers leave it `None` and `Engine::begin_session` resolves
+    /// against its own store.  Redelivery after a shard failure clears
+    /// it (the replacement shard re-resolves on its own store), and
+    /// dropping an unserved request releases the pins — both are what
+    /// keeps the `seg_refs` gauge drainable.  Cloning a request clones
+    /// the pins (counted).
+    pub prefix: Option<PrefixHit>,
 }
 
 impl GenerationRequest {

@@ -13,7 +13,8 @@
 //! dense buffers bit-exactly.
 
 use crate::baselines::CompressionPolicy;
-use crate::kvcache::{CacheLayout, CompressedKV, DenseSlot, PrecisionClass};
+use crate::kvcache::{CacheLayout, CompressedKV, DenseSlot, PrecisionClass,
+                     SegmentRef};
 use crate::runtime::ExecScratch;
 use crate::saliency::StreamingProbe;
 
@@ -59,12 +60,12 @@ pub struct SessionScratch {
 /// struct stays small.
 #[derive(Debug)]
 pub struct PrefillProgress {
-    /// Index of the next chunk to run (0-based).
-    pub next_chunk: usize,
+    /// Prompt tokens already in the cache: the start of the next chunk.
+    /// Cold sessions begin at 0; a warm prefix hit begins at the covered
+    /// span (the shared segments seeded those rows — DESIGN.md §16).
+    pub done: usize,
     /// Chunk size in prompt tokens (>= 1).
     pub chunk: usize,
-    /// Total chunks = ceil(prompt_len / chunk).
-    pub n_chunks: usize,
     /// Prompt tokens padded to the window, as the runtime consumes them.
     pub tokens: Vec<i32>,
     /// Validity mask, switched on prefix-by-prefix as chunks complete.
@@ -139,8 +140,19 @@ pub struct Session {
     pub residency: Residency,
     /// Chunked-prefill phase state: `Some` from `Engine::begin_session`
     /// until the final chunk completes (DESIGN.md §12).  Monolithic
-    /// prefill (`scheduler.prefill_chunk = 0`) never sets it.
+    /// prefill (`scheduler.prefill_chunk = 0`) never sets it, except for
+    /// a warm prefix hit, which runs its uncovered suffix as one chunk
+    /// (DESIGN.md §16).
     pub prefill: Option<Box<PrefillProgress>>,
+    /// Pinned shared-prefix segments this session was forked from
+    /// (DESIGN.md §16).  Held for the session's lifetime so eviction
+    /// can never unmap rows the session's view was seeded with; the
+    /// refs drop (and the store's `seg_refs` gauge drains) at finish.
+    /// Copy-on-write: the session never writes through these — all
+    /// compression and decode writes land in session-private state.
+    pub shared: Vec<SegmentRef>,
+    /// Prompt tokens covered by `shared` (0 = cold start).
+    pub covered: usize,
     /// Latest compressed snapshot — the session's resident cache form,
     /// retained from the last compression point (prefill or streaming
     /// recompression) instead of being rebuilt and discarded.
@@ -197,6 +209,8 @@ impl Session {
             layout,
             residency: Residency::Dense(slot),
             prefill: None,
+            shared: Vec::new(),
+            covered: 0,
             compressed: None,
             classes: Vec::new(),
             norm_saliency: Vec::new(),
@@ -266,6 +280,13 @@ impl Session {
     /// the checked-out dense slot or the parked fp32 tail
     /// (DESIGN.md §10).  Probe/saliency accumulators are O(S) floats and
     /// excluded, like every other per-request bookkeeping struct.
+    ///
+    /// Shared-prefix segments (`self.shared`) are deliberately **not**
+    /// counted here: their payload is charged exactly once per shard to
+    /// the store's `shared_bytes` gauge, however many sessions pin the
+    /// same segment (DESIGN.md §16) — pinned by
+    /// `resident_bytes_never_count_shared_segments` in
+    /// `rust/tests/prefix_parity.rs`.
     pub fn resident_bytes(&self) -> usize {
         let residency = match &self.residency {
             Residency::Dense(slot) => slot.bytes(),

@@ -14,13 +14,20 @@
 //! exactly (unit-tested against the printed 3.200 / 3.992 / 3.995);
 //! [`slab`] bounds the dense fp32 working set with a pool of reusable
 //! materialization slots so the compressed form is what stays resident
-//! (DESIGN.md §10).
+//! (DESIGN.md §10); [`segment`] + [`prefix_store`] intern immutable
+//! shared-prefix granules so sessions forked from a common prompt skip
+//! the covered prefill span entirely (DESIGN.md §16).
 
 pub mod fp16;
+pub mod prefix_store;
 pub mod ratio;
+pub mod segment;
 pub mod slab;
 pub mod store;
 
-pub use slab::{worst_case_resident_bytes, DenseSlot, SlotPool};
+pub use prefix_store::PrefixStore;
+pub use segment::{CompressedSegment, PrefixHit, SegmentKey, SegmentRef};
+pub use slab::{prefix_reservation_shrink, worst_case_resident_bytes, DenseSlot,
+               SlotPool};
 pub use store::{CacheLayout, CompressScratch, CompressStats, CompressedKV,
                 PrecisionClass, QuantSpec};

@@ -1,0 +1,439 @@
+//! Shard-level content-addressed prefix store (DESIGN.md §16).
+//!
+//! Interns the immutable [`CompressedSegment`] granules of shared
+//! prompt prefixes, keyed by a **rolling FNV-1a hash chain** over the
+//! token stream: the boundary hash at token `end` extends the boundary
+//! hash at the previous granule, so one key commits to the *entire*
+//! prefix, and a lookup is a walk along the chain that stops at the
+//! first missing link.  Boundaries are aligned to the prefill granule
+//! (`scheduler.prefill_chunk`, or a fixed default when prefill is
+//! monolithic) and always stop at or before `prompt_len - 1`: the last
+//! prompt token is never covered, so every session — warm or cold —
+//! runs at least one private prefill step and the monolithic epilogue
+//! (probe selection over the full prompt, final compression) is
+//! replicated exactly.
+//!
+//! Concurrency: one mutex around the intern map (poison-recovered —
+//! the map holds plain data, any consistent view is safe), `Arc`
+//! payloads for deferred reclamation, and atomic gauges shared with the
+//! segments themselves.  Eviction (LRU, enforced against
+//! `prefix.max_bytes`) removes map entries only; live readers keep
+//! their pinned payloads until drop, so readers never block eviction
+//! and eviction never invalidates a reader (DESIGN.md §16).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::config::PolicyKind;
+use crate::kvcache::segment::{CompressedSegment, PrefixHit, SegmentGauges,
+                              SegmentKey, SegmentRef};
+use crate::kvcache::store::CacheLayout;
+
+/// Granule when prefill is monolithic (`scheduler.prefill_chunk == 0`):
+/// boundaries still need an alignment rule so hits survive a chunk-size
+/// reconfiguration to 0 and bare-engine runs.
+pub const DEFAULT_GRANULE: usize = 8;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Extend a rolling FNV-1a hash with the little-endian bytes of a token
+/// run — the chain step of the boundary-hash rule.
+fn fnv_extend(mut h: u64, tokens: &[u16]) -> u64 {
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+struct Entry {
+    seg: Arc<CompressedSegment>,
+    /// LRU clock value at the last lookup/intern touch.
+    last_used: u64,
+}
+
+/// The per-shard store.  Created once per engine (or shared by the
+/// dispatcher across a shard's restarts — the store outlives shard
+/// incarnations, which is what makes warm restarts warm).
+pub struct PrefixStore {
+    model: String,
+    policy: PolicyKind,
+    granule: usize,
+    /// Byte cap on live segment payload (0 = unlimited), enforced
+    /// against `shared_bytes` — which includes evicted-but-still-pinned
+    /// payloads, because those still occupy memory.
+    max_bytes: usize,
+    gauges: Arc<SegmentGauges>,
+    /// Monotonic LRU clock.
+    tick: AtomicU64,
+    /// Cumulative map-entry evictions (budget pressure + `evict_all`).
+    evictions: AtomicU64,
+    map: Mutex<HashMap<SegmentKey, Entry>>,
+}
+
+impl PrefixStore {
+    /// `granule` must be the shard's prefill chunk size (or
+    /// [`DEFAULT_GRANULE`] when prefill is monolithic); `max_bytes == 0`
+    /// disables the byte cap.
+    pub fn new(model: &str, policy: PolicyKind, granule: usize,
+               max_bytes: usize) -> Arc<Self> {
+        Arc::new(PrefixStore {
+            model: model.to_string(),
+            policy,
+            granule: granule.max(1),
+            max_bytes,
+            gauges: Arc::new(SegmentGauges::default()),
+            tick: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            map: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Poison-recovered lock: the map holds plain owned data, so a
+    /// panicking holder cannot leave it logically torn.
+    fn lock(&self) -> MutexGuard<'_, HashMap<SegmentKey, Entry>> {
+        self.map.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn granule(&self) -> usize {
+        self.granule
+    }
+
+    pub fn max_bytes(&self) -> usize {
+        self.max_bytes
+    }
+
+    /// Live payload bytes (interned + evicted-but-pinned), counted once
+    /// per shard regardless of how many sessions reference a segment.
+    pub fn shared_bytes(&self) -> usize {
+        self.gauges.shared_bytes()
+    }
+
+    /// Interned map entries.
+    pub fn entries(&self) -> usize {
+        self.gauges.entries()
+    }
+
+    /// Outstanding `SegmentRef` handles.
+    pub fn refs(&self) -> usize {
+        self.gauges.refs()
+    }
+
+    /// Cumulative evictions.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::SeqCst)
+    }
+
+    /// Walk the boundary-hash chain for `tokens`, yielding
+    /// `(key, start, end)` per granule until the closure declines or the
+    /// cap (`end <= len - 1`) is reached.
+    fn walk(&self, tokens: &[u16],
+            mut f: impl FnMut(&SegmentKey, usize, usize) -> bool) {
+        let n = tokens.len();
+        let mut h = FNV_OFFSET;
+        let mut start = 0usize;
+        loop {
+            let end = start + self.granule;
+            if n < 2 || end > n - 1 {
+                return; // the last prompt token always stays private
+            }
+            h = fnv_extend(h, &tokens[start..end]);
+            let key = SegmentKey {
+                content_hash: h,
+                model: self.model.clone(),
+                policy: self.policy,
+            };
+            if !f(&key, start, end) {
+                return;
+            }
+            start = end;
+        }
+    }
+
+    /// Covered-token count if `tokens` were looked up now — no refs
+    /// taken, no LRU touch, no counters.  The dispatcher calls this per
+    /// candidate shard for affinity routing and the reservation shrink;
+    /// only the chosen shard pays for a real [`Self::lookup`].
+    pub fn probe(&self, tokens: &[u16]) -> usize {
+        let map = self.lock();
+        let mut covered = 0usize;
+        self.walk(tokens, |key, _, end| {
+            if map.contains_key(key) {
+                covered = end;
+                true
+            } else {
+                false
+            }
+        });
+        covered
+    }
+
+    /// Resolve the longest interned prefix of `tokens`: pins every
+    /// matched segment with a counted [`SegmentRef`] and bumps its LRU
+    /// clock.  Returns `None` on a cold prefix (nothing matched).
+    pub fn lookup(&self, tokens: &[u16]) -> Option<PrefixHit> {
+        let mut map = self.lock();
+        let now = self.tick.fetch_add(1, Ordering::SeqCst);
+        let mut segs = Vec::new();
+        let mut covered = 0usize;
+        self.walk(tokens, |key, _, end| match map.get_mut(key) {
+            Some(e) => {
+                e.last_used = now;
+                segs.push(SegmentRef::new(Arc::clone(&e.seg)));
+                covered = end;
+                true
+            }
+            None => false,
+        });
+        if covered == 0 {
+            None
+        } else {
+            Some(PrefixHit { segs, covered })
+        }
+    }
+
+    /// Intern every missing granule of `tokens` out of a freshly
+    /// prefilled dense slot (`kbuf`/`vbuf`, `[layers, heads, seq,
+    /// d_head]`): the cold session that just paid for prefill publishes
+    /// the exact fp32 rows it computed, then the byte cap is enforced by
+    /// LRU eviction.  Existing links are touched, never rewritten —
+    /// interned payloads are immutable (the CoW contract).  Returns the
+    /// number of segments newly interned.
+    pub fn intern(&self, tokens: &[u16], kbuf: &[f32], vbuf: &[f32],
+                  layout: &CacheLayout) -> usize {
+        let mut map = self.lock();
+        let now = self.tick.fetch_add(1, Ordering::SeqCst);
+        let mut added = 0usize;
+        self.walk(tokens, |key, start, end| {
+            match map.get_mut(key) {
+                Some(e) => e.last_used = now,
+                None => {
+                    let seg = Arc::new(CompressedSegment::from_slot(
+                        key.clone(), start, end, kbuf, vbuf, layout,
+                        Arc::clone(&self.gauges)));
+                    self.gauges.seg_entries.fetch_add(1, Ordering::SeqCst);
+                    map.insert(key.clone(), Entry { seg, last_used: now });
+                    added += 1;
+                }
+            }
+            true
+        });
+        if self.max_bytes > 0 {
+            self.enforce_budget(&mut map);
+        }
+        added
+    }
+
+    /// Evict LRU entries until the live payload fits `max_bytes` (or the
+    /// map is empty — pinned evicted payloads may keep `shared_bytes`
+    /// high until their readers drop; that memory is genuinely still in
+    /// use, so the cap keeps pressing on what the store can control).
+    fn enforce_budget(&self, map: &mut HashMap<SegmentKey, Entry>) {
+        while self.gauges.shared_bytes() > self.max_bytes && !map.is_empty() {
+            let oldest = map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map has a minimum");
+            self.remove_entry(map, &oldest);
+        }
+    }
+
+    fn remove_entry(&self, map: &mut HashMap<SegmentKey, Entry>,
+                    key: &SegmentKey) {
+        if map.remove(key).is_some() {
+            self.gauges.seg_entries.fetch_sub(1, Ordering::SeqCst);
+            self.evictions.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Drop every interned entry (churn tests, shutdown): payloads with
+    /// live readers survive until those readers drop.
+    pub fn evict_all(&self) {
+        let mut map = self.lock();
+        let keys: Vec<SegmentKey> = map.keys().cloned().collect();
+        for k in &keys {
+            self.remove_entry(&mut map, k);
+        }
+    }
+}
+
+impl std::fmt::Debug for PrefixStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PrefixStore")
+            .field("model", &self.model)
+            .field("policy", &self.policy)
+            .field("granule", &self.granule)
+            .field("max_bytes", &self.max_bytes)
+            .field("entries", &self.entries())
+            .field("shared_bytes", &self.shared_bytes())
+            .field("refs", &self.refs())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> CacheLayout {
+        CacheLayout { layers: 2, heads: 2, seq: 32, d_head: 4 }
+    }
+
+    fn slot_for(tokens: &[u16], lay: &CacheLayout) -> (Vec<f32>, Vec<f32>) {
+        // Position-pure pseudo rows, like the sim backend's kv_elem.
+        let n = lay.cache_len();
+        let mut k = vec![0f32; n];
+        let mut v = vec![0f32; n];
+        let (dh, smax) = (lay.d_head, lay.seq);
+        for p in 0..lay.layers * lay.heads {
+            for (pos, &t) in tokens.iter().enumerate() {
+                let off = p * smax * dh + pos * dh;
+                for c in 0..dh {
+                    k[off + c] = (p * 131 + pos * 17 + c + t as usize) as f32;
+                    v[off + c] = -(k[off + c]) * 0.5;
+                }
+            }
+        }
+        (k, v)
+    }
+
+    fn store(granule: usize, max_bytes: usize) -> Arc<PrefixStore> {
+        PrefixStore::new("micro", PolicyKind::Zipcache, granule, max_bytes)
+    }
+
+    #[test]
+    fn boundary_rule_caps_below_last_token() {
+        let s = store(4, 0);
+        let tokens: Vec<u16> = (0..13).collect();
+        let lay = layout();
+        let (k, v) = slot_for(&tokens, &lay);
+        // Boundaries at 4, 8, 12; 12 <= 13 - 1 so all three intern.
+        assert_eq!(s.intern(&tokens, &k, &v, &lay), 3);
+        assert_eq!(s.probe(&tokens), 12);
+        // A 12-token prompt can only use boundaries <= 11: covered = 8.
+        assert_eq!(s.probe(&tokens[..12]), 8);
+        // Too short for even one granule + private tail.
+        assert_eq!(s.probe(&tokens[..4]), 0);
+        assert_eq!(s.probe(&tokens[..1]), 0);
+    }
+
+    #[test]
+    fn lookup_is_prefix_exact_not_granule_exact() {
+        let s = store(4, 0);
+        let lay = layout();
+        let a: Vec<u16> = (0..13).collect();
+        let (k, v) = slot_for(&a, &lay);
+        s.intern(&a, &k, &v, &lay);
+        // Same first granule, divergent second: only granule 0 hits —
+        // the chain hash at boundary 8 commits to tokens[0..8].
+        let mut b = a.clone();
+        b[6] = 200;
+        assert_eq!(s.probe(&b), 4);
+        // Divergence inside granule 0: full miss.
+        let mut c = a.clone();
+        c[0] = 99;
+        assert_eq!(s.probe(&c), 0);
+        let hit = s.lookup(&a).unwrap();
+        assert_eq!(hit.covered, 12);
+        assert_eq!(hit.segs.len(), 3);
+        assert_eq!(s.refs(), 3);
+        drop(hit);
+        assert_eq!(s.refs(), 0);
+    }
+
+    #[test]
+    fn materialized_rows_match_the_interning_slot() {
+        let s = store(4, 0);
+        let lay = layout();
+        let tokens: Vec<u16> = (5..18).collect();
+        let (k, v) = slot_for(&tokens, &lay);
+        s.intern(&tokens, &k, &v, &lay);
+        let hit = s.lookup(&tokens).unwrap();
+        let mut k2 = vec![0f32; lay.cache_len()];
+        let mut v2 = vec![0f32; lay.cache_len()];
+        for r in &hit.segs {
+            r.segment().materialize_into(&mut k2, &mut v2, &lay);
+        }
+        let (dh, smax) = (lay.d_head, lay.seq);
+        for p in 0..lay.layers * lay.heads {
+            let off = p * smax * dh;
+            let cov = hit.covered * dh;
+            assert_eq!(&k2[off..off + cov], &k[off..off + cov]);
+            assert_eq!(&v2[off..off + cov], &v[off..off + cov]);
+        }
+    }
+
+    #[test]
+    fn lru_eviction_under_byte_cap() {
+        let lay = layout();
+        // One granule = 2 planes * 2 * 4 tokens * 4 dh * 4 B * 2 (k+v)
+        let seg_bytes = 2 * lay.layers * lay.heads * 4 * lay.d_head * 4;
+        let s = store(4, 2 * seg_bytes);
+        let a: Vec<u16> = (0..9).collect();
+        let (ka, va) = slot_for(&a, &lay);
+        s.intern(&a, &ka, &va, &lay); // granules 0..4, 4..8
+        assert_eq!(s.entries(), 2);
+        // Touch prefix a so its first granule is recent.
+        s.lookup(&a);
+        let b: Vec<u16> = (100..109).collect();
+        let (kb, vb) = slot_for(&b, &lay);
+        s.intern(&b, &kb, &vb, &lay);
+        assert!(s.shared_bytes() <= 2 * seg_bytes,
+                "cap must hold: {} > {}", s.shared_bytes(), 2 * seg_bytes);
+        assert!(s.evictions() >= 2);
+        assert_eq!(s.entries(), 2);
+    }
+
+    #[test]
+    fn deferred_reclamation_survives_evict_all() {
+        let s = store(4, 0);
+        let lay = layout();
+        let tokens: Vec<u16> = (0..9).collect();
+        let (k, v) = slot_for(&tokens, &lay);
+        s.intern(&tokens, &k, &v, &lay);
+        let hit = s.lookup(&tokens).unwrap();
+        let pinned = s.shared_bytes();
+        assert!(pinned > 0);
+        s.evict_all();
+        assert_eq!(s.entries(), 0);
+        assert_eq!(s.probe(&tokens), 0, "evicted links must not match");
+        // The reader still holds the payload...
+        assert_eq!(s.shared_bytes(), pinned);
+        let mut k2 = vec![0f32; lay.cache_len()];
+        let mut v2 = vec![0f32; lay.cache_len()];
+        for r in &hit.segs {
+            r.segment().materialize_into(&mut k2, &mut v2, &lay);
+        }
+        // ...and only its drop releases the bytes: nothing leaks.
+        drop(hit);
+        assert_eq!(s.shared_bytes(), 0);
+        assert_eq!(s.refs(), 0);
+    }
+
+    #[test]
+    fn reintern_after_eviction_is_bitwise_stable() {
+        let s = store(4, 0);
+        let lay = layout();
+        let tokens: Vec<u16> = (3..16).collect();
+        let (k, v) = slot_for(&tokens, &lay);
+        s.intern(&tokens, &k, &v, &lay);
+        let first = s.lookup(&tokens).unwrap();
+        s.evict_all();
+        s.intern(&tokens, &k, &v, &lay);
+        let second = s.lookup(&tokens).unwrap();
+        let mat = |hit: &PrefixHit| {
+            let mut k2 = vec![0f32; lay.cache_len()];
+            let mut v2 = vec![0f32; lay.cache_len()];
+            for r in &hit.segs {
+                r.segment().materialize_into(&mut k2, &mut v2, &lay);
+            }
+            (k2, v2)
+        };
+        assert_eq!(mat(&first), mat(&second));
+    }
+}

@@ -1,0 +1,313 @@
+//! Immutable shared-prefix segments (DESIGN.md §16).
+//!
+//! A [`CompressedSegment`] is one interned granule of a shared prompt
+//! prefix: the *exact* dense fp32 K/V prefill rows for token positions
+//! `[start, end)`, keyed by the rolling content hash of every token up
+//! to `end` plus the model and quantization policy.  Segments are
+//! created once by the first (cold) session to prefill the prefix and
+//! are **never mutated afterwards** — a warm session copies the rows
+//! into its own pinned `DenseSlot` and every write it ever performs
+//! (quantization, recompression, decode appends) lands in
+//! session-private state.  That is the copy-on-write contract: forks
+//! diverge by appending, shared history is frozen.
+//!
+//! Why exact fp32 rows and not packed quantized planes?  ZipCache's
+//! quantization parameters are per-(layer, head, class) subset
+//! statistics over the *request's* saliency partition, and saliency is
+//! a function of the full prompt (and, on the flash path, of the
+//! probe positions derived from the request seed).  Two requests that
+//! share a prefix but differ in their tails therefore assign different
+//! classes and different quant params to the same prefix tokens —
+//! packed planes can never be shared bit-identically.  The dense
+//! prefill rows, by contrast, are a pure function of `(token,
+//! position)` per position, so the shared span *is* bitwise stable
+//! across requests.  Sharing them trades memory dedup for prefill
+//! compute dedup: the warm win is the skipped prefill work (the
+//! paper's dominant serving cost), while each session still compresses
+//! its full span privately and pays its own compressed footprint.
+//!
+//! Reclamation is deferred via `Arc`: the store's eviction only drops
+//! its own map entry; live [`SegmentRef`]s keep the payload alive until
+//! the last reader drops, at which point [`CompressedSegment::drop`]
+//! releases the `shared_bytes` gauge.  Readers never block eviction and
+//! eviction never invalidates a reader.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::config::PolicyKind;
+use crate::kvcache::store::CacheLayout;
+
+/// Identity of one interned segment (DESIGN.md §16): the rolling FNV-1a
+/// hash of the token prefix through this segment's end boundary, plus
+/// the model and quantization-policy coordinates.  The hash chain
+/// commits to the *entire* prefix (each boundary hash extends the
+/// previous one), so equal keys imply equal token history, not merely
+/// equal granule content.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SegmentKey {
+    /// Rolling FNV-1a over `tokens[0 .. end]` (little-endian u16 bytes).
+    pub content_hash: u64,
+    /// Model name — row values are model-keyed.
+    pub model: String,
+    /// Policy kind the segment was interned under.  The fp32 payload is
+    /// policy-independent, but keying on the policy keeps the store
+    /// partitioned the way compressed cold-tier segments will need.
+    pub policy: PolicyKind,
+}
+
+/// Gauges shared by the store and every outstanding segment / ref, so
+/// deferred reclamation can release byte accounting at the true end of
+/// life (last `Arc` drop), not at map removal (DESIGN.md §16).
+#[derive(Debug, Default)]
+pub struct SegmentGauges {
+    // lint: gauge — payload bytes of live interned segments on this
+    // shard; inc at `PrefixStore::intern`, dec in
+    // `CompressedSegment::drop` (deferred reclamation).
+    pub(crate) shared_bytes: AtomicUsize,
+    // lint: gauge — interned map entries; inc at `PrefixStore::intern`,
+    // dec at eviction / `evict_all` map removal.
+    pub(crate) seg_entries: AtomicUsize,
+    // lint: gauge — outstanding `SegmentRef` handles across all
+    // sessions; inc at `SegmentRef::new` / `clone`, dec in
+    // `SegmentRef::drop`.
+    pub(crate) seg_refs: AtomicUsize,
+}
+
+impl SegmentGauges {
+    pub fn shared_bytes(&self) -> usize {
+        self.shared_bytes.load(Ordering::SeqCst)
+    }
+    pub fn entries(&self) -> usize {
+        self.seg_entries.load(Ordering::SeqCst)
+    }
+    pub fn refs(&self) -> usize {
+        self.seg_refs.load(Ordering::SeqCst)
+    }
+}
+
+/// One immutable interned prefix granule: dense `[layers, heads, span,
+/// d_head]` K/V rows for token positions `[start, end)` (see the module
+/// docs for why the shared form is the exact fp32 rows).  The name
+/// keeps the subsystem's unit-of-sharing term even though the payload
+/// is the pre-compression form: it is the segment the *compressed*
+/// session view is assembled from, and the cold-tier ROADMAP item
+/// entropy-codes exactly these immutable payloads.
+pub struct CompressedSegment {
+    pub key: SegmentKey,
+    /// First token position covered (inclusive).
+    pub start: usize,
+    /// One past the last token position covered.
+    pub end: usize,
+    /// Dense K rows, `[layers, heads, end - start, d_head]`.
+    k_rows: Vec<f32>,
+    /// Dense V rows, same shape.
+    v_rows: Vec<f32>,
+    /// Payload bytes charged to `shared_bytes` (k + v).
+    bytes: usize,
+    gauges: Arc<SegmentGauges>,
+}
+
+impl CompressedSegment {
+    /// Intern-side constructor: copies the `[start, end)` rows out of a
+    /// dense `[layers, heads, seq, d_head]` slot buffer pair and charges
+    /// `shared_bytes`.  Only `PrefixStore::intern` calls this.
+    pub(crate) fn from_slot(key: SegmentKey, start: usize, end: usize,
+                            kbuf: &[f32], vbuf: &[f32], layout: &CacheLayout,
+                            gauges: Arc<SegmentGauges>) -> Self {
+        debug_assert!(start < end && end <= layout.seq);
+        let (planes, dh, smax) =
+            (layout.layers * layout.heads, layout.d_head, layout.seq);
+        let span = end - start;
+        let mut k_rows = vec![0f32; planes * span * dh];
+        let mut v_rows = vec![0f32; planes * span * dh];
+        for p in 0..planes {
+            let src = p * smax * dh + start * dh;
+            let dst = p * span * dh;
+            k_rows[dst..dst + span * dh]
+                .copy_from_slice(&kbuf[src..src + span * dh]);
+            v_rows[dst..dst + span * dh]
+                .copy_from_slice(&vbuf[src..src + span * dh]);
+        }
+        let bytes = (k_rows.len() + v_rows.len()) * std::mem::size_of::<f32>();
+        gauges.shared_bytes.fetch_add(bytes, Ordering::SeqCst);
+        CompressedSegment { key, start, end, k_rows, v_rows, bytes, gauges }
+    }
+
+    /// Number of token positions covered.
+    pub fn span(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// Payload bytes charged to the `shared_bytes` gauge.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Copy the rows back into a dense `[layers, heads, seq, d_head]`
+    /// slot buffer pair at their home positions — the warm-path inverse
+    /// of [`Self::from_slot`], bitwise (fp32 moves, no arithmetic).
+    pub fn materialize_into(&self, kbuf: &mut [f32], vbuf: &mut [f32],
+                            layout: &CacheLayout) {
+        let (planes, dh, smax) =
+            (layout.layers * layout.heads, layout.d_head, layout.seq);
+        let span = self.span();
+        debug_assert!(self.end <= smax);
+        for p in 0..planes {
+            let src = p * span * dh;
+            let dst = p * smax * dh + self.start * dh;
+            kbuf[dst..dst + span * dh]
+                .copy_from_slice(&self.k_rows[src..src + span * dh]);
+            vbuf[dst..dst + span * dh]
+                .copy_from_slice(&self.v_rows[src..src + span * dh]);
+        }
+    }
+}
+
+impl Drop for CompressedSegment {
+    /// Deferred reclamation endpoint: the payload's byte charge is
+    /// released only when the last `Arc` (store entry or live reader)
+    /// drops, so eviction under concurrent readers leaks nothing and
+    /// frees nothing early.
+    fn drop(&mut self) {
+        self.gauges.shared_bytes.fetch_sub(self.bytes, Ordering::SeqCst);
+    }
+}
+
+impl std::fmt::Debug for CompressedSegment {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompressedSegment")
+            .field("hash", &format_args!("{:016x}", self.key.content_hash))
+            .field("range", &(self.start..self.end))
+            .field("bytes", &self.bytes)
+            .finish()
+    }
+}
+
+/// A counted read handle on an interned segment.  Cloning and dropping
+/// adjust the store's `seg_refs` gauge, so the churn tests can assert
+/// that eviction plus session teardown drains every handle; the payload
+/// itself lives as long as any handle does (deferred reclamation).
+pub struct SegmentRef {
+    seg: Arc<CompressedSegment>,
+}
+
+impl SegmentRef {
+    pub(crate) fn new(seg: Arc<CompressedSegment>) -> Self {
+        seg.gauges.seg_refs.fetch_add(1, Ordering::SeqCst);
+        SegmentRef { seg }
+    }
+
+    pub fn segment(&self) -> &CompressedSegment {
+        &self.seg
+    }
+}
+
+impl Clone for SegmentRef {
+    fn clone(&self) -> Self {
+        SegmentRef::new(Arc::clone(&self.seg))
+    }
+}
+
+impl Drop for SegmentRef {
+    fn drop(&mut self) {
+        self.seg.gauges.seg_refs.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl std::fmt::Debug for SegmentRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SegmentRef({:016x}, {}..{})",
+               self.seg.key.content_hash, self.seg.start, self.seg.end)
+    }
+}
+
+/// A resolved prefix hit travelling with a request: the pinned segment
+/// chain plus the covered token count (`covered` = sum of spans, always
+/// `<= prompt_len - 1` so the last prompt token is prefilled privately).
+/// Dropping the hit (request shed, cancel, redelivery) releases the
+/// refs; cloning pins them again — both through [`SegmentRef`]'s
+/// counted handles.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixHit {
+    pub segs: Vec<SegmentRef>,
+    pub covered: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> CacheLayout {
+        CacheLayout { layers: 2, heads: 3, seq: 16, d_head: 4 }
+    }
+
+    fn key(h: u64) -> SegmentKey {
+        SegmentKey { content_hash: h, model: "micro".into(),
+                     policy: PolicyKind::Zipcache }
+    }
+
+    #[test]
+    fn from_slot_roundtrips_bitwise() {
+        let lay = layout();
+        let g = Arc::new(SegmentGauges::default());
+        let n = lay.cache_len();
+        let kbuf: Vec<f32> = (0..n).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let vbuf: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        let seg = CompressedSegment::from_slot(key(7), 2, 9, &kbuf, &vbuf,
+                                               &lay, Arc::clone(&g));
+        assert_eq!(seg.span(), 7);
+        assert_eq!(g.shared_bytes(), seg.bytes());
+        let mut k2 = vec![0f32; n];
+        let mut v2 = vec![0f32; n];
+        seg.materialize_into(&mut k2, &mut v2, &lay);
+        let (dh, smax) = (lay.d_head, lay.seq);
+        for p in 0..lay.layers * lay.heads {
+            for pos in 0..smax {
+                let off = p * smax * dh + pos * dh;
+                if (2..9).contains(&pos) {
+                    assert_eq!(&k2[off..off + dh], &kbuf[off..off + dh]);
+                    assert_eq!(&v2[off..off + dh], &vbuf[off..off + dh]);
+                } else {
+                    assert!(k2[off..off + dh].iter().all(|&x| x == 0.0));
+                }
+            }
+        }
+        drop(seg);
+        assert_eq!(g.shared_bytes(), 0, "drop must release the byte charge");
+    }
+
+    #[test]
+    fn refs_gauge_balances_across_clones() {
+        let lay = layout();
+        let g = Arc::new(SegmentGauges::default());
+        let buf = vec![1f32; lay.cache_len()];
+        let seg = Arc::new(CompressedSegment::from_slot(
+            key(1), 0, 4, &buf, &buf, &lay, Arc::clone(&g)));
+        let r1 = SegmentRef::new(Arc::clone(&seg));
+        assert_eq!(g.refs(), 1);
+        let r2 = r1.clone();
+        let r3 = r2.clone();
+        assert_eq!(g.refs(), 3);
+        drop(r1);
+        drop(seg);
+        assert_eq!(g.refs(), 2);
+        assert!(g.shared_bytes() > 0,
+                "live refs keep the payload (deferred reclamation)");
+        drop((r2, r3));
+        assert_eq!(g.refs(), 0);
+        assert_eq!(g.shared_bytes(), 0);
+    }
+
+    #[test]
+    fn keys_commit_to_policy_and_model() {
+        let a = key(5);
+        let mut b = key(5);
+        assert_eq!(a, b);
+        b.policy = PolicyKind::Gear;
+        assert_ne!(a, b);
+        let mut c = key(5);
+        c.model = "tiny".into();
+        assert_ne!(a, c);
+    }
+}

@@ -228,6 +228,24 @@ pub fn worst_case_resident_bytes(
     payload + params + metadata + tail
 }
 
+/// Per-token shrink of the admission reservation on a prefix hit
+/// (DESIGN.md §16): `worst_case_resident_bytes` charges every token 2
+/// B/value fp16 K/V payload, but under an all-quantized policy (GEAR /
+/// MiKV / ZipCache assign only `PrecisionClass::Bits(<= 8)`) no token's
+/// *payload* ever exceeds 1 B/value — half the fp16 charge — so the
+/// dispatcher can safely hand back half the payload charge for each
+/// covered token.  The bound is a policy-wide property, not a
+/// hit-outcome property: it stays sound even if the probed hit
+/// evaporates before the session starts (eviction race, redelivery to a
+/// cold shard), because the session's actual payload obeys the same
+/// per-token ceiling either way.  Policies that can assign `Fp16`
+/// classes (fp16 / H2O / KIVI windows) get no shrink — the caller
+/// passes 0.  Params/metadata/tail slack in the worst-case bound is
+/// never shrunk.
+pub fn prefix_reservation_shrink(layout: CacheLayout) -> usize {
+    layout.fp16_baseline_bytes(1) / 2
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,6 +317,30 @@ mod tests {
         let w8 = worst_case_resident_bytes(lay, 8, 100);
         assert!(w4 > lay.fp16_baseline_bytes(4));
         assert!(w8 > w4, "bound must grow with the window");
+    }
+
+    #[test]
+    fn prefix_shrink_stays_under_the_bound_growth() {
+        // Shrinking `covered` tokens off a reservation must never push
+        // it below the worst case of the remaining window under an
+        // all-Bits policy: the shrink is exactly half the per-token
+        // fp16 payload charge, and 8-bit payload is exactly half of
+        // fp16 at every granularity, so bound(n) - covered * shrink
+        // still dominates payload(n at 8 bit) + full slack.
+        let lay = layout();
+        let shrink = prefix_reservation_shrink(lay);
+        assert_eq!(shrink, lay.fp16_baseline_bytes(1) / 2);
+        let n = 8usize;
+        for covered in 0..n {
+            let reserved = worst_case_resident_bytes(lay, n, 4) - covered * shrink;
+            // 8-bit payload for all n tokens (1 B/value K and V).
+            let widest_payload = lay.fp16_baseline_bytes(n) / 2;
+            let slack = worst_case_resident_bytes(lay, n, 4)
+                - lay.fp16_baseline_bytes(n);
+            assert!(reserved >= widest_payload + slack,
+                    "covered={covered}: shrunk reservation {reserved} below \
+                     all-8-bit worst case {}", widest_payload + slack);
+        }
     }
 
     #[test]

@@ -44,6 +44,11 @@ fn main() -> Result<()> {
           "per-shard worst-case byte budget for admission (0 = unlimited)")
     .flag("prefill-chunk", "0",
           "prefill chunk size in tokens (0 = monolithic single pass)")
+    .switch("prefix-cache",
+            "enable the shared-prefix segment store (DESIGN.md §16)")
+    .flag("prefix-max-bytes", "0",
+          "per-shard byte cap on interned prefix segments (0 = unlimited; \
+           required non-zero and below --memory-budget when both are set)")
     .flag("config", "", "optional key=value config file (overrides flags)")
     .flag("task", "gsm", "gsm | code | linesN (e.g. lines20)")
     .flag("samples", "50", "eval: number of samples")
@@ -52,7 +57,7 @@ fn main() -> Result<()> {
     .flag("rate", "8.0", "serve: arrival rate (req/s)")
     .flag("trace", "poisson",
           "serve: poisson | memory-pressure | priority-mix | long-prompt-burst \
-           | chaos")
+           | chaos | shared-prefix")
     .flag("fault-plan", "",
           "serve: fault-injection plan, e.g. 'shard0:decode:2:panic' \
            (DESIGN.md §14; empty = fault-free)")
@@ -100,6 +105,8 @@ fn build_config(args: &Args) -> Result<EngineConfig> {
     cfg.memory.slots = args.get_usize("memory-slots")?;
     cfg.memory.budget_bytes = args.get_usize("memory-budget")?;
     cfg.scheduler.prefill_chunk = args.get_usize("prefill-chunk")?;
+    cfg.prefix.enable = args.get_bool("prefix-cache");
+    cfg.prefix.max_bytes = args.get_usize("prefix-max-bytes")?;
     cfg.faults.plan = args.get("fault-plan");
     cfg.seed = args.get_u64("seed")?;
     cfg.faults.seed = cfg.seed;
@@ -200,9 +207,14 @@ fn serve(cfg: EngineConfig, task: Task, requests: usize, rate: f64, max_new: usi
         "long-prompt-burst" => loadgen::long_prompt_burst_trace(
             info.max_seq, requests, max_new, cfg.seed),
         "chaos" => loadgen::chaos_trace(info.max_seq, requests, cfg.seed),
+        // One roll: a warm phase on the shared system prompt, then the
+        // prompt rotates and the store churns (DESIGN.md §16).
+        "shared-prefix" => loadgen::shared_prefix_trace(info.max_seq, requests, 1,
+                                                        cfg.seed),
         other => anyhow::bail!(
             "unknown trace '{other}' \
-             (poisson|memory-pressure|priority-mix|long-prompt-burst|chaos)"
+             (poisson|memory-pressure|priority-mix|long-prompt-burst|chaos\
+             |shared-prefix)"
         ),
     };
     let report = loadgen::replay(&server.handle, &trace)?;
@@ -288,6 +300,20 @@ fn serve(cfg: EngineConfig, task: Task, requests: usize, rate: f64, max_new: usi
         snap.total.redelivered,
         snap.total.failed_sessions,
     );
+    if cfg.prefix.enable {
+        println!(
+            "prefix cache (DESIGN.md §16): prefix_hits {} (trace expected {}), \
+             prefix_misses {} (expected {}), prefill tokens skipped {}, \
+             prefix_evictions {}, shared_segment_bytes {}",
+            snap.total.prefix_hits,
+            report.expected_prefix_hits,
+            snap.total.prefix_misses,
+            report.expected_prefix_misses,
+            snap.total.prefill_tokens_skipped,
+            snap.total.prefix_evictions,
+            snap.total.shared_segment_bytes,
+        );
+    }
     for (i, m) in snap.per_shard.iter().enumerate() {
         println!("  shard {i}: {} req, {} tok", m.requests_completed,
                  m.tokens_generated);

@@ -170,6 +170,26 @@ pub struct EngineMetrics {
     /// Live sessions lost to a shard failure: their callers saw
     /// `FinishReason::ShardFailed` with the tokens streamed so far.
     pub failed_sessions: u64,
+    /// Sessions admitted warm off the shared-prefix store
+    /// (DESIGN.md §16).  Engine-lifetime counter; sums across shards.
+    pub prefix_hits: u64,
+    /// Sessions admitted with the prefix machinery active but no usable
+    /// hit (cold prefill over the whole prompt).
+    pub prefix_misses: u64,
+    /// Prompt tokens whose prefill compute was skipped by warm hits
+    /// (the sum of covered spans — the work the store actually saved).
+    pub prefill_tokens_skipped: u64,
+    /// Segments LRU-evicted from the shared store to stay inside
+    /// `prefix.max_bytes`.  Store-derived snapshot: the supervisor zeros
+    /// it in a respawned shard's baseline because the store — unlike the
+    /// engine — survives the restart (DESIGN.md §14/§16).
+    pub prefix_evictions: u64,
+    /// Bytes interned in the shared store right now, counted once per
+    /// shard no matter how many sessions pin the segments — the
+    /// complement of `resident_bytes`, which deliberately excludes
+    /// shared segments (single-count invariant, DESIGN.md §16).
+    /// Store-derived snapshot, zeroed like `prefix_evictions` at respawn.
+    pub shared_segment_bytes: u64,
 }
 
 impl EngineMetrics {
@@ -237,6 +257,13 @@ impl EngineMetrics {
         self.shard_restarts += other.shard_restarts;
         self.redelivered += other.redelivered;
         self.failed_sessions += other.failed_sessions;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_misses += other.prefix_misses;
+        self.prefill_tokens_skipped += other.prefill_tokens_skipped;
+        self.prefix_evictions += other.prefix_evictions;
+        // Per-shard stores are disjoint, so current shared bytes add
+        // exactly — same argument as `resident_bytes`.
+        self.shared_segment_bytes += other.shared_segment_bytes;
     }
 }
 
@@ -384,6 +411,28 @@ mod tests {
         assert_eq!(a.prefill_chunk.count(), 3);
         assert_eq!(a.prefill_chunks, 3);
         assert!((a.prefill_chunk.p50_ms() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefix_counters_sum_across_shards() {
+        let mut a = EngineMetrics::default();
+        a.prefix_hits = 2;
+        a.prefix_misses = 1;
+        a.prefill_tokens_skipped = 48;
+        a.prefix_evictions = 1;
+        a.shared_segment_bytes = 1024;
+        let mut b = EngineMetrics::default();
+        b.prefix_hits = 1;
+        b.prefix_misses = 3;
+        b.shared_segment_bytes = 512;
+        let snap = MetricsSnapshot::aggregate(vec![a, b]);
+        assert_eq!(snap.total.prefix_hits, 3);
+        assert_eq!(snap.total.prefix_misses, 4);
+        assert_eq!(snap.total.prefill_tokens_skipped, 48);
+        assert_eq!(snap.total.prefix_evictions, 1);
+        // Disjoint per-shard stores: shared bytes sum exactly.
+        assert_eq!(snap.total.shared_segment_bytes, 1536);
+        assert_eq!(snap.per_shard[1].prefix_misses, 3);
     }
 
     #[test]

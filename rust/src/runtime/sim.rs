@@ -102,6 +102,8 @@ impl SimModel {
             "prefill_flash",
             "prefill_chunk_full",
             "prefill_chunk_flash",
+            "prefill_sal_full",
+            "prefill_sal_flash",
             "prefill_fin_full",
             "prefill_fin_flash",
             "decode",
@@ -220,6 +222,8 @@ impl SimModel {
             "prefill_flash" => self.prefill(inputs, false, scr),
             "prefill_chunk_full" => self.prefill_chunk(inputs, true, scr),
             "prefill_chunk_flash" => self.prefill_chunk(inputs, false, scr),
+            "prefill_sal_full" => self.prefill_sal(inputs, true, scr),
+            "prefill_sal_flash" => self.prefill_sal(inputs, false, scr),
             "prefill_fin_full" => self.prefill_fin(inputs, true, scr),
             "prefill_fin_flash" => self.prefill_fin(inputs, false, scr),
             "decode" => self.decode(inputs, scr),
@@ -415,6 +419,79 @@ impl SimModel {
             // The engine passes the full sorted probe list every chunk;
             // the probes owned by this chunk are the contiguous run in
             // [start, end), visited in the monolithic order.
+            for l in 0..layers {
+                let base = l * smax;
+                for &p in pidx.iter().filter(|&&p| p >= start && p < end) {
+                    self.attn_row_into(l, tokens[p], p, valid, row);
+                    for i in 0..smax {
+                        sal[base + i] += row[i];
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Saliency-only catch-up for a shared-prefix hit (DESIGN.md §16):
+    /// exactly the saliency half of [`Self::prefill_chunk`] — the same
+    /// `acc += row` addition sequence for queries (full) or probe rows
+    /// (flash) in `[start, end)` — with the KV loop elided, because the
+    /// warm path seeds those rows from interned segments instead of
+    /// recomputing them.  Inputs: tokens `[smax]`, valid `[smax]`, start,
+    /// end (scalars), probe idx `[pc]` on the flash path, sal_in
+    /// `[layers, smax]`.  Output: updated accumulator `[layers, smax]`.
+    // lint: cold-path — once per warm prefix admission, outside the §9
+    // steady-decode contract (DESIGN.md §13, §16).
+    fn prefill_sal(&self, inputs: &[TensorView<'_>], full: bool,
+                   scr: &mut ExecScratch) -> Result<()> {
+        let info = &self.info;
+        let (smax, layers) = (info.max_seq, info.n_layers);
+        let n_in = if full { 5 } else { 6 };
+        anyhow::ensure!(inputs.len() == n_in,
+                        "sim prefill_sal: need tokens,valid,start,end{}sal_in",
+                        if full { "," } else { ",pidx," });
+        let tokens: Vec<u16> = match &inputs[0] {
+            TensorView::I32 { data, .. } => data.iter().map(|&t| t as u16).collect(),
+            _ => anyhow::bail!("sim prefill_sal: tokens must be i32"),
+        };
+        let valid = inputs[1].as_f32();
+        let start = match &inputs[2] {
+            TensorView::I32 { data, .. } => data[0] as usize,
+            _ => anyhow::bail!("sim prefill_sal: start must be i32"),
+        };
+        let end = match &inputs[3] {
+            TensorView::I32 { data, .. } => data[0] as usize,
+            _ => anyhow::bail!("sim prefill_sal: end must be i32"),
+        };
+        let sal_in = inputs[n_in - 1].as_f32();
+        anyhow::ensure!(tokens.len() == smax && valid.len() == smax,
+                        "sim prefill_sal: window mismatch");
+        anyhow::ensure!(start < end && end <= smax,
+                        "sim prefill_sal: bad range [{start}, {end})");
+        anyhow::ensure!(sal_in.len() == layers * smax,
+                        "sim prefill_sal: accumulator mismatch");
+
+        scr.ensure_outs(1);
+        let ExecScratch { outs, row, .. } = scr;
+        let sal = outs[0].reset_f32(&[layers, smax]);
+        sal.copy_from_slice(sal_in);
+        row.resize(smax, 0.0);
+        if full {
+            for l in 0..layers {
+                for q in start..end {
+                    self.attn_row_into(l, tokens[q], q, valid, row);
+                    for i in 0..smax {
+                        sal[l * smax + i] += row[i];
+                    }
+                }
+            }
+        } else {
+            let pidx: Vec<usize> = match &inputs[4] {
+                TensorView::I32 { data, .. } => {
+                    data.iter().map(|&i| (i.max(0) as usize).min(smax - 1)).collect()
+                }
+                _ => anyhow::bail!("sim prefill_sal: probe idx must be i32"),
+            };
             for l in 0..layers {
                 let base = l * smax;
                 for &p in pidx.iter().filter(|&&p| p >= start && p < end) {
@@ -636,8 +713,89 @@ mod tests {
         let m = model();
         assert!(m.entries().contains(&"decode_micro".to_string()));
         assert!(m.entries().contains(&"prefill_chunk_full_micro".to_string()));
+        assert!(m.entries().contains(&"prefill_sal_full_micro".to_string()));
+        assert!(m.entries().contains(&"prefill_sal_flash_micro".to_string()));
         assert!(m.entries().contains(&"prefill_fin_flash_micro".to_string()));
         assert!(m.execute("decode_tiny", &[]).is_err());
+    }
+
+    /// The saliency-only catch-up entry must be bitwise the saliency half
+    /// of `prefill_chunk` over the same range (DESIGN.md §16): a warm
+    /// session replaying `prefill_sal` over the covered prefix and then
+    /// normal chunks over the suffix lands on the monolithic accumulator.
+    #[test]
+    fn sal_catchup_matches_chunk_saliency_bitwise() {
+        let m = model();
+        let info = m.info().clone();
+        let (smax, layers) = (info.max_seq, info.n_layers);
+        let n = 11usize;
+        let mut tokens = vec![0i32; smax];
+        let mut valid = vec![0f32; smax];
+        for i in 0..n {
+            tokens[i] = (i as i32 * 7 + 3) % 256;
+            valid[i] = 1.0;
+        }
+        let pidx = vec![0i32, 2, 5, 10, 10, 10];
+
+        for &full in &[true, false] {
+            for &covered in &[1usize, 4, 8] {
+                // Reference: chunk entries over [0, covered) with the
+                // covered span's prefix-switched valid masks.
+                let mut want = vec![0f32; layers * smax];
+                let mut start = 0usize;
+                while start < covered {
+                    let end = (start + 3).min(covered);
+                    let mut cvalid = vec![0f32; smax];
+                    for x in cvalid.iter_mut().take(end) {
+                        *x = 1.0;
+                    }
+                    let mut ins = vec![
+                        Tensor::i32(tokens.clone(), &[smax]),
+                        Tensor::f32(cvalid, &[smax]),
+                        Tensor::scalar_i32(start as i32),
+                        Tensor::scalar_i32(end as i32),
+                    ];
+                    if !full {
+                        ins.push(Tensor::i32(pidx.clone(), &[pidx.len()]));
+                    }
+                    ins.push(Tensor::f32(want.clone(), &[layers, smax]));
+                    let entry = if full {
+                        "prefill_chunk_full_micro"
+                    } else {
+                        "prefill_chunk_flash_micro"
+                    };
+                    let out = m.execute(entry, &ins).unwrap();
+                    want.copy_from_slice(out[2].as_f32());
+                    start = end;
+                }
+
+                // One catch-up call over the whole covered span.
+                let mut cvalid = vec![0f32; smax];
+                for x in cvalid.iter_mut().take(covered) {
+                    *x = 1.0;
+                }
+                let mut ins = vec![
+                    Tensor::i32(tokens.clone(), &[smax]),
+                    Tensor::f32(cvalid, &[smax]),
+                    Tensor::scalar_i32(0),
+                    Tensor::scalar_i32(covered as i32),
+                ];
+                if !full {
+                    ins.push(Tensor::i32(pidx.clone(), &[pidx.len()]));
+                }
+                ins.push(Tensor::f32(vec![0f32; layers * smax],
+                                     &[layers, smax]));
+                let entry = if full {
+                    "prefill_sal_full_micro"
+                } else {
+                    "prefill_sal_flash_micro"
+                };
+                let got = m.execute(entry, &ins).unwrap();
+                assert_eq!(got.len(), 1, "sal entry emits the accumulator only");
+                assert_eq!(got[0].as_f32(), &want[..],
+                           "sal catch-up mismatch (full={full}, covered={covered})");
+            }
+        }
     }
 
     /// Chunked prefill replayed at the runtime boundary must reproduce the

@@ -47,6 +47,7 @@ use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::request::GenerationRequest;
+use crate::kvcache::PrefixStore;
 use crate::Result;
 
 use super::ResponseEvent;
@@ -59,6 +60,10 @@ pub(crate) struct AdmitRequest {
     /// Worst-case resident footprint, reserved against the per-shard
     /// byte budget when one is configured.
     pub wc_bytes: usize,
+    /// Per-covered-token reservation discount on a prefix hit
+    /// ([`crate::kvcache::prefix_reservation_shrink`]; 0 when the
+    /// policy is ineligible or the prefix store is off — DESIGN.md §16).
+    pub shrink_per_token: usize,
     /// Streamed token / final response channel back to the handle.
     pub reply: Sender<ResponseEvent>,
 }
@@ -110,6 +115,13 @@ pub(crate) struct Dispatcher {
     queue_depth: usize,
     /// Per-shard worst-case byte budget; 0 = unlimited.
     budget_bytes: usize,
+    /// Per-shard shared-prefix stores (DESIGN.md §16): empty when prefix
+    /// caching is off, else one per shard.  Owned here — not by the
+    /// engines — so interned segments survive shard respawns; routing
+    /// probes them for affinity and subtracts their `shared_bytes` from
+    /// the shard's admission budget (the store is budgeted *inside*
+    /// `memory.budget_bytes`, never on top of it).
+    prefix_stores: Vec<Arc<PrefixStore>>,
     next_tag: AtomicU64,
 }
 
@@ -199,6 +211,7 @@ pub(crate) fn build(
         queued,
         queue_depth,
         budget_bytes,
+        prefix_stores: Vec::new(),
         next_tag: AtomicU64::new(0),
     };
     (dispatcher, ctxs)
@@ -223,6 +236,41 @@ fn try_reserve(a: &AtomicUsize, n: usize, bound: usize) -> bool {
 impl Dispatcher {
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Install the per-shard prefix stores (DESIGN.md §16).  Called once
+    /// by `Server::start` before the dispatcher is shared; empty leaves
+    /// prefix caching off and routing byte-identical to its prior form.
+    pub fn set_prefix_stores(&mut self, stores: Vec<Arc<PrefixStore>>) {
+        assert!(stores.is_empty() || stores.len() == self.shards.len(),
+                "one prefix store per shard");
+        self.prefix_stores = stores;
+    }
+
+    /// Shard `i`'s prefix store, when prefix caching is on (the shard
+    /// loop installs this same Arc into its engine at spawn/respawn).
+    pub fn prefix_store(&self, shard: usize) -> Option<&Arc<PrefixStore>> {
+        self.prefix_stores.get(shard)
+    }
+
+    /// Covered-token count shard `i` could serve for `prompt` right now
+    /// (a refcount-free [`PrefixStore::probe`]; 0 when prefix is off).
+    fn probe_covered(&self, shard: usize, prompt: &[u16]) -> usize {
+        self.prefix_stores
+            .get(shard)
+            .map_or(0, |st| st.probe(prompt))
+    }
+
+    /// Shard `i`'s effective admission budget: the configured per-shard
+    /// budget minus what its prefix store currently holds — shared
+    /// segments are counted once per shard, inside the same budget the
+    /// reservations draw from (DESIGN.md §16).
+    fn budget_for(&self, shard: usize) -> usize {
+        let shared = self
+            .prefix_stores
+            .get(shard)
+            .map_or(0, |st| st.shared_bytes());
+        self.budget_bytes.saturating_sub(shared)
     }
 
     /// Requests currently waiting for a decode slot (observability).
@@ -321,6 +369,12 @@ impl Dispatcher {
     pub fn redeliver(&self, shard_req: ShardRequest) -> Result<()> {
         let ShardRequest { request, tag, reserved_bytes, reply } = shard_req;
         let mut request = request;
+        // Any attached prefix hit pinned the *failed* shard's store;
+        // drop the pins and let the surviving shard's engine re-resolve
+        // against its own store (DESIGN.md §16).  The already-shrunk
+        // reservation stays sound: the discount is a policy-wide bound,
+        // not a property of the hit (see `prefix_reservation_shrink`).
+        request.prefix = None;
         let mut reply = reply;
         loop {
             let route_key = |i: usize| {
@@ -341,7 +395,7 @@ impl Dispatcher {
                 order.sort_by_key(|&i| route_key(i));
                 order.into_iter().find(|&i| {
                     try_reserve(&self.shards[i].reserved, reserved_bytes,
-                                self.budget_bytes)
+                                self.budget_for(i))
                 })
             };
             let Some(idx) = chosen else {
@@ -378,7 +432,7 @@ impl Dispatcher {
     /// bytes break load ties) that could hold the reservation; the
     /// returned tag is its global submission index.
     pub fn try_admit(&self, admit: AdmitRequest) -> Result<u64> {
-        let AdmitRequest { request, wc_bytes, reply } = admit;
+        let AdmitRequest { request, wc_bytes, shrink_per_token, reply } = admit;
         // Reserve a waiting slot with a CAS loop so the boundary is exact
         // even under concurrent submitters.
         let mut cur = self.queued.load(Ordering::SeqCst);
@@ -398,9 +452,13 @@ impl Dispatcher {
         }
 
         // Route to the best live shard that can also hold the request's
-        // worst-case byte reservation: candidates in (load, resident,
-        // index) order, first reservable one wins.  A failed send marks
-        // that shard dead, rolls its accounting back, and retries, so a
+        // worst-case byte reservation: candidates in (covered-prefix
+        // desc, load, resident, index) order — prefix affinity outranks
+        // load so a warm shard wins even when slightly busier
+        // (DESIGN.md §16); with prefix off, covered is uniformly 0 and
+        // this is the historical (load, resident, index) order.  The
+        // first reservable candidate wins.  A failed send marks that
+        // shard dead, rolls its accounting back, and retries, so a
         // single crashed shard never blackholes admissions while healthy
         // shards have capacity (DESIGN.md §8).
         let mut request = request;
@@ -408,7 +466,8 @@ impl Dispatcher {
         loop {
             let route_key = |i: usize| {
                 let s = &self.shards[i];
-                (s.load.load(Ordering::SeqCst),
+                (std::cmp::Reverse(self.probe_covered(i, &request.prompt)),
+                 s.load.load(Ordering::SeqCst),
                  s.resident.load(Ordering::SeqCst), i)
             };
             let mut live = (0..self.shards.len())
@@ -418,23 +477,30 @@ impl Dispatcher {
                 self.queued.fetch_sub(1, Ordering::SeqCst);
                 anyhow::bail!("server stopped (no live shards)");
             }
-            let reserved_bytes = if self.budget_bytes > 0 { wc_bytes } else { 0 };
             let chosen = if self.budget_bytes == 0 {
-                // No budget: allocation-free min scan, first index wins
-                // ties through the key's index component.
-                live.min_by_key(|&i| route_key(i))
+                // No budget: min scan, first index wins ties through the
+                // key's index component; nothing is reserved.
+                live.min_by_key(|&i| route_key(i)).map(|i| (i, 0))
             } else {
                 // Budget: candidates in routing order; the first one
                 // whose reservation fits wins, so a full best shard
-                // spills to the next rather than rejecting.
+                // spills to the next rather than rejecting.  On a warm
+                // candidate the reservation shrinks by the covered span
+                // (`prefix_reservation_shrink` is a policy-wide bound,
+                // so the discount stays sound even if the hit is evicted
+                // before the session starts — DESIGN.md §16).
                 let mut order: Vec<usize> = live.collect();
                 order.sort_by_key(|&i| route_key(i));
-                order.into_iter().find(|&i| {
-                    try_reserve(&self.shards[i].reserved, wc_bytes,
-                                self.budget_bytes)
+                order.into_iter().find_map(|i| {
+                    let covered = self.probe_covered(i, &request.prompt);
+                    let amt = wc_bytes
+                        .saturating_sub(covered * shrink_per_token);
+                    try_reserve(&self.shards[i].reserved, amt,
+                                self.budget_for(i))
+                        .then_some((i, amt))
                 })
             };
-            let Some(idx) = chosen else {
+            let Some((idx, reserved_bytes)) = chosen else {
                 // Every live shard's budget is exhausted (or the request
                 // can never fit): exact submit-time backpressure.
                 self.queued.fetch_sub(1, Ordering::SeqCst);
@@ -445,6 +511,13 @@ impl Dispatcher {
                 );
             };
             let link = &self.shards[idx];
+            // Only the winning shard pays for a real lookup: the hit pins
+            // its segments from admission until the session finishes, so
+            // churn between now and activation cannot free rows the warm
+            // prefill is counting on (deferred reclamation).
+            if let Some(st) = self.prefix_stores.get(idx) {
+                request.prefix = st.lookup(&request.prompt);
+            }
             link.load.fetch_add(1, Ordering::SeqCst);
             let tag = self.next_tag.fetch_add(1, Ordering::SeqCst);
             let sent = link
@@ -456,11 +529,15 @@ impl Dispatcher {
                 Ok(()) => return Ok(tag),
                 Err(mpsc::SendError(req)) => {
                     // Shard thread gone: roll its accounting back, mark it
-                    // dead, and re-route the request.
+                    // dead, and re-route the request.  The attached hit
+                    // belongs to the dead shard's store; dropping it here
+                    // releases the pins, and the retry re-resolves
+                    // against whichever shard wins next.
                     link.load.fetch_sub(1, Ordering::SeqCst);
                     link.reserved.fetch_sub(reserved_bytes, Ordering::SeqCst);
                     link.alive.store(false, Ordering::SeqCst);
                     request = req.request;
+                    request.prefix = None;
                     reply = req.reply;
                 }
             }
@@ -477,6 +554,18 @@ mod tests {
         AdmitRequest {
             request: GenerationRequest::new(vec![1], 2),
             wc_bytes: wc,
+            shrink_per_token: 0,
+            reply: mpsc::channel().0,
+        }
+    }
+
+    /// A packet with an explicit prompt and per-token shrink.
+    fn prompt_packet(prompt: Vec<u16>, wc: usize, shrink: usize)
+                     -> AdmitRequest {
+        AdmitRequest {
+            request: GenerationRequest::new(prompt, 2),
+            wc_bytes: wc,
+            shrink_per_token: shrink,
             reply: mpsc::channel().0,
         }
     }
@@ -591,6 +680,79 @@ mod tests {
         assert!(d.try_admit(packet(wc)).is_err());
         assert_eq!(ctxs[0].rx.try_iter().count(), 2);
         assert_eq!(ctxs[1].rx.try_iter().count(), 2);
+    }
+
+    /// A 1-plane store with the test prompt's first 8 tokens interned
+    /// (granule 4 -> two links, 128 payload bytes).
+    fn warm_store(prompt: &[u16]) -> Arc<PrefixStore> {
+        use crate::config::PolicyKind;
+        use crate::kvcache::CacheLayout;
+        let lay = CacheLayout { layers: 1, heads: 1, seq: 16, d_head: 2 };
+        let st = PrefixStore::new("micro", PolicyKind::Zipcache, 4, 0);
+        let buf = vec![0f32; lay.cache_len()];
+        st.intern(prompt, &buf, &buf, &lay);
+        st
+    }
+
+    fn cold_store() -> Arc<PrefixStore> {
+        use crate::config::PolicyKind;
+        PrefixStore::new("micro", PolicyKind::Zipcache, 4, 0)
+    }
+
+    #[test]
+    fn prefix_affinity_outranks_load() {
+        let prompt: Vec<u16> = (5..14).collect(); // 9 tokens, covered = 8
+        let (mut d, ctxs) = build(2, 16, 0);
+        d.set_prefix_stores(vec![cold_store(), warm_store(&prompt)]);
+        // Shape loads to [0, 2]: the warm shard is strictly busier.
+        for _ in 0..4 {
+            d.try_admit(packet(0)).unwrap();
+        }
+        ctxs[0].note_done(0);
+        ctxs[0].note_done(0);
+        assert_eq!(d.loads(), vec![0, 2]);
+        // The warm prompt still routes to shard 1 — covered outranks
+        // load — and arrives with the hit pinned at admission.
+        d.try_admit(prompt_packet(prompt.clone(), 0, 0)).unwrap();
+        assert_eq!(d.loads(), vec![0, 3]);
+        let got = ctxs[1].rx.try_iter().last().unwrap();
+        let hit = got.request.prefix.expect("hit attached at admission");
+        assert_eq!(hit.covered, 8);
+        assert_eq!(hit.segs.len(), 2);
+        // A cold prompt keeps the historical least-loaded routing.
+        d.try_admit(packet(0)).unwrap();
+        assert_eq!(d.loads(), vec![1, 3]);
+    }
+
+    #[test]
+    fn warm_reservation_shrinks_by_covered_span() {
+        let prompt: Vec<u16> = (5..14).collect();
+        let (mut d, ctxs) = build(1, 16, 400);
+        d.set_prefix_stores(vec![warm_store(&prompt)]);
+        // Store payload (128 B) is budgeted *inside* the 400 B budget:
+        // the admission bound is 272 B.  A warm request reserves
+        // wc - covered*shrink = 1000 - 8*100 = 200 B.
+        d.try_admit(prompt_packet(prompt.clone(), 1000, 100)).unwrap();
+        assert_eq!(d.reserved_bytes(), vec![200]);
+        let got = ctxs[0].rx.try_recv().unwrap();
+        assert_eq!(got.reserved_bytes, 200);
+        // A second warm request (200 B) no longer fits 272 - 200 = 72 B.
+        let err = d.try_admit(prompt_packet(prompt, 1000, 100)).unwrap_err();
+        assert!(err.to_string().contains("memory budget"), "{err}");
+        assert_eq!(d.reserved_bytes(), vec![200], "failed admit leaked");
+    }
+
+    #[test]
+    fn shared_store_bytes_count_against_the_budget() {
+        let prompt: Vec<u16> = (5..14).collect();
+        // 150 B budget, 128 B already interned: only 22 B remain, so a
+        // cold 100 B request that would fit an empty shard rejects.
+        let (mut d, _ctxs) = build(1, 16, 150);
+        d.set_prefix_stores(vec![warm_store(&prompt)]);
+        let err = d.try_admit(packet(100)).unwrap_err();
+        assert!(err.to_string().contains("memory budget"), "{err}");
+        let (d2, _ctxs2) = build(1, 16, 150);
+        assert!(d2.try_admit(packet(100)).is_ok());
     }
 
     #[test]

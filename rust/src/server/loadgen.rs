@@ -14,7 +14,9 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::request::{FinishReason, GenerationResponse, Priority};
 use crate::metrics::LatencyStats;
-use crate::workload::{RequestTrace, Task};
+use crate::workload::rng::SplitMix64;
+use crate::workload::tasks::{Sample, BOS, EOS, KEY0, NKEY, NL, NVAL, QUERY, SEP, VAL0};
+use crate::workload::{RequestTrace, Task, TraceEntry};
 use crate::Result;
 
 use super::ServerHandle;
@@ -114,6 +116,70 @@ pub fn chaos_trace(max_seq: usize, n: usize, seed: u64) -> RequestTrace {
     RequestTrace::batch(Task::Code, max_seq - max_new, n, max_new, seed)
 }
 
+/// Shared-prefix scenario (DESIGN.md §16, EXPERIMENTS.md §Prefix):
+/// `1 + rolls` phases of `n` requests each.  Within a phase every
+/// request shares one long "system prompt" — `BOS` plus a block of
+/// key/value lines sized to most of the window — and appends a short
+/// distinct tail (`QUERY key SEP`, querying a different pair per
+/// request), so a prefix-enabled server interns the shared span on the
+/// first request and skips its prefill on the rest.  Each roll rotates
+/// the key/value block (fresh phase seed), modelling a system-prompt
+/// update: the old segments go refcount-idle and, under a
+/// `prefix.max_bytes` cap, churn out via LRU eviction.
+///
+/// Entries carry [`TraceEntry::expect_prefix_hit`]: the first request
+/// of every phase expects a miss, the rest expect hits.  Arrivals are
+/// spaced `25ms` apart so each prefill (sim-backend microseconds)
+/// completes — and interns — before the next lookup; the expectations
+/// describe this in-order replay.  Replayed with the store disabled the
+/// trace is just a staggered batch (every expectation then counts as a
+/// declared miss against `prefix_misses == 0`, which callers should
+/// only assert when the store is on).
+pub fn shared_prefix_trace(max_seq: usize, n: usize, rolls: usize,
+                           seed: u64) -> RequestTrace {
+    let max_new = 2;
+    // Prompt layout: BOS + n_pairs*(KEY SEP VAL NL) + QUERY key SEP,
+    // answer [VAL, EOS]; size the shared block to fill the window.
+    let n_pairs = (max_seq.saturating_sub(1 + 3 + max_new) / 4).clamp(2, NKEY as usize);
+    let mut entries = Vec::with_capacity((1 + rolls) * n);
+    for phase in 0..=rolls {
+        let mut rng = SplitMix64::new(seed ^ (phase as u64).wrapping_mul(0x9E37_79B9));
+        let mut keys: Vec<u16> = (0..NKEY).collect();
+        rng.shuffle(&mut keys);
+        keys.truncate(n_pairs);
+        let vals: Vec<u16> =
+            (0..n_pairs).map(|_| rng.below(NVAL as u64) as u16).collect();
+        let mut body: Vec<u16> = vec![BOS];
+        for (&k, &v) in keys.iter().zip(&vals) {
+            body.extend_from_slice(&[KEY0 + k, SEP, VAL0 + v, NL]);
+        }
+        for i in 0..n {
+            let qi = i % n_pairs;
+            let mut tokens = body.clone();
+            tokens.extend_from_slice(&[QUERY, KEY0 + keys[qi], SEP]);
+            let prompt_len = tokens.len();
+            let answer = vec![VAL0 + vals[qi], EOS];
+            tokens.extend_from_slice(&answer);
+            let span = 1 + 4 * qi;
+            entries.push(TraceEntry {
+                arrival_ms: (phase * n + i) as f64 * 25.0,
+                sample: Sample {
+                    tokens,
+                    prompt_len,
+                    answer,
+                    salient_span: (span, span + 4),
+                },
+                max_new_tokens: max_new,
+                priority: Priority::default(),
+                deadline_ms: None,
+                cancelled: false,
+                expect_prefix_hit: Some(i > 0),
+            });
+        }
+    }
+    RequestTrace { entries }
+}
+
 /// Outcome of one trace replay.
 #[derive(Debug, Default)]
 pub struct LoadReport {
@@ -135,6 +201,15 @@ pub struct LoadReport {
     /// (DESIGN.md §14).  Requests a failed shard was still *waiting* on
     /// are redelivered instead and land in `completed`.
     pub shard_failed: usize,
+    /// Entries declaring `expect_prefix_hit == Some(true)` — the trace's
+    /// prediction of the server's `prefix_hits` metric under in-order
+    /// replay (DESIGN.md §16).  The replay itself cannot observe
+    /// per-request cache outcomes; callers compare these against the
+    /// post-replay [`MetricsSnapshot`](crate::metrics::MetricsSnapshot).
+    pub expected_prefix_hits: usize,
+    /// Entries declaring `expect_prefix_hit == Some(false)` (cold
+    /// prefixes: first sight of each phase's system prompt).
+    pub expected_prefix_misses: usize,
     /// Wall-clock of the whole replay (first submit to last completion).
     pub wall: Duration,
     /// Submit-to-completion latency of naturally completed requests.
@@ -177,6 +252,13 @@ impl LoadReport {
 pub fn replay(handle: &ServerHandle, trace: &RequestTrace) -> Result<LoadReport> {
     let t0 = Instant::now();
     let mut report = LoadReport { submitted: trace.len(), ..LoadReport::default() };
+    for e in &trace.entries {
+        match e.expect_prefix_hit {
+            Some(true) => report.expected_prefix_hits += 1,
+            Some(false) => report.expected_prefix_misses += 1,
+            None => {}
+        }
+    }
     let mut waiters = Vec::new();
     for (i, e) in trace.entries.iter().enumerate() {
         let target = Duration::from_micros((e.arrival_ms * 1000.0) as u64);
@@ -217,4 +299,59 @@ pub fn replay(handle: &ServerHandle, trace: &RequestTrace) -> Result<LoadReport>
     report.outputs.sort_by_key(|(i, _)| *i);
     report.wall = t0.elapsed();
     Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_prefix_trace_shape_and_expectations() {
+        let t = shared_prefix_trace(64, 4, 2, 7);
+        assert_eq!(t.len(), 12, "3 phases x 4 requests");
+        for (i, e) in t.entries.iter().enumerate() {
+            // First request of each phase is the cold prefix.
+            assert_eq!(e.expect_prefix_hit, Some(i % 4 != 0), "entry {i}");
+            assert_eq!(e.arrival_ms, i as f64 * 25.0);
+            assert!(e.sample.tokens.len() <= 64);
+            // Genuine recall task: the answer value sits inside the
+            // shared block at the queried pair (accuracy stays scorable).
+            let (a, _) = e.sample.salient_span;
+            assert_eq!(e.sample.tokens[a + 2], e.sample.answer[0]);
+        }
+        // Within a phase: one shared body, distinct 3-token tails.
+        let shared = t.entries[0].sample.prompt_len - 3;
+        let mut tails = Vec::new();
+        for e in &t.entries[..4] {
+            assert_eq!(e.sample.tokens[..shared],
+                       t.entries[0].sample.tokens[..shared]);
+            tails.push(e.sample.tokens[shared..e.sample.prompt_len].to_vec());
+        }
+        tails.sort();
+        tails.dedup();
+        assert_eq!(tails.len(), 4, "tails must be distinct");
+        // A roll rotates the shared body.
+        assert_ne!(t.entries[0].sample.tokens[..shared],
+                   t.entries[4].sample.tokens[..shared]);
+        // And the trace is deterministic.
+        let u = shared_prefix_trace(64, 4, 2, 7);
+        for (a, b) in t.entries.iter().zip(&u.entries) {
+            assert_eq!(a.sample, b.sample);
+        }
+    }
+
+    #[test]
+    fn shared_prefix_trace_declares_one_miss_per_phase() {
+        let t = shared_prefix_trace(64, 3, 1, 1);
+        let mut hits = 0;
+        let mut misses = 0;
+        for e in &t.entries {
+            match e.expect_prefix_hit {
+                Some(true) => hits += 1,
+                Some(false) => misses += 1,
+                None => {}
+            }
+        }
+        assert_eq!((hits, misses), (4, 2));
+    }
 }

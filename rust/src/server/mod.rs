@@ -58,12 +58,14 @@ use std::sync::{Arc, Mutex, MutexGuard, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, PolicyKind};
 use crate::coordinator::batcher::{ContinuousBatcher, PriorityPark, QueuedRequest};
 use crate::coordinator::request::{CancelToken, FinishReason, GenerationRequest,
                                   GenerationResponse};
 use crate::coordinator::Engine;
-use crate::kvcache::{worst_case_resident_bytes, CacheLayout};
+use crate::kvcache::prefix_store::DEFAULT_GRANULE;
+use crate::kvcache::{prefix_reservation_shrink, worst_case_resident_bytes,
+                     CacheLayout, PrefixStore};
 use crate::metrics::{EngineMetrics, MetricsSnapshot};
 use crate::Result;
 
@@ -161,6 +163,11 @@ pub struct ServerHandle {
     layout: CacheLayout,
     /// Streaming recompression period (sizes the worst-case fp32 tail).
     recompress_every: usize,
+    /// Per-covered-token reservation discount on a prefix hit
+    /// (DESIGN.md §16): [`prefix_reservation_shrink`] when the prefix
+    /// store is on *and* the policy's payload bound supports it
+    /// (all-quantized policies — Gear/Mikv/Zipcache), else 0.
+    shrink_per_token: usize,
 }
 
 impl ServerHandle {
@@ -183,9 +190,12 @@ impl ServerHandle {
                                            self.recompress_every);
         let cancel = req.cancel.clone();
         let (reply, rx) = mpsc::channel();
-        let tag = self
-            .dispatcher
-            .try_admit(AdmitRequest { request: req, wc_bytes: wc, reply })?;
+        let tag = self.dispatcher.try_admit(AdmitRequest {
+            request: req,
+            wc_bytes: wc,
+            shrink_per_token: self.shrink_per_token,
+            reply,
+        })?;
         Ok(ResponseHandle { rx, tag, cancel, done: None })
     }
 
@@ -282,8 +292,27 @@ impl Server {
         } else {
             cfg.scheduler.shards
         };
-        let (dispatcher, ctxs) = dispatch::build(n_shards, cfg.scheduler.queue_depth,
-                                                 cfg.memory.budget_bytes);
+        let (mut dispatcher, ctxs) = dispatch::build(n_shards,
+                                                     cfg.scheduler.queue_depth,
+                                                     cfg.memory.budget_bytes);
+        // Per-shard prefix stores live on the dispatcher, not in the
+        // engines, so interned segments survive shard respawns
+        // (DESIGN.md §16).  On a backend without the chunked entries the
+        // engines never attach, so the stores stay empty and routing is
+        // unchanged (probe 0, shared bytes 0).
+        if cfg.prefix.enable {
+            let granule = if cfg.scheduler.prefill_chunk > 0 {
+                cfg.scheduler.prefill_chunk
+            } else {
+                DEFAULT_GRANULE
+            };
+            dispatcher.set_prefix_stores(
+                (0..n_shards)
+                    .map(|_| PrefixStore::new(&cfg.model, cfg.policy, granule,
+                                              cfg.prefix.max_bytes))
+                    .collect(),
+            );
+        }
         let dispatcher = Arc::new(dispatcher);
         let metrics: Arc<Vec<Mutex<EngineMetrics>>> = Arc::new(
             (0..n_shards).map(|_| Mutex::new(EngineMetrics::default())).collect(),
@@ -297,12 +326,14 @@ impl Server {
             let ready = ready_tx.clone();
             let slot = metrics.clone();
             let events = event_tx.clone();
+            let pstore = dispatcher.prefix_store(i).cloned();
             joins.push(
                 std::thread::Builder::new()
                     .name(format!("zipcache-shard-{i}"))
                     .spawn(move || {
                         shard_loop(i, 0, cfg, ctx, slot,
-                                   EngineMetrics::default(), ready, events)
+                                   EngineMetrics::default(), pstore,
+                                   ready, events)
                     })?,
             );
         }
@@ -352,12 +383,21 @@ impl Server {
             .name("zipcache-supervisor".into())
             .spawn(move || supervisor.run())?;
 
+        let shrink_eligible = matches!(
+            cfg.policy,
+            PolicyKind::Gear | PolicyKind::Mikv | PolicyKind::Zipcache
+        );
         Ok(Server {
             handle: ServerHandle {
                 dispatcher,
                 metrics,
                 layout,
                 recompress_every: cfg.quant.recompress_every,
+                shrink_per_token: if cfg.prefix.enable && shrink_eligible {
+                    prefix_reservation_shrink(layout)
+                } else {
+                    0
+                },
             },
             joins: vec![sup],
         })
@@ -595,16 +635,25 @@ impl Supervisor {
         let base = {
             let mut m = lock_metrics(&self.metrics[shard]);
             m.shard_restarts += 1;
-            m.clone()
+            let mut b = m.clone();
+            // Store-derived *snapshots* (not counters): the prefix store
+            // outlives the dead engine, and the fresh engine republishes
+            // them from that same store — keeping the old values in the
+            // base would double-count them in every post-restart publish
+            // (DESIGN.md §16).
+            b.prefix_evictions = 0;
+            b.shared_segment_bytes = 0;
+            b
         };
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let cfg = self.cfg.clone();
         let slots = self.metrics.clone();
         let events = self.event_tx.clone();
+        let pstore = d.prefix_store(shard).cloned();
         let spawned = std::thread::Builder::new()
             .name(format!("zipcache-shard-{shard}.{generation}"))
             .spawn(move || {
-                shard_loop(shard, generation, cfg, ctx, slots, base,
+                shard_loop(shard, generation, cfg, ctx, slots, base, pstore,
                            ready_tx, events)
             });
         let handle = match spawned {
@@ -667,6 +716,7 @@ fn shard_loop(
     ctx: ShardCtx,
     slots: Arc<Vec<Mutex<EngineMetrics>>>,
     base: EngineMetrics,
+    prefix: Option<Arc<PrefixStore>>,
     ready: Sender<Result<()>>,
     events: Sender<ShardFatal>,
 ) -> Result<()> {
@@ -694,6 +744,19 @@ fn shard_loop(
             return Ok(()); // failure already reported through the barrier
         }
     };
+    // Swap in the dispatcher-owned prefix store (DESIGN.md §16) — but
+    // only where the engine built its own (prefix on *and* chunked
+    // entries available); elsewhere the shared store must stay detached
+    // or the monolithic epilogue would intern segments no warm path can
+    // ever read.  A respawned shard re-attaches to the surviving store,
+    // so its store-derived metric snapshots refresh immediately.
+    if engine.prefix_store().is_some() {
+        if let Some(st) = prefix {
+            engine.metrics.prefix_evictions = st.evictions();
+            engine.metrics.shared_segment_bytes = st.shared_bytes() as u64;
+            engine.set_prefix_store(st);
+        }
+    }
     let mut batcher = ContinuousBatcher::with_policy(max_batch, usize::MAX,
                                                      Box::new(PriorityPark));
     // Tag-keyed: eager staging can hold up to the whole global

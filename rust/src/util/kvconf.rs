@@ -87,6 +87,15 @@ impl KvConf {
         }
     }
 
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") | Some("on") => Ok(true),
+            Some("false") | Some("0") | Some("no") | Some("off") => Ok(false),
+            Some(v) => bail!("key '{key}': expected a boolean, got {v:?}"),
+            None => Ok(default),
+        }
+    }
+
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.map.keys().map(|s| s.as_str())
     }
@@ -129,5 +138,14 @@ max_batch = 8
     #[test]
     fn bad_line_errors() {
         assert!(KvConf::parse("just a line").is_err());
+    }
+
+    #[test]
+    fn bools_parse_and_default() {
+        let c = KvConf::parse("a = true\nb = 0\nc = nonsense\n").unwrap();
+        assert!(c.get_bool("a", false).unwrap());
+        assert!(!c.get_bool("b", true).unwrap());
+        assert!(c.get_bool("c", false).is_err());
+        assert!(c.get_bool("missing", true).unwrap());
     }
 }

@@ -34,6 +34,21 @@ pub struct TraceEntry {
     /// replay (the request retires with `FinishReason::Cancelled` at pop,
     /// never holding a slot).
     pub cancelled: bool,
+    /// Expected prefix-cache outcome on a prefix-enabled server
+    /// (DESIGN.md §16): `Some(false)` marks a cold prefix (first sight,
+    /// or right after a roll), `Some(true)` an entry whose shared prefix
+    /// an earlier entry interned, `None` (the default) no expectation.
+    /// Traces that set this ([`loadgen::shared_prefix_trace`]) space
+    /// arrivals so the earlier prefill finishes first; the expectation
+    /// describes that in-order replay, not arbitrary interleavings.
+    /// [`loadgen::replay`] aggregates these into the [`LoadReport`] for
+    /// callers to compare against the server's `prefix_hits` /
+    /// `prefix_misses` metrics.
+    ///
+    /// [`loadgen::shared_prefix_trace`]: crate::server::loadgen::shared_prefix_trace
+    /// [`loadgen::replay`]: crate::server::loadgen::replay
+    /// [`LoadReport`]: crate::server::loadgen::LoadReport
+    pub expect_prefix_hit: Option<bool>,
 }
 
 impl TraceEntry {
@@ -45,6 +60,7 @@ impl TraceEntry {
             priority: Priority::default(),
             deadline_ms: None,
             cancelled: false,
+            expect_prefix_hit: None,
         }
     }
 
@@ -140,6 +156,7 @@ mod tests {
         for e in &t.entries {
             assert_eq!(e.priority, Priority::Interactive);
             assert!(e.deadline_ms.is_none() && !e.cancelled);
+            assert!(e.expect_prefix_hit.is_none());
             let r = e.request();
             assert!(r.deadline.is_none() && !r.cancel.is_cancelled());
             assert_eq!(r.prompt, e.sample.prompt());

@@ -1,0 +1,246 @@
+//! Shared-prefix segment-store parity contracts (DESIGN.md §16), all
+//! runnable with no artifacts on the sim backend:
+//!
+//! * **Warm == cold, bitwise** — a fork-from-prefix session (segments
+//!   materialized, saliency catch-up, suffix-only prefill) generates the
+//!   same tokens and retains the same snapshot `content_digest` as a
+//!   cold start, across prefill chunk {0, 3} × quant kernel
+//!   {scalar, auto} × policy {zipcache, h2o}, and through the sharded
+//!   server across shards {1, 2} × slots {1, 2, max}.
+//! * **Accounting** — `resident_bytes` of a warm session equals the
+//!   cold session's (shared segments are counted once per shard, never
+//!   per session), and `prefill_tokens_skipped` matches the granule
+//!   boundary rule exactly.
+//! * **Lifecycle** — dropping a session mid-prefill on the hit path
+//!   releases every segment pin; LRU churn under a tight
+//!   `prefix.max_bytes` evicts without leaking (all store gauges drain
+//!   to zero once sessions are gone).
+
+use zipcache::config::{EngineConfig, PolicyKind};
+use zipcache::coordinator::{Engine, GenerationRequest};
+use zipcache::kvcache::prefix_store::DEFAULT_GRANULE;
+use zipcache::quant::KernelChoice;
+use zipcache::server::{loadgen, Server};
+
+const MAX_NEW: usize = 6;
+
+fn cfg_with(chunk: usize, prefix: bool) -> EngineConfig {
+    let mut cfg = EngineConfig::load_default("sim", "micro").unwrap();
+    cfg.scheduler.prefill_chunk = chunk;
+    cfg.quant.recompress_every = 4; // several streaming cycles per request
+    cfg.parallelism = 1;
+    cfg.prefix.enable = prefix;
+    cfg
+}
+
+/// One shared-prefix phase: three prompts over one long system prompt
+/// with distinct 3-token tails (micro window = 64).
+fn prompts() -> Vec<Vec<u16>> {
+    loadgen::shared_prefix_trace(64, 3, 0, 11)
+        .entries
+        .iter()
+        .map(|e| e.sample.prompt().to_vec())
+        .collect()
+}
+
+/// Drive one prompt to completion on `engine`; returns the generated
+/// tokens and the retained snapshot's content digest.  The session drop
+/// returns the dense slot and releases any segment pins.
+fn run_one(engine: &mut Engine, p: &[u16]) -> (Vec<u16>, u64) {
+    let mut s = engine
+        .start_session(GenerationRequest::new(p.to_vec(), MAX_NEW))
+        .unwrap();
+    while !s.is_done() {
+        engine.decode_step(&mut s).unwrap();
+    }
+    let digest = s.compressed.as_ref().unwrap().content_digest();
+    (s.generated.clone(), digest)
+}
+
+/// Cold ground truth: a fresh prefix-disabled engine per prompt.
+fn cold_run(chunk: usize, policy: PolicyKind, kernel: KernelChoice,
+            p: &[u16]) -> (Vec<u16>, u64) {
+    let mut cfg = cfg_with(chunk, false);
+    cfg.policy = policy;
+    cfg.quant.kernel = kernel;
+    run_one(&mut Engine::new(cfg).unwrap(), p)
+}
+
+#[test]
+fn warm_fork_matches_cold_start_bitwise() {
+    for policy in [PolicyKind::Zipcache, PolicyKind::H2o] {
+        for chunk in [0usize, 3] {
+            for kernel in [KernelChoice::Scalar, KernelChoice::Auto] {
+                let ps = prompts();
+                let cold: Vec<_> = ps
+                    .iter()
+                    .map(|p| cold_run(chunk, policy, kernel, p))
+                    .collect();
+                let mut cfg = cfg_with(chunk, true);
+                cfg.policy = policy;
+                cfg.quant.kernel = kernel;
+                let mut engine = Engine::new(cfg).unwrap();
+                // First prompt is the cold intern; the rest fork from it.
+                for (i, p) in ps.iter().enumerate() {
+                    let out = run_one(&mut engine, p);
+                    assert_eq!(
+                        out, cold[i],
+                        "policy={policy:?} chunk={chunk} kernel={kernel} \
+                         prompt {i}: warm output diverged from cold start"
+                    );
+                }
+                // Re-running the interning prompt itself is also a hit
+                // (covered stops at the last boundary <= n - 1).
+                let again = run_one(&mut engine, &ps[0]);
+                assert_eq!(again, cold[0]);
+                assert_eq!(engine.metrics.prefix_misses, 1);
+                assert_eq!(engine.metrics.prefix_hits, 3);
+                // Boundary rule (DESIGN.md §16): each hit covers the
+                // largest granule boundary inside the 57-token shared
+                // span (the tails diverge there; the same boundary also
+                // caps the full-prompt re-run at n - 1 = 59).
+                let g = if chunk == 0 { DEFAULT_GRANULE } else { chunk };
+                let shared = ps[0].len() - 3;
+                assert_eq!(engine.metrics.prefill_tokens_skipped,
+                           3 * (shared / g * g) as u64);
+            }
+        }
+    }
+}
+
+#[test]
+fn server_warm_matches_cold_across_shards_slots_chunks() {
+    let ps = prompts();
+    for chunk in [0usize, 3] {
+        let cold: Vec<_> = ps
+            .iter()
+            .map(|p| cold_run(chunk, PolicyKind::Zipcache, KernelChoice::Auto, p))
+            .collect();
+        for shards in [1usize, 2] {
+            for slots in [1usize, 2, 0] {
+                let mut cfg = cfg_with(chunk, true);
+                cfg.scheduler.shards = shards;
+                cfg.memory.slots = slots;
+                let server = Server::start(cfg).unwrap();
+                // Two sequential rounds (each wait guarantees the intern
+                // landed before the next lookup): round one interns on
+                // the first request, round two is all warm — affinity
+                // routing must send every later request to the shard
+                // holding the segments even with shards = 2.
+                for round in 0..2 {
+                    for (i, p) in ps.iter().enumerate() {
+                        let out = server
+                            .handle
+                            .submit(p.clone(), MAX_NEW)
+                            .unwrap()
+                            .wait()
+                            .unwrap();
+                        assert_eq!(
+                            out.tokens, cold[i].0,
+                            "chunk={chunk} shards={shards} slots={slots} \
+                             round={round} request {i} diverged"
+                        );
+                    }
+                }
+                let snap = server.handle.metrics();
+                assert_eq!(snap.total.prefix_misses, 1,
+                           "chunk={chunk} shards={shards} slots={slots}");
+                assert_eq!(snap.total.prefix_hits, 5,
+                           "chunk={chunk} shards={shards} slots={slots}");
+                assert!(snap.total.prefill_tokens_skipped > 0);
+                assert!(snap.total.shared_segment_bytes > 0,
+                        "store snapshot must surface through the server");
+                server.shutdown().unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn resident_bytes_never_count_shared_segments() {
+    // Referenced by the `Session::resident_bytes` docs: a warm session's
+    // byte accounting must equal the cold session's at every phase —
+    // shared segment payload is charged once per shard (the store's
+    // `shared_bytes` gauge), never per session.
+    let p = prompts().remove(0);
+    let mut warm_engine = Engine::new(cfg_with(3, true)).unwrap();
+    let _ = run_one(&mut warm_engine, &p); // interns the prefix
+    let mut cold_engine = Engine::new(cfg_with(3, false)).unwrap();
+    let mut warm = warm_engine
+        .begin_session(GenerationRequest::new(p.clone(), MAX_NEW))
+        .unwrap();
+    let mut cold = cold_engine
+        .begin_session(GenerationRequest::new(p.clone(), MAX_NEW))
+        .unwrap();
+    assert!(warm.covered > 0 && !warm.shared.is_empty(), "must be a hit");
+    assert_eq!(warm.resident_bytes(), cold.resident_bytes(),
+               "mid-prefill accounting diverged");
+    while warm.is_prefilling() {
+        warm_engine.prefill_chunk(&mut warm).unwrap();
+    }
+    while cold.is_prefilling() {
+        cold_engine.prefill_chunk(&mut cold).unwrap();
+    }
+    assert_eq!(warm.resident_bytes(), cold.resident_bytes(),
+               "decode-ready accounting diverged");
+    while !warm.is_done() {
+        warm_engine.decode_step(&mut warm).unwrap();
+        cold_engine.decode_step(&mut cold).unwrap();
+        assert_eq!(warm.resident_bytes(), cold.resident_bytes());
+    }
+}
+
+#[test]
+fn mid_prefill_drop_on_hit_path_releases_pins() {
+    // chunk = 2 leaves two suffix chunks after the hit (covered = 56 of
+    // 60), so the drop lands genuinely mid-prefill.
+    let ps = prompts();
+    let cold = cold_run(2, PolicyKind::Zipcache, KernelChoice::Auto, &ps[1]);
+    let mut engine = Engine::new(cfg_with(2, true)).unwrap();
+    let _ = run_one(&mut engine, &ps[0]);
+    let store = engine.prefix_store().unwrap().clone();
+    assert_eq!(store.refs(), 0, "completed sessions hold no pins");
+    let mut s = engine
+        .begin_session(GenerationRequest::new(ps[1].clone(), MAX_NEW))
+        .unwrap();
+    assert!(s.covered > 0 && s.is_prefilling());
+    assert!(store.refs() > 0, "the live warm session pins its segments");
+    engine.prefill_chunk(&mut s).unwrap();
+    assert!(s.is_prefilling(), "drop must land between chunks");
+    drop(s); // cancel mid-prefill: slot and pins both release
+    assert_eq!(store.refs(), 0, "drop must release every pin");
+    // The engine is unharmed and the same prompt still forks bitwise.
+    assert_eq!(run_one(&mut engine, &ps[1]), cold);
+}
+
+#[test]
+fn eviction_under_churn_drains_all_gauges() {
+    // Size the cap from one real prefix footprint so each rolled system
+    // prompt evicts the previous one.
+    let probe_trace = loadgen::shared_prefix_trace(64, 1, 0, 5);
+    let mut probe_engine = Engine::new(cfg_with(3, true)).unwrap();
+    let _ = run_one(&mut probe_engine, probe_trace.entries[0].sample.prompt());
+    let one_prefix_bytes = probe_engine.prefix_store().unwrap().shared_bytes();
+    assert!(one_prefix_bytes > 0);
+
+    let mut cfg = cfg_with(3, true);
+    cfg.prefix.max_bytes = one_prefix_bytes;
+    let mut engine = Engine::new(cfg).unwrap();
+    let store = engine.prefix_store().unwrap().clone();
+    // 4 phases x 2 requests, the system prompt rolling every phase.
+    let trace = loadgen::shared_prefix_trace(64, 2, 3, 9);
+    for e in &trace.entries {
+        let _ = run_one(&mut engine, e.sample.prompt());
+    }
+    assert!(store.evictions() > 0,
+            "rolling prefixes under a tight cap must evict");
+    assert!(engine.metrics.prefix_evictions > 0,
+            "evictions must surface in the metrics snapshot");
+    assert!(store.shared_bytes() <= one_prefix_bytes,
+            "cap must hold with no live readers");
+    assert_eq!(store.refs(), 0, "no sessions live: every pin released");
+    store.evict_all();
+    assert_eq!(store.entries(), 0);
+    assert_eq!(store.shared_bytes(), 0,
+               "gauges must drain to zero: churn leaks nothing");
+}

@@ -33,5 +33,11 @@ fn repo_tree_is_lint_clean() {
         r.roots
     );
     assert!(r.gauges.iter().any(|g| g == "in_use"), "gauges lost: {:?}", r.gauges);
+    // The §16 segment-store gauges must stay registered (and therefore
+    // balance-checked): payload bytes, interned entries, reader pins.
+    for g in ["shared_bytes", "seg_entries", "seg_refs"] {
+        assert!(r.gauges.iter().any(|x| x == g),
+                "prefix-store gauge '{g}' lost: {:?}", r.gauges);
+    }
     assert!(r.suppressed() >= 1, "the audited allows should be counted, not dropped");
 }
